@@ -1,0 +1,203 @@
+//! End-to-end driver — the repo's headline experiment.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example bert_e2e
+//! ```
+//!
+//! Exercises every layer of the stack on a real small workload:
+//!
+//! * **Framework** (L3): run the full D2S -> map -> schedule -> simulate
+//!   pipeline for BERT-large / BART-large / GPT-2-medium under all three
+//!   mapping strategies and print the paper's headline numbers (Fig. 6/7).
+//! * **Numeric D2S** (L3 + L1): project a synthetic near-Monarch
+//!   1024x1024 weight in Rust, feed the factors to the AOT-compiled
+//!   Pallas kernel (`monarch_mvm_n1024`) via PJRT, and verify the result
+//!   against both the Rust reference and the original dense operator.
+//! * **Serving** (L3 + L2 + L1): start the batching inference server over
+//!   the `tiny_lm` Monarch transformer artifacts and push batched token
+//!   workloads through it, reporting latency/throughput.
+//!
+//! Results of a reference run are recorded in EXPERIMENTS.md.
+
+use monarch_cim::coordinator::batching::BatchPolicy;
+use monarch_cim::coordinator::{run_pipeline, InferenceServer, PipelineConfig, ServerConfig};
+use monarch_cim::gpu::{gpu_cost, GpuParams};
+use monarch_cim::mapping::Strategy;
+use monarch_cim::model::ModelConfig;
+use monarch_cim::monarch::{monarch_project, MonarchMatrix};
+use monarch_cim::runtime::{literal_f32, literals_from_monarch, Runtime};
+use monarch_cim::tensor::Matrix;
+use monarch_cim::util::rng::Pcg32;
+use monarch_cim::util::stats::geomean;
+
+fn main() {
+    phase1_framework();
+    phase2_d2s_through_pjrt();
+    phase3_serving();
+    println!("\nbert_e2e OK — record these numbers in EXPERIMENTS.md");
+}
+
+/// Phase 1: the paper's evaluation across models and strategies.
+fn phase1_framework() {
+    println!("== phase 1: framework pipeline (Fig. 6 / Fig. 7) ==");
+    let gpu = GpuParams::default();
+    let mut sp_lat = Vec::new();
+    let mut de_lat = Vec::new();
+    let mut sp_en = Vec::new();
+    let mut de_en = Vec::new();
+    for model in ModelConfig::paper_models() {
+        let g = gpu_cost(&model, &gpu);
+        let mut lin_ms = 0.0;
+        for strategy in Strategy::all() {
+            let r = run_pipeline(&PipelineConfig::new(model.clone(), strategy));
+            if strategy == Strategy::Linear {
+                lin_ms = r.cost.latency_ms();
+                println!(
+                    "  {:<12} GPU        latency {:>9.2} ms  (CIM Linear is {:.1}x faster)",
+                    model.name,
+                    g.total_ns / 1e6,
+                    g.total_ns / 1e6 / lin_ms
+                );
+            }
+            println!(
+                "  {:<12} {:<9} arrays {:>5}  util {:>5.1}%  lat {:>8.3} ms  en {:>7.2} mJ",
+                model.name,
+                strategy.name(),
+                r.mapping.arrays,
+                100.0 * r.mapping.utilization(),
+                r.cost.latency_ms(),
+                r.cost.energy_mj()
+            );
+            match strategy {
+                Strategy::SparseMap => {
+                    sp_lat.push(lin_ms / r.cost.latency_ms());
+                    sp_en.push(
+                        run_pipeline(&PipelineConfig::new(model.clone(), Strategy::Linear))
+                            .cost
+                            .energy_mj()
+                            / r.cost.energy_mj(),
+                    );
+                }
+                Strategy::DenseMap => {
+                    de_lat.push(lin_ms / r.cost.latency_ms());
+                    de_en.push(
+                        run_pipeline(&PipelineConfig::new(model.clone(), Strategy::Linear))
+                            .cost
+                            .energy_mj()
+                            / r.cost.energy_mj(),
+                    );
+                }
+                Strategy::Linear => {}
+            }
+        }
+    }
+    println!(
+        "  GEOMEAN latency speedup vs Linear: SparseMap {:.2}x (paper 1.59x), DenseMap {:.2}x (paper 1.73x)",
+        geomean(&sp_lat),
+        geomean(&de_lat)
+    );
+    println!(
+        "  GEOMEAN energy gain   vs Linear: SparseMap {:.2}x (paper 1.61x), DenseMap {:.2}x (paper 1.74x)",
+        geomean(&sp_en),
+        geomean(&de_en)
+    );
+}
+
+/// Phase 2: Rust D2S factors through the AOT Pallas kernel at BERT scale.
+fn phase2_d2s_through_pjrt() {
+    println!("\n== phase 2: D2S -> PJRT round trip (n = 1024, b = 32) ==");
+    let mut rt = match Runtime::with_default_dir() {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("  SKIPPED: {e}");
+            return;
+        }
+    };
+    let mut rng = Pcg32::new(20);
+    let d = 1024;
+    let b = 32;
+    let base = MonarchMatrix::randn(b, &mut rng)
+        .to_dense()
+        .scale(1.0 / b as f32);
+    let w = base.add(&Matrix::randn(d, d, &mut rng).scale(0.005));
+    let t0 = std::time::Instant::now();
+    let m = monarch_project(&w);
+    let proj_time = t0.elapsed();
+    let x = Matrix::randn(4, d, &mut rng);
+    let (l, r) = literals_from_monarch(&m).unwrap();
+    let t1 = std::time::Instant::now();
+    let got = rt
+        .execute_f32(
+            "monarch_mvm_n1024",
+            &[l, r, literal_f32(&x.data, &[4, d]).unwrap()],
+        )
+        .expect("PJRT execution");
+    let exec_time = t1.elapsed();
+    let got_m = Matrix::from_vec(4, d, got);
+    let want_rust = m.matmul_rows(&x);
+    let want_dense = x.matmul(&w.transpose());
+    println!(
+        "  D2S projection: {proj_time:?}; PJRT exec (incl. compile): {exec_time:?}"
+    );
+    println!(
+        "  kernel vs Rust-reference rel err: {:.2e}",
+        got_m.rel_error(&want_rust)
+    );
+    println!(
+        "  Monarch vs original dense rel err: {:.4} (projection quality)",
+        got_m.rel_error(&want_dense)
+    );
+    assert!(got_m.rel_error(&want_rust) < 1e-3);
+}
+
+/// Phase 3: batched serving workload over the Monarch tiny-LM artifacts.
+fn phase3_serving() {
+    println!("\n== phase 3: batched serving (tiny Monarch LM over PJRT) ==");
+    let cfg = ServerConfig {
+        policy: BatchPolicy {
+            max_batch: 8,
+            max_delay: std::time::Duration::from_millis(2),
+        },
+        ..Default::default()
+    };
+    let server = match InferenceServer::start(cfg) {
+        Ok(s) => s,
+        Err(e) => {
+            println!("  SKIPPED: {e}");
+            return;
+        }
+    };
+    let n_requests = 256;
+    let seq = server.seq;
+    let vocab = server.vocab as u32;
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|scope| {
+        for i in 0..n_requests {
+            let srv = &server;
+            scope.spawn(move || {
+                let mut rng = Pcg32::new(i as u64);
+                let toks: Vec<i32> = (0..seq).map(|_| rng.below(vocab) as i32).collect();
+                let logits = srv.infer(toks).expect("inference");
+                assert_eq!(logits.len(), seq * srv.vocab);
+            });
+        }
+    });
+    let elapsed = t0.elapsed();
+    let s = server.metrics.snapshot();
+    println!(
+        "  {} requests in {:.2?} -> {:.1} req/s ({:.1} tok/s)",
+        s.requests,
+        elapsed,
+        s.requests as f64 / elapsed.as_secs_f64(),
+        (s.requests as usize * seq) as f64 / elapsed.as_secs_f64()
+    );
+    println!(
+        "  batches {}, mean batch {:.2}, latency p50 {:.2} ms, p99 {:.2} ms, errors {}",
+        s.batches,
+        s.mean_batch,
+        s.latency_p50_us / 1e3,
+        s.latency_p99_us / 1e3,
+        s.errors
+    );
+    server.shutdown();
+}

@@ -1,0 +1,112 @@
+//! Quickstart: the whole framework on one weight matrix, in five steps.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! 1. Take a dense 1024x1024 "pre-trained" weight (synthetic, near the
+//!    Monarch class — the regime D2S fine-tuning targets).
+//! 2. D2S-transform it into Monarch factors (paper §III-A).
+//! 3. Map the factors onto 256x256 CIM arrays with all three strategies
+//!    and compare footprint/utilization (§III-B, Fig. 6).
+//! 4. Cost out an inference pass with the mapping-aware scheduler
+//!    (§III-C, Fig. 7).
+//! 5. Numerically validate the DenseMap schedule on emulated crossbars.
+
+use monarch_cim::cim::CimParams;
+use monarch_cim::mapping::{map_ops, Strategy};
+use monarch_cim::monarch::{monarch_project, MonarchMatrix};
+use monarch_cim::scheduler::timing::cost_report_for_mapping;
+use monarch_cim::sim::exec::{single_op, FunctionalChip};
+use monarch_cim::tensor::Matrix;
+use monarch_cim::util::rng::Pcg32;
+
+fn main() {
+    let d = 1024;
+    let b = 32;
+    let mut rng = Pcg32::new(7);
+
+    // 1) synthetic near-Monarch dense weight
+    println!("== 1. dense weight ({d}x{d}) ==");
+    let base = MonarchMatrix::randn(b, &mut rng)
+        .to_dense()
+        .scale(1.0 / b as f32);
+    let w = base.add(&Matrix::randn(d, d, &mut rng).scale(0.01));
+    println!("   ||W||_F = {:.1}", w.frobenius());
+
+    // 2) D2S projection
+    println!("== 2. D2S transformation (blockwise rank-1 SVD) ==");
+    let t0 = std::time::Instant::now();
+    let m = monarch_project(&w);
+    let rel = m.to_dense().rel_error(&w);
+    println!(
+        "   projected in {:?}; rel. Frobenius error {:.4}; params {} -> {} ({}x)",
+        t0.elapsed(),
+        rel,
+        d * d,
+        m.params(),
+        d * d / m.params()
+    );
+
+    // 3) mapping comparison
+    println!("== 3. CIM mapping (m = 256) ==");
+    let (cfg, ops) = {
+        let (mut c, o) = single_op(d);
+        c.d_model = d;
+        (c, o)
+    };
+    let params = CimParams::default();
+    for strategy in Strategy::all() {
+        let mm = map_ops(&cfg, &ops, &params, strategy);
+        println!(
+            "   {:<10} arrays {:>3}  utilization {:>6.1}%",
+            strategy.name(),
+            mm.arrays,
+            100.0 * mm.utilization()
+        );
+    }
+
+    // 4) scheduled cost
+    println!("== 4. scheduled inference cost (1 ADC/array) ==");
+    for strategy in Strategy::all() {
+        let mm = map_ops(&cfg, &ops, &params, strategy);
+        let c = cost_report_for_mapping(&cfg, &mm, &params);
+        println!(
+            "   {:<10} {:>7.2} µs/token   {:>8.1} nJ/token   ({}b ADC)",
+            strategy.name(),
+            c.per_token.latency.critical_ns() / 1e3,
+            c.per_token.energy.total_nj(),
+            c.adc_bits
+        );
+    }
+
+    // 5) functional validation of the capacity-optimized schedule
+    println!("== 5. functional check (DenseMap on emulated crossbars) ==");
+    let small = 64; // functional sim at b=8 for speed
+    let (cfg_s, ops_s) = single_op(small);
+    let mut p_small = CimParams::default();
+    p_small.array_dim = 32;
+    let mon = MonarchMatrix::randn(8, &mut rng);
+    let chip = FunctionalChip::program(
+        &cfg_s,
+        &ops_s,
+        std::slice::from_ref(&mon),
+        &p_small,
+        Strategy::DenseMap,
+    );
+    let x = rng.normal_vec(small);
+    let got = chip.run_op(0, &x);
+    let want = mon.matvec(&x);
+    let err: f32 = got
+        .iter()
+        .zip(&want)
+        .map(|(g, w)| (g - w).abs())
+        .fold(0.0, f32::max);
+    println!(
+        "   max |scheduled - reference| = {err:.2e} over {} crossbars (util {:.0}%)",
+        chip.crossbars.len(),
+        100.0 * chip.measured_utilization()
+    );
+    assert!(err < 1e-3, "functional check failed");
+    println!("quickstart OK");
+}

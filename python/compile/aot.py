@@ -1,0 +1,223 @@
+"""AOT lowering: JAX (L2) + Pallas (L1) -> HLO text artifacts for the Rust
+coordinator (L3).
+
+Interchange format is **HLO text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the ``xla``
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Python runs ONCE, at build time (``make artifacts``); the Rust binary is
+self-contained afterwards. Each artifact is listed in
+``artifacts/manifest.json`` with its input/output shapes so the runtime
+can validate feeds.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+# NOTE: jax >= 0.5 hoists large closed-over constants into HLO
+# *parameters* instead of baking them into the module. Model artifacts
+# therefore take their weights as explicit leading parameters, and the
+# weight values are dumped to a `.weights.bin` sidecar (flat f32, leaf
+# order) that the Rust runtime feeds back at execution time.
+
+from . import model as m
+from .kernels import monarch as mk
+
+SEED = 2025
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_of(x):
+    return {"shape": list(x.shape), "dtype": str(x.dtype)}
+
+
+def lower_artifact(name, fn, example_args, out_dir, meta=None):
+    """Lower ``fn`` at ``example_args`` and write ``<name>.hlo.txt``."""
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    fname = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    outs = jax.eval_shape(fn, *example_args)
+    if not isinstance(outs, (tuple, list)):
+        outs = (outs,)
+    entry = {
+        "name": name,
+        "file": fname,
+        "inputs": [_spec_of(a) for a in example_args],
+        "outputs": [_spec_of(o) for o in outs],
+        "meta": meta or {},
+    }
+    print(f"  {fname}: {len(text)} chars")
+    return entry
+
+
+def build_all(out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+    f32 = jnp.float32
+
+    # --- L1 kernel artifacts: factors fed at runtime by the Rust D2S path.
+    spec = jax.ShapeDtypeStruct
+    entries.append(
+        lower_artifact(
+            "block_diag_b8",
+            mk.block_diag_mm,
+            (spec((8, 8, 8), f32), spec((4, 64), f32)),
+            out_dir,
+            {"kind": "block_diag", "b": 8, "nb": 8, "batch": 4},
+        )
+    )
+    entries.append(
+        lower_artifact(
+            "monarch_mvm_n64",
+            mk.monarch_mm,
+            (spec((8, 8, 8), f32), spec((8, 8, 8), f32), spec((8, 64), f32)),
+            out_dir,
+            {"kind": "monarch_mvm", "n": 64, "b": 8, "batch": 8},
+        )
+    )
+    entries.append(
+        lower_artifact(
+            "monarch_mvm_n1024",
+            mk.monarch_mm,
+            (
+                spec((32, 32, 32), f32),
+                spec((32, 32, 32), f32),
+                spec((4, 1024), f32),
+            ),
+            out_dir,
+            {"kind": "monarch_mvm", "n": 1024, "b": 32, "batch": 4},
+        )
+    )
+    entries.append(
+        lower_artifact(
+            "monarch_mvm_lanes_n64",
+            lambda L, R, x: mk.monarch_mm_lanes(L, R, x, lanes=4),
+            (spec((8, 8, 8), f32), spec((8, 8, 8), f32), spec((8, 64), f32)),
+            out_dir,
+            {"kind": "monarch_mvm_lanes", "n": 64, "b": 8, "lanes": 4, "batch": 8},
+        )
+    )
+    entries.append(
+        lower_artifact(
+            "block_diag_adc_b8",
+            lambda w, x: mk.block_diag_mm_adc(w, x, bits=5, full_scale=8.0),
+            (spec((8, 8, 8), f32), spec((4, 64), f32)),
+            out_dir,
+            {"kind": "block_diag_adc", "b": 8, "bits": 5, "full_scale": 8.0},
+        )
+    )
+
+    # --- L2 model artifacts: weights as explicit leading parameters with
+    # a binary sidecar (see module note), dynamic inputs trailing.
+    cfg = m.ModelConfig(d_model=64, n_heads=4, n_layers=2, vocab=256, seq=32)
+    params = jax.tree.map(jnp.asarray, m.init_params(cfg, seed=SEED))
+    leaves, treedef = jax.tree.flatten(params)
+    weight_specs = [spec(l.shape, l.dtype) for l in leaves]
+    weights_file = "tiny_lm.weights.bin"
+    with open(os.path.join(out_dir, weights_file), "wb") as f:
+        for l in leaves:
+            f.write(np.asarray(l, np.float32).tobytes())
+
+    layer_leaves, layer_treedef = jax.tree.flatten(params["layers"][0])
+    layer_weight_specs = [spec(l.shape, l.dtype) for l in layer_leaves]
+    layer_weights_file = "monarch_layer_n64.weights.bin"
+    with open(os.path.join(out_dir, layer_weights_file), "wb") as f:
+        for l in layer_leaves:
+            f.write(np.asarray(l, np.float32).tobytes())
+
+    def layer_fwd(*args):
+        *ws, x = args
+        layer = jax.tree.unflatten(layer_treedef, ws)
+        return m.encoder_layer(layer, x, cfg, causal=False)
+
+    entries.append(
+        lower_artifact(
+            "monarch_layer_n64",
+            layer_fwd,
+            (*layer_weight_specs, spec((2, 16, 64), f32)),
+            out_dir,
+            {
+                "kind": "encoder_layer",
+                "d_model": 64,
+                "seq": 16,
+                "batch": 2,
+                "weights_file": layer_weights_file,
+                "n_weights": len(layer_leaves),
+            },
+        )
+    )
+
+    def lm_fwd_flat(*args):
+        *ws, tokens = args
+        p = jax.tree.unflatten(treedef, ws)
+        return m.lm_forward(p, tokens, cfg)
+
+    for batch in (1, 4, 8):
+        entries.append(
+            lower_artifact(
+                f"tiny_lm_b{batch}",
+                lm_fwd_flat,
+                (*weight_specs, spec((batch, cfg.seq), jnp.int32)),
+                out_dir,
+                {
+                    "kind": "tiny_lm",
+                    "batch": batch,
+                    "seq": cfg.seq,
+                    "vocab": cfg.vocab,
+                    "d_model": cfg.d_model,
+                    "n_layers": cfg.n_layers,
+                    "n_heads": cfg.n_heads,
+                    "seed": SEED,
+                    "weights_file": weights_file,
+                    "n_weights": len(leaves),
+                },
+            )
+        )
+
+    # Golden outputs for runtime validation (tiny, deterministic).
+    rng = np.random.default_rng(7)
+    tok = rng.integers(0, cfg.vocab, size=(1, cfg.seq), dtype=np.int32)
+    logits = np.asarray(m.lm_forward(params, jnp.asarray(tok), cfg))
+    golden = {
+        "tokens": tok.tolist(),
+        "logits_sum": float(logits.sum()),
+        "logits_first8": [float(v) for v in logits.reshape(-1)[:8]],
+    }
+    with open(os.path.join(out_dir, "tiny_lm_golden.json"), "w") as f:
+        json.dump(golden, f, indent=1)
+
+    manifest = {"version": 1, "seed": SEED, "artifacts": entries}
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(entries)} artifacts + manifest to {out_dir}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    build_all(args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

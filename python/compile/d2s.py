@@ -1,0 +1,73 @@
+"""Dense-to-sparse (D2S) transformation — Monarch projection (paper §III-A).
+
+Analytical projection of a dense ``n x n`` matrix ``W`` onto the Monarch
+class ``M = P L P R P`` minimizing ``||W - M||_F`` (Dao et al. 2022):
+by the slice identity (see ``kernels/ref.py``)
+
+    M[(d, a), (c, k)] = L[a][d, k] * R[k][a, c]
+
+each ``b x b`` slice ``A^(a,k)[d, c] = W[(d, a), (c, k)]`` of a Monarch
+matrix is rank-1, so the Frobenius-optimal projection is the best rank-1
+approximation of every slice independently (SVD truncation):
+
+    A^(a,k) ~= sigma * u v^T,   L[a][:, k] = sqrt(sigma) u,
+                                R[k][a, :] = sqrt(sigma) v^T.
+
+This Python implementation is the build-time twin of
+``rust/src/monarch/project.rs``; both are tested for parity against
+``ref.monarch_dense``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def monarch_project(W: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Project dense ``W`` (n x n, n = b^2) onto the Monarch class.
+
+    Returns ``(L, R)`` each of shape ``(b, b, b)``.
+    """
+    n, n2 = W.shape
+    assert n == n2, "W must be square"
+    b = int(round(np.sqrt(n)))
+    assert b * b == n, f"n ({n}) must be a perfect square"
+
+    # W[(d, a), (c, k)] -> slices[a, k, d, c]
+    w4 = W.reshape(b, b, b, b)  # [d, a, c, k]
+    slices = w4.transpose(1, 3, 0, 2)  # [a, k, d, c]
+
+    # Batched rank-1 SVD over all b^2 slices at once.
+    u, s, vt = np.linalg.svd(slices.reshape(b * b, b, b), full_matrices=False)
+    u1 = u[:, :, 0].reshape(b, b, b)  # [a, k, d]
+    v1 = vt[:, 0, :].reshape(b, b, b)  # [a, k, c]
+    s1 = np.sqrt(s[:, 0]).reshape(b, b)  # [a, k]
+
+    L = np.zeros((b, b, b), W.dtype)  # L[a][d, k]
+    R = np.zeros((b, b, b), W.dtype)  # R[k][a, c]
+    L[:] = (u1 * s1[:, :, None]).transpose(0, 2, 1)  # [a, d, k]
+    R[:] = (v1 * s1[:, :, None]).transpose(1, 0, 2)  # [k, a, c]
+    return L, R
+
+
+def monarch_dense_np(L: np.ndarray, R: np.ndarray) -> np.ndarray:
+    """Dense materialization of ``M = P L P R P`` (numpy twin of
+    ``ref.monarch_dense``)."""
+    b = L.shape[0]
+    m4 = np.einsum("adk,kac->dack", L, R)
+    return m4.reshape(b * b, b * b)
+
+
+def projection_error(W: np.ndarray) -> float:
+    """Relative Frobenius error of the Monarch projection of ``W``."""
+    L, R = monarch_project(W)
+    M = monarch_dense_np(L, R)
+    return float(np.linalg.norm(W - M) / max(np.linalg.norm(W), 1e-30))
+
+
+def random_monarch(b: int, seed: int = 0) -> tuple[np.ndarray, np.ndarray]:
+    """Random Monarch factors (for exact-recovery tests)."""
+    rng = np.random.default_rng(seed)
+    L = rng.standard_normal((b, b, b)).astype(np.float32)
+    R = rng.standard_normal((b, b, b)).astype(np.float32)
+    return L, R

@@ -1,0 +1,185 @@
+"""Layer-1 Pallas kernels: block-diagonal and Monarch matrix multiply.
+
+Hardware adaptation (see DESIGN.md §Hardware-Adaptation): the paper's
+analog-CIM crossbar holds one ``b x b`` weight block stationary while the
+input segment streams through. On a TPU-shaped machine the analogue is a
+VMEM-resident weight tile driven by a Pallas grid over the block index;
+the HBM->VMEM ``BlockSpec`` schedule plays the role of the array-write
+schedule, and the ``b x b`` contraction targets the MXU.
+
+All kernels here are lowered with ``interpret=True`` so the surrounding
+JAX program compiles to plain HLO and runs on any PJRT backend (the Rust
+coordinator uses the CPU client). Real-TPU lowering would emit Mosaic
+custom-calls that CPU PJRT cannot execute.
+
+Correctness oracle: ``ref.py`` (pytest + hypothesis sweep shapes/dtypes).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Pallas kernels in this repo always run in interpret mode (CPU PJRT).
+INTERPRET = True
+
+
+def _block_diag_kernel(x_ref, w_ref, o_ref):
+    """One grid step: multiply input segment ``k`` by stationary block ``k``.
+
+    ``x_ref``: (batch, b) VMEM tile — segment ``k`` of the input rows.
+    ``w_ref``: (1, b, b) VMEM tile — block ``k`` (weight-stationary).
+    ``o_ref``: (batch, b) VMEM tile — segment ``k`` of the output rows.
+
+    The contraction is written as a plain matmul so it maps onto the MXU
+    when compiled for a real TPU: (batch, b) @ (b, b)^T.
+    """
+    w = w_ref[0]  # (b, b): o[d] = sum_c w[d, c] x[c]
+    o_ref[...] = jnp.dot(
+        x_ref[...], w.T, preferred_element_type=o_ref.dtype
+    )
+
+
+def block_diag_mm(blocks: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Pallas block-diagonal multiply.
+
+    ``blocks``: (nb, b, b); ``x``: (batch, nb*b). Returns (batch, nb*b)
+    with segment ``k`` of every row multiplied by ``blocks[k]``
+    (``y = x_seg @ blocks[k].T``, matching ``ref.block_diag_mm``).
+    """
+    nb, b, b2 = blocks.shape
+    assert b == b2, "blocks must be square"
+    batch, n = x.shape
+    assert n == nb * b, f"input dim {n} != nb*b ({nb}*{b})"
+
+    grid = (nb,)
+    return pl.pallas_call(
+        _block_diag_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((batch, b), lambda k: (0, k)),
+            pl.BlockSpec((1, b, b), lambda k: (k, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((batch, b), lambda k: (0, k)),
+        out_shape=jax.ShapeDtypeStruct((batch, n), x.dtype),
+        interpret=INTERPRET,
+    )(x, blocks)
+
+
+def _block_diag_lanes_kernel(x_ref, w_ref, o_ref, *, lanes: int):
+    """DenseMap-style lane-sequential variant of the block-diagonal kernel.
+
+    Models the capacity-optimized CIM mapping where one physical array
+    stores ``lanes`` diagonals and processes them *temporally*: the grid
+    walks (array, lane) with the lane axis minor, accumulating into the
+    same VMEM output tile — mirroring the scheduler's per-lane row
+    activation with shift-and-add accumulation.
+
+    ``x_ref``: (batch, b) — input segment for (array, lane).
+    ``w_ref``: (1, b, b) — the block held by this lane of this array.
+    ``o_ref``: (batch, lanes*b) — output tile of the whole array.
+    """
+    lane = pl.program_id(1)
+    w = w_ref[0]
+    seg = jnp.dot(x_ref[...], w.T, preferred_element_type=o_ref.dtype)
+    b = seg.shape[-1]
+    o_ref[:, pl.dslice(lane * b, b)] = seg
+
+
+def block_diag_mm_lanes(
+    blocks: jnp.ndarray, x: jnp.ndarray, lanes: int
+) -> jnp.ndarray:
+    """Lane-sequential block-diagonal multiply (DenseMap emulation).
+
+    Identical numerics to :func:`block_diag_mm`; the grid is reshaped to
+    (arrays, lanes) so blocks belonging to the same physical array are
+    visited sequentially, which is the iteration order the DenseMap
+    scheduler imposes on real CIM hardware.
+    """
+    nb, b, _ = blocks.shape
+    batch, n = x.shape
+    assert nb % lanes == 0, f"nb ({nb}) must be divisible by lanes ({lanes})"
+    arrays = nb // lanes
+
+    return pl.pallas_call(
+        functools.partial(_block_diag_lanes_kernel, lanes=lanes),
+        grid=(arrays, lanes),
+        in_specs=[
+            pl.BlockSpec((batch, b), lambda a, l: (0, a * lanes + l)),
+            pl.BlockSpec((1, b, b), lambda a, l: (a * lanes + l, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((batch, lanes * b), lambda a, l: (0, a)),
+        out_shape=jax.ShapeDtypeStruct((batch, n), x.dtype),
+        interpret=INTERPRET,
+    )(x, blocks)
+
+
+def monarch_mm(L: jnp.ndarray, R: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Monarch multiply ``y = (P L P R P) x`` for batched rows ``x``.
+
+    The two block-diagonal stages run as Pallas kernels; the fixed stride
+    permutations are pure data movement (reshape/transpose) and lower to
+    HLO transposes that XLA fuses with neighbouring ops — exactly like the
+    paper's folded-permutation execution, where P never costs a FLOP.
+    """
+    b = L.shape[0]
+    u = ref.perm(x, b)
+    v = block_diag_mm(R, u)
+    w = ref.perm(v, b)
+    z = block_diag_mm(L, w)
+    return ref.perm(z, b)
+
+
+def monarch_mm_lanes(
+    L: jnp.ndarray, R: jnp.ndarray, x: jnp.ndarray, lanes: int
+) -> jnp.ndarray:
+    """Monarch multiply using the lane-sequential (DenseMap) stages."""
+    b = L.shape[0]
+    u = ref.perm(x, b)
+    v = block_diag_mm_lanes(R, u, lanes)
+    w = ref.perm(v, b)
+    z = block_diag_mm_lanes(L, w, lanes)
+    return ref.perm(z, b)
+
+
+def _block_diag_adc_kernel(x_ref, w_ref, o_ref, *, bits: int, full_scale: float):
+    """Block-diagonal multiply with SAR-ADC readout quantization.
+
+    Each column current is digitized by a ``bits``-bit ADC over
+    ``[-full_scale, full_scale]`` — the analog-CIM readout model used to
+    study DenseMap's reduced-precision operating point.
+    """
+    w = w_ref[0]
+    acc = jnp.dot(x_ref[...], w.T, preferred_element_type=jnp.float32)
+    levels = (1 << bits) - 1
+    step = 2.0 * full_scale / levels
+    half = levels // 2
+    q = jnp.clip(jnp.round(acc / step), -half, half) * step
+    o_ref[...] = q.astype(o_ref.dtype)
+
+
+def block_diag_mm_adc(
+    blocks: jnp.ndarray, x: jnp.ndarray, bits: int, full_scale: float
+) -> jnp.ndarray:
+    """Quantized block-diagonal multiply (matches ``ref.adc_quantize`` of
+    ``ref.block_diag_mm``)."""
+    nb, b, _ = blocks.shape
+    batch, n = x.shape
+    return pl.pallas_call(
+        functools.partial(
+            _block_diag_adc_kernel, bits=bits, full_scale=full_scale
+        ),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((batch, b), lambda k: (0, k)),
+            pl.BlockSpec((1, b, b), lambda k: (k, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((batch, b), lambda k: (0, k)),
+        out_shape=jax.ShapeDtypeStruct((batch, n), x.dtype),
+        interpret=INTERPRET,
+    )(x, blocks)

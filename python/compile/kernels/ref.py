@@ -1,0 +1,101 @@
+"""Pure-jnp reference oracle for the Monarch / block-diagonal kernels.
+
+This module is the *correctness contract* for the Pallas kernels in
+``monarch.py`` and for the Rust-side reimplementation: every layout and
+index convention used anywhere in the repo is defined here, once.
+
+Conventions (shared with ``rust/src/monarch/``):
+
+* ``n = b * b``; a flat index ``i`` into a length-``n`` vector is split as
+  ``i = i1 * b + i2``.
+* The fixed Monarch permutation ``P`` swaps the two index digits:
+  ``(P x)[i2 * b + i1] = x[i1 * b + i2]`` — i.e. transpose of the
+  row-major ``(b, b)`` view.
+* ``L`` and ``R`` are stored as ``(b, b, b)`` arrays of ``b`` dense
+  ``b x b`` blocks: ``L[a]`` is block ``a`` of the left factor, ``R[k]``
+  block ``k`` of the right factor.
+* The Monarch operator is ``M = P @ diag(L) @ P @ diag(R) @ P`` and
+  satisfies the rank-1 slice identity::
+
+      M[(d, a), (c, k)] = L[a][d, k] * R[k][a, c]
+
+  which is what the D2S projection exploits.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def perm(x: jnp.ndarray, b: int) -> jnp.ndarray:
+    """Apply the stride permutation P to the last axis of ``x``.
+
+    ``x[..., i1*b + i2] -> out[..., i2*b + i1]``.
+    """
+    shape = x.shape
+    n = shape[-1]
+    assert n == b * b, f"last dim {n} != b^2 ({b}^2)"
+    y = x.reshape(*shape[:-1], b, b)
+    y = jnp.swapaxes(y, -1, -2)
+    return y.reshape(*shape)
+
+
+def block_diag_mm(blocks: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Multiply a block-diagonal matrix by batched vectors.
+
+    ``blocks``: ``(nb, b, b)`` — block ``k`` acts on segment ``k``.
+    ``x``: ``(..., nb * b)`` batched input.
+    Returns ``y`` with
+    ``y[..., k*b + d] = sum_c blocks[k, d, c] * x[..., k*b + c]``.
+    """
+    nb, b, b2 = blocks.shape
+    assert b == b2
+    xs = x.reshape(*x.shape[:-1], nb, b)
+    ys = jnp.einsum("kdc,...kc->...kd", blocks, xs)
+    return ys.reshape(*x.shape)
+
+
+def block_diag_dense(blocks: jnp.ndarray) -> jnp.ndarray:
+    """Materialize the dense ``(nb*b, nb*b)`` matrix of a block-diagonal."""
+    nb, b, _ = blocks.shape
+    n = nb * b
+    out = jnp.zeros((n, n), blocks.dtype)
+    for k in range(nb):
+        out = out.at[k * b : (k + 1) * b, k * b : (k + 1) * b].set(blocks[k])
+    return out
+
+
+def monarch_apply(L: jnp.ndarray, R: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Apply ``M = P L P R P`` to batched vectors ``x`` of length ``n = b^2``."""
+    b = L.shape[0]
+    u = perm(x, b)
+    v = block_diag_mm(R, u)
+    w = perm(v, b)
+    z = block_diag_mm(L, w)
+    return perm(z, b)
+
+
+def monarch_dense(L: jnp.ndarray, R: jnp.ndarray) -> jnp.ndarray:
+    """Materialize the dense ``n x n`` Monarch matrix via the slice identity.
+
+    ``M[(d, a), (c, k)] = L[a][d, k] * R[k][a, c]``.
+    """
+    b = L.shape[0]
+    # m4[d, a, c, k] = L[a, d, k] * R[k, a, c]
+    m4 = jnp.einsum("adk,kac->dack", L, R)
+    return m4.reshape(b * b, b * b)
+
+
+def monarch_mm(L: jnp.ndarray, R: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Batched matrix form: rows of ``x`` are independent vectors."""
+    return monarch_apply(L, R, x)
+
+
+def adc_quantize(y: jnp.ndarray, bits: int, full_scale: float) -> jnp.ndarray:
+    """Emulate a SAR ADC readout: uniform mid-tread quantization to
+    ``bits`` bits over ``[-full_scale, full_scale]``."""
+    levels = (1 << bits) - 1
+    step = 2.0 * full_scale / levels
+    half = levels // 2
+    q = jnp.clip(jnp.round(y / step), -half, half)
+    return q * step

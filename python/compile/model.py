@@ -1,0 +1,239 @@
+"""Layer-2 JAX model: Monarch-sparse transformer blocks and a tiny Monarch LM.
+
+Every *parameterized* matmul (Q/K/V/O projections, FFN up/down) is a
+Monarch operator executed by the Layer-1 Pallas kernels
+(``kernels.monarch``); the *non-parameterized* matmuls (attention scores,
+attention-weighted values) stay dense, exactly as in the paper (§III-A,
+Fig. 2b: Para-Matmul vs NonPara-Matmul).
+
+Rectangular FFN matrices are partitioned into square ``d x d`` tiles, each
+tile an independent Monarch factor pair — the same square-tile
+partitioning used by ``rust/src/monarch/rect.rs`` and by the DenseMap
+packing ("partitions of a single large matrix", §III-B2).
+
+This module is build-time only: ``aot.py`` lowers the functions below to
+HLO text once; the Rust coordinator executes the artifacts via PJRT.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import monarch as mk
+from . import d2s
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Tiny-LM configuration; ``d_model`` must be a perfect square."""
+
+    d_model: int = 64
+    n_heads: int = 4
+    n_layers: int = 2
+    d_ff_mult: int = 4
+    vocab: int = 256
+    seq: int = 32
+
+    @property
+    def b(self) -> int:
+        b = int(round(math.sqrt(self.d_model)))
+        assert b * b == self.d_model, "d_model must be a perfect square"
+        return b
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialization
+# ---------------------------------------------------------------------------
+
+
+def _init_monarch(rng: np.random.Generator, b: int, scale: float):
+    """Random Monarch factor pair with dense-equivalent fan-in scaling.
+
+    Each entry of the dense-equivalent ``M`` is a product of two factor
+    entries, so factor entries are drawn with std ``sqrt(scale_M)`` to give
+    the dense matrix variance ``scale_M^2 / b`` per entry * b terms... we
+    simply draw both factors with std ``(scale / b) ** 0.5`` so that
+    ``Var(M_ij) = scale^2 / b^2 * b = scale^2 / b`` — the usual 1/fan-in
+    decay for n = b^2.
+    """
+    std = math.sqrt(scale / b)
+    return {
+        "L": rng.standard_normal((b, b, b)).astype(np.float32) * std,
+        "R": rng.standard_normal((b, b, b)).astype(np.float32) * std,
+    }
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> dict:
+    """Initialize all weights of the tiny Monarch LM as a pytree."""
+    rng = np.random.default_rng(seed)
+    b = cfg.b
+    d = cfg.d_model
+
+    def ln():
+        return {
+            "g": np.ones((d,), np.float32),
+            "b": np.zeros((d,), np.float32),
+        }
+
+    layers = []
+    for _ in range(cfg.n_layers):
+        layers.append(
+            {
+                "wq": _init_monarch(rng, b, 1.0),
+                "wk": _init_monarch(rng, b, 1.0),
+                "wv": _init_monarch(rng, b, 1.0),
+                "wo": _init_monarch(rng, b, 1.0),
+                "ffn_up": [
+                    _init_monarch(rng, b, 1.0) for _ in range(cfg.d_ff_mult)
+                ],
+                "ffn_down": [
+                    _init_monarch(rng, b, 1.0 / cfg.d_ff_mult)
+                    for _ in range(cfg.d_ff_mult)
+                ],
+                "ln1": ln(),
+                "ln2": ln(),
+            }
+        )
+    return {
+        "embed": rng.standard_normal((cfg.vocab, d)).astype(np.float32) * 0.02,
+        "pos": rng.standard_normal((cfg.seq, d)).astype(np.float32) * 0.02,
+        "ln_f": ln(),
+        "layers": layers,
+    }
+
+
+def params_from_dense(cfg: ModelConfig, dense_params: dict) -> dict:
+    """D2S-transform a dense parameter pytree into Monarch form.
+
+    ``dense_params`` mirrors ``init_params`` but with ``wq/wk/wv/wo`` as
+    dense ``(d, d)`` arrays and ``ffn_up/ffn_down`` as ``(d_ff, d)`` /
+    ``(d, d_ff)`` dense arrays; the projection of §III-A is applied per
+    square tile.
+    """
+    d = cfg.d_model
+    out = {
+        "embed": dense_params["embed"],
+        "pos": dense_params["pos"],
+        "ln_f": dense_params["ln_f"],
+        "layers": [],
+    }
+    for lp in dense_params["layers"]:
+        q = {}
+        for k in ("wq", "wk", "wv", "wo"):
+            L, R = d2s.monarch_project(lp[k])
+            q[k] = {"L": L, "R": R}
+        up, down = [], []
+        for t in range(cfg.d_ff_mult):
+            L, R = d2s.monarch_project(lp["ffn_up"][t * d : (t + 1) * d, :])
+            up.append({"L": L, "R": R})
+            L, R = d2s.monarch_project(lp["ffn_down"][:, t * d : (t + 1) * d])
+            down.append({"L": L, "R": R})
+        q["ffn_up"] = up
+        q["ffn_down"] = down
+        q["ln1"] = lp["ln1"]
+        q["ln2"] = lp["ln2"]
+        out["layers"].append(q)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+
+def monarch_linear(p: dict, x2d: jnp.ndarray) -> jnp.ndarray:
+    """Parameterized matmul in Monarch form: rows of ``x2d`` times ``M^T``
+    (we store the operator so that ``y = M x`` per row)."""
+    return mk.monarch_mm(p["L"], p["R"], x2d)
+
+
+def layer_norm(p: dict, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * p["g"] + p["b"]
+
+
+def gelu(x: jnp.ndarray) -> jnp.ndarray:
+    return 0.5 * x * (1.0 + jnp.tanh(0.7978845608 * (x + 0.044715 * x**3)))
+
+
+def mha(layer: dict, x: jnp.ndarray, cfg: ModelConfig, causal: bool) -> jnp.ndarray:
+    """Multi-head attention with Monarch Q/K/V/O projections.
+
+    ``x``: (B, S, d). The scores/context matmuls are the paper's
+    NonPara-Matmuls and stay dense.
+    """
+    B, S, d = x.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    x2 = x.reshape(B * S, d)
+
+    def proj(p):
+        return monarch_linear(p, x2).reshape(B, S, h, dh)
+
+    q, k, v = proj(layer["wq"]), proj(layer["wk"]), proj(layer["wv"])
+    scores = jnp.einsum("bshd,bthd->bhst", q, k) / math.sqrt(dh)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        scores = jnp.where(mask[None, None], scores, -1e30)
+    attn = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhst,bthd->bshd", attn, v).reshape(B * S, d)
+    return monarch_linear(layer["wo"], ctx).reshape(B, S, d)
+
+
+def ffn(layer: dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Position-wise FFN with square-tile-partitioned Monarch up/down."""
+    B, S, d = x.shape
+    x2 = x.reshape(B * S, d)
+    hs = [monarch_linear(p, x2) for p in layer["ffn_up"]]
+    h = gelu(jnp.concatenate(hs, axis=-1))
+    out = jnp.zeros((B * S, d), x.dtype)
+    for t, p in enumerate(layer["ffn_down"]):
+        out = out + monarch_linear(p, h[:, t * d : (t + 1) * d])
+    return out.reshape(B, S, d)
+
+
+def encoder_layer(
+    layer: dict, x: jnp.ndarray, cfg: ModelConfig, causal: bool = False
+) -> jnp.ndarray:
+    """Pre-norm transformer block with Monarch parameterized matmuls."""
+    x = x + mha(layer, layer_norm(layer["ln1"], x), cfg, causal)
+    x = x + ffn(layer, layer_norm(layer["ln2"], x), cfg)
+    return x
+
+
+def lm_forward(params: dict, tokens: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Tiny Monarch LM: tokens (B, S) int32 -> logits (B, S, vocab).
+
+    Decoder-only (causal); output projection is tied to the embedding
+    (a NonPara-style dense matmul over activations, as the paper leaves
+    embeddings untransformed).
+    """
+    B, S = tokens.shape
+    x = params["embed"][tokens] + params["pos"][None, :S]
+    for layer in params["layers"]:
+        x = encoder_layer(layer, x, cfg, causal=True)
+    x = layer_norm(params["ln_f"], x)
+    return jnp.einsum("bsd,vd->bsv", x, params["embed"])
+
+
+# ---------------------------------------------------------------------------
+# Dense reference twins (for accuracy deltas and tests)
+# ---------------------------------------------------------------------------
+
+
+def dense_linear_from_monarch(p: dict, x2d: jnp.ndarray) -> jnp.ndarray:
+    """Apply the densified Monarch operator (oracle for layer tests)."""
+    from .kernels import ref
+
+    M = ref.monarch_dense(jnp.asarray(p["L"]), jnp.asarray(p["R"]))
+    return x2d @ M.T

@@ -1,0 +1,80 @@
+"""D2S projection tests (paper §III-A): exact recovery on true Monarch
+matrices, optimality vs perturbations, error monotonicity."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import d2s
+from compile.kernels import ref
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+
+@given(b=st.sampled_from([2, 3, 4, 8]), seed=st.integers(0, 2**31 - 1))
+def test_exact_recovery_of_monarch_matrices(b, seed):
+    """Projecting a matrix already in the Monarch class recovers it."""
+    L, R = d2s.random_monarch(b, seed)
+    M = d2s.monarch_dense_np(L, R)
+    L2, R2 = d2s.monarch_project(M)
+    M2 = d2s.monarch_dense_np(L2, R2)
+    np.testing.assert_allclose(M2, M, rtol=1e-4, atol=1e-4)
+
+
+def test_dense_np_matches_jnp_reference():
+    import jax.numpy as jnp
+
+    L, R = d2s.random_monarch(4, 3)
+    got = d2s.monarch_dense_np(L, R)
+    want = np.asarray(ref.monarch_dense(jnp.asarray(L), jnp.asarray(R)))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+@given(b=st.sampled_from([3, 4]), seed=st.integers(0, 2**31 - 1))
+def test_projection_error_bounded_by_input_norm(b, seed):
+    """||W - proj(W)||_F <= ||W||_F (projection never worse than zero)."""
+    rng = np.random.default_rng(seed)
+    W = rng.standard_normal((b * b, b * b)).astype(np.float32)
+    L, R = d2s.monarch_project(W)
+    M = d2s.monarch_dense_np(L, R)
+    assert np.linalg.norm(W - M) <= np.linalg.norm(W) + 1e-4
+
+
+def test_projection_optimal_per_slice():
+    """Each projected slice is the best rank-1 approx: residual slice is
+    orthogonal-ish — check error equals sum of discarded singular values."""
+    rng = np.random.default_rng(0)
+    b = 4
+    W = rng.standard_normal((b * b, b * b)).astype(np.float64)
+    L, R = d2s.monarch_project(W)
+    M = d2s.monarch_dense_np(L, R)
+    # Expected squared error = sum over slices of (sum of s_i^2 for i >= 1)
+    w4 = W.reshape(b, b, b, b).transpose(1, 3, 0, 2).reshape(b * b, b, b)
+    s = np.linalg.svd(w4, compute_uv=False)
+    expect = np.sum(s[:, 1:] ** 2)
+    got = np.linalg.norm(W - M) ** 2
+    np.testing.assert_allclose(got, expect, rtol=1e-8)
+
+
+def test_error_decreases_with_structure():
+    """A near-Monarch matrix projects with smaller error than iid noise."""
+    rng = np.random.default_rng(1)
+    b = 8
+    L, R = d2s.random_monarch(b, 5)
+    M = d2s.monarch_dense_np(L, R)
+    noise = rng.standard_normal(M.shape).astype(np.float32)
+    near = M + 0.05 * noise
+    assert d2s.projection_error(near) < d2s.projection_error(noise)
+
+
+def test_low_rank_slices_project_exactly():
+    """A matrix whose slices are rank-1 but built directly (not via L,R)
+    is also recovered exactly."""
+    rng = np.random.default_rng(2)
+    b = 4
+    u = rng.standard_normal((b, b, b)).astype(np.float64)
+    v = rng.standard_normal((b, b, b)).astype(np.float64)
+    # slices[a,k] = outer(u[a,k], v[a,k])
+    m4 = np.einsum("akd,akc->dack", u.transpose(0, 2, 1), v.transpose(0, 2, 1))
+    W = m4.reshape(b * b, b * b)
+    assert d2s.projection_error(W) < 1e-10

@@ -1,0 +1,198 @@
+"""Pallas kernels vs pure-jnp oracle — the core L1 correctness signal.
+
+Hypothesis sweeps block size, block count, batch and dtype; fixed-seed
+numpy cases pin the exact layouts the AOT artifacts use.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import monarch as mk
+from compile.kernels import ref
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def rnd(rng, *shape, dtype=np.float32):
+    return rng.standard_normal(shape).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# block_diag_mm
+# ---------------------------------------------------------------------------
+
+
+@given(
+    b=st.sampled_from([1, 2, 4, 8, 16]),
+    nb=st.integers(1, 12),
+    batch=st.integers(1, 9),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_block_diag_matches_ref(b, nb, batch, seed):
+    rng = np.random.default_rng(seed)
+    blocks = rnd(rng, nb, b, b)
+    x = rnd(rng, batch, nb * b)
+    got = mk.block_diag_mm(jnp.asarray(blocks), jnp.asarray(x))
+    want = ref.block_diag_mm(jnp.asarray(blocks), jnp.asarray(x))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@given(
+    b=st.sampled_from([2, 4, 8]),
+    arrays=st.integers(1, 4),
+    lanes=st.sampled_from([1, 2, 4]),
+    batch=st.integers(1, 5),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_block_diag_lanes_matches_ref(b, arrays, lanes, batch, seed):
+    """DenseMap lane-sequential kernel is numerically identical."""
+    rng = np.random.default_rng(seed)
+    nb = arrays * lanes
+    blocks = rnd(rng, nb, b, b)
+    x = rnd(rng, batch, nb * b)
+    got = mk.block_diag_mm_lanes(jnp.asarray(blocks), jnp.asarray(x), lanes)
+    want = ref.block_diag_mm(jnp.asarray(blocks), jnp.asarray(x))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_block_diag_identity_blocks():
+    """Identity blocks pass the input through unchanged."""
+    b, nb, batch = 4, 3, 2
+    blocks = np.stack([np.eye(b, dtype=np.float32)] * nb)
+    x = np.arange(batch * nb * b, dtype=np.float32).reshape(batch, nb * b)
+    got = mk.block_diag_mm(jnp.asarray(blocks), jnp.asarray(x))
+    np.testing.assert_allclose(got, x, rtol=1e-6)
+
+
+def test_block_diag_dense_equivalence():
+    """Kernel output equals x @ dense(blockdiag)^T."""
+    rng = np.random.default_rng(0)
+    blocks = rnd(rng, 4, 4, 4)
+    x = rnd(rng, 3, 16)
+    dense = ref.block_diag_dense(jnp.asarray(blocks))
+    want = x @ np.asarray(dense).T
+    got = mk.block_diag_mm(jnp.asarray(blocks), jnp.asarray(x))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_block_diag_dtypes(dtype):
+    rng = np.random.default_rng(1)
+    blocks = jnp.asarray(rnd(rng, 4, 8, 8)).astype(dtype)
+    x = jnp.asarray(rnd(rng, 2, 32)).astype(dtype)
+    got = mk.block_diag_mm(blocks, x)
+    want = ref.block_diag_mm(blocks, x)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+# ---------------------------------------------------------------------------
+# monarch_mm
+# ---------------------------------------------------------------------------
+
+
+@given(
+    b=st.sampled_from([2, 3, 4, 8]),
+    batch=st.integers(1, 6),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_monarch_matches_ref(b, batch, seed):
+    rng = np.random.default_rng(seed)
+    L, R = rnd(rng, b, b, b), rnd(rng, b, b, b)
+    x = rnd(rng, batch, b * b)
+    got = mk.monarch_mm(jnp.asarray(L), jnp.asarray(R), jnp.asarray(x))
+    want = ref.monarch_apply(jnp.asarray(L), jnp.asarray(R), jnp.asarray(x))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@given(b=st.sampled_from([2, 4, 8]), seed=st.integers(0, 2**31 - 1))
+def test_monarch_matches_dense_materialization(b, seed):
+    """Kernel == multiply by the densified M (slice-identity check)."""
+    rng = np.random.default_rng(seed)
+    L, R = rnd(rng, b, b, b), rnd(rng, b, b, b)
+    x = rnd(rng, 3, b * b)
+    M = ref.monarch_dense(jnp.asarray(L), jnp.asarray(R))
+    want = x @ np.asarray(M).T
+    got = mk.monarch_mm(jnp.asarray(L), jnp.asarray(R), jnp.asarray(x))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@given(
+    b=st.sampled_from([2, 4, 8]),
+    lanes=st.sampled_from([1, 2, 4]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_monarch_lanes_matches_plain(b, lanes, seed):
+    if b % lanes != 0:
+        return
+    rng = np.random.default_rng(seed)
+    L, R = rnd(rng, b, b, b), rnd(rng, b, b, b)
+    x = rnd(rng, 2, b * b)
+    got = mk.monarch_mm_lanes(
+        jnp.asarray(L), jnp.asarray(R), jnp.asarray(x), lanes
+    )
+    want = mk.monarch_mm(jnp.asarray(L), jnp.asarray(R), jnp.asarray(x))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_perm_involution():
+    """P is an involution: P(P(x)) == x."""
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rnd(rng, 5, 64))
+    np.testing.assert_array_equal(ref.perm(ref.perm(x, 8), 8), x)
+
+
+def test_monarch_linearity():
+    """M(a x + b y) == a M(x) + b M(y)."""
+    rng = np.random.default_rng(4)
+    b = 4
+    L, R = rnd(rng, b, b, b), rnd(rng, b, b, b)
+    x, y = rnd(rng, 1, 16), rnd(rng, 1, 16)
+    f = lambda v: np.asarray(
+        mk.monarch_mm(jnp.asarray(L), jnp.asarray(R), jnp.asarray(v))
+    )
+    np.testing.assert_allclose(
+        f(2.0 * x - 3.0 * y), 2.0 * f(x) - 3.0 * f(y), rtol=1e-4, atol=1e-4
+    )
+
+
+# ---------------------------------------------------------------------------
+# ADC quantized kernel
+# ---------------------------------------------------------------------------
+
+
+@given(
+    bits=st.integers(3, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_adc_kernel_matches_ref_quantizer(bits, seed):
+    rng = np.random.default_rng(seed)
+    blocks = rnd(rng, 4, 4, 4)
+    x = rnd(rng, 2, 16)
+    fs = 8.0
+    got = mk.block_diag_mm_adc(jnp.asarray(blocks), jnp.asarray(x), bits, fs)
+    want = ref.adc_quantize(
+        ref.block_diag_mm(jnp.asarray(blocks), jnp.asarray(x)), bits, fs
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_adc_error_decreases_with_bits():
+    """More ADC bits -> lower quantization error (monotone trend)."""
+    rng = np.random.default_rng(11)
+    blocks = rnd(rng, 8, 8, 8)
+    x = rnd(rng, 4, 64)
+    exact = np.asarray(ref.block_diag_mm(jnp.asarray(blocks), jnp.asarray(x)))
+    errs = []
+    for bits in (3, 5, 8):
+        q = np.asarray(
+            mk.block_diag_mm_adc(jnp.asarray(blocks), jnp.asarray(x), bits, 16.0)
+        )
+        errs.append(np.abs(q - exact).mean())
+    assert errs[0] > errs[1] > errs[2]

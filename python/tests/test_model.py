@@ -1,0 +1,155 @@
+"""L2 model tests: shapes, Monarch-vs-densified equivalence, D2S pipeline
+through a whole layer, causal masking."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import d2s
+from compile import model as m
+from compile.kernels import ref
+
+CFG = m.ModelConfig(d_model=64, n_heads=4, n_layers=2, vocab=64, seq=16)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return jax.tree.map(jnp.asarray, m.init_params(CFG, seed=0))
+
+
+def test_param_shapes(params):
+    b = CFG.b
+    assert params["embed"].shape == (CFG.vocab, CFG.d_model)
+    lay = params["layers"][0]
+    for k in ("wq", "wk", "wv", "wo"):
+        assert lay[k]["L"].shape == (b, b, b)
+        assert lay[k]["R"].shape == (b, b, b)
+    assert len(lay["ffn_up"]) == CFG.d_ff_mult
+    assert len(lay["ffn_down"]) == CFG.d_ff_mult
+
+
+def test_monarch_linear_matches_densified(params):
+    """The layer's parameterized matmul == multiply by densified M."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((5, CFG.d_model)).astype(np.float32))
+    p = params["layers"][0]["wq"]
+    got = m.monarch_linear(p, x)
+    want = m.dense_linear_from_monarch(p, x)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_encoder_layer_shape(params):
+    x = jnp.zeros((2, CFG.seq, CFG.d_model), jnp.float32)
+    y = m.encoder_layer(params["layers"][0], x, CFG)
+    assert y.shape == x.shape
+
+
+def test_lm_forward_shape_and_finite(params):
+    tok = jnp.zeros((3, CFG.seq), jnp.int32)
+    logits = m.lm_forward(params, tok, CFG)
+    assert logits.shape == (3, CFG.seq, CFG.vocab)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_lm_causality(params):
+    """Changing a future token must not change past logits."""
+    rng = np.random.default_rng(1)
+    tok = rng.integers(0, CFG.vocab, size=(1, CFG.seq)).astype(np.int32)
+    tok2 = tok.copy()
+    tok2[0, -1] = (tok2[0, -1] + 1) % CFG.vocab
+    l1 = m.lm_forward(params, jnp.asarray(tok), CFG)
+    l2 = m.lm_forward(params, jnp.asarray(tok2), CFG)
+    np.testing.assert_allclose(l1[0, :-1], l2[0, :-1], rtol=1e-4, atol=1e-5)
+    assert not np.allclose(l1[0, -1], l2[0, -1])
+
+
+def test_lm_batch_consistency(params):
+    """Each batch row is independent."""
+    rng = np.random.default_rng(2)
+    tok = rng.integers(0, CFG.vocab, size=(4, CFG.seq)).astype(np.int32)
+    full = m.lm_forward(params, jnp.asarray(tok), CFG)
+    row = m.lm_forward(params, jnp.asarray(tok[2:3]), CFG)
+    np.testing.assert_allclose(full[2:3], row, rtol=1e-4, atol=1e-4)
+
+
+def test_ffn_tile_partition_matches_dense_concat(params):
+    """FFN up tiles == one dense (d_ff x d) matmul of stacked densified tiles."""
+    lay = params["layers"][0]
+    d = CFG.d_model
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((7, d)).astype(np.float32))
+    tiles = [
+        np.asarray(ref.monarch_dense(p["L"], p["R"])) for p in lay["ffn_up"]
+    ]
+    W1 = np.concatenate(tiles, axis=0)  # (d_ff, d)
+    want = np.asarray(x) @ W1.T
+    got = jnp.concatenate([m.monarch_linear(p, x) for p in lay["ffn_up"]], -1)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_d2s_layer_pipeline_accuracy():
+    """params_from_dense: a dense layer D2S'd to Monarch keeps the layer
+    output close when the dense weights are near the Monarch class."""
+    cfg = m.ModelConfig(d_model=16, n_heads=2, n_layers=1, vocab=32, seq=8)
+    d, b = cfg.d_model, cfg.b
+    rng = np.random.default_rng(4)
+
+    def near_monarch():
+        L, R = d2s.random_monarch(b, int(rng.integers(1 << 30)))
+        M = d2s.monarch_dense_np(L / b, R)  # scaled for stability
+        return M + 0.01 * rng.standard_normal(M.shape).astype(np.float32)
+
+    dense_layer = {
+        "wq": near_monarch(),
+        "wk": near_monarch(),
+        "wv": near_monarch(),
+        "wo": near_monarch(),
+        "ffn_up": np.concatenate(
+            [near_monarch() for _ in range(cfg.d_ff_mult)], axis=0
+        ),
+        "ffn_down": np.concatenate(
+            [near_monarch() for _ in range(cfg.d_ff_mult)], axis=1
+        ),
+        "ln1": {"g": np.ones(d, np.float32), "b": np.zeros(d, np.float32)},
+        "ln2": {"g": np.ones(d, np.float32), "b": np.zeros(d, np.float32)},
+    }
+    dense_params = {
+        "embed": rng.standard_normal((cfg.vocab, d)).astype(np.float32) * 0.1,
+        "pos": rng.standard_normal((cfg.seq, d)).astype(np.float32) * 0.1,
+        "ln_f": {"g": np.ones(d, np.float32), "b": np.zeros(d, np.float32)},
+        "layers": [dense_layer],
+    }
+    sparse = jax.tree.map(jnp.asarray, m.params_from_dense(cfg, dense_params))
+
+    x = jnp.asarray(rng.standard_normal((1, cfg.seq, d)).astype(np.float32))
+    y_sparse = m.encoder_layer(sparse["layers"][0], x, cfg)
+
+    # Dense reference layer using the original dense weights.
+    def dense_layer_fwd(x):
+        x2 = x.reshape(-1, d)
+
+        def lin(W, v):
+            return v @ jnp.asarray(W).T
+
+        h = m.layer_norm(sparse["layers"][0]["ln1"], x)
+        h2 = h.reshape(-1, d)
+        q = lin(dense_layer["wq"], h2).reshape(1, cfg.seq, cfg.n_heads, -1)
+        k = lin(dense_layer["wk"], h2).reshape(1, cfg.seq, cfg.n_heads, -1)
+        v = lin(dense_layer["wv"], h2).reshape(1, cfg.seq, cfg.n_heads, -1)
+        import math
+
+        sc = jnp.einsum("bshd,bthd->bhst", q, k) / math.sqrt(cfg.d_head)
+        at = jax.nn.softmax(sc, -1)
+        ctx = jnp.einsum("bhst,bthd->bshd", at, v).reshape(-1, d)
+        x = x + lin(dense_layer["wo"], ctx).reshape(1, cfg.seq, d)
+        h = m.layer_norm(sparse["layers"][0]["ln2"], x).reshape(-1, d)
+        up = m.gelu(lin(dense_layer["ffn_up"], h))
+        down = lin(dense_layer["ffn_down"], up)
+        return x + down.reshape(1, cfg.seq, d)
+
+    y_dense = dense_layer_fwd(x)
+    rel = float(
+        jnp.linalg.norm(y_sparse - y_dense) / jnp.linalg.norm(y_dense)
+    )
+    assert rel < 0.05, f"D2S layer relative error too high: {rel}"

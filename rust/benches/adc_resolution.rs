@@ -1,0 +1,60 @@
+//! Bench + reproduction of the §IV-C ADC/DAC resolution claim: lowering
+//! resolution from 8 b (Linear) to 3 b (DenseMap) cuts conversion latency
+//! and energy by ~2.67x (= 8/3, linear SAR scaling).
+//!
+//! Also sweeps the quantization *accuracy* side with the functional
+//! crossbar, connecting the resolution choice to numerical error.
+//!
+//! `cargo bench --bench adc_resolution`
+
+use monarch_cim::cim::crossbar::Crossbar;
+use monarch_cim::cim::{adc, CimParams};
+use monarch_cim::report;
+use monarch_cim::tensor::Matrix;
+use monarch_cim::util::bench::{section, Bencher};
+use monarch_cim::util::rng::Pcg32;
+
+fn main() {
+    let params = CimParams::default();
+
+    section("§IV-C — ADC resolution scaling (reproduction)");
+    report::adc_resolution(&params).print();
+    println!(
+        "8b -> 3b: latency {:.2}x, energy {:.2}x (paper: ~2.67x)",
+        adc::t_conversion_ns(&params, 8) / adc::t_conversion_ns(&params, 3),
+        adc::e_conversion_nj(&params, 8) / adc::e_conversion_nj(&params, 3),
+    );
+
+    section("quantization accuracy at each operating point");
+    let mut rng = Pcg32::new(30);
+    let b = 32;
+    let w = Matrix::randn(b, b, &mut rng).scale(1.0 / (b as f32).sqrt());
+    let mut xb = Crossbar::new(b);
+    xb.program_block(0, 0, &w.transpose());
+    let x = rng.normal_vec(b);
+    let rows: Vec<usize> = (0..b).collect();
+    let exact = xb.mvm_pass(&x, &rows);
+    for bits in [8u32, 5, 3] {
+        let q = xb.mvm_pass_quantized(&x, &rows, bits, 4.0);
+        let err: f32 = exact
+            .iter()
+            .zip(&q)
+            .map(|(a, c)| (a - c).abs())
+            .sum::<f32>()
+            / b as f32;
+        println!("  {bits}b readout: mean |error| = {err:.4} per output");
+    }
+
+    section("conversion-model throughput");
+    let mut bench = Bencher::new();
+    bench.bench("required_bits sweep 1..=1024", || {
+        for rows in 1..=1024usize {
+            std::hint::black_box(adc::required_bits(&params, rows));
+        }
+    });
+    bench.bench("crossbar mvm_pass 256x256 (32 active rows)", || {
+        let mut big = Crossbar::new(256);
+        big.program_block(0, 0, &Matrix::eye(32));
+        std::hint::black_box(big.mvm_pass(&vec![1.0; 256], &(0..32).collect::<Vec<_>>()))
+    });
+}

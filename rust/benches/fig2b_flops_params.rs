@@ -1,0 +1,37 @@
+//! Bench + reproduction of paper Fig. 2b: parameter and FLOP reduction
+//! from the D2S transformation (BERT-large headline: ~8x params, ~5.7x
+//! FLOPs, Para-Matmuls > 80% of FLOPs).
+//!
+//! `cargo bench --bench fig2b_flops_params`
+
+use monarch_cim::model::{count_report, ModelConfig};
+use monarch_cim::report;
+use monarch_cim::util::bench::{section, Bencher};
+
+fn main() {
+    section("Fig. 2b — params & FLOPs reduction (reproduction)");
+    report::fig2b().print();
+
+    let r = count_report(&ModelConfig::bert_large());
+    println!(
+        "BERT-large (paper): params 8x -> measured {:.1}x (model) / {:.1}x (para); \
+         FLOPs 5.7x -> measured {:.1}x; para share {:.0}% (paper >80%)",
+        r.model_param_reduction(),
+        r.para_param_reduction(),
+        r.flops_reduction(),
+        100.0 * r.para_flops_fraction()
+    );
+
+    section("accounting throughput");
+    let mut b = Bencher::new();
+    for cfg in ModelConfig::paper_models() {
+        b.bench(&format!("count_report/{}", cfg.name), || {
+            std::hint::black_box(count_report(&cfg))
+        });
+    }
+    b.bench("graph build/bart-large", || {
+        std::hint::black_box(monarch_cim::model::build_graph(
+            &ModelConfig::bart_large(),
+        ))
+    });
+}

@@ -1,0 +1,47 @@
+//! Bench + reproduction of paper Fig. 6: CIM array counts (6a) and
+//! array-wise utilization (6b) for Linear / SparseMap / DenseMap.
+//!
+//! Paper targets: SparseMap ~50% fewer arrays than Linear; DenseMap ~87%
+//! fewer than Linear and >73% fewer than SparseMap; utilization Linear
+//! 100%, SparseMap ~20.4%, DenseMap ~78.8%.
+//!
+//! `cargo bench --bench fig6_memory_utilization`
+
+use monarch_cim::cim::CimParams;
+use monarch_cim::mapping::stats::{fig6_stats, mean_array_reduction, mean_utilization};
+use monarch_cim::mapping::{map_model, Strategy};
+use monarch_cim::model::ModelConfig;
+use monarch_cim::report;
+use monarch_cim::util::bench::{section, Bencher};
+
+fn main() {
+    let params = CimParams::default();
+
+    section("Fig. 6 — arrays & utilization (reproduction)");
+    report::fig6(&params).print();
+
+    let stats = fig6_stats(&params);
+    println!(
+        "array reduction: SparseMap vs Linear {:.0}% (paper ~50%); DenseMap vs Linear {:.0}% (paper ~87%); DenseMap vs SparseMap {:.0}% (paper >73%)",
+        100.0 * mean_array_reduction(&stats, Strategy::SparseMap, Strategy::Linear),
+        100.0 * mean_array_reduction(&stats, Strategy::DenseMap, Strategy::Linear),
+        100.0 * mean_array_reduction(&stats, Strategy::DenseMap, Strategy::SparseMap),
+    );
+    println!(
+        "utilization: Linear {:.0}% | SparseMap {:.1}% (paper 20.4%) | DenseMap {:.1}% (paper 78.8%)",
+        100.0 * mean_utilization(&stats, Strategy::Linear),
+        100.0 * mean_utilization(&stats, Strategy::SparseMap),
+        100.0 * mean_utilization(&stats, Strategy::DenseMap),
+    );
+
+    section("mapping engine throughput");
+    let mut b = Bencher::new();
+    for strategy in Strategy::all() {
+        for cfg in [ModelConfig::bert_large(), ModelConfig::bart_large()] {
+            b.bench(
+                &format!("map/{}/{}", strategy.name(), cfg.name),
+                || std::hint::black_box(map_model(&cfg, &params, strategy)),
+            );
+        }
+    }
+}

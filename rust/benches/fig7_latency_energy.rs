@@ -1,0 +1,55 @@
+//! Bench + reproduction of paper Fig. 7: inference latency (7a) and
+//! energy (7b) across GPU / Linear / SparseMap / DenseMap.
+//!
+//! Paper targets (geomean over BERT-large, BART-large, GPT-2-medium):
+//! SparseMap 1.59x latency & 1.61x energy over Linear; DenseMap 1.73x &
+//! 1.74x; Linear CIM ~16.2x faster than the RTX 3090 Ti on BERT and ~3
+//! orders of magnitude more energy-efficient.
+//!
+//! `cargo bench --bench fig7_latency_energy`
+
+use monarch_cim::cim::CimParams;
+use monarch_cim::gpu::{gpu_cost, GpuParams};
+use monarch_cim::mapping::Strategy;
+use monarch_cim::model::ModelConfig;
+use monarch_cim::report;
+use monarch_cim::scheduler::timing::cost_report;
+use monarch_cim::util::bench::{section, Bencher};
+use monarch_cim::util::stats::geomean;
+
+fn main() {
+    let params = CimParams::default();
+    let gpu = GpuParams::default();
+
+    section("Fig. 7 — latency & energy (reproduction)");
+    report::fig7(&params, &gpu).print();
+
+    let mut sp = Vec::new();
+    let mut de = Vec::new();
+    for cfg in ModelConfig::paper_models() {
+        let lin = cost_report(&cfg, &params, Strategy::Linear);
+        sp.push(lin.latency_ms() / cost_report(&cfg, &params, Strategy::SparseMap).latency_ms());
+        de.push(lin.latency_ms() / cost_report(&cfg, &params, Strategy::DenseMap).latency_ms());
+    }
+    println!(
+        "geomean latency speedups: SparseMap {:.2}x (paper 1.59x), DenseMap {:.2}x (paper 1.73x)",
+        geomean(&sp),
+        geomean(&de)
+    );
+    let bert = ModelConfig::bert_large();
+    let g = gpu_cost(&bert, &gpu);
+    let lin = cost_report(&bert, &params, Strategy::Linear);
+    println!(
+        "BERT: Linear CIM vs GPU: {:.1}x faster (paper 16.2x), {:.0}x less energy (paper ~1000x)",
+        g.total_ns / (lin.latency_ms() * 1e6),
+        g.total_nj / (lin.energy_mj() * 1e6)
+    );
+
+    section("cost-model throughput");
+    let mut b = Bencher::new();
+    for strategy in Strategy::all() {
+        b.bench(&format!("cost_report/bert/{}", strategy.name()), || {
+            std::hint::black_box(cost_report(&bert, &params, strategy))
+        });
+    }
+}

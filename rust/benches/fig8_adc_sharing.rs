@@ -1,0 +1,50 @@
+//! Bench + reproduction of paper Fig. 8: BERT latency (8a) and energy
+//! (8b) under varying ADC-sharing degrees (4 -> 32 ADCs per array).
+//!
+//! Paper targets: DenseMap wins at 4 ADCs/array (1.6x over Linear, 1.1x
+//! over SparseMap); DenseMap flat beyond 8 ADCs/array; at 32 ADCs/array
+//! SparseMap is best (3.57x over DenseMap, 1.6x over Linear).
+//!
+//! `cargo bench --bench fig8_adc_sharing`
+
+use monarch_cim::cim::CimParams;
+use monarch_cim::mapping::Strategy;
+use monarch_cim::model::ModelConfig;
+use monarch_cim::report;
+use monarch_cim::scheduler::timing::cost_report;
+use monarch_cim::util::bench::{section, Bencher};
+
+fn main() {
+    section("Fig. 8 — ADC sharing DSE (reproduction, BERT)");
+    report::fig8(&[1, 2, 4, 8, 16, 32]).print();
+
+    let cfg = ModelConfig::bert_large();
+    let lat = |s: Strategy, adcs: usize| {
+        cost_report(&cfg, &CimParams::default().with_adcs_per_array(adcs), s).latency_ms()
+    };
+    println!(
+        "@4 ADCs: DenseMap {:.2}x over Linear (paper 1.6x), {:.2}x over SparseMap (paper 1.1x)",
+        lat(Strategy::Linear, 4) / lat(Strategy::DenseMap, 4),
+        lat(Strategy::SparseMap, 4) / lat(Strategy::DenseMap, 4),
+    );
+    println!(
+        "@32 ADCs: SparseMap {:.2}x over DenseMap (paper 3.57x), {:.2}x over Linear (paper 1.6x)",
+        lat(Strategy::DenseMap, 32) / lat(Strategy::SparseMap, 32),
+        lat(Strategy::Linear, 32) / lat(Strategy::SparseMap, 32),
+    );
+    println!(
+        "DenseMap flatness: 8 -> 32 ADCs changes latency by {:.1}% (paper: no improvement)",
+        100.0 * (lat(Strategy::DenseMap, 8) / lat(Strategy::DenseMap, 32) - 1.0)
+    );
+
+    section("DSE sweep throughput");
+    let mut b = Bencher::new();
+    b.bench("fig8 full sweep (5 points x 3 strategies)", || {
+        for adcs in [1usize, 4, 8, 16, 32] {
+            let p = CimParams::default().with_adcs_per_array(adcs);
+            for s in Strategy::all() {
+                std::hint::black_box(cost_report(&cfg, &p, s));
+            }
+        }
+    });
+}

@@ -1,0 +1,98 @@
+//! Hot-path microbenchmarks for the §Perf pass: the matmul kernels, the
+//! D2S projection, Monarch apply, the DenseMap packer, the cost model and
+//! the PJRT execution path (throughput of the end-to-end serving stack).
+//!
+//! `cargo bench --bench hotpath`
+
+use monarch_cim::cim::CimParams;
+use monarch_cim::mapping::{map_model, Strategy};
+use monarch_cim::model::ModelConfig;
+use monarch_cim::monarch::{monarch_project, MonarchMatrix};
+use monarch_cim::runtime::{literal_f32, literals_from_monarch, Runtime};
+use monarch_cim::scheduler::timing::cost_report;
+use monarch_cim::tensor::{matmul, Matrix};
+use monarch_cim::util::bench::{section, Bencher};
+use monarch_cim::util::rng::Pcg32;
+
+fn main() {
+    let mut rng = Pcg32::new(40);
+    let mut b = Bencher::new();
+
+    section("L3 tensor substrate");
+    for n in [64usize, 256, 512] {
+        let a = Matrix::randn(n, n, &mut rng);
+        let c = Matrix::randn(n, n, &mut rng);
+        let m = b.bench(&format!("matmul {n}x{n}"), || {
+            std::hint::black_box(matmul::matmul(&a, &c))
+        });
+        let gflops = 2.0 * (n as f64).powi(3) / m.mean_ns;
+        println!("  -> {gflops:.2} GFLOP/s");
+    }
+
+    section("D2S projection (rank-1 SVD per slice)");
+    for (d, bsz) in [(64usize, 8usize), (256, 16), (1024, 32)] {
+        let base = MonarchMatrix::randn(bsz, &mut rng)
+            .to_dense()
+            .scale(1.0 / bsz as f32);
+        let w = base.add(&Matrix::randn(d, d, &mut rng).scale(0.01));
+        b.bench(&format!("monarch_project {d}x{d}"), || {
+            std::hint::black_box(monarch_project(&w))
+        });
+    }
+
+    section("Monarch apply (factored MVM)");
+    for bsz in [8usize, 32] {
+        let m = MonarchMatrix::randn(bsz, &mut rng);
+        let x = rng.normal_vec(m.n());
+        let meas = b.bench(&format!("monarch matvec n={}", m.n()), || {
+            std::hint::black_box(m.matvec(&x))
+        });
+        let flops = m.mvm_flops() as f64;
+        println!("  -> {:.2} GFLOP/s", flops / meas.mean_ns);
+    }
+
+    section("mapping + scheduling");
+    let params = CimParams::default();
+    let bert = ModelConfig::bert_large();
+    b.bench("DenseMap pack bert-large", || {
+        std::hint::black_box(map_model(&bert, &params, Strategy::DenseMap))
+    });
+    b.bench("cost_report bert-large DenseMap", || {
+        std::hint::black_box(cost_report(&bert, &params, Strategy::DenseMap))
+    });
+
+    section("PJRT runtime (requires `make artifacts`)");
+    match Runtime::with_default_dir() {
+        Err(e) => println!("  skipped: {e}"),
+        Ok(mut rt) => {
+            let m = MonarchMatrix::randn(32, &mut rng);
+            let x = Matrix::randn(4, 1024, &mut rng);
+            let (l, r) = literals_from_monarch(&m).unwrap();
+            let xl = literal_f32(&x.data, &[4, 1024]).unwrap();
+            rt.execute("monarch_mvm_n1024", &[l, r, xl]).unwrap();
+            let meas = b.bench("pjrt monarch_mvm_n1024 (batch 4)", || {
+                let (l, r) = literals_from_monarch(&m).unwrap();
+                let xl = literal_f32(&x.data, &[4, 1024]).unwrap();
+                std::hint::black_box(
+                    rt.execute("monarch_mvm_n1024", &[l, r, xl]).unwrap(),
+                )
+            });
+            println!(
+                "  -> {:.0} rows/s through the AOT kernel",
+                4.0 / (meas.mean_ns * 1e-9)
+            );
+            // token throughput of the tiny-LM artifact (the serving path)
+            let toks = vec![1i32; 8 * 32];
+            let tl = monarch_cim::runtime::literal_i32(&toks, &[8, 32]).unwrap();
+            rt.execute("tiny_lm_b8", &[tl]).unwrap();
+            let meas = b.bench("pjrt tiny_lm_b8 (8 x 32 tokens)", || {
+                let tl = monarch_cim::runtime::literal_i32(&toks, &[8, 32]).unwrap();
+                std::hint::black_box(rt.execute("tiny_lm_b8", &[tl]).unwrap())
+            });
+            println!(
+                "  -> {:.0} tok/s end-to-end",
+                (8.0 * 32.0) / (meas.mean_ns * 1e-9)
+            );
+        }
+    }
+}

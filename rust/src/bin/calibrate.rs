@@ -1,0 +1,82 @@
+//! Internal calibration probe: prints the Fig. 7/8 ratios the timing
+//! model currently produces (used during §Perf and model tuning).
+
+use monarch_cim::cim::CimParams;
+use monarch_cim::mapping::Strategy;
+use monarch_cim::model::ModelConfig;
+use monarch_cim::scheduler::timing::cost_report;
+use monarch_cim::util::stats::geomean;
+
+fn main() {
+    let params = CimParams::default();
+    let mut sp = Vec::new();
+    let mut de = Vec::new();
+    let mut spe = Vec::new();
+    let mut dee = Vec::new();
+    for cfg in ModelConfig::paper_models() {
+        let lin = cost_report(&cfg, &params, Strategy::Linear);
+        let s = cost_report(&cfg, &params, Strategy::SparseMap);
+        let d = cost_report(&cfg, &params, Strategy::DenseMap);
+        println!(
+            "{:<12} lat(ms): lin {:.3} sp {:.3} de {:.3} | en(mJ): lin {:.3} sp {:.3} de {:.3}",
+            cfg.name,
+            lin.latency_ms(),
+            s.latency_ms(),
+            d.latency_ms(),
+            lin.energy_mj(),
+            s.energy_mj(),
+            d.energy_mj()
+        );
+        println!(
+            "  breakdown lin/token: analog {:.1} adc {:.1} comm {:.1} dpu {:.1}",
+            lin.per_token.latency.analog_ns,
+            lin.per_token.latency.adc_ns,
+            lin.per_token.latency.comm_ns,
+            lin.per_token.latency.dpu_ns
+        );
+        println!(
+            "  breakdown  de/token: analog {:.1} adc {:.1} comm {:.1} dpu {:.1}",
+            d.per_token.latency.analog_ns,
+            d.per_token.latency.adc_ns,
+            d.per_token.latency.comm_ns,
+            d.per_token.latency.dpu_ns
+        );
+        for (tag, r) in [("lin", &lin), ("sp ", &s), ("de ", &d)] {
+            println!(
+                "  energy {tag}/token: analog {:.0} adc {:.0} comm {:.0} dpu {:.0}",
+                r.per_token.energy.analog_nj,
+                r.per_token.energy.adc_nj,
+                r.per_token.energy.comm_nj,
+                r.per_token.energy.dpu_nj
+            );
+        }
+        sp.push(lin.latency_ms() / s.latency_ms());
+        de.push(lin.latency_ms() / d.latency_ms());
+        spe.push(lin.energy_mj() / s.energy_mj());
+        dee.push(lin.energy_mj() / d.energy_mj());
+    }
+    println!(
+        "geomean latency speedups: sparse {:.3} (paper 1.59), dense {:.3} (paper 1.73)",
+        geomean(&sp),
+        geomean(&de)
+    );
+    println!(
+        "geomean energy gains:     sparse {:.3} (paper 1.61), dense {:.3} (paper 1.74)",
+        geomean(&spe),
+        geomean(&dee)
+    );
+    println!("\nFig8 (BERT latency ms):");
+    let cfg = ModelConfig::bert_large();
+    for adcs in [1usize, 4, 8, 16, 32] {
+        let p = CimParams::default().with_adcs_per_array(adcs);
+        let l = cost_report(&cfg, &p, Strategy::Linear).latency_ms();
+        let s = cost_report(&cfg, &p, Strategy::SparseMap).latency_ms();
+        let d = cost_report(&cfg, &p, Strategy::DenseMap).latency_ms();
+        println!(
+            "  {adcs:>2} ADCs: lin {l:.3} sp {s:.3} de {d:.3}  (de/lin {:.2}, sp/de {:.2}, lin/sp {:.2})",
+            l / d,
+            d / s,
+            l / s,
+        );
+    }
+}

@@ -1,0 +1,192 @@
+//! Functional crossbar array model: programmed cells, selective row
+//! activation, analog MVM emulation with optional ADC quantization.
+//!
+//! This is the *numerics* half of the CIM substrate (the cost half lives
+//! in `scheduler::timing`). The mapping strategies program weights into
+//! `Crossbar`s; the functional simulator (`sim::exec`) drives inputs
+//! through them with the scheduler's row-activation masks and checks the
+//! results against the dense reference — the paper's "naively activating
+//! all rows would produce incorrect results" failure mode is an explicit
+//! negative test.
+
+use crate::tensor::Matrix;
+
+/// One m x m analog crossbar with programmed conductances.
+#[derive(Clone, Debug)]
+pub struct Crossbar {
+    pub dim: usize,
+    /// Row-major cell values; `cells[r * dim + c]`.
+    pub cells: Vec<f32>,
+}
+
+impl Crossbar {
+    pub fn new(dim: usize) -> Self {
+        Self {
+            dim,
+            cells: vec![0.0; dim * dim],
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        self.cells[r * self.dim + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        self.cells[r * self.dim + c] = v;
+    }
+
+    /// Program a dense block at `(r0, c0)` (array write; counted by the
+    /// scheduler as a write op).
+    pub fn program_block(&mut self, r0: usize, c0: usize, block: &Matrix) {
+        assert!(
+            r0 + block.rows <= self.dim && c0 + block.cols <= self.dim,
+            "block exceeds array bounds"
+        );
+        for r in 0..block.rows {
+            let dst = (r0 + r) * self.dim + c0;
+            self.cells[dst..dst + block.cols].copy_from_slice(block.row(r));
+        }
+    }
+
+    /// Analog MVM pass: drive `input[r]` on each row `r` in `active_rows`,
+    /// read accumulated bitline currents on all columns.
+    /// `y[c] = sum_{r in active} input[r] * cells[r][c]`.
+    pub fn mvm_pass(&self, input: &[f32], active_rows: &[usize]) -> Vec<f32> {
+        assert_eq!(input.len(), self.dim, "input must span all rows");
+        let mut y = vec![0.0f32; self.dim];
+        for &r in active_rows {
+            let xv = input[r];
+            if xv == 0.0 {
+                continue;
+            }
+            let row = &self.cells[r * self.dim..(r + 1) * self.dim];
+            for (acc, w) in y.iter_mut().zip(row) {
+                *acc += xv * w;
+            }
+        }
+        y
+    }
+
+    /// MVM pass followed by SAR ADC readout quantization (mid-tread,
+    /// `bits` resolution over ±`full_scale`). Mirrors the L1 kernel
+    /// `block_diag_mm_adc` / `ref.adc_quantize`.
+    pub fn mvm_pass_quantized(
+        &self,
+        input: &[f32],
+        active_rows: &[usize],
+        bits: u32,
+        full_scale: f32,
+    ) -> Vec<f32> {
+        let y = self.mvm_pass(input, active_rows);
+        y.into_iter()
+            .map(|v| quantize(v, bits, full_scale))
+            .collect()
+    }
+
+    /// Fraction of cells holding non-zero weights (utilization).
+    pub fn utilization(&self) -> f64 {
+        let nz = self.cells.iter().filter(|v| **v != 0.0).count();
+        nz as f64 / self.cells.len() as f64
+    }
+}
+
+/// Mid-tread uniform quantizer used for the ADC readout emulation.
+pub fn quantize(v: f32, bits: u32, full_scale: f32) -> f32 {
+    let levels = ((1u64 << bits) - 1) as f32;
+    let step = 2.0 * full_scale / levels;
+    let half = (levels as i64 / 2) as f32;
+    (v / step).round().clamp(-half, half) * step
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn mvm_matches_dense_with_all_rows() {
+        let mut rng = Pcg32::new(1);
+        let w = Matrix::randn(8, 8, &mut rng);
+        let mut xb = Crossbar::new(8);
+        xb.program_block(0, 0, &w);
+        let x = rng.normal_vec(8);
+        let all: Vec<usize> = (0..8).collect();
+        let got = xb.mvm_pass(&x, &all);
+        // y[c] = sum_r x[r] W[r, c] = (W^T x)[c]
+        let want = w.transpose().matvec(&x);
+        for (g, wv) in got.iter().zip(&want) {
+            assert!((g - wv).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn selective_rows_isolate_blocks() {
+        // Two blocks packed in the same columns (DenseMap-style overlap):
+        // activating the wrong row set corrupts results, the right set
+        // isolates the block. This is §III-C's correctness argument.
+        let mut xb = Crossbar::new(4);
+        let b0 = Matrix::from_vec(2, 4, vec![1.0; 8]);
+        let b1 = Matrix::from_vec(2, 4, vec![10.0; 8]);
+        xb.program_block(0, 0, &b0);
+        xb.program_block(2, 0, &b1);
+        let x = vec![1.0; 4];
+        let only_b0 = xb.mvm_pass(&x, &[0, 1]);
+        assert_eq!(only_b0, vec![2.0; 4]);
+        let all = xb.mvm_pass(&x, &[0, 1, 2, 3]);
+        assert_eq!(all, vec![22.0; 4]); // mixed — incorrect for either block
+    }
+
+    #[test]
+    fn quantize_is_monotone_and_bounded() {
+        for bits in [3u32, 5, 8] {
+            let fs = 4.0;
+            let mut prev = f32::NEG_INFINITY;
+            for i in -100..=100 {
+                let v = i as f32 * 0.1;
+                let q = quantize(v, bits, fs);
+                assert!(q >= prev - 1e-6);
+                assert!(q.abs() <= fs + 1e-6);
+                prev = q;
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_pass_error_shrinks_with_bits() {
+        let mut rng = Pcg32::new(2);
+        let w = Matrix::randn(16, 16, &mut rng);
+        let mut xb = Crossbar::new(16);
+        xb.program_block(0, 0, &w);
+        let x = rng.normal_vec(16);
+        let all: Vec<usize> = (0..16).collect();
+        let exact = xb.mvm_pass(&x, &all);
+        let mut errs = Vec::new();
+        for bits in [3u32, 5, 8] {
+            let q = xb.mvm_pass_quantized(&x, &all, bits, 16.0);
+            let err: f32 = exact
+                .iter()
+                .zip(&q)
+                .map(|(a, b)| (a - b).abs())
+                .sum::<f32>();
+            errs.push(err);
+        }
+        assert!(errs[0] > errs[1] && errs[1] > errs[2]);
+    }
+
+    #[test]
+    fn utilization_counts_programmed_cells() {
+        let mut xb = Crossbar::new(4);
+        assert_eq!(xb.utilization(), 0.0);
+        xb.program_block(0, 0, &Matrix::from_vec(2, 2, vec![1.0; 4]));
+        assert!((xb.utilization() - 4.0 / 16.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_bounds_program_rejected() {
+        let mut xb = Crossbar::new(4);
+        xb.program_block(3, 3, &Matrix::from_vec(2, 2, vec![1.0; 4]));
+    }
+}

@@ -1,0 +1,184 @@
+//! Latency/energy accounting structures shared by the scheduler, the
+//! simulator and the report generators.
+
+use std::ops::{Add, AddAssign};
+
+/// Per-component latency breakdown (nanoseconds). Components follow the
+/// simulator of [22]: analog array passes, ADC conversions, inter-tile
+//  communication, digital (DPU) ops and the MHA unit.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Latency {
+    pub analog_ns: f64,
+    pub adc_ns: f64,
+    pub comm_ns: f64,
+    pub dpu_ns: f64,
+    pub mha_ns: f64,
+}
+
+impl Latency {
+    /// Sum of every component (diagnostic; over-counts overlapped work).
+    pub fn total_ns(&self) -> f64 {
+        self.analog_ns + self.adc_ns + self.comm_ns + self.dpu_ns + self.mha_ns
+    }
+
+    /// Critical-path latency: the analog/ADC stream dominates; shift-add,
+    /// communication and DPU work pipeline behind it (their energy still
+    /// counts — see `Energy`). This is the quantity Fig. 7/8 plot for the
+    /// parameterized-matmul path.
+    pub fn critical_ns(&self) -> f64 {
+        self.analog_ns + self.adc_ns + self.mha_ns
+    }
+}
+
+impl Add for Latency {
+    type Output = Latency;
+
+    fn add(self, o: Latency) -> Latency {
+        Latency {
+            analog_ns: self.analog_ns + o.analog_ns,
+            adc_ns: self.adc_ns + o.adc_ns,
+            comm_ns: self.comm_ns + o.comm_ns,
+            dpu_ns: self.dpu_ns + o.dpu_ns,
+            mha_ns: self.mha_ns + o.mha_ns,
+        }
+    }
+}
+
+impl AddAssign for Latency {
+    fn add_assign(&mut self, o: Latency) {
+        *self = *self + o;
+    }
+}
+
+/// Per-component energy breakdown (nanojoules).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Energy {
+    pub analog_nj: f64,
+    pub adc_nj: f64,
+    pub comm_nj: f64,
+    pub dpu_nj: f64,
+    pub mha_nj: f64,
+}
+
+impl Energy {
+    pub fn total_nj(&self) -> f64 {
+        self.analog_nj + self.adc_nj + self.comm_nj + self.dpu_nj + self.mha_nj
+    }
+}
+
+impl Add for Energy {
+    type Output = Energy;
+
+    fn add(self, o: Energy) -> Energy {
+        Energy {
+            analog_nj: self.analog_nj + o.analog_nj,
+            adc_nj: self.adc_nj + o.adc_nj,
+            comm_nj: self.comm_nj + o.comm_nj,
+            dpu_nj: self.dpu_nj + o.dpu_nj,
+            mha_nj: self.mha_nj + o.mha_nj,
+        }
+    }
+}
+
+impl AddAssign for Energy {
+    fn add_assign(&mut self, o: Energy) {
+        *self = *self + o;
+    }
+}
+
+/// Combined cost of an execution fragment.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Cost {
+    pub latency: Latency,
+    pub energy: Energy,
+}
+
+impl Add for Cost {
+    type Output = Cost;
+
+    fn add(self, o: Cost) -> Cost {
+        Cost {
+            latency: self.latency + o.latency,
+            energy: self.energy + o.energy,
+        }
+    }
+}
+
+impl AddAssign for Cost {
+    fn add_assign(&mut self, o: Cost) {
+        *self = *self + o;
+    }
+}
+
+impl Cost {
+    /// Merge a fragment that runs *in parallel* with this one: energies
+    /// add, latency takes the max (by critical path) per the slot model.
+    pub fn parallel_merge(&mut self, o: &Cost) {
+        self.energy += o.energy;
+        if o.latency.critical_ns() > self.latency.critical_ns() {
+            self.latency = o.latency;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals_sum_components() {
+        let l = Latency {
+            analog_ns: 1.0,
+            adc_ns: 2.0,
+            comm_ns: 3.0,
+            dpu_ns: 4.0,
+            mha_ns: 5.0,
+        };
+        assert_eq!(l.total_ns(), 15.0);
+    }
+
+    #[test]
+    fn add_assign_accumulates() {
+        let mut c = Cost::default();
+        c += Cost {
+            latency: Latency {
+                adc_ns: 10.0,
+                ..Default::default()
+            },
+            energy: Energy {
+                adc_nj: 1.0,
+                ..Default::default()
+            },
+        };
+        c += c;
+        assert_eq!(c.latency.adc_ns, 20.0);
+        assert_eq!(c.energy.adc_nj, 2.0);
+    }
+
+    #[test]
+    fn parallel_merge_takes_max_latency_sum_energy() {
+        let mut a = Cost {
+            latency: Latency {
+                adc_ns: 10.0,
+                ..Default::default()
+            },
+            energy: Energy {
+                adc_nj: 5.0,
+                ..Default::default()
+            },
+        };
+        let b = Cost {
+            latency: Latency {
+                adc_ns: 30.0,
+                ..Default::default()
+            },
+            energy: Energy {
+                adc_nj: 7.0,
+                ..Default::default()
+            },
+        };
+        a.parallel_merge(&b);
+        assert_eq!(a.latency.adc_ns, 30.0);
+        assert_eq!(a.energy.adc_nj, 12.0);
+    }
+}

@@ -1,0 +1,16 @@
+//! Analog CIM accelerator substrate: Table-I cost parameters, the SAR
+//! ADC model, the functional crossbar, and cost-accounting types.
+//!
+//! This is our from-scratch equivalent of the AIMC simulator the paper
+//! uses ([22]); see DESIGN.md §1 for the substitution rationale and §5
+//! for the timing-model interpretation.
+
+pub mod adc;
+pub mod crossbar;
+pub mod noise;
+pub mod energy;
+pub mod params;
+
+pub use crossbar::Crossbar;
+pub use energy::{Cost, Energy, Latency};
+pub use params::CimParams;

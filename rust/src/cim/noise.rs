@@ -1,0 +1,205 @@
+//! PCM device non-idealities: programming noise and conductance drift.
+//!
+//! The paper's substrate is IBM-PCM analog CIM; real PCM cells exhibit
+//! (a) write noise — the programmed conductance deviates from target by
+//! a roughly Gaussian error, and (b) temporal drift — conductance decays
+//! as `g(t) = g(t0) * (t/t0)^-nu` with `nu ~ 0.05` (Joshi et al., Nature
+//! Comm. 2020). This module injects both into the functional crossbar so
+//! the accuracy impact of analog execution on Monarch inference can be
+//! quantified (failure-injection tests + ablation).
+
+use super::crossbar::Crossbar;
+use crate::util::rng::Pcg32;
+
+/// Non-ideality parameters.
+#[derive(Clone, Debug)]
+pub struct PcmNoise {
+    /// Std-dev of programming error, relative to the max programmed |g|.
+    pub write_sigma: f64,
+    /// Drift exponent nu (0 disables drift).
+    pub drift_nu: f64,
+    /// Read time / programming time ratio `t / t0` for drift evaluation.
+    pub drift_time_ratio: f64,
+}
+
+impl Default for PcmNoise {
+    fn default() -> Self {
+        Self {
+            write_sigma: 0.01,
+            drift_nu: 0.05,
+            drift_time_ratio: 1.0, // read immediately after programming
+        }
+    }
+}
+
+impl PcmNoise {
+    /// Ideal (noise-free) configuration.
+    pub fn ideal() -> Self {
+        Self {
+            write_sigma: 0.0,
+            drift_nu: 0.0,
+            drift_time_ratio: 1.0,
+        }
+    }
+
+    /// Multiplicative drift factor applied to every cell.
+    pub fn drift_factor(&self) -> f64 {
+        if self.drift_nu == 0.0 || self.drift_time_ratio <= 0.0 {
+            1.0
+        } else {
+            self.drift_time_ratio.powf(-self.drift_nu)
+        }
+    }
+}
+
+/// Apply programming noise + drift to a programmed crossbar in place.
+pub fn corrupt(xb: &mut Crossbar, noise: &PcmNoise, rng: &mut Pcg32) {
+    let gmax = xb
+        .cells
+        .iter()
+        .fold(0.0f32, |m, &v| m.max(v.abs()))
+        .max(1e-12);
+    let drift = noise.drift_factor() as f32;
+    for c in xb.cells.iter_mut() {
+        if *c == 0.0 {
+            continue; // unprogrammed cells stay at zero conductance
+        }
+        let err = rng.normal() * noise.write_sigma as f32 * gmax;
+        *c = (*c + err) * drift;
+    }
+}
+
+/// Relative output error of a noisy MVM pass vs the ideal one.
+pub fn mvm_noise_error(
+    xb_ideal: &Crossbar,
+    noise: &PcmNoise,
+    input: &[f32],
+    active_rows: &[usize],
+    seed: u64,
+) -> f64 {
+    let mut noisy = xb_ideal.clone();
+    let mut rng = Pcg32::new(seed);
+    corrupt(&mut noisy, noise, &mut rng);
+    let want = xb_ideal.mvm_pass(input, active_rows);
+    let got = noisy.mvm_pass(input, active_rows);
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (g, w) in got.iter().zip(&want) {
+        num += ((g - w) as f64).powi(2);
+        den += (*w as f64).powi(2);
+    }
+    (num / den.max(1e-30)).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Matrix;
+
+    fn programmed(seed: u64) -> Crossbar {
+        let mut rng = Pcg32::new(seed);
+        let mut xb = Crossbar::new(32);
+        xb.program_block(0, 0, &Matrix::randn(32, 32, &mut rng));
+        xb
+    }
+
+    #[test]
+    fn ideal_noise_is_identity() {
+        let xb = programmed(1);
+        let mut noisy = xb.clone();
+        let mut rng = Pcg32::new(2);
+        corrupt(&mut noisy, &PcmNoise::ideal(), &mut rng);
+        assert_eq!(xb.cells, noisy.cells);
+    }
+
+    #[test]
+    fn error_scales_with_sigma() {
+        let xb = programmed(3);
+        let mut rng = Pcg32::new(4);
+        let input = rng.normal_vec(32);
+        let rows: Vec<usize> = (0..32).collect();
+        let mut prev = 0.0;
+        for sigma in [0.005, 0.02, 0.08] {
+            let noise = PcmNoise {
+                write_sigma: sigma,
+                drift_nu: 0.0,
+                drift_time_ratio: 1.0,
+            };
+            let err = mvm_noise_error(&xb, &noise, &input, &rows, 99);
+            assert!(err > prev, "error not increasing: {err} after {prev}");
+            prev = err;
+        }
+        assert!(prev < 0.5, "even 8% write noise keeps rel err bounded");
+    }
+
+    #[test]
+    fn drift_shrinks_outputs_uniformly() {
+        let noise = PcmNoise {
+            write_sigma: 0.0,
+            drift_nu: 0.05,
+            drift_time_ratio: 1.0e6, // ~1 s -> ~11.5 days in t/t0
+        };
+        let factor = noise.drift_factor();
+        assert!(factor < 1.0 && factor > 0.4);
+        let xb = programmed(5);
+        let mut noisy = xb.clone();
+        let mut rng = Pcg32::new(6);
+        corrupt(&mut noisy, &noise, &mut rng);
+        for (n, i) in noisy.cells.iter().zip(&xb.cells) {
+            assert!((n - i * factor as f32).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn zero_cells_stay_zero() {
+        // padding cells in SparseMap layouts must not acquire conductance
+        let mut xb = Crossbar::new(8);
+        let mut rng = Pcg32::new(7);
+        xb.program_block(0, 0, &Matrix::randn(4, 4, &mut rng));
+        let mut noisy = xb.clone();
+        corrupt(&mut noisy, &PcmNoise::default(), &mut rng);
+        for r in 4..8 {
+            for c in 4..8 {
+                assert_eq!(noisy.get(r, c), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn monarch_inference_survives_default_noise() {
+        // end-to-end: DenseMap functional chip with PCM noise still
+        // approximates the Monarch operator.
+        use crate::cim::CimParams;
+        use crate::mapping::Strategy;
+        use crate::monarch::MonarchMatrix;
+        use crate::sim::exec::{single_op, FunctionalChip};
+        let (cfg, ops) = single_op(64);
+        let mut params = CimParams::default();
+        params.array_dim = 32;
+        let mut rng = Pcg32::new(8);
+        let mon = MonarchMatrix::randn(8, &mut rng);
+        let mut chip = FunctionalChip::program(
+            &cfg,
+            &ops,
+            std::slice::from_ref(&mon),
+            &params,
+            Strategy::DenseMap,
+        );
+        for xb in chip.crossbars.iter_mut() {
+            corrupt(xb, &PcmNoise::default(), &mut rng);
+        }
+        let x = rng.normal_vec(64);
+        let got = chip.run_op(0, &x);
+        let want = mon.matvec(&x);
+        let rel = {
+            let mut n = 0.0f64;
+            let mut d = 0.0f64;
+            for (g, w) in got.iter().zip(&want) {
+                n += ((g - w) as f64).powi(2);
+                d += (*w as f64).powi(2);
+            }
+            (n / d).sqrt()
+        };
+        assert!(rel < 0.1, "noisy DenseMap inference rel err {rel}");
+    }
+}

@@ -1,0 +1,146 @@
+//! CIM hardware cost parameters — paper Table I (IBM-PCM-class analog
+//! CIM at d_model = 1024) plus the architectural knobs the DSE sweeps
+//! (§IV-C): ADCs per array and per-strategy ADC resolution.
+//!
+//! Interpretation notes (see DESIGN.md §5):
+//! * `MVM (256x256 PCM) = 100 ns / 10 nJ` is the cost of one full-array
+//!   analog pass: DAC input streaming + bitline settle (latency), and the
+//!   array conduction energy at full row/column activation (energy). The
+//!   energy of a pass with partial activation scales with the active-row
+//!   fraction.
+//! * ADC costs are per conversion at 8 b; SAR conversion latency *and*
+//!   energy scale linearly with resolution (the paper's own 8b->3b =
+//!   2.67x claim), area scales ~2^bits (reported as a proxy only).
+//! * Communication is per inter-tile vector transfer (48 ns / 51.7 nJ).
+//! * DPU costs are per token-vector op at d_model = 1024.
+
+/// Static cost/config parameters of the simulated CIM accelerator.
+#[derive(Clone, Debug)]
+pub struct CimParams {
+    /// Crossbar dimension (rows = cols = m).
+    pub array_dim: usize,
+    /// ADCs attached to each array (shared across columns via mux).
+    pub adcs_per_array: usize,
+    /// Input (DAC) bit-streaming width per analog pass.
+    pub input_bits: u32,
+
+    // --- analog array (Table I row 1) ---
+    /// Full-array analog MVM pass latency (ns): DAC streaming + settle.
+    pub t_mvm_ns: f64,
+    /// Fraction of `e_mvm_nj` that is cell conduction + DAC drive; the
+    /// remainder is the reference ADC bank, which the scheduler accounts
+    /// explicitly per conversion (excluded here to avoid double
+    /// counting). Cf. [14]: converters are 60-80% of CIM MVM energy.
+    pub analog_fraction: f64,
+    /// Full-array analog MVM pass energy (nJ) at 100% row activation.
+    pub e_mvm_nj: f64,
+
+    // --- SAR ADC (Table I row 2, 8 b reference point) ---
+    pub adc_ref_bits: u32,
+    pub t_adc_ref_ns: f64,
+    pub e_adc_ref_nj: f64,
+
+    // --- communication (Table I row 3) ---
+    pub t_comm_ns: f64,
+    pub e_comm_nj: f64,
+
+    // --- digital processing units (Table I rows 4-5), per token vector ---
+    pub t_layernorm_ns: f64,
+    pub e_layernorm_nj: f64,
+    pub t_relu_ns: f64,
+    pub e_relu_nj: f64,
+    pub t_gelu_ns: f64,
+    pub e_gelu_nj: f64,
+    pub t_add_ns: f64,
+    pub e_add_nj: f64,
+    /// Peripheral shift-add energy per partial-sum combine (nJ) —
+    /// array-adjacent adders, cheaper than a full DPU vector add
+    /// (Accelergy-style estimate).
+    pub e_shift_add_nj: f64,
+}
+
+impl Default for CimParams {
+    /// Table I values verbatim.
+    fn default() -> Self {
+        Self {
+            array_dim: 256,
+            adcs_per_array: 1, // Fig. 7 operating point (§IV-B)
+            input_bits: 8,
+            t_mvm_ns: 100.0,
+            analog_fraction: 0.3,
+            e_mvm_nj: 10.0,
+            adc_ref_bits: 8,
+            t_adc_ref_ns: 0.833,
+            e_adc_ref_nj: 13.33e-3,
+            t_comm_ns: 48.0,
+            e_comm_nj: 51.7,
+            t_layernorm_ns: 100.0,
+            e_layernorm_nj: 42.0,
+            t_relu_ns: 1.0,
+            e_relu_nj: 0.06,
+            t_gelu_ns: 70.0,
+            e_gelu_nj: 38.5,
+            t_add_ns: 36.0,
+            e_add_nj: 37.7,
+            e_shift_add_nj: 15.0,
+        }
+    }
+}
+
+impl CimParams {
+    /// DSE variant with a given ADC-sharing degree (Fig. 8 x-axis).
+    pub fn with_adcs_per_array(mut self, adcs: usize) -> Self {
+        assert!(adcs >= 1, "need at least one ADC per array");
+        self.adcs_per_array = adcs;
+        self
+    }
+
+    /// Cells per array.
+    pub fn array_cells(&self) -> usize {
+        self.array_dim * self.array_dim
+    }
+
+    /// Per-token analog drive latency of one pass (ns) when conversions
+    /// are modelled separately. The Table-I 100 ns covers a full pass
+    /// including the reference ADC bank; bit-serial DAC streaming
+    /// overlaps with column sampling 4:1, leaving `input_bits / 4`
+    /// cycles = 2 ns of exposed drive time per pass.
+    pub fn t_drive_ns(&self) -> f64 {
+        self.input_bits as f64 / 4.0
+    }
+
+    /// Analog pass energy at a given active-row fraction (the ADC share
+    /// of the Table-I composite is accounted separately per conversion).
+    pub fn e_pass_nj(&self, active_row_frac: f64) -> f64 {
+        self.e_mvm_nj * self.analog_fraction * active_row_frac.clamp(0.0, 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_defaults() {
+        let p = CimParams::default();
+        assert_eq!(p.array_dim, 256);
+        assert_eq!(p.array_cells(), 65536);
+        assert!((p.t_adc_ref_ns - 0.833).abs() < 1e-12);
+        assert!((p.e_adc_ref_nj - 13.33e-3).abs() < 1e-12);
+        assert!((p.t_gelu_ns - 70.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dse_variant() {
+        let p = CimParams::default().with_adcs_per_array(16);
+        assert_eq!(p.adcs_per_array, 16);
+    }
+
+    #[test]
+    fn pass_energy_scales_with_activation() {
+        let p = CimParams::default();
+        assert!((p.e_pass_nj(1.0) - 3.0).abs() < 1e-12);
+        assert!((p.e_pass_nj(0.5) - 1.5).abs() < 1e-12);
+        assert_eq!(p.e_pass_nj(2.0), 3.0); // clamped
+    }
+}

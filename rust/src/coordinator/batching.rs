@@ -1,0 +1,101 @@
+//! Dynamic request batcher: groups inference requests up to a max batch
+//! size or max linger delay, whichever comes first (the standard
+//! serving-system batching policy; std-thread + channel implementation
+//! since the offline image has no tokio — see DESIGN.md §1).
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// Batching policy knobs.
+#[derive(Clone, Debug)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_delay: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self {
+            max_batch: 8,
+            max_delay: Duration::from_millis(2),
+        }
+    }
+}
+
+/// Collect the next batch from `rx`: blocks for the first item, then
+/// lingers up to `max_delay` (or until `max_batch`) for more. Returns
+/// `None` when the channel is closed and drained.
+pub fn next_batch<T>(rx: &Receiver<T>, policy: &BatchPolicy) -> Option<Vec<T>> {
+    let first = rx.recv().ok()?;
+    let mut batch = vec![first];
+    let deadline = Instant::now() + policy.max_delay;
+    while batch.len() < policy.max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(item) => batch.push(item),
+            Err(RecvTimeoutError::Timeout) => break,
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    Some(batch)
+}
+
+/// Pick the smallest available executable batch size >= n (AOT artifacts
+/// are compiled for fixed batch sizes; inputs are padded up).
+pub fn pick_bucket(available: &[usize], n: usize) -> Option<usize> {
+    available.iter().copied().filter(|&b| b >= n).min()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn batches_up_to_max() {
+        let (tx, rx) = channel();
+        for i in 0..5 {
+            tx.send(i).unwrap();
+        }
+        let policy = BatchPolicy {
+            max_batch: 3,
+            max_delay: Duration::from_millis(50),
+        };
+        let b = next_batch(&rx, &policy).unwrap();
+        assert_eq!(b, vec![0, 1, 2]);
+        let b = next_batch(&rx, &policy).unwrap();
+        assert_eq!(b, vec![3, 4]);
+    }
+
+    #[test]
+    fn returns_none_on_closed_channel() {
+        let (tx, rx) = channel::<u32>();
+        drop(tx);
+        assert!(next_batch(&rx, &BatchPolicy::default()).is_none());
+    }
+
+    #[test]
+    fn linger_delay_bounds_wait() {
+        let (tx, rx) = channel();
+        tx.send(1).unwrap();
+        let policy = BatchPolicy {
+            max_batch: 10,
+            max_delay: Duration::from_millis(5),
+        };
+        let t0 = Instant::now();
+        let b = next_batch(&rx, &policy).unwrap();
+        assert_eq!(b, vec![1]);
+        assert!(t0.elapsed() < Duration::from_millis(200));
+    }
+
+    #[test]
+    fn bucket_selection() {
+        assert_eq!(pick_bucket(&[1, 4, 8], 1), Some(1));
+        assert_eq!(pick_bucket(&[1, 4, 8], 3), Some(4));
+        assert_eq!(pick_bucket(&[1, 4, 8], 8), Some(8));
+        assert_eq!(pick_bucket(&[1, 4, 8], 9), None);
+    }
+}

@@ -1,0 +1,130 @@
+//! Automated design-space exploration: given a resource envelope (array
+//! budget, ADCs per array) pick the best mapping strategy — the
+//! "automated framework" closing step of Fig. 2a, extended with the
+//! §III-B1 swap-overhead model for constrained systems.
+
+use crate::cim::CimParams;
+use crate::mapping::constrained::{constrained_token_latency_ns, swap_overhead, WriteCosts};
+use crate::mapping::{map_model, Strategy};
+use crate::model::ModelConfig;
+
+/// One evaluated design point.
+#[derive(Clone, Debug)]
+pub struct DsePoint {
+    pub strategy: Strategy,
+    pub adcs_per_array: usize,
+    pub array_budget: Option<usize>,
+    pub fits_budget: bool,
+    /// Per-token latency incl. swap overhead (ns).
+    pub token_latency_ns: f64,
+    /// Full-sequence energy (mJ), swap energy included.
+    pub energy_mj: f64,
+    pub arrays: usize,
+    pub adc_bits: u32,
+}
+
+/// Exhaustive sweep over strategies x ADC counts under a budget.
+pub fn explore(
+    cfg: &ModelConfig,
+    adc_counts: &[usize],
+    array_budget: Option<usize>,
+    costs: &WriteCosts,
+) -> Vec<DsePoint> {
+    let mut out = Vec::new();
+    for &adcs in adc_counts {
+        let params = CimParams::default().with_adcs_per_array(adcs);
+        for strategy in Strategy::all() {
+            let mapping = map_model(cfg, &params, strategy);
+            let budget = array_budget.unwrap_or(usize::MAX);
+            let swap = swap_overhead(&mapping, budget, costs);
+            let token_latency_ns =
+                constrained_token_latency_ns(&mapping, cfg, &params, budget, costs);
+            let base =
+                crate::scheduler::timing::cost_report_for_mapping(cfg, &mapping, &params);
+            let energy_mj = base.energy_mj()
+                + swap.swap_energy_nj * cfg.seq as f64 / 1e6;
+            out.push(DsePoint {
+                strategy,
+                adcs_per_array: adcs,
+                array_budget,
+                fits_budget: swap.fits,
+                token_latency_ns,
+                energy_mj,
+                arrays: mapping.arrays,
+                adc_bits: base.adc_bits,
+            });
+        }
+    }
+    out
+}
+
+/// Best point by latency; ties broken by energy.
+pub fn best(points: &[DsePoint]) -> Option<&DsePoint> {
+    points.iter().min_by(|a, b| {
+        (a.token_latency_ns, a.energy_mj)
+            .partial_cmp(&(b.token_latency_ns, b.energy_mj))
+            .unwrap()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unconstrained_low_adc_prefers_densemap() {
+        let pts = explore(
+            &ModelConfig::bert_large(),
+            &[1],
+            None,
+            &WriteCosts::default(),
+        );
+        let b = best(&pts).unwrap();
+        assert_eq!(b.strategy, Strategy::DenseMap);
+    }
+
+    #[test]
+    fn unconstrained_high_adc_prefers_sparsemap() {
+        let pts = explore(
+            &ModelConfig::bert_large(),
+            &[32],
+            None,
+            &WriteCosts::default(),
+        );
+        let b = best(&pts).unwrap();
+        assert_eq!(b.strategy, Strategy::SparseMap);
+    }
+
+    #[test]
+    fn tight_budget_forces_densemap_even_at_high_adc() {
+        // under 512 arrays only DenseMap fits -> swap overhead buries the
+        // others despite their better per-pass latency
+        let pts = explore(
+            &ModelConfig::bert_large(),
+            &[32],
+            Some(512),
+            &WriteCosts::default(),
+        );
+        let b = best(&pts).unwrap();
+        assert_eq!(b.strategy, Strategy::DenseMap);
+        assert!(b.fits_budget);
+        let sparse = pts
+            .iter()
+            .find(|p| p.strategy == Strategy::SparseMap)
+            .unwrap();
+        assert!(!sparse.fits_budget);
+        assert!(sparse.token_latency_ns > 10.0 * b.token_latency_ns);
+    }
+
+    #[test]
+    fn explore_covers_grid() {
+        let pts = explore(
+            &ModelConfig::tiny(),
+            &[1, 8],
+            None,
+            &WriteCosts::default(),
+        );
+        assert_eq!(pts.len(), 6);
+        assert!(pts.iter().all(|p| p.token_latency_ns > 0.0));
+    }
+}

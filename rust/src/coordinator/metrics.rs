@@ -1,0 +1,117 @@
+//! Serving metrics: request latency histogram, batch-size distribution,
+//! throughput counters. Shared across the server worker and callers via
+//! a mutex (low-rate metadata updates only — never on the tensor path).
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::stats::Histogram;
+
+#[derive(Debug, Default)]
+struct Inner {
+    latency_us: Histogram,
+    batch_sizes: Vec<usize>,
+    requests: u64,
+    batches: u64,
+    errors: u64,
+}
+
+/// Thread-safe metrics sink.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+    started: Option<Instant>,
+}
+
+/// A point-in-time metrics snapshot.
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    pub requests: u64,
+    pub batches: u64,
+    pub errors: u64,
+    pub mean_batch: f64,
+    pub latency_p50_us: f64,
+    pub latency_p99_us: f64,
+    pub throughput_rps: f64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self {
+            inner: Mutex::new(Inner::default()),
+            started: Some(Instant::now()),
+        }
+    }
+
+    pub fn record_batch(&self, batch_size: usize, latency_us: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.batches += 1;
+        g.requests += batch_size as u64;
+        g.batch_sizes.push(batch_size);
+        for _ in 0..batch_size {
+            g.latency_us.record(latency_us);
+        }
+    }
+
+    pub fn record_error(&self) {
+        self.inner.lock().unwrap().errors += 1;
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        let g = self.inner.lock().unwrap();
+        let elapsed = self
+            .started
+            .map(|t| t.elapsed().as_secs_f64())
+            .unwrap_or(1.0)
+            .max(1e-9);
+        Snapshot {
+            requests: g.requests,
+            batches: g.batches,
+            errors: g.errors,
+            mean_batch: if g.batch_sizes.is_empty() {
+                0.0
+            } else {
+                g.batch_sizes.iter().sum::<usize>() as f64 / g.batch_sizes.len() as f64
+            },
+            latency_p50_us: if g.latency_us.is_empty() {
+                0.0
+            } else {
+                g.latency_us.p50()
+            },
+            latency_p99_us: if g.latency_us.is_empty() {
+                0.0
+            } else {
+                g.latency_us.p99()
+            },
+            throughput_rps: g.requests as f64 / elapsed,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_snapshots() {
+        let m = Metrics::new();
+        m.record_batch(4, 100.0);
+        m.record_batch(2, 200.0);
+        m.record_error();
+        let s = m.snapshot();
+        assert_eq!(s.requests, 6);
+        assert_eq!(s.batches, 2);
+        assert_eq!(s.errors, 1);
+        assert!((s.mean_batch - 3.0).abs() < 1e-9);
+        assert!(s.latency_p50_us >= 100.0);
+        assert!(s.throughput_rps > 0.0);
+    }
+
+    #[test]
+    fn empty_snapshot_is_zeroed() {
+        let m = Metrics::new();
+        let s = m.snapshot();
+        assert_eq!(s.requests, 0);
+        assert_eq!(s.latency_p50_us, 0.0);
+    }
+}

@@ -1,0 +1,12 @@
+//! Layer-3 coordinator: the end-to-end framework pipeline (D2S -> map ->
+//! schedule -> simulate), the threaded batching inference server over the
+//! PJRT runtime, dynamic batching policy and serving metrics.
+
+pub mod batching;
+pub mod dse;
+pub mod metrics;
+pub mod pipeline;
+pub mod server;
+
+pub use pipeline::{run_pipeline, PipelineConfig, PipelineResult};
+pub use server::{InferenceServer, ServerConfig};

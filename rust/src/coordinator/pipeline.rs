@@ -1,0 +1,126 @@
+//! End-to-end framework pipeline (paper Fig. 2a): pre-trained dense
+//! model -> D2S transformation -> CIM mapping -> scheduling -> cost
+//! simulation, with the Fig. 2b/6/7 quantities collected along the way.
+
+use crate::cim::CimParams;
+use crate::mapping::stats::MappingStats;
+use crate::mapping::{map_model, ModelMapping, Strategy};
+use crate::model::{count_report, CountReport, ModelConfig};
+use crate::monarch::project_with_report;
+use crate::scheduler::timing::{cost_report_for_mapping, CostReport};
+use crate::tensor::Matrix;
+use crate::util::rng::Pcg32;
+
+/// Pipeline configuration.
+#[derive(Clone, Debug)]
+pub struct PipelineConfig {
+    pub model: ModelConfig,
+    pub strategy: Strategy,
+    pub cim: CimParams,
+    /// Sample a synthetic dense weight and run the numeric D2S projection
+    /// on it (adds the Frobenius error to the result). Scaled-down for
+    /// large d_model by projecting one representative d x d weight.
+    pub d2s_numeric_check: bool,
+    pub seed: u64,
+}
+
+impl PipelineConfig {
+    pub fn new(model: ModelConfig, strategy: Strategy) -> Self {
+        Self {
+            model,
+            strategy,
+            cim: CimParams::default(),
+            d2s_numeric_check: false,
+            seed: 2025,
+        }
+    }
+}
+
+/// Everything the pipeline produces.
+#[derive(Clone, Debug)]
+pub struct PipelineResult {
+    pub counts: CountReport,
+    pub mapping: ModelMapping,
+    pub mapping_stats: MappingStats,
+    pub cost: CostReport,
+    /// Relative Frobenius error of the sampled D2S projection (if run).
+    pub d2s_rel_error: Option<f64>,
+}
+
+/// Run the full framework pipeline for one (model, strategy) pair.
+pub fn run_pipeline(cfg: &PipelineConfig) -> PipelineResult {
+    // 1) accounting (Fig. 2b)
+    let counts = count_report(&cfg.model);
+
+    // 2) optional numeric D2S on a synthetic representative weight
+    let d2s_rel_error = if cfg.d2s_numeric_check {
+        let d = cfg.model.d_model;
+        let mut rng = Pcg32::new(cfg.seed);
+        // near-Monarch synthetic weight: Monarch + small noise, the
+        // regime dense-to-sparse fine-tuning targets
+        let b = cfg.model.monarch_b();
+        let base = crate::monarch::MonarchMatrix::randn(b, &mut rng)
+            .to_dense()
+            .scale(1.0 / b as f32);
+        let noise = Matrix::randn(d, d, &mut rng).scale(0.02);
+        let w = base.add(&noise);
+        let (_, rep) = project_with_report(&w);
+        Some(rep.rel_error)
+    } else {
+        None
+    };
+
+    // 3) mapping (Fig. 6)
+    let mapping = map_model(&cfg.model, &cfg.cim, cfg.strategy);
+    let mapping_stats = MappingStats::from_mapping(&mapping);
+
+    // 4) scheduling + cost model (Fig. 7/8)
+    let cost = cost_report_for_mapping(&cfg.model, &mapping, &cfg.cim);
+
+    PipelineResult {
+        counts,
+        mapping,
+        mapping_stats,
+        cost,
+        d2s_rel_error,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pipeline_produces_consistent_artifacts() {
+        let cfg = PipelineConfig::new(ModelConfig::bert_large(), Strategy::DenseMap);
+        let r = run_pipeline(&cfg);
+        assert_eq!(r.mapping.strategy, Strategy::DenseMap);
+        assert_eq!(r.mapping_stats.arrays, r.mapping.arrays);
+        assert!(r.cost.latency_ms() > 0.0);
+        assert!(r.counts.para_param_reduction() > 10.0);
+        assert!(r.d2s_rel_error.is_none());
+    }
+
+    #[test]
+    fn pipeline_numeric_d2s_small_model() {
+        let mut cfg = PipelineConfig::new(ModelConfig::tiny(), Strategy::SparseMap);
+        cfg.d2s_numeric_check = true;
+        let r = run_pipeline(&cfg);
+        let err = r.d2s_rel_error.unwrap();
+        // near-Monarch input must project with small error
+        assert!(err < 0.25, "d2s error {err}");
+    }
+
+    #[test]
+    fn strategies_ordered_by_arrays() {
+        let mk = |s| {
+            run_pipeline(&PipelineConfig::new(ModelConfig::gpt2_medium(), s))
+                .mapping
+                .arrays
+        };
+        let lin = mk(Strategy::Linear);
+        let sp = mk(Strategy::SparseMap);
+        let de = mk(Strategy::DenseMap);
+        assert!(lin > sp && sp > de, "{lin} > {sp} > {de} violated");
+    }
+}

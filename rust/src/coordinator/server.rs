@@ -1,0 +1,206 @@
+//! Threaded batching inference server — the L3 request loop.
+//!
+//! Architecture (tokio-free; DESIGN.md §1): callers submit token
+//! sequences through a channel; a dedicated worker thread owns the PJRT
+//! [`Runtime`], batches requests (`batching::next_batch`), pads each
+//! batch to the nearest compiled batch bucket of the `tiny_lm_b{N}`
+//! artifacts, executes, splits the logits and answers each caller
+//! through its response channel. Python is never involved.
+
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::batching::{next_batch, pick_bucket, BatchPolicy};
+use super::metrics::Metrics;
+use crate::runtime::{literal_i32, Runtime};
+use crate::util::json::Json;
+
+/// One inference request: fixed-length token window (the tiny-LM
+/// artifact's seq) answered with per-position logits.
+struct Request {
+    tokens: Vec<i32>,
+    resp: Sender<Result<Vec<f32>>>,
+}
+
+/// Server configuration.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    pub artifacts_dir: std::path::PathBuf,
+    pub policy: BatchPolicy,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            artifacts_dir: crate::runtime::default_artifacts_dir(),
+            policy: BatchPolicy::default(),
+        }
+    }
+}
+
+/// Handle to the running server.
+pub struct InferenceServer {
+    tx: Option<Sender<Request>>,
+    worker: Option<JoinHandle<()>>,
+    pub metrics: Arc<Metrics>,
+    pub seq: usize,
+    pub vocab: usize,
+}
+
+impl InferenceServer {
+    /// Start the worker thread (loads + compiles artifacts eagerly).
+    ///
+    /// The PJRT client is not `Send`, so the [`Runtime`] is constructed
+    /// *inside* the worker thread; readiness (or the startup error) is
+    /// reported back through a one-shot channel.
+    pub fn start(cfg: ServerConfig) -> Result<InferenceServer> {
+        let metrics = Arc::new(Metrics::new());
+        let metrics_w = metrics.clone();
+        let (tx, rx) = channel::<Request>();
+        let (ready_tx, ready_rx) = channel::<Result<(usize, usize)>>();
+        let policy = cfg.policy.clone();
+        let dir = cfg.artifacts_dir.clone();
+        let worker = std::thread::spawn(move || {
+            // --- startup: build runtime + discover tiny_lm buckets ---
+            let setup = (|| -> Result<(Runtime, Vec<(usize, String, usize, usize)>)> {
+                let mut runtime = Runtime::new(&dir)?;
+                let mut buckets: Vec<(usize, String, usize, usize)> = Vec::new();
+                for a in &runtime.manifest().artifacts {
+                    if a.meta.get("kind").and_then(Json::as_str) == Some("tiny_lm") {
+                        let batch = a
+                            .meta
+                            .get("batch")
+                            .and_then(Json::as_usize)
+                            .ok_or_else(|| anyhow!("tiny_lm artifact missing batch"))?;
+                        let seq = a.meta.get("seq").and_then(Json::as_usize).unwrap_or(0);
+                        let vocab =
+                            a.meta.get("vocab").and_then(Json::as_usize).unwrap_or(0);
+                        buckets.push((batch, a.name.clone(), seq, vocab));
+                    }
+                }
+                if buckets.is_empty() {
+                    bail!("no tiny_lm artifacts in manifest — run `make artifacts`");
+                }
+                buckets.sort();
+                // eager compile so first-request latency is steady-state
+                for (_, name, _, _) in &buckets {
+                    runtime.load(name).context("precompiling artifact")?;
+                }
+                Ok((runtime, buckets))
+            })();
+            let (mut runtime, buckets) = match setup {
+                Ok((r, b)) => {
+                    let _ = ready_tx.send(Ok((b[0].2, b[0].3)));
+                    (r, b)
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+            };
+            let seq = buckets[0].2;
+            let vocab = buckets[0].3;
+            let sizes: Vec<usize> = buckets.iter().map(|b| b.0).collect();
+            while let Some(batch) = next_batch(&rx, &policy) {
+                // process in bucket-sized chunks (a linger window can
+                // collect more than the largest compiled batch size)
+                let mut remaining: &[Request] = &batch;
+                while !remaining.is_empty() {
+                    let t0 = Instant::now();
+                    let n = remaining.len();
+                    let bucket =
+                        pick_bucket(&sizes, n).unwrap_or(*sizes.last().unwrap());
+                    let take = n.min(bucket);
+                    let (now, rest) = remaining.split_at(take);
+                    remaining = rest;
+                    let artifact =
+                        &buckets.iter().find(|b| b.0 == bucket).unwrap().1;
+                    // assemble padded token matrix
+                    let mut toks = vec![0i32; bucket * seq];
+                    let mut bad: Vec<usize> = Vec::new();
+                    for (i, r) in now.iter().enumerate() {
+                        if r.tokens.len() != seq
+                            || r.tokens.iter().any(|&t| t < 0 || t as usize >= vocab)
+                        {
+                            bad.push(i);
+                            continue;
+                        }
+                        toks[i * seq..(i + 1) * seq].copy_from_slice(&r.tokens);
+                    }
+                    let result = literal_i32(&toks, &[bucket, seq])
+                        .and_then(|lit| runtime.execute_f32(artifact, &[lit]));
+                    match result {
+                        Ok(logits) => {
+                            // record before replying so snapshots taken by a
+                            // caller right after its reply see this batch
+                            metrics_w
+                                .record_batch(take, t0.elapsed().as_micros() as f64);
+                            let per_row = seq * vocab;
+                            for (i, r) in now.iter().enumerate() {
+                                let reply = if bad.contains(&i) {
+                                    metrics_w.record_error();
+                                    Err(anyhow!(
+                                        "invalid request: need {seq} tokens in [0, {vocab})"
+                                    ))
+                                } else {
+                                    Ok(logits[i * per_row..(i + 1) * per_row].to_vec())
+                                };
+                                let _ = r.resp.send(reply);
+                            }
+                        }
+                        Err(e) => {
+                            metrics_w.record_error();
+                            for r in now {
+                                let _ =
+                                    r.resp.send(Err(anyhow!("execution failed: {e}")));
+                            }
+                        }
+                    }
+                }
+            }
+        });
+
+        let (seq, vocab) = ready_rx
+            .recv()
+            .map_err(|_| anyhow!("server worker died during startup"))??;
+        Ok(InferenceServer {
+            tx: Some(tx),
+            worker: Some(worker),
+            metrics,
+            seq,
+            vocab,
+        })
+    }
+
+    /// Blocking inference: returns per-position logits (seq * vocab).
+    pub fn infer(&self, tokens: Vec<i32>) -> Result<Vec<f32>> {
+        let (rtx, rrx) = channel();
+        self.tx
+            .as_ref()
+            .ok_or_else(|| anyhow!("server stopped"))?
+            .send(Request { tokens, resp: rtx })
+            .map_err(|_| anyhow!("server worker gone"))?;
+        rrx.recv().map_err(|_| anyhow!("server dropped request"))?
+    }
+
+    /// Graceful shutdown: close the queue and join the worker.
+    pub fn shutdown(mut self) {
+        self.tx.take(); // close channel -> worker drains and exits
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for InferenceServer {
+    fn drop(&mut self) {
+        self.tx.take();
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}

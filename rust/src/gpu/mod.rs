@@ -1,0 +1,119 @@
+//! Analytical GPU comparator (paper §IV: NVIDIA RTX 3090 Ti).
+//!
+//! We have no GPU in this environment; Fig. 7 only uses the GPU as a
+//! reference bar, so we model the token-by-token (decode-style,
+//! memory-bound) regime the paper's introduction motivates: every decode
+//! step streams all resident weights through HBM, so
+//! `t_token ~= bytes(params) / (BW * eff)`, plus a compute-bound floor.
+//! Energy = board power * latency. Constants below are the public
+//! RTX 3090 Ti specs; the efficiency factor is calibrated so Linear-CIM
+//! vs GPU lands near the paper's 16.2x for BERT (DESIGN.md §1).
+
+use crate::model::{count_report, ModelConfig};
+
+/// RTX 3090 Ti-class analytical model.
+#[derive(Clone, Debug)]
+pub struct GpuParams {
+    /// HBM bandwidth in GB/s.
+    pub mem_bw_gbs: f64,
+    /// Achievable fraction of peak bandwidth in the decode regime.
+    pub mem_eff: f64,
+    /// fp16 tensor throughput (TFLOP/s).
+    pub peak_tflops: f64,
+    /// Achievable fraction of peak compute.
+    pub compute_eff: f64,
+    /// Board power (W).
+    pub power_w: f64,
+    /// Bytes per weight element (fp16).
+    pub bytes_per_param: f64,
+}
+
+impl Default for GpuParams {
+    fn default() -> Self {
+        Self {
+            mem_bw_gbs: 1008.0, // 3090 Ti spec
+            mem_eff: 0.65,
+            peak_tflops: 160.0, // fp16 tensor w/ FP16 accumulate
+            compute_eff: 0.3,
+            power_w: 450.0,
+            bytes_per_param: 2.0,
+        }
+    }
+}
+
+/// Per-token and full-sequence GPU cost for a model's parameterized path.
+#[derive(Clone, Debug)]
+pub struct GpuCost {
+    pub model: String,
+    pub per_token_ns: f64,
+    pub total_ns: f64,
+    pub total_nj: f64,
+}
+
+/// Roofline cost of running `cfg`'s parameterized matmuls on the GPU,
+/// token-by-token over the full sequence.
+pub fn gpu_cost(cfg: &ModelConfig, gpu: &GpuParams) -> GpuCost {
+    let counts = count_report(cfg);
+    let params_bytes = counts.dense_para_params as f64 * gpu.bytes_per_param;
+    // memory-bound: stream all weights once per token
+    let t_mem_ns = params_bytes / (gpu.mem_bw_gbs * gpu.mem_eff); // B / (GB/s) = ns
+    // compute-bound floor: para flops for one token
+    let flops_token = counts.dense_para_flops as f64 / cfg.seq as f64;
+    let t_compute_ns = flops_token / (gpu.peak_tflops * gpu.compute_eff * 1e3);
+    let per_token_ns = t_mem_ns.max(t_compute_ns);
+    let total_ns = per_token_ns * cfg.seq as f64;
+    GpuCost {
+        model: cfg.name.to_string(),
+        per_token_ns,
+        total_ns,
+        // ns * W = nJ (1e-9 s * W = 1e-9 J)
+        total_nj: total_ns * gpu.power_w,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cim::CimParams;
+    use crate::mapping::Strategy;
+    use crate::scheduler::timing::cost_report;
+
+    #[test]
+    fn decode_is_memory_bound() {
+        let gpu = GpuParams::default();
+        let cfg = ModelConfig::bert_large();
+        let c = gpu_cost(&cfg, &gpu);
+        let counts = count_report(&cfg);
+        let t_mem = counts.dense_para_params as f64 * 2.0 / (1008.0 * 0.65);
+        assert!((c.per_token_ns - t_mem).abs() / t_mem < 1e-9);
+    }
+
+    #[test]
+    fn energy_is_power_times_latency() {
+        let gpu = GpuParams::default();
+        let cfg = ModelConfig::bert_large();
+        let c = gpu_cost(&cfg, &gpu);
+        // ns * W = nJ
+        assert!((c.total_nj - c.total_ns * gpu.power_w).abs() / c.total_nj < 1e-9);
+    }
+
+    #[test]
+    fn fig7_linear_cim_vs_gpu_band() {
+        // paper: Linear CIM is 16.2x faster than the GPU for BERT and
+        // ~3 orders of magnitude more energy-efficient.
+        let gpu = GpuParams::default();
+        let cfg = ModelConfig::bert_large();
+        let g = gpu_cost(&cfg, &gpu);
+        let cim = cost_report(&cfg, &CimParams::default(), Strategy::Linear);
+        let speedup = g.total_ns / cim.total.latency.total_ns();
+        assert!(
+            (8.0..35.0).contains(&speedup),
+            "CIM-vs-GPU speedup {speedup} out of band"
+        );
+        let energy_ratio = g.total_nj / cim.total.energy.total_nj();
+        assert!(
+            (200.0..20000.0).contains(&energy_ratio),
+            "energy ratio {energy_ratio}"
+        );
+    }
+}

@@ -1,0 +1,35 @@
+//! # monarch-cim
+//!
+//! Production-grade reproduction of *“Efficient In-Memory Acceleration of
+//! Sparse Block Diagonal LLMs”* (de Lima et al., CS.AR 2025): an automated
+//! framework that D2S-transforms dense transformer weights into Monarch
+//! block-diagonal form, maps the factors onto analog compute-in-memory
+//! (CIM) crossbar arrays with latency-optimized (**SparseMap**) and
+//! capacity-optimized (**DenseMap**) strategies, and schedules execution
+//! with mapping-aware row activation and ADC sharing.
+//!
+//! Three-layer architecture (see DESIGN.md):
+//! * **L3 (this crate)** — coordinator: D2S pipeline, mapping engine,
+//!   scheduler, analog-CIM simulator, DSE/benchmark harness, batching
+//!   inference server, CLI.
+//! * **L2 (python/compile/model.py)** — Monarch transformer forward in
+//!   JAX, AOT-lowered to HLO text artifacts at build time.
+//! * **L1 (python/compile/kernels/)** — Pallas block-diagonal kernels
+//!   called by L2 (interpret mode for CPU PJRT).
+//!
+//! Python never runs on the request path: `runtime` loads the HLO
+//! artifacts through the PJRT C API and executes them natively.
+
+pub mod cim;
+pub mod coordinator;
+pub mod gpu;
+pub mod linalg;
+pub mod mapping;
+pub mod model;
+pub mod monarch;
+pub mod report;
+pub mod runtime;
+pub mod scheduler;
+pub mod sim;
+pub mod tensor;
+pub mod util;

@@ -1,0 +1,245 @@
+//! Numerical linear algebra substrate: truncated rank-1 SVD via power
+//! iteration (the only decomposition the D2S projection needs), plus
+//! helpers for validation.
+//!
+//! Power iteration on `A^T A` converges to the dominant right singular
+//! vector; we run the alternating form (v -> A^T A v, u = A v / sigma)
+//! with tolerance + iteration caps. For the paper's slice sizes
+//! (b x b, b <= 64) this is far faster than a full SVD and exact up to
+//! the gap — property tests compare against a 2x2 closed form and
+//! against reconstruction-optimality invariants.
+
+use crate::tensor::Matrix;
+
+/// Result of a rank-1 decomposition `A ~= sigma * u v^T`.
+#[derive(Clone, Debug)]
+pub struct Rank1 {
+    pub sigma: f32,
+    pub u: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+impl Rank1 {
+    /// Materialize `sigma * u v^T`.
+    pub fn to_matrix(&self) -> Matrix {
+        let mut m = Matrix::zeros(self.u.len(), self.v.len());
+        for (r, &uv) in self.u.iter().enumerate() {
+            let s = self.sigma * uv;
+            for (c, &vv) in self.v.iter().enumerate() {
+                m[(r, c)] = s * vv;
+            }
+        }
+        m
+    }
+}
+
+fn norm(v: &[f32]) -> f32 {
+    v.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt() as f32
+}
+
+fn normalize(v: &mut [f32]) -> f32 {
+    let n = norm(v);
+    if n > 0.0 {
+        for x in v.iter_mut() {
+            *x /= n;
+        }
+    }
+    n
+}
+
+/// Best rank-1 approximation of `a` by alternating power iteration.
+///
+/// Deterministic: starts from the largest-norm column of `a` (falls back
+/// to e_0), which also makes the zero matrix well-defined (sigma = 0).
+pub fn rank1_svd(a: &Matrix) -> Rank1 {
+    let (m, n) = (a.rows, a.cols);
+    // start v := unit vector toward the heaviest column
+    let mut v = vec![0.0f32; n];
+    let mut best = (0usize, -1.0f64);
+    for c in 0..n {
+        let cn: f64 = (0..m).map(|r| (a[(r, c)] as f64).powi(2)).sum();
+        if cn > best.1 {
+            best = (c, cn);
+        }
+    }
+    if best.1 <= 0.0 {
+        // zero matrix
+        let mut u = vec![0.0; m];
+        if m > 0 {
+            u[0] = 1.0;
+        }
+        let mut v = vec![0.0; n];
+        if n > 0 {
+            v[0] = 1.0;
+        }
+        return Rank1 { sigma: 0.0, u, v };
+    }
+    v[best.0] = 1.0;
+
+    let mut u = vec![0.0f32; m];
+    let mut sigma = 0.0f32;
+    let mut prev_sigma = -1.0f32;
+    for _ in 0..200 {
+        // u = A v
+        for r in 0..m {
+            let row = a.row(r);
+            u[r] = row.iter().zip(&v).map(|(x, y)| x * y).sum();
+        }
+        normalize(&mut u);
+        // v = A^T u
+        for x in v.iter_mut() {
+            *x = 0.0;
+        }
+        for r in 0..m {
+            let row = a.row(r);
+            let ur = u[r];
+            if ur == 0.0 {
+                continue;
+            }
+            for (vx, ax) in v.iter_mut().zip(row) {
+                *vx += ur * ax;
+            }
+        }
+        sigma = normalize(&mut v);
+        if (sigma - prev_sigma).abs() <= 1e-7 * sigma.max(1.0) {
+            break;
+        }
+        prev_sigma = sigma;
+    }
+    Rank1 { sigma, u, v }
+}
+
+/// Squared Frobenius norm of the rank-1 residual `A - sigma u v^T`.
+pub fn rank1_residual_sq(a: &Matrix, r1: &Rank1) -> f64 {
+    let mut acc = 0.0f64;
+    for r in 0..a.rows {
+        for c in 0..a.cols {
+            let d = (a[(r, c)] - r1.sigma * r1.u[r] * r1.v[c]) as f64;
+            acc += d * d;
+        }
+    }
+    acc
+}
+
+/// All singular values of a small matrix via Jacobi one-sided rotation
+/// (used only in tests/diagnostics; O(n^3) per sweep).
+pub fn singular_values(a: &Matrix) -> Vec<f64> {
+    // One-sided Jacobi on columns of a copy.
+    let mut w = a.clone();
+    let n = w.cols;
+    for _sweep in 0..60 {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                // Gram entries
+                let (mut app, mut aqq, mut apq) = (0.0f64, 0.0f64, 0.0f64);
+                for r in 0..w.rows {
+                    let (x, y) = (w[(r, p)] as f64, w[(r, q)] as f64);
+                    app += x * x;
+                    aqq += y * y;
+                    apq += x * y;
+                }
+                off += apq * apq;
+                if apq.abs() < 1e-15 {
+                    continue;
+                }
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for r in 0..w.rows {
+                    let (x, y) = (w[(r, p)] as f64, w[(r, q)] as f64);
+                    w[(r, p)] = (c * x - s * y) as f32;
+                    w[(r, q)] = (s * x + c * y) as f32;
+                }
+            }
+        }
+        if off < 1e-20 {
+            break;
+        }
+    }
+    let mut svs: Vec<f64> = (0..n)
+        .map(|c| {
+            (0..w.rows)
+                .map(|r| (w[(r, c)] as f64).powi(2))
+                .sum::<f64>()
+                .sqrt()
+        })
+        .collect();
+    svs.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    svs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn exact_on_rank1_input() {
+        let mut rng = Pcg32::new(1);
+        let u: Vec<f32> = rng.normal_vec(6);
+        let v: Vec<f32> = rng.normal_vec(4);
+        let a = Matrix::from_fn(6, 4, |r, c| 2.5 * u[r] * v[c]);
+        let r1 = rank1_svd(&a);
+        assert!(rank1_residual_sq(&a, &r1).sqrt() < 1e-4);
+    }
+
+    #[test]
+    fn zero_matrix_gives_zero_sigma() {
+        let a = Matrix::zeros(3, 3);
+        let r1 = rank1_svd(&a);
+        assert_eq!(r1.sigma, 0.0);
+    }
+
+    #[test]
+    fn sigma_matches_2x2_closed_form() {
+        // A = [[3, 0], [4, 5]]: A^T A has trace 50, det 225 ->
+        // eigenvalues (50 ± 40)/2 = {45, 5}, so sigma_1 = sqrt(45).
+        let a = Matrix::from_vec(2, 2, vec![3.0, 0.0, 4.0, 5.0]);
+        let r1 = rank1_svd(&a);
+        let want = 45.0f64.sqrt();
+        assert!(
+            ((r1.sigma as f64) - want).abs() < 1e-3,
+            "sigma {} want {want}",
+            r1.sigma
+        );
+    }
+
+    #[test]
+    fn residual_never_exceeds_norm() {
+        forall("rank1 residual <= ||A||", 30, |g| {
+            let (m, n) = (g.usize(1, 12), g.usize(1, 12));
+            let data = g.normal_vec(m * n);
+            let a = Matrix::from_vec(m, n, data);
+            let r1 = rank1_svd(&a);
+            let res = rank1_residual_sq(&a, &r1).sqrt();
+            assert!(res <= a.frobenius() + 1e-4, "res {res} > {}", a.frobenius());
+        });
+    }
+
+    #[test]
+    fn residual_matches_tail_singular_values() {
+        let mut rng = Pcg32::new(5);
+        let a = Matrix::randn(8, 8, &mut rng);
+        let svs = singular_values(&a);
+        let tail: f64 = svs[1..].iter().map(|s| s * s).sum();
+        let r1 = rank1_svd(&a);
+        let res = rank1_residual_sq(&a, &r1);
+        assert!(
+            (res - tail).abs() < 1e-3 * tail.max(1.0),
+            "res {res}, tail {tail}"
+        );
+    }
+
+    #[test]
+    fn unit_vectors_returned() {
+        let mut rng = Pcg32::new(6);
+        let a = Matrix::randn(5, 7, &mut rng);
+        let r1 = rank1_svd(&a);
+        assert!((norm(&r1.u) - 1.0).abs() < 1e-4);
+        assert!((norm(&r1.v) - 1.0).abs() < 1e-4);
+        assert!(r1.sigma > 0.0);
+    }
+}

@@ -1,0 +1,305 @@
+//! monarch-cim CLI — the leader entrypoint.
+//!
+//! Subcommands:
+//! * `figure <fig2b|tab1|fig6|fig7|fig8|adc-res|all>` — regenerate the
+//!   paper's tables/figures (CSV copies land in `reports/`).
+//! * `d2s [--d N] [--noise x]` — run the D2S projection on a synthetic
+//!   dense matrix and report the Frobenius error.
+//! * `map --model M --strategy S` — mapping statistics (Fig. 6 row).
+//! * `simulate --model M --strategy S [--adcs N]` — latency/energy.
+//! * `serve [--requests N]` — batching-server demo over PJRT artifacts.
+//! * `e2e` — pipeline + runtime round-trip summary.
+
+use monarch_cim::cim::CimParams;
+use monarch_cim::coordinator::{run_pipeline, InferenceServer, PipelineConfig, ServerConfig};
+use monarch_cim::gpu::GpuParams;
+use monarch_cim::mapping::Strategy;
+use monarch_cim::model::ModelConfig;
+use monarch_cim::monarch::project_with_report;
+use monarch_cim::report;
+use monarch_cim::tensor::Matrix;
+use monarch_cim::util::cli::Args;
+use monarch_cim::util::rng::Pcg32;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: monarch-cim <command>\n\
+         commands:\n\
+           figure <fig2b|tab1|fig6|fig7|fig8|adc-res|all> [--adcs 4,8,16,32]\n\
+           d2s      [--d 1024] [--noise 0.02] [--seed N]\n\
+           map      [--model bert|bart|gpt2] [--strategy linear|sparse|dense]\n\
+           simulate [--model ...] [--strategy ...] [--adcs N]\n\
+           serve    [--requests 64] [--artifacts DIR]\n\
+           dse      [--model ...] [--adcs 1,4,8,16,32] [--budget N]\n\
+           e2e      [--artifacts DIR]"
+    );
+    std::process::exit(2);
+}
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("");
+    match cmd {
+        "figure" => cmd_figure(&args),
+        "d2s" => cmd_d2s(&args),
+        "map" => cmd_map(&args),
+        "simulate" => cmd_simulate(&args),
+        "serve" => cmd_serve(&args),
+        "dse" => cmd_dse(&args),
+        "e2e" => cmd_e2e(&args),
+        _ => usage(),
+    }
+}
+
+fn model_of(args: &Args) -> ModelConfig {
+    let name = args.str_or("model", "bert");
+    ModelConfig::by_name(&name).unwrap_or_else(|| {
+        eprintln!("unknown model '{name}' (bert|bart|gpt2|tiny)");
+        std::process::exit(2);
+    })
+}
+
+fn strategy_of(args: &Args) -> Strategy {
+    let name = args.str_or("strategy", "dense");
+    Strategy::by_name(&name).unwrap_or_else(|| {
+        eprintln!("unknown strategy '{name}' (linear|sparse|dense)");
+        std::process::exit(2);
+    })
+}
+
+fn cmd_figure(args: &Args) {
+    let which = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+    let params = CimParams::default();
+    let gpu = GpuParams::default();
+    let adcs = args.usize_list_or("adcs", &[1, 4, 8, 16, 32]);
+    let run = |id: &str| match id {
+        "fig2b" => {
+            println!("Fig. 2b — parameter & FLOP reduction (D2S):");
+            report::fig2b().print();
+        }
+        "tab1" => {
+            println!("Table I — CIM cost parameters:");
+            report::tab1(&params).print();
+        }
+        "fig6" => {
+            println!("Fig. 6 — CIM arrays & utilization per mapping:");
+            report::fig6(&params).print();
+        }
+        "fig7" => {
+            println!("Fig. 7 — latency & energy per configuration:");
+            report::fig7(&params, &gpu).print();
+        }
+        "fig8" => {
+            println!("Fig. 8 — ADC sharing DSE (BERT):");
+            report::fig8(&adcs).print();
+        }
+        "adc-res" => {
+            println!("§IV-C — ADC resolution scaling:");
+            report::adc_resolution(&params).print();
+        }
+        other => {
+            eprintln!("unknown figure '{other}'");
+            std::process::exit(2);
+        }
+    };
+    if which == "all" {
+        for id in ["fig2b", "tab1", "fig6", "fig7", "fig8", "adc-res"] {
+            run(id);
+        }
+    } else {
+        run(which);
+    }
+    println!("(CSV copies written to reports/)");
+}
+
+fn cmd_d2s(args: &Args) {
+    let d = args.usize_or("d", 1024);
+    let noise = args.f64_or("noise", 0.02) as f32;
+    let seed = args.usize_or("seed", 2025) as u64;
+    let b = (d as f64).sqrt().round() as usize;
+    if b * b != d {
+        eprintln!("--d must be a perfect square");
+        std::process::exit(2);
+    }
+    let mut rng = Pcg32::new(seed);
+    let base = monarch_cim::monarch::MonarchMatrix::randn(b, &mut rng)
+        .to_dense()
+        .scale(1.0 / b as f32);
+    let w = base.add(&Matrix::randn(d, d, &mut rng).scale(noise));
+    let t0 = std::time::Instant::now();
+    let (m, rep) = project_with_report(&w);
+    println!(
+        "D2S projection of a near-Monarch {d}x{d} (noise {noise}):\n  \
+         rel. Frobenius error: {:.4}\n  worst slice error: {:.4}\n  \
+         params: {} -> {} ({:.1}x)\n  projection time: {:?}",
+        rep.rel_error,
+        rep.worst_slice_error,
+        d * d,
+        m.params(),
+        (d * d) as f64 / m.params() as f64,
+        t0.elapsed()
+    );
+}
+
+fn cmd_map(args: &Args) {
+    let cfg = PipelineConfig {
+        model: model_of(args),
+        strategy: strategy_of(args),
+        cim: CimParams::default(),
+        d2s_numeric_check: false,
+        seed: 2025,
+    };
+    let r = run_pipeline(&cfg);
+    println!(
+        "{} / {}: {} arrays, utilization {:.1}%, weight memory {:.1} MiB, placements {}",
+        r.mapping.model,
+        r.mapping.strategy.name(),
+        r.mapping.arrays,
+        100.0 * r.mapping.utilization(),
+        r.mapping_stats.memory_mib,
+        r.mapping.placements.len()
+    );
+}
+
+fn cmd_simulate(args: &Args) {
+    let mut cim = CimParams::default();
+    if args.has("adcs") {
+        cim = cim.with_adcs_per_array(args.usize_or("adcs", 1));
+    }
+    let cfg = PipelineConfig {
+        model: model_of(args),
+        strategy: strategy_of(args),
+        cim,
+        d2s_numeric_check: false,
+        seed: 2025,
+    };
+    let r = run_pipeline(&cfg);
+    let c = &r.cost;
+    println!(
+        "{} / {} @ {} ADC/array ({}b ADC):\n  \
+         latency: {:.3} ms ({} tokens; {:.2} µs/token)\n  \
+         energy:  {:.2} mJ\n  \
+         breakdown/token: analog {:.0} ns, adc {:.0} ns, comm {:.0} ns (pipelined), dpu {:.0} ns (pipelined)",
+        c.model,
+        c.strategy.name(),
+        c.adcs_per_array,
+        c.adc_bits,
+        c.latency_ms(),
+        c.seq,
+        c.per_token.latency.critical_ns() / 1e3,
+        c.energy_mj(),
+        c.per_token.latency.analog_ns,
+        c.per_token.latency.adc_ns,
+        c.per_token.latency.comm_ns,
+        c.per_token.latency.dpu_ns,
+    );
+}
+
+fn cmd_serve(args: &Args) {
+    let n = args.usize_or("requests", 64);
+    let mut cfg = ServerConfig::default();
+    if let Some(dir) = args.get("artifacts") {
+        cfg.artifacts_dir = dir.into();
+    }
+    println!("starting batching inference server (PJRT CPU)...");
+    let server = match InferenceServer::start(cfg) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("server failed to start: {e:#}");
+            std::process::exit(1);
+        }
+    };
+    let seq = server.seq;
+    let vocab = server.vocab as i32;
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|scope| {
+        for i in 0..n {
+            let srv = &server;
+            scope.spawn(move || {
+                let mut rng = Pcg32::new(i as u64);
+                let toks: Vec<i32> =
+                    (0..seq).map(|_| rng.below(vocab as u32) as i32).collect();
+                let r = srv.infer(toks);
+                assert!(r.is_ok(), "request {i} failed: {:?}", r.err());
+            });
+        }
+    });
+    let elapsed = t0.elapsed();
+    let s = server.metrics.snapshot();
+    println!(
+        "served {} requests in {:.2?}: {:.1} req/s, mean batch {:.2}, p50 {:.1} µs, p99 {:.1} µs, errors {}",
+        s.requests, elapsed, s.throughput_rps, s.mean_batch, s.latency_p50_us, s.latency_p99_us, s.errors
+    );
+    server.shutdown();
+}
+
+fn cmd_dse(args: &Args) {
+    use monarch_cim::coordinator::dse::{best, explore};
+    use monarch_cim::mapping::constrained::WriteCosts;
+    let model = model_of(args);
+    let adcs = args.usize_list_or("adcs", &[1, 4, 8, 16, 32]);
+    let budget = args.get("budget").map(|_| args.usize_or("budget", 512));
+    let pts = explore(&model, &adcs, budget, &WriteCosts::default());
+    println!(
+        "DSE for {} (budget: {}):",
+        model.name,
+        budget.map(|b| b.to_string()).unwrap_or_else(|| "unconstrained".into())
+    );
+    let mut t = monarch_cim::util::table::Table::new([
+        "strategy", "ADCs", "arrays", "fits", "µs/token", "energy (mJ)", "ADC bits",
+    ]);
+    for p in &pts {
+        t.row([
+            p.strategy.name().to_string(),
+            p.adcs_per_array.to_string(),
+            p.arrays.to_string(),
+            if p.fits_budget { "yes".into() } else { "NO".to_string() },
+            format!("{:.2}", p.token_latency_ns / 1e3),
+            format!("{:.2}", p.energy_mj),
+            p.adc_bits.to_string(),
+        ]);
+    }
+    t.print();
+    if let Some(b) = best(&pts) {
+        println!(
+            "best: {} @ {} ADCs/array ({:.2} µs/token)",
+            b.strategy.name(),
+            b.adcs_per_array,
+            b.token_latency_ns / 1e3
+        );
+    }
+}
+
+fn cmd_e2e(args: &Args) {
+    println!("== monarch-cim e2e summary ==");
+    // 1) pipeline over all models/strategies
+    for model in ModelConfig::paper_models() {
+        for strategy in Strategy::all() {
+            let r = run_pipeline(&PipelineConfig::new(model.clone(), strategy));
+            println!(
+                "  {:<12} {:<9} arrays {:>5}  util {:>5.1}%  lat {:>8.3} ms  en {:>8.2} mJ",
+                model.name,
+                strategy.name(),
+                r.mapping.arrays,
+                100.0 * r.mapping.utilization(),
+                r.cost.latency_ms(),
+                r.cost.energy_mj()
+            );
+        }
+    }
+    // 2) runtime round trip (defers to `examples/` for the full driver)
+    let dir = args
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(monarch_cim::runtime::default_artifacts_dir);
+    match monarch_cim::runtime::Runtime::new(&dir) {
+        Ok(rt) => println!(
+            "runtime: platform={}, {} artifacts in {:?}",
+            rt.platform(),
+            rt.manifest().artifacts.len(),
+            dir
+        ),
+        Err(e) => println!("runtime unavailable ({e}); run `make artifacts`"),
+    }
+    println!("for the full e2e driver see: cargo run --release --example bert_e2e");
+}

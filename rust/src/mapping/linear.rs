@@ -1,0 +1,130 @@
+//! Linear baseline mapping (§IV, "Linear"): the dense pre-trained weight
+//! matrices are tiled directly onto m x m arrays. Utilization is 100%
+//! for dimension multiples of m (the paper's models all are); every
+//! column partition produces partial sums that are shift-added.
+
+use super::{Factor, MappedOp, ModelMapping, Placement, Strategy};
+use crate::cim::CimParams;
+use crate::model::{MatmulOp, ModelConfig};
+
+pub fn map(cfg: &ModelConfig, ops: &[MatmulOp], params: &CimParams) -> ModelMapping {
+    let m = params.array_dim;
+    let mut placements = Vec::new();
+    let mut mapped_ops = Vec::new();
+    let mut next_array = 0usize;
+
+    for (oi, op) in ops.iter().enumerate() {
+        let row_parts = op.rows.div_ceil(m);
+        let col_parts = op.cols.div_ceil(m);
+        let mut arrays = Vec::with_capacity(row_parts * col_parts);
+        for rp in 0..row_parts {
+            for cp in 0..col_parts {
+                let rows_here = m.min(op.rows - rp * m);
+                let cols_here = m.min(op.cols - cp * m);
+                placements.push(Placement {
+                    op: oi,
+                    tile: rp * col_parts + cp,
+                    factor: Factor::Dense,
+                    lane_of_factor: 0,
+                    array: next_array,
+                    diag: 0,
+                    blocks: 1,
+                    block_dim: m,
+                    cells: rows_here * cols_here,
+                });
+                arrays.push(next_array);
+                next_array += 1;
+            }
+        }
+        // Per token: the activation segment is driven into every array of
+        // a column partition; each array converts its m output columns;
+        // row partitions are partial sums combined by shift-add/DPU adds.
+        let stage_arrays = arrays.len();
+        mapped_ops.push(MappedOp {
+            name: op.name.clone(),
+            layer: op.layer,
+            tiles: row_parts * col_parts,
+            arrays,
+            stage_arrays,
+            stages: 1,
+            convs_per_array: m.min(op.rows),
+            active_rows: m.min(op.cols),
+            partial_adds: col_parts.saturating_sub(1),
+            analog_phases: 1,
+        });
+    }
+
+    ModelMapping {
+        strategy: Strategy::Linear,
+        model: cfg.name.to_string(),
+        m,
+        b: 0,
+        arrays: next_array,
+        placements,
+        ops: mapped_ops,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::para_ops;
+
+    #[test]
+    fn bert_array_count_closed_form() {
+        let cfg = ModelConfig::bert_large();
+        let params = CimParams::default();
+        let mm = map(&cfg, &para_ops(&cfg), &params);
+        // per layer: 4 * (1024/256)^2 + 2 * (4096/256)*(1024/256) = 64 + 128
+        assert_eq!(mm.arrays, 24 * (4 * 16 + 2 * 16 * 4));
+        assert_eq!(mm.strategy, Strategy::Linear);
+    }
+
+    #[test]
+    fn full_utilization_for_multiples() {
+        let cfg = ModelConfig::bert_large();
+        let params = CimParams::default();
+        let mm = map(&cfg, &para_ops(&cfg), &params);
+        assert!((mm.utilization() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn op_geometry() {
+        let cfg = ModelConfig::bert_large();
+        let params = CimParams::default();
+        let mm = map(&cfg, &para_ops(&cfg), &params);
+        let wq = &mm.ops[0];
+        assert_eq!(wq.stage_arrays, 16);
+        assert_eq!(wq.stages, 1);
+        assert_eq!(wq.convs_per_array, 256);
+        assert_eq!(wq.active_rows, 256);
+        assert_eq!(wq.partial_adds, 3); // 4 column partitions
+        let ffn1 = mm.ops.iter().find(|o| o.name == "enc0.ffn1").unwrap();
+        assert_eq!(ffn1.stage_arrays, 64);
+    }
+
+    #[test]
+    fn arrays_disjoint_across_ops() {
+        let cfg = ModelConfig::tiny();
+        let params = CimParams::default();
+        let mm = map(&cfg, &para_ops(&cfg), &params);
+        let mut seen = std::collections::HashSet::new();
+        for op in &mm.ops {
+            for a in &op.arrays {
+                assert!(seen.insert(*a), "array {a} shared in Linear mapping");
+            }
+        }
+    }
+
+    #[test]
+    fn tiny_model_padding_accounted() {
+        // tiny: d=64 < m=256 -> one array per weight, utilization < 100%
+        let cfg = ModelConfig::tiny();
+        let params = CimParams::default();
+        let mm = map(&cfg, &para_ops(&cfg), &params);
+        assert!(mm.utilization() < 1.0);
+        let wq = &mm.ops[0];
+        assert_eq!(wq.convs_per_array, 64);
+        assert_eq!(wq.active_rows, 64);
+    }
+}

@@ -1,0 +1,192 @@
+//! CIM mapping strategies (paper §III-B): placing weight structures onto
+//! m x m crossbar arrays.
+//!
+//! * [`linear`] — **Linear** baseline: dense pre-trained weights tiled
+//!   directly onto arrays (100% utilization, most arrays).
+//! * [`sparse`] — **SparseMap** (§III-B1, latency-optimized): Monarch
+//!   block-diagonals along each array's diagonal, zero-padding the rest;
+//!   utilization b/m, all blocks compute in parallel.
+//! * [`dense`] — **DenseMap** (§III-B2, capacity-optimized): up to m/b
+//!   block-diagonal *lanes* per array at distinct diagonal indices, with
+//!   rotation-cancelling lane pairing ([`rotation`], `i_R = -i_L mod
+//!   lanes`) and permutation folding; utilization approaches 100%.
+//!
+//! The output [`ModelMapping`] carries both the figure-6 statistics
+//! (array counts, utilization) and the execution geometry the scheduler
+//! needs (per-op array spans, activation masks, co-location).
+
+pub mod constrained;
+pub mod dense;
+pub mod linear;
+pub mod rotation;
+pub mod sparse;
+pub mod stats;
+
+use crate::cim::CimParams;
+use crate::model::{MatmulOp, ModelConfig};
+
+/// Mapping strategy selector (the paper's three configurations).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Strategy {
+    Linear,
+    SparseMap,
+    DenseMap,
+}
+
+impl Strategy {
+    pub fn all() -> [Strategy; 3] {
+        [Strategy::Linear, Strategy::SparseMap, Strategy::DenseMap]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strategy::Linear => "Linear",
+            Strategy::SparseMap => "SparseMap",
+            Strategy::DenseMap => "DenseMap",
+        }
+    }
+
+    pub fn by_name(s: &str) -> Option<Strategy> {
+        match s.to_ascii_lowercase().as_str() {
+            "linear" => Some(Strategy::Linear),
+            "sparse" | "sparsemap" => Some(Strategy::SparseMap),
+            "dense" | "densemap" => Some(Strategy::DenseMap),
+            _ => None,
+        }
+    }
+}
+
+/// Which Monarch factor a placement belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Factor {
+    /// Dense weight tile (Linear mapping only).
+    Dense,
+    /// Left block-diagonal factor `L`.
+    Left,
+    /// Right block-diagonal factor `R`.
+    Right,
+}
+
+/// A contiguous group of blocks placed into one array.
+///
+/// Granularity: for Linear one placement = one m x m dense tile; for
+/// SparseMap/DenseMap one placement = one *lane* (a run of up to m/b
+/// blocks at diagonal index `diag`).
+#[derive(Clone, Debug)]
+pub struct Placement {
+    /// Index into the mapped op list.
+    pub op: usize,
+    /// d x d tile index within the op (rectangular partition).
+    pub tile: usize,
+    pub factor: Factor,
+    /// Lane ordinal within the factor (0.. ceil(b / (m/b))).
+    pub lane_of_factor: usize,
+    /// Physical array id.
+    pub array: usize,
+    /// Diagonal index inside the array (0 for Linear/SparseMap).
+    pub diag: usize,
+    /// Blocks in this placement.
+    pub blocks: usize,
+    /// Block edge (b for Monarch lanes, m for Linear tiles).
+    pub block_dim: usize,
+    /// Valid (non-padded) cells this placement stores.
+    pub cells: usize,
+}
+
+/// Execution geometry of one mapped parameterized op, consumed by the
+/// scheduler.
+#[derive(Clone, Debug)]
+pub struct MappedOp {
+    pub name: String,
+    pub layer: usize,
+    /// d x d tiles (rectangular partition of the weight).
+    pub tiles: usize,
+    /// Arrays whose placements belong to this op.
+    pub arrays: Vec<usize>,
+    /// Arrays active in parallel per Monarch stage (or per dense pass).
+    pub stage_arrays: usize,
+    /// Sequential Monarch stages (2) or 1 for Linear.
+    pub stages: usize,
+    /// ADC conversions per array per token per stage.
+    pub convs_per_array: usize,
+    /// Active rows per column during a pass.
+    pub active_rows: usize,
+    /// Partial-sum additions per output element (Linear col partitions).
+    pub partial_adds: usize,
+    /// Sequential analog phases per token per stage (DenseMap lanes of
+    /// the same op co-resident in one array).
+    pub analog_phases: usize,
+}
+
+/// Full mapping of a model's parameterized ops.
+#[derive(Clone, Debug)]
+pub struct ModelMapping {
+    pub strategy: Strategy,
+    pub model: String,
+    /// Array dimension m.
+    pub m: usize,
+    /// Monarch block size b (0 for Linear).
+    pub b: usize,
+    /// Total arrays allocated.
+    pub arrays: usize,
+    pub placements: Vec<Placement>,
+    pub ops: Vec<MappedOp>,
+}
+
+impl ModelMapping {
+    /// Valid cells stored across all placements.
+    pub fn used_cells(&self) -> usize {
+        self.placements.iter().map(|p| p.cells).sum()
+    }
+
+    /// Array-wise utilization: valid cells / total allocated capacity.
+    pub fn utilization(&self) -> f64 {
+        if self.arrays == 0 {
+            return 0.0;
+        }
+        self.used_cells() as f64 / (self.arrays * self.m * self.m) as f64
+    }
+}
+
+/// Map a model's parameterized matmuls with the chosen strategy.
+pub fn map_model(
+    cfg: &ModelConfig,
+    params: &CimParams,
+    strategy: Strategy,
+) -> ModelMapping {
+    let ops = crate::model::para_ops(cfg);
+    map_ops(cfg, &ops, params, strategy)
+}
+
+/// Map an explicit op list (used by tests and the pipeline).
+pub fn map_ops(
+    cfg: &ModelConfig,
+    ops: &[MatmulOp],
+    params: &CimParams,
+    strategy: Strategy,
+) -> ModelMapping {
+    match strategy {
+        Strategy::Linear => linear::map(cfg, ops, params),
+        Strategy::SparseMap => sparse::map(cfg, ops, params),
+        Strategy::DenseMap => dense::map(cfg, ops, params),
+    }
+}
+
+/// Number of d x d square tiles of a rectangular weight.
+pub(crate) fn tiles_of(op: &MatmulOp, d: usize) -> usize {
+    op.rows.div_ceil(d) * op.cols.div_ceil(d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strategy_names_roundtrip() {
+        for s in Strategy::all() {
+            assert_eq!(Strategy::by_name(s.name()), Some(s));
+        }
+        assert_eq!(Strategy::by_name("densemap"), Some(Strategy::DenseMap));
+        assert!(Strategy::by_name("x").is_none());
+    }
+}

@@ -1,0 +1,157 @@
+//! Rotation handling for DenseMap (§III-B2a): a block-diagonal packed at
+//! diagonal index `i` of an array produces outputs cyclically rotated by
+//! `i` block positions. Pairing the L-stage lane at index `i_L` with the
+//! R-stage lane at `i_R = -i_L (mod lanes)` cancels the rotations, so no
+//! explicit rotation correction is needed between stages.
+//!
+//! Special case: indices `0` and `lanes/2` are self-inverse under the
+//! modulo, so an L/R pair at such an index would need the *same*
+//! diagonal twice in one array — impossible. These lanes are distributed
+//! across different arrays (§III-B2a "must be distributed across
+//! different Monarch matrices").
+
+/// Output block-rotation produced by a lane at diagonal index `i`.
+pub fn rotation_of(diag: usize, lanes: usize) -> usize {
+    diag % lanes
+}
+
+/// The cancelling partner index: `i_R = -i_L mod lanes`.
+pub fn pair_index(i_l: usize, lanes: usize) -> usize {
+    (lanes - (i_l % lanes)) % lanes
+}
+
+/// Self-inverse diagonal indices (cannot pair inside one array).
+pub fn is_self_inverse(i: usize, lanes: usize) -> bool {
+    pair_index(i, lanes) == i
+}
+
+/// Net rotation after composing an L lane at `i_l` with an R lane at
+/// `i_r` (zero when properly paired).
+pub fn net_rotation(i_l: usize, i_r: usize, lanes: usize) -> usize {
+    (i_l + i_r) % lanes
+}
+
+/// Cyclically rotate a vector left by `rot` block positions of size `b`
+/// (functional model of the lane output alignment).
+pub fn rotate_blocks_left(x: &[f32], b: usize, rot: usize) -> Vec<f32> {
+    assert_eq!(x.len() % b, 0);
+    let nblocks = x.len() / b;
+    let rot = rot % nblocks.max(1);
+    let mut out = vec![0.0f32; x.len()];
+    for blk in 0..nblocks {
+        let src = (blk + rot) % nblocks;
+        out[blk * b..(blk + 1) * b].copy_from_slice(&x[src * b..(src + 1) * b]);
+    }
+    out
+}
+
+/// Plan the lane-diagonal assignment for a sequence of (L, R) lane pairs
+/// being packed into arrays with `lanes` diagonals each.
+///
+/// Returns `(diag_l, diag_r, same_array)` per pair: non-self-inverse
+/// pairs co-reside (`same_array = true`) at complementary indices;
+/// self-inverse pairs are split across arrays at the same index.
+pub struct PairPlanner {
+    lanes: usize,
+    /// Next non-self-inverse index to hand out (cycles through 1..lanes/2).
+    cursor: usize,
+}
+
+impl PairPlanner {
+    pub fn new(lanes: usize) -> Self {
+        assert!(lanes >= 1);
+        Self { lanes, cursor: 0 }
+    }
+
+    /// Indices that pair with a distinct partner.
+    fn pairable(&self) -> Vec<usize> {
+        (1..self.lanes)
+            .filter(|&i| !is_self_inverse(i, self.lanes))
+            .collect()
+    }
+
+    /// Assign the next (L, R) pair.
+    pub fn next_pair(&mut self) -> (usize, usize, bool) {
+        let pairable = self.pairable();
+        if pairable.is_empty() {
+            // lanes <= 2: only self-inverse diagonals exist
+            let i = self.cursor % self.lanes.max(1);
+            self.cursor += 1;
+            return (i, i, false);
+        }
+        // Use each unordered pair {i, lanes - i} once per array fill.
+        let half: Vec<usize> = pairable
+            .iter()
+            .copied()
+            .filter(|&i| i < pair_index(i, self.lanes) || self.lanes == 2)
+            .collect();
+        let i = half[self.cursor % half.len()];
+        self.cursor += 1;
+        (i, pair_index(i, self.lanes), true)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn pairing_cancels_rotation() {
+        forall("i_R = -i_L cancels", 50, |g| {
+            let lanes = g.usize(1, 16);
+            let i_l = g.usize(0, lanes - 1);
+            let i_r = pair_index(i_l, lanes);
+            assert_eq!(net_rotation(i_l, i_r, lanes), 0);
+        });
+    }
+
+    #[test]
+    fn self_inverse_indices() {
+        assert!(is_self_inverse(0, 8));
+        assert!(is_self_inverse(4, 8));
+        for i in [1, 2, 3, 5, 6, 7] {
+            assert!(!is_self_inverse(i, 8), "index {i}");
+        }
+        // odd lane count: only 0 is self-inverse
+        assert!(is_self_inverse(0, 7));
+        for i in 1..7 {
+            assert!(!is_self_inverse(i, 7), "index {i}");
+        }
+    }
+
+    #[test]
+    fn rotate_blocks_roundtrip() {
+        let x: Vec<f32> = (0..12).map(|i| i as f32).collect();
+        let r = rotate_blocks_left(&x, 3, 1);
+        assert_eq!(&r[0..3], &[3.0, 4.0, 5.0]);
+        // rotating by lanes is identity
+        assert_eq!(rotate_blocks_left(&x, 3, 4), x);
+        // rot then counter-rot restores
+        let rr = rotate_blocks_left(&r, 3, 3); // 1 + 3 = 4 ≡ 0 (mod 4)
+        assert_eq!(rr, x);
+    }
+
+    #[test]
+    fn planner_pairs_are_complementary() {
+        let mut pl = PairPlanner::new(8);
+        for _ in 0..10 {
+            let (l, r, same) = pl.next_pair();
+            assert_eq!(net_rotation(l, r, 8), 0);
+            if same {
+                assert_ne!(l, r, "co-resident pair must use distinct diagonals");
+            }
+        }
+    }
+
+    #[test]
+    fn planner_handles_tiny_lane_counts() {
+        let mut pl = PairPlanner::new(1);
+        let (l, r, same) = pl.next_pair();
+        assert_eq!((l, r, same), (0, 0, false));
+        let mut pl2 = PairPlanner::new(2);
+        let (l, r, same) = pl2.next_pair();
+        assert_eq!(net_rotation(l, r, 2), 0);
+        assert!(!same); // 0 and 1 are both self-inverse mod 2
+    }
+}

@@ -1,0 +1,151 @@
+//! SparseMap (§III-B1, latency-optimized): each Monarch factor's blocks
+//! are placed along the main diagonal of as many arrays as needed, the
+//! rest zero-padded.
+//!
+//! With block size b and array dim m, an array holds m/b blocks on its
+//! diagonal (disjoint rows *and* columns, so all blocks of an array
+//! compute in parallel in a single analog pass). Effective utilization
+//! is b/m — the paper's 12.5% example at b=32, m=256 — and each factor
+//! of a d x d tile needs ceil(b / (m/b)) = b^2/m arrays.
+
+use super::{Factor, MappedOp, ModelMapping, Placement, Strategy, tiles_of};
+use crate::cim::CimParams;
+use crate::model::{MatmulOp, ModelConfig};
+
+pub fn map(cfg: &ModelConfig, ops: &[MatmulOp], params: &CimParams) -> ModelMapping {
+    let m = params.array_dim;
+    let d = cfg.d_model;
+    let b = cfg.monarch_b();
+    assert!(b <= m, "block size must fit the array");
+    let blocks_per_array = m / b;
+
+    let mut placements = Vec::new();
+    let mut mapped_ops = Vec::new();
+    let mut next_array = 0usize;
+
+    for (oi, op) in ops.iter().enumerate() {
+        let tiles = tiles_of(op, d);
+        let mut arrays = Vec::new();
+        // Each tile contributes two factors (L then R), each with b blocks.
+        for tile in 0..tiles {
+            for factor in [Factor::Right, Factor::Left] {
+                let mut remaining = b;
+                let mut lane = 0usize;
+                while remaining > 0 {
+                    let here = remaining.min(blocks_per_array);
+                    placements.push(Placement {
+                        op: oi,
+                        tile,
+                        factor,
+                        lane_of_factor: lane,
+                        array: next_array,
+                        diag: 0,
+                        blocks: here,
+                        block_dim: b,
+                        cells: here * b * b,
+                    });
+                    arrays.push(next_array);
+                    next_array += 1;
+                    remaining -= here;
+                    lane += 1;
+                }
+            }
+        }
+        // Per stage, the factor's arrays all work in parallel; each array
+        // converts (blocks_per_array * b) = m columns per token. Only b
+        // rows per column are active (one block), giving the reduced ADC
+        // resolution (5 b at b=32).
+        let arrays_per_factor = b.div_ceil(blocks_per_array);
+        mapped_ops.push(MappedOp {
+            name: op.name.clone(),
+            layer: op.layer,
+            tiles,
+            stage_arrays: tiles * arrays_per_factor,
+            arrays,
+            stages: 2,
+            convs_per_array: (blocks_per_array * b).min(b * b),
+            active_rows: b,
+            partial_adds: (op.cols.div_ceil(d)).saturating_sub(1),
+            analog_phases: 1,
+        });
+    }
+
+    ModelMapping {
+        strategy: Strategy::SparseMap,
+        model: cfg.name.to_string(),
+        m,
+        b,
+        arrays: next_array,
+        placements,
+        ops: mapped_ops,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::para_ops;
+
+    #[test]
+    fn bert_array_count_closed_form() {
+        let cfg = ModelConfig::bert_large();
+        let params = CimParams::default();
+        let mm = map(&cfg, &para_ops(&cfg), &params);
+        // b=32, m=256: blocks/array = 8, arrays per factor = 4;
+        // per layer tiles: 4 attn (1 tile) + ffn1 (4) + ffn2 (4) = 12 tiles
+        // -> 12 tiles * 2 factors * 4 arrays = 96 arrays per layer.
+        assert_eq!(mm.arrays, 24 * 96);
+    }
+
+    #[test]
+    fn utilization_is_b_over_m() {
+        let cfg = ModelConfig::bert_large();
+        let params = CimParams::default();
+        let mm = map(&cfg, &para_ops(&cfg), &params);
+        // exactly b/m = 12.5% (all factor lanes fill their arrays)
+        assert!((mm.utilization() - 32.0 / 256.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sparse_uses_half_of_linear_arrays() {
+        // paper Fig. 6a: SparseMap needs ~50% of Linear's arrays.
+        let params = CimParams::default();
+        for cfg in ModelConfig::paper_models() {
+            let lin = super::super::linear::map(&cfg, &para_ops(&cfg), &params);
+            let sp = map(&cfg, &para_ops(&cfg), &params);
+            let ratio = sp.arrays as f64 / lin.arrays as f64;
+            assert!(
+                (0.45..0.6).contains(&ratio),
+                "{}: sparse/linear = {ratio}",
+                cfg.name
+            );
+        }
+    }
+
+    #[test]
+    fn op_geometry() {
+        let cfg = ModelConfig::bert_large();
+        let params = CimParams::default();
+        let mm = map(&cfg, &para_ops(&cfg), &params);
+        let wq = &mm.ops[0];
+        assert_eq!(wq.stages, 2);
+        assert_eq!(wq.stage_arrays, 4);
+        assert_eq!(wq.active_rows, 32); // -> 5b ADC
+        assert_eq!(wq.convs_per_array, 256);
+        assert_eq!(wq.analog_phases, 1);
+    }
+
+    #[test]
+    fn blocks_conserved() {
+        let cfg = ModelConfig::bert_large();
+        let params = CimParams::default();
+        let ops = para_ops(&cfg);
+        let mm = map(&cfg, &ops, &params);
+        let total_blocks: usize = mm.placements.iter().map(|p| p.blocks).sum();
+        let want: usize = ops
+            .iter()
+            .map(|o| tiles_of(o, cfg.d_model) * 2 * cfg.monarch_b())
+            .sum();
+        assert_eq!(total_blocks, want);
+    }
+}

@@ -1,0 +1,120 @@
+//! Mapping statistics — the quantities of paper Fig. 6: CIM array counts
+//! (6a) and array-wise utilization (6b) per model and strategy.
+
+use super::{map_model, ModelMapping, Strategy};
+use crate::cim::CimParams;
+use crate::model::ModelConfig;
+
+/// One Fig. 6 row.
+#[derive(Clone, Debug)]
+pub struct MappingStats {
+    pub model: String,
+    pub strategy: Strategy,
+    pub arrays: usize,
+    /// Valid cells / allocated capacity, in [0, 1].
+    pub utilization: f64,
+    /// Stored weight memory in MiB (f32 cells).
+    pub memory_mib: f64,
+}
+
+impl MappingStats {
+    pub fn from_mapping(mm: &ModelMapping) -> Self {
+        Self {
+            model: mm.model.clone(),
+            strategy: mm.strategy,
+            arrays: mm.arrays,
+            utilization: mm.utilization(),
+            memory_mib: (mm.used_cells() * 4) as f64 / (1024.0 * 1024.0),
+        }
+    }
+}
+
+/// Compute Fig. 6 for all paper models and strategies.
+pub fn fig6_stats(params: &CimParams) -> Vec<MappingStats> {
+    let mut out = Vec::new();
+    for cfg in ModelConfig::paper_models() {
+        for s in Strategy::all() {
+            let mm = map_model(&cfg, params, s);
+            out.push(MappingStats::from_mapping(&mm));
+        }
+    }
+    out
+}
+
+/// Average reduction in array count of `a` vs `b` across models.
+pub fn mean_array_reduction(stats: &[MappingStats], a: Strategy, b: Strategy) -> f64 {
+    let mut ratios = Vec::new();
+    let models: std::collections::BTreeSet<&str> =
+        stats.iter().map(|s| s.model.as_str()).collect();
+    for m in models {
+        let fa = stats
+            .iter()
+            .find(|s| s.model == m && s.strategy == a)
+            .expect("missing stats");
+        let fb = stats
+            .iter()
+            .find(|s| s.model == m && s.strategy == b)
+            .expect("missing stats");
+        ratios.push(1.0 - fa.arrays as f64 / fb.arrays as f64);
+    }
+    crate::util::stats::mean(&ratios)
+}
+
+/// Average utilization of a strategy across models.
+pub fn mean_utilization(stats: &[MappingStats], s: Strategy) -> f64 {
+    let xs: Vec<f64> = stats
+        .iter()
+        .filter(|x| x.strategy == s)
+        .map(|x| x.utilization)
+        .collect();
+    crate::util::stats::mean(&xs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig6_shape_holds() {
+        let params = CimParams::default();
+        let stats = fig6_stats(&params);
+        assert_eq!(stats.len(), 9);
+
+        // Fig. 6a: SparseMap ~50% fewer arrays than Linear
+        let sp_red = mean_array_reduction(&stats, Strategy::SparseMap, Strategy::Linear);
+        assert!((0.4..0.6).contains(&sp_red), "sparse reduction {sp_red}");
+
+        // DenseMap ~87% fewer than Linear, >73% fewer than SparseMap
+        let de_red = mean_array_reduction(&stats, Strategy::DenseMap, Strategy::Linear);
+        assert!(de_red > 0.8, "dense reduction {de_red}");
+        let de_vs_sp = mean_array_reduction(&stats, Strategy::DenseMap, Strategy::SparseMap);
+        assert!(de_vs_sp > 0.7, "dense vs sparse {de_vs_sp}");
+
+        // Fig. 6b: Linear 100%, SparseMap ~20%, DenseMap ~79%
+        assert!((mean_utilization(&stats, Strategy::Linear) - 1.0).abs() < 1e-9);
+        let sp_util = mean_utilization(&stats, Strategy::SparseMap);
+        assert!((0.1..0.3).contains(&sp_util), "sparse util {sp_util}");
+        let de_util = mean_utilization(&stats, Strategy::DenseMap);
+        assert!(de_util > 0.7, "dense util {de_util}");
+        assert!(de_util > 2.5 * sp_util, "dense/sparse util ratio"); // ~3x (§IV-A)
+    }
+
+    #[test]
+    fn memory_footprint_reduction() {
+        // DenseMap stores 16x fewer weight cells than Linear (b=32),
+        // > 4x memory footprint reduction claim of the abstract.
+        let params = CimParams::default();
+        let stats = fig6_stats(&params);
+        let lin: f64 = stats
+            .iter()
+            .filter(|s| s.strategy == Strategy::Linear)
+            .map(|s| s.memory_mib)
+            .sum();
+        let de: f64 = stats
+            .iter()
+            .filter(|s| s.strategy == Strategy::DenseMap)
+            .map(|s| s.memory_mib)
+            .sum();
+        assert!(lin / de > 4.0, "memory reduction {}", lin / de);
+    }
+}

@@ -1,0 +1,160 @@
+//! Transformer model configurations for the paper's three benchmarks
+//! (§IV): BERT-large (encoder-only, seq 512), BART-large
+//! (encoder-decoder, seq 1024) and GPT-2-medium (decoder-only, seq 1024).
+//!
+//! Only architecture *shapes* matter for mapping/scheduling/energy; see
+//! DESIGN.md §1 for the checkpoint substitution rationale.
+
+/// High-level architecture family.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Arch {
+    EncoderOnly,
+    DecoderOnly,
+    EncoderDecoder,
+}
+
+/// Static transformer configuration.
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    pub name: &'static str,
+    pub arch: Arch,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    /// Encoder layer count (0 for decoder-only).
+    pub enc_layers: usize,
+    /// Decoder layer count (0 for encoder-only).
+    pub dec_layers: usize,
+    pub seq: usize,
+    pub vocab: usize,
+}
+
+impl ModelConfig {
+    /// BERT-large: 24 encoder layers, d=1024, 340M-class.
+    pub fn bert_large() -> Self {
+        Self {
+            name: "bert-large",
+            arch: Arch::EncoderOnly,
+            d_model: 1024,
+            n_heads: 16,
+            d_ff: 4096,
+            enc_layers: 24,
+            dec_layers: 0,
+            seq: 512,
+            vocab: 30522,
+        }
+    }
+
+    /// BART-large: 12 encoder + 12 decoder layers, d=1024.
+    pub fn bart_large() -> Self {
+        Self {
+            name: "bart-large",
+            arch: Arch::EncoderDecoder,
+            d_model: 1024,
+            n_heads: 16,
+            d_ff: 4096,
+            enc_layers: 12,
+            dec_layers: 12,
+            seq: 1024,
+            vocab: 50265,
+        }
+    }
+
+    /// GPT-2-medium: 24 decoder layers, d=1024.
+    pub fn gpt2_medium() -> Self {
+        Self {
+            name: "gpt2-medium",
+            arch: Arch::DecoderOnly,
+            d_model: 1024,
+            n_heads: 16,
+            d_ff: 4096,
+            enc_layers: 0,
+            dec_layers: 24,
+            seq: 1024,
+            vocab: 50257,
+        }
+    }
+
+    /// The paper's evaluation set, in figure order.
+    pub fn paper_models() -> Vec<ModelConfig> {
+        vec![Self::bert_large(), Self::bart_large(), Self::gpt2_medium()]
+    }
+
+    /// Look up a model by CLI name.
+    pub fn by_name(name: &str) -> Option<ModelConfig> {
+        match name {
+            "bert" | "bert-large" => Some(Self::bert_large()),
+            "bart" | "bart-large" => Some(Self::bart_large()),
+            "gpt2" | "gpt2-medium" => Some(Self::gpt2_medium()),
+            "tiny" => Some(Self::tiny()),
+            _ => None,
+        }
+    }
+
+    /// Tiny config matching the AOT `tiny_lm` artifact (tests/e2e).
+    pub fn tiny() -> Self {
+        Self {
+            name: "tiny",
+            arch: Arch::DecoderOnly,
+            d_model: 64,
+            n_heads: 4,
+            d_ff: 256,
+            enc_layers: 0,
+            dec_layers: 2,
+            seq: 32,
+            vocab: 256,
+        }
+    }
+
+    pub fn total_layers(&self) -> usize {
+        self.enc_layers + self.dec_layers
+    }
+
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Monarch block size for `d_model` tiles: `b = sqrt(d_model)`.
+    pub fn monarch_b(&self) -> usize {
+        let b = (self.d_model as f64).sqrt().round() as usize;
+        assert_eq!(b * b, self.d_model, "d_model must be a perfect square");
+        b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_models_shapes() {
+        let bert = ModelConfig::bert_large();
+        assert_eq!(bert.total_layers(), 24);
+        assert_eq!(bert.seq, 512);
+        assert_eq!(bert.monarch_b(), 32);
+
+        let bart = ModelConfig::bart_large();
+        assert_eq!(bart.total_layers(), 24);
+        assert_eq!(bart.arch, Arch::EncoderDecoder);
+        assert_eq!(bart.seq, 1024);
+
+        let gpt = ModelConfig::gpt2_medium();
+        assert_eq!(gpt.arch, Arch::DecoderOnly);
+        assert_eq!(gpt.d_head(), 64);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(ModelConfig::by_name("bert").unwrap().name, "bert-large");
+        assert_eq!(ModelConfig::by_name("gpt2").unwrap().name, "gpt2-medium");
+        assert!(ModelConfig::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn tiny_matches_artifact_metadata() {
+        let t = ModelConfig::tiny();
+        assert_eq!(t.d_model, 64);
+        assert_eq!(t.monarch_b(), 8);
+        assert_eq!(t.dec_layers, 2);
+    }
+}

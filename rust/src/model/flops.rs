@@ -1,0 +1,176 @@
+//! Parameter-count and FLOP accounting, dense vs Monarch — reproduces
+//! paper Fig. 2b (BERT-large, 512-token input: ~8x params, ~5.7x FLOPs,
+//! Para-Matmuls > 80% of FLOPs).
+//!
+//! Monarch accounting per square `n x n` tile (`b = sqrt(n)`):
+//! params `2 b^3 = 2 n sqrt(n)`; per-activation-row FLOPs `4 n b`
+//! (two block-diagonal stages of `2 n b` each; permutations are free).
+//! Rectangular weights are tiled into `d x d` squares
+//! (`monarch::rect`), so an `r x c` weight has `ceil(r/d)*ceil(c/d)`
+//! tiles.
+
+use super::config::ModelConfig;
+use super::graph::{build_graph, MatmulOp, OpKind};
+
+/// Fig. 2b-style accounting summary.
+#[derive(Clone, Debug)]
+pub struct CountReport {
+    pub model: String,
+    pub seq: usize,
+    // parameters
+    pub dense_para_params: u64,
+    pub monarch_para_params: u64,
+    pub other_params: u64,
+    // FLOPs for one full-sequence forward pass
+    pub dense_para_flops: u64,
+    pub monarch_para_flops: u64,
+    pub nonpara_flops: u64,
+}
+
+impl CountReport {
+    /// Params reduction over the D2S-transformed (Para) weights.
+    pub fn para_param_reduction(&self) -> f64 {
+        self.dense_para_params as f64 / self.monarch_para_params as f64
+    }
+
+    /// Whole-model params reduction (embeddings etc. untransformed).
+    pub fn model_param_reduction(&self) -> f64 {
+        (self.dense_para_params + self.other_params) as f64
+            / (self.monarch_para_params + self.other_params) as f64
+    }
+
+    /// Whole-forward FLOPs reduction (NonPara untransformed).
+    pub fn flops_reduction(&self) -> f64 {
+        (self.dense_para_flops + self.nonpara_flops) as f64
+            / (self.monarch_para_flops + self.nonpara_flops) as f64
+    }
+
+    /// Fraction of dense FLOPs that are parameterized (paper: >80%).
+    pub fn para_flops_fraction(&self) -> f64 {
+        self.dense_para_flops as f64
+            / (self.dense_para_flops + self.nonpara_flops) as f64
+    }
+}
+
+/// Monarch parameter count for one Para matmul (square-tile partition).
+pub fn monarch_params_of(op: &MatmulOp, d: usize) -> u64 {
+    debug_assert_eq!(op.kind, OpKind::Para);
+    let b = (d as f64).sqrt().round() as usize;
+    let tiles = op.rows.div_ceil(d) as u64 * op.cols.div_ceil(d) as u64;
+    tiles * 2 * (b * b * b) as u64
+}
+
+/// Monarch FLOPs for one Para matmul over its activation batch.
+pub fn monarch_flops_of(op: &MatmulOp, d: usize) -> u64 {
+    debug_assert_eq!(op.kind, OpKind::Para);
+    let b = (d as f64).sqrt().round() as usize;
+    let tiles = op.rows.div_ceil(d) as u64 * op.cols.div_ceil(d) as u64;
+    tiles * op.batch as u64 * (4 * d * b) as u64
+}
+
+/// Embedding/positional/LayerNorm parameters left dense by the paper.
+pub fn untransformed_params(cfg: &ModelConfig) -> u64 {
+    let d = cfg.d_model as u64;
+    let emb = cfg.vocab as u64 * d + cfg.seq as u64 * d;
+    // LayerNorm scale+bias: 2 per attention/ffn sub-block + final
+    let ln_per_layer = 2 * 2 * d;
+    emb + cfg.total_layers() as u64 * ln_per_layer + 2 * d
+}
+
+/// Build the Fig. 2b accounting for a model.
+pub fn count_report(cfg: &ModelConfig) -> CountReport {
+    let d = cfg.d_model;
+    let ops = build_graph(cfg);
+    let mut r = CountReport {
+        model: cfg.name.to_string(),
+        seq: cfg.seq,
+        dense_para_params: 0,
+        monarch_para_params: 0,
+        other_params: untransformed_params(cfg),
+        dense_para_flops: 0,
+        monarch_para_flops: 0,
+        nonpara_flops: 0,
+    };
+    for op in &ops {
+        match op.kind {
+            OpKind::Para => {
+                r.dense_para_params += op.params();
+                r.monarch_para_params += monarch_params_of(op, d);
+                r.dense_para_flops += op.flops();
+                r.monarch_para_flops += monarch_flops_of(op, d);
+            }
+            OpKind::NonPara => {
+                r.nonpara_flops += op.flops();
+            }
+        }
+    }
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bert_para_reduction_is_16x() {
+        // d=1024, b=32: dense d^2 = 1M, monarch 2b^3 = 64K -> exactly 16x
+        // per square tile, and FFN tiles reduce by the same factor.
+        let r = count_report(&ModelConfig::bert_large());
+        assert!((r.para_param_reduction() - 16.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bert_fig2b_shape() {
+        let r = count_report(&ModelConfig::bert_large());
+        // Para-matmuls dominate FLOPs (paper: >80%)
+        assert!(
+            r.para_flops_fraction() > 0.8,
+            "para fraction {}",
+            r.para_flops_fraction()
+        );
+        // Model-level params reduction in the 4x..10x band (paper: 8x)
+        let pr = r.model_param_reduction();
+        assert!(pr > 4.0 && pr < 10.0, "param reduction {pr}");
+        // FLOPs reduction in the 4x..8x band (paper: 5.7x)
+        let fr = r.flops_reduction();
+        assert!(fr > 4.0 && fr < 8.0, "flops reduction {fr}");
+    }
+
+    #[test]
+    fn monarch_ffn_tiles_counted() {
+        let cfg = ModelConfig::bert_large();
+        let op = MatmulOp {
+            name: "ffn1".into(),
+            stage: super::super::graph::Stage::Encoder,
+            layer: 0,
+            kind: OpKind::Para,
+            rows: cfg.d_ff,
+            cols: cfg.d_model,
+            batch: cfg.seq,
+        };
+        // 4 tiles of 1024x1024
+        assert_eq!(monarch_params_of(&op, 1024), 4 * 2 * 32768);
+    }
+
+    #[test]
+    fn all_paper_models_have_reports() {
+        for cfg in ModelConfig::paper_models() {
+            let r = count_report(&cfg);
+            assert!(r.dense_para_params > 0);
+            assert!(r.monarch_para_params < r.dense_para_params);
+            assert!(r.flops_reduction() > 1.0);
+        }
+    }
+
+    #[test]
+    fn gpt2_param_scale_sane() {
+        // GPT-2 medium is a ~350M model; our para+other accounting should
+        // land in the 300-420M band.
+        let r = count_report(&ModelConfig::gpt2_medium());
+        let total = r.dense_para_params + r.other_params;
+        assert!(
+            (300_000_000..420_000_000).contains(&total),
+            "total {total}"
+        );
+    }
+}

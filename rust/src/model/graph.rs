@@ -1,0 +1,208 @@
+//! Matmul op-graph extraction: every matrix multiplication a forward
+//! pass executes, tagged Para (has trained weights — D2S candidates,
+//! mapped into CIM arrays) or NonPara (activation-activation — stays
+//! dense, runs on the MHA unit), exactly the split of paper Fig. 2b.
+
+use super::config::{Arch, ModelConfig};
+
+/// Whether a matmul has trained weights.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpKind {
+    /// Parameterized: weight matrix is stationary in CIM arrays.
+    Para,
+    /// Non-parameterized: activation x activation (attention scores /
+    /// attention-weighted values).
+    NonPara,
+}
+
+/// Position of an op inside the network (for scheduling dependencies).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    Encoder,
+    Decoder,
+}
+
+/// One matmul in the forward pass: `out = X (rows x cols_in) @ W^T`,
+/// i.e. the weight is `rows_out x cols_in`; activations have `seq` rows.
+#[derive(Clone, Debug)]
+pub struct MatmulOp {
+    /// Human-readable name, e.g. `enc3.wq`.
+    pub name: String,
+    pub stage: Stage,
+    pub layer: usize,
+    pub kind: OpKind,
+    /// Weight rows (output features) for Para; left-operand rows for NonPara.
+    pub rows: usize,
+    /// Weight cols (input features) for Para; contraction dim for NonPara.
+    pub cols: usize,
+    /// Batch dimension: number of activation rows driven through the op
+    /// (sequence length, or seq*heads for per-head NonPara ops).
+    pub batch: usize,
+}
+
+impl MatmulOp {
+    /// Multiply-add FLOPs (x2 for mul+add).
+    pub fn flops(&self) -> u64 {
+        2 * self.batch as u64 * self.rows as u64 * self.cols as u64
+    }
+
+    /// Weight parameter count (0 for NonPara).
+    pub fn params(&self) -> u64 {
+        match self.kind {
+            OpKind::Para => self.rows as u64 * self.cols as u64,
+            OpKind::NonPara => 0,
+        }
+    }
+}
+
+/// Extract all matmuls of one full-sequence forward pass.
+pub fn build_graph(cfg: &ModelConfig) -> Vec<MatmulOp> {
+    let mut ops = Vec::new();
+    let d = cfg.d_model;
+    let s = cfg.seq;
+    let h = cfg.n_heads;
+    let dh = cfg.d_head();
+
+    let push_attention =
+        |ops: &mut Vec<MatmulOp>, stage: Stage, layer: usize, tag: &str, kv_len: usize| {
+            for w in ["wq", "wk", "wv"] {
+                ops.push(MatmulOp {
+                    name: format!("{tag}{layer}.{w}"),
+                    stage,
+                    layer,
+                    kind: OpKind::Para,
+                    rows: d,
+                    cols: d,
+                    batch: s,
+                });
+            }
+            // scores: per head (s x dh) @ (dh x kv_len)
+            ops.push(MatmulOp {
+                name: format!("{tag}{layer}.qk"),
+                stage,
+                layer,
+                kind: OpKind::NonPara,
+                rows: s,
+                cols: dh,
+                batch: h * kv_len,
+            });
+            // context: per head (s x kv_len) @ (kv_len x dh)
+            ops.push(MatmulOp {
+                name: format!("{tag}{layer}.av"),
+                stage,
+                layer,
+                kind: OpKind::NonPara,
+                rows: s,
+                cols: kv_len,
+                batch: h * dh,
+            });
+            ops.push(MatmulOp {
+                name: format!("{tag}{layer}.wo"),
+                stage,
+                layer,
+                kind: OpKind::Para,
+                rows: d,
+                cols: d,
+                batch: s,
+            });
+        };
+
+    let push_ffn = |ops: &mut Vec<MatmulOp>, stage: Stage, layer: usize, tag: &str| {
+        ops.push(MatmulOp {
+            name: format!("{tag}{layer}.ffn1"),
+            stage,
+            layer,
+            kind: OpKind::Para,
+            rows: cfg.d_ff,
+            cols: d,
+            batch: s,
+        });
+        ops.push(MatmulOp {
+            name: format!("{tag}{layer}.ffn2"),
+            stage,
+            layer,
+            kind: OpKind::Para,
+            rows: d,
+            cols: cfg.d_ff,
+            batch: s,
+        });
+    };
+
+    for l in 0..cfg.enc_layers {
+        push_attention(&mut ops, Stage::Encoder, l, "enc", s);
+        push_ffn(&mut ops, Stage::Encoder, l, "enc");
+    }
+    for l in 0..cfg.dec_layers {
+        push_attention(&mut ops, Stage::Decoder, l, "dec", s);
+        if cfg.arch == Arch::EncoderDecoder {
+            // cross-attention over encoder outputs
+            push_attention(&mut ops, Stage::Decoder, l, "xdec", s);
+        }
+        push_ffn(&mut ops, Stage::Decoder, l, "dec");
+    }
+    ops
+}
+
+/// Only the parameterized ops (the CIM-mapped weight set).
+pub fn para_ops(cfg: &ModelConfig) -> Vec<MatmulOp> {
+    build_graph(cfg)
+        .into_iter()
+        .filter(|o| o.kind == OpKind::Para)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bert_counts() {
+        let cfg = ModelConfig::bert_large();
+        let ops = build_graph(&cfg);
+        // per layer: 4 para attention + 2 para ffn + 2 nonpara
+        assert_eq!(ops.len(), 24 * 8);
+        let para = ops.iter().filter(|o| o.kind == OpKind::Para).count();
+        assert_eq!(para, 24 * 6);
+    }
+
+    #[test]
+    fn bart_has_cross_attention() {
+        let cfg = ModelConfig::bart_large();
+        let ops = build_graph(&cfg);
+        // enc: 12*8; dec: 12*(6 self + 6 cross + 2 ffn... self=4p+2n, cross=4p+2n, ffn=2p)
+        assert_eq!(ops.len(), 12 * 8 + 12 * 14);
+        assert!(ops.iter().any(|o| o.name.starts_with("xdec")));
+    }
+
+    #[test]
+    fn para_params_match_closed_form() {
+        let cfg = ModelConfig::bert_large();
+        let total: u64 = para_ops(&cfg).iter().map(|o| o.params()).sum();
+        // per layer 4 d^2 + 2 * d * d_ff
+        let want = 24 * (4 * 1024u64 * 1024 + 2 * 1024 * 4096);
+        assert_eq!(total, want);
+    }
+
+    #[test]
+    fn nonpara_flops_match_closed_form() {
+        let cfg = ModelConfig::bert_large();
+        let nonpara: u64 = build_graph(&cfg)
+            .iter()
+            .filter(|o| o.kind == OpKind::NonPara)
+            .map(|o| o.flops())
+            .sum();
+        // per layer 4 * s^2 * d
+        let want = 24 * 4 * 512u64 * 512 * 1024;
+        assert_eq!(nonpara, want);
+    }
+
+    #[test]
+    fn names_unique() {
+        let cfg = ModelConfig::bart_large();
+        let ops = build_graph(&cfg);
+        let mut names: Vec<&str> = ops.iter().map(|o| o.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), ops.len());
+    }
+}

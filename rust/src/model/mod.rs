@@ -1,0 +1,11 @@
+//! Transformer model descriptions: benchmark configurations (§IV), the
+//! matmul op-graph with the paper's Para/NonPara split, and Fig. 2b
+//! params/FLOPs accounting.
+
+pub mod config;
+pub mod flops;
+pub mod graph;
+
+pub use config::{Arch, ModelConfig};
+pub use flops::{count_report, CountReport};
+pub use graph::{build_graph, para_ops, MatmulOp, OpKind, Stage};

@@ -1,0 +1,186 @@
+//! Block-diagonal matrix storage and multiply — the `L` and `R` factors
+//! of a Monarch matrix, and the unit the CIM mapping strategies place
+//! onto crossbar arrays.
+
+use crate::tensor::Matrix;
+use crate::util::rng::Pcg32;
+
+/// `nblocks` dense `b x b` blocks on the diagonal of an
+/// `(nblocks*b) x (nblocks*b)` logical matrix. Block `k` is stored
+/// row-major at `data[k * b * b ..]` — the same `(nb, b, b)` layout as
+/// `python/compile/kernels/ref.py`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BlockDiag {
+    pub b: usize,
+    pub nblocks: usize,
+    pub data: Vec<f32>,
+}
+
+impl BlockDiag {
+    pub fn zeros(nblocks: usize, b: usize) -> Self {
+        Self {
+            b,
+            nblocks,
+            data: vec![0.0; nblocks * b * b],
+        }
+    }
+
+    pub fn randn(nblocks: usize, b: usize, rng: &mut Pcg32) -> Self {
+        Self {
+            b,
+            nblocks,
+            data: rng.normal_vec(nblocks * b * b),
+        }
+    }
+
+    /// Logical dimension `nblocks * b`.
+    pub fn n(&self) -> usize {
+        self.nblocks * self.b
+    }
+
+    /// Number of stored (non-structurally-zero) parameters.
+    pub fn params(&self) -> usize {
+        self.data.len()
+    }
+
+    #[inline]
+    pub fn block(&self, k: usize) -> &[f32] {
+        &self.data[k * self.b * self.b..(k + 1) * self.b * self.b]
+    }
+
+    #[inline]
+    pub fn block_mut(&mut self, k: usize) -> &mut [f32] {
+        let bb = self.b * self.b;
+        &mut self.data[k * bb..(k + 1) * bb]
+    }
+
+    #[inline]
+    pub fn get(&self, k: usize, r: usize, c: usize) -> f32 {
+        self.data[(k * self.b + r) * self.b + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, k: usize, r: usize, c: usize, v: f32) {
+        self.data[(k * self.b + r) * self.b + c] = v;
+    }
+
+    /// Extract block `k` as a Matrix.
+    pub fn block_matrix(&self, k: usize) -> Matrix {
+        Matrix::from_vec(self.b, self.b, self.block(k).to_vec())
+    }
+
+    /// `y = B x` where `x.len() == n()`: block `k` maps segment `k`.
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.n(), "block-diag matvec shape mismatch");
+        let b = self.b;
+        let mut y = vec![0.0f32; x.len()];
+        for k in 0..self.nblocks {
+            let blk = self.block(k);
+            let xs = &x[k * b..(k + 1) * b];
+            let ys = &mut y[k * b..(k + 1) * b];
+            for d in 0..b {
+                let row = &blk[d * b..(d + 1) * b];
+                let mut acc = 0.0f32;
+                for (w, xv) in row.iter().zip(xs) {
+                    acc += w * xv;
+                }
+                ys[d] = acc;
+            }
+        }
+        y
+    }
+
+    /// Batched rows: `Y[r] = B X[r]` for each row of `X` (cols == n()).
+    pub fn matmul_rows(&self, x: &Matrix) -> Matrix {
+        assert_eq!(x.cols, self.n());
+        let mut y = Matrix::zeros(x.rows, x.cols);
+        for r in 0..x.rows {
+            let out = self.matvec(x.row(r));
+            y.row_mut(r).copy_from_slice(&out);
+        }
+        y
+    }
+
+    /// Materialize the dense `n x n` matrix.
+    pub fn to_dense(&self) -> Matrix {
+        let n = self.n();
+        let b = self.b;
+        let mut m = Matrix::zeros(n, n);
+        for k in 0..self.nblocks {
+            for r in 0..b {
+                for c in 0..b {
+                    m[(k * b + r, k * b + c)] = self.get(k, r, c);
+                }
+            }
+        }
+        m
+    }
+
+    /// All-identity blocks.
+    pub fn identity(nblocks: usize, b: usize) -> Self {
+        let mut bd = Self::zeros(nblocks, b);
+        for k in 0..nblocks {
+            for i in 0..b {
+                bd.set(k, i, i, 1.0);
+            }
+        }
+        bd
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn matvec_matches_dense() {
+        forall("blockdiag matvec == dense", 25, |g| {
+            let nb = g.usize(1, 6);
+            let b = g.usize(1, 6);
+            let mut rng = crate::util::rng::Pcg32::new(g.usize(0, 1 << 30) as u64);
+            let bd = BlockDiag::randn(nb, b, &mut rng);
+            let x = rng.normal_vec(bd.n());
+            let want = bd.to_dense().matvec(&x);
+            let got = bd.matvec(&x);
+            for (a, w) in got.iter().zip(&want) {
+                assert!((a - w).abs() < 1e-4);
+            }
+        });
+    }
+
+    #[test]
+    fn identity_is_noop() {
+        let bd = BlockDiag::identity(3, 4);
+        let x: Vec<f32> = (0..12).map(|i| i as f32).collect();
+        assert_eq!(bd.matvec(&x), x);
+    }
+
+    #[test]
+    fn params_counts_stored_entries() {
+        let bd = BlockDiag::zeros(8, 32);
+        assert_eq!(bd.params(), 8 * 32 * 32);
+        assert_eq!(bd.n(), 256);
+    }
+
+    #[test]
+    fn block_roundtrip() {
+        let mut bd = BlockDiag::zeros(2, 2);
+        bd.set(1, 0, 1, 7.0);
+        assert_eq!(bd.get(1, 0, 1), 7.0);
+        assert_eq!(bd.block_matrix(1)[(0, 1)], 7.0);
+        assert_eq!(bd.block(0), &[0.0; 4]);
+    }
+
+    #[test]
+    fn matmul_rows_batches() {
+        let mut rng = crate::util::rng::Pcg32::new(9);
+        let bd = BlockDiag::randn(3, 3, &mut rng);
+        let x = Matrix::randn(4, 9, &mut rng);
+        let y = bd.matmul_rows(&x);
+        for r in 0..4 {
+            let single = bd.matvec(x.row(r));
+            assert_eq!(y.row(r), single.as_slice());
+        }
+    }
+}

@@ -1,0 +1,151 @@
+//! Permutation folding (paper §III-B3): rewrite `M = P L P R P` as
+//! `M = (P L P) · P · (P R P)`, embedding the outer permutations into the
+//! factor structure so execution needs **one** explicit permutation step
+//! instead of three.
+//!
+//! The conjugated factors are *strided* block-diagonals:
+//!
+//! * `S_R = P R P` has `S_R[a*b + k, c*b + k] = R^(k)[a, c]` — block `k`
+//!   lives on rows/cols congruent to `k (mod b)`.
+//! * `S_L = P L P` has `S_L[d*b + a, k*b + a] = L^(a)[d, k]` — block `a`
+//!   lives on rows/cols congruent to `a (mod b)`.
+//!
+//! Each strided block is still a dense `b x b` unit occupying disjoint
+//! rows/columns, so the CIM mapping strategies place folded factors
+//! exactly like plain block-diagonals; only the scheduler's address
+//! generation changes (strided row/col activation). On hardware this is
+//! what lets ADC multiplexing walk bitlines in-order (§III-B3).
+
+use super::block_diag::BlockDiag;
+use super::matrix::MonarchMatrix;
+use super::permutation::StridePerm;
+use crate::tensor::Matrix;
+
+/// A block-diagonal conjugated by the stride permutation: logical blocks
+/// on strided index sets.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StridedBlockDiag {
+    /// Underlying blocks; block `k` acts on indices `{ i : i % b == k }`.
+    pub inner: BlockDiag,
+}
+
+impl StridedBlockDiag {
+    /// `y[r*b + k] = sum_c inner[k][r, c] * x[c*b + k]`.
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        let b = self.inner.b;
+        assert_eq!(x.len(), self.inner.n(), "strided matvec shape mismatch");
+        let mut y = vec![0.0f32; x.len()];
+        for k in 0..self.inner.nblocks {
+            let blk = self.inner.block(k);
+            for r in 0..b {
+                let row = &blk[r * b..(r + 1) * b];
+                let mut acc = 0.0f32;
+                for (c, w) in row.iter().enumerate() {
+                    acc += w * x[c * b + k];
+                }
+                y[r * b + k] = acc;
+            }
+        }
+        y
+    }
+
+    /// Dense materialization (tests / mapping diagnostics).
+    pub fn to_dense(&self) -> Matrix {
+        let p = StridePerm::new(self.inner.b).to_matrix();
+        p.matmul(&self.inner.to_dense()).matmul(&p)
+    }
+}
+
+/// Folded Monarch operator: `M = S_L · P · S_R` with one explicit
+/// permutation (vs three in the unfolded form).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FoldedMonarch {
+    pub sl: StridedBlockDiag,
+    pub sr: StridedBlockDiag,
+}
+
+/// Number of explicit permutation passes in each execution form —
+/// the quantity §III-B3 reduces from 3 to 1.
+pub const PERMS_UNFOLDED: usize = 3;
+pub const PERMS_FOLDED: usize = 1;
+
+impl FoldedMonarch {
+    pub fn from_monarch(m: &MonarchMatrix) -> Self {
+        Self {
+            sl: StridedBlockDiag { inner: m.l.clone() },
+            sr: StridedBlockDiag { inner: m.r.clone() },
+        }
+    }
+
+    pub fn b(&self) -> usize {
+        self.sl.inner.b
+    }
+
+    /// Apply with a single explicit permutation step.
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        let p = StridePerm::new(self.b());
+        let t = self.sr.matvec(x);
+        let t = p.apply(&t);
+        self.sl.matvec(&t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn folded_equals_unfolded() {
+        forall("folded matvec == monarch matvec", 15, |g| {
+            let b = g.usize(2, 8);
+            let mut rng = Pcg32::new(g.usize(0, 1 << 30) as u64);
+            let m = MonarchMatrix::randn(b, &mut rng);
+            let f = FoldedMonarch::from_monarch(&m);
+            let x = rng.normal_vec(m.n());
+            let want = m.matvec(&x);
+            let got = f.matvec(&x);
+            for (a, w) in got.iter().zip(&want) {
+                assert!((a - w).abs() < 1e-3 * (1.0 + w.abs()), "{a} vs {w}");
+            }
+        });
+    }
+
+    #[test]
+    fn strided_dense_structure() {
+        // S_R[a*b + k, c*b + k] = R[k][a, c]; all other entries zero.
+        let mut rng = Pcg32::new(5);
+        let b = 3;
+        let r = BlockDiag::randn(b, b, &mut rng);
+        let s = StridedBlockDiag { inner: r.clone() };
+        let dense = s.to_dense();
+        for i in 0..9 {
+            for j in 0..9 {
+                let (a, k) = (i / b, i % b);
+                let (c, k2) = (j / b, j % b);
+                let want = if k == k2 { r.get(k, a, c) } else { 0.0 };
+                assert!((dense[(i, j)] - want).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn strided_matvec_matches_dense() {
+        let mut rng = Pcg32::new(6);
+        let s = StridedBlockDiag {
+            inner: BlockDiag::randn(4, 4, &mut rng),
+        };
+        let x = rng.normal_vec(16);
+        let want = s.to_dense().matvec(&x);
+        let got = s.matvec(&x);
+        for (a, w) in got.iter().zip(&want) {
+            assert!((a - w).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn permutation_count_reduction() {
+        assert_eq!(PERMS_UNFOLDED - PERMS_FOLDED, 2);
+    }
+}

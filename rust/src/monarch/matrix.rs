@@ -1,0 +1,168 @@
+//! The Monarch matrix `M = P L P R P` (paper Eq. 1) and its operations.
+
+use super::block_diag::BlockDiag;
+use super::permutation::StridePerm;
+use crate::tensor::Matrix;
+use crate::util::rng::Pcg32;
+
+/// A square Monarch matrix of dimension `n = b^2` with block size `b`.
+///
+/// Layout convention matches `python/compile/kernels/ref.py`:
+/// `y[(d,a)] = sum_k L[a][d,k] * sum_c R[k][a,c] * x[(c,k)]`, i.e.
+/// `M[(d,a),(c,k)] = L[a][d,k] * R[k][a,c]` (the rank-1 slice identity).
+#[derive(Clone, Debug, PartialEq)]
+pub struct MonarchMatrix {
+    pub l: BlockDiag,
+    pub r: BlockDiag,
+}
+
+impl MonarchMatrix {
+    pub fn new(l: BlockDiag, r: BlockDiag) -> Self {
+        assert_eq!(l.b, r.b, "L/R block size mismatch");
+        assert_eq!(l.nblocks, l.b, "Monarch requires nblocks == b");
+        assert_eq!(r.nblocks, r.b, "Monarch requires nblocks == b");
+        Self { l, r }
+    }
+
+    pub fn randn(b: usize, rng: &mut Pcg32) -> Self {
+        Self::new(BlockDiag::randn(b, b, rng), BlockDiag::randn(b, b, rng))
+    }
+
+    pub fn identity(b: usize) -> Self {
+        Self::new(BlockDiag::identity(b, b), BlockDiag::identity(b, b))
+    }
+
+    pub fn b(&self) -> usize {
+        self.l.b
+    }
+
+    pub fn n(&self) -> usize {
+        self.l.n()
+    }
+
+    /// Stored parameter count: `2 b^3 = 2 n sqrt(n)`.
+    pub fn params(&self) -> usize {
+        self.l.params() + self.r.params()
+    }
+
+    /// Multiply-accumulate FLOPs for one MVM: `2 * 2 * n * b`.
+    pub fn mvm_flops(&self) -> usize {
+        4 * self.n() * self.b()
+    }
+
+    /// `y = M x` via the factored form (sub-quadratic).
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        let p = StridePerm::new(self.b());
+        let u = p.apply(x);
+        let v = self.r.matvec(&u);
+        let w = p.apply(&v);
+        let z = self.l.matvec(&w);
+        p.apply(&z)
+    }
+
+    /// Batched rows (each row an independent vector).
+    pub fn matmul_rows(&self, x: &Matrix) -> Matrix {
+        let mut y = Matrix::zeros(x.rows, x.cols);
+        for r in 0..x.rows {
+            y.row_mut(r).copy_from_slice(&self.matvec(x.row(r)));
+        }
+        y
+    }
+
+    /// Materialize dense `M` via the slice identity
+    /// `M[(d,a),(c,k)] = L[a][d,k] * R[k][a,c]`.
+    pub fn to_dense(&self) -> Matrix {
+        let b = self.b();
+        let n = self.n();
+        let mut m = Matrix::zeros(n, n);
+        for a in 0..b {
+            for k in 0..b {
+                for d in 0..b {
+                    let lv = self.l.get(a, d, k);
+                    if lv == 0.0 {
+                        continue;
+                    }
+                    let row = d * b + a;
+                    for c in 0..b {
+                        m[(row, c * b + k)] = lv * self.r.get(k, a, c);
+                    }
+                }
+            }
+        }
+        m
+    }
+
+    /// Dense materialization through the factored product
+    /// `P Ld P Rd P` — O(n^3), used only to cross-check `to_dense`.
+    pub fn to_dense_via_product(&self) -> Matrix {
+        let p = StridePerm::new(self.b()).to_matrix();
+        let ld = self.l.to_dense();
+        let rd = self.r.to_dense();
+        p.matmul(&ld).matmul(&p).matmul(&rd).matmul(&p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn dense_forms_agree() {
+        forall("slice identity == factored product", 10, |g| {
+            let b = g.usize(2, 6);
+            let mut rng = Pcg32::new(g.usize(0, 1 << 30) as u64);
+            let m = MonarchMatrix::randn(b, &mut rng);
+            let a = m.to_dense();
+            let bm = m.to_dense_via_product();
+            assert!(a.rel_error(&bm) < 1e-4, "err {}", a.rel_error(&bm));
+        });
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        forall("monarch matvec == dense @ x", 15, |g| {
+            let b = g.usize(2, 8);
+            let mut rng = Pcg32::new(g.usize(0, 1 << 30) as u64);
+            let m = MonarchMatrix::randn(b, &mut rng);
+            let x = rng.normal_vec(m.n());
+            let want = m.to_dense().matvec(&x);
+            let got = m.matvec(&x);
+            for (a, w) in got.iter().zip(&want) {
+                assert!((a - w).abs() < 1e-3 * (1.0 + w.abs()));
+            }
+        });
+    }
+
+    #[test]
+    fn identity_monarch_is_permutation_product() {
+        // L = R = I gives M = P I P I P = P (involution twice) = P
+        let m = MonarchMatrix::identity(3);
+        let p = StridePerm::new(3).to_matrix();
+        assert!(m.to_dense().rel_error(&p) < 1e-6);
+    }
+
+    #[test]
+    fn params_subquadratic() {
+        let mut rng = Pcg32::new(3);
+        let m = MonarchMatrix::randn(32, &mut rng); // n = 1024
+        assert_eq!(m.params(), 2 * 32 * 32 * 32);
+        assert_eq!(m.n() * m.n() / m.params(), 16); // 16x fewer than dense
+        assert_eq!(m.mvm_flops(), 4 * 1024 * 32);
+    }
+
+    #[test]
+    fn linearity() {
+        let mut rng = Pcg32::new(4);
+        let m = MonarchMatrix::randn(4, &mut rng);
+        let x = rng.normal_vec(16);
+        let y = rng.normal_vec(16);
+        let xy: Vec<f32> = x.iter().zip(&y).map(|(a, b)| 2.0 * a - b).collect();
+        let fx = m.matvec(&x);
+        let fy = m.matvec(&y);
+        let fxy = m.matvec(&xy);
+        for i in 0..16 {
+            assert!((fxy[i] - (2.0 * fx[i] - fy[i])).abs() < 1e-3);
+        }
+    }
+}

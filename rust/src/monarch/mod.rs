@@ -1,0 +1,23 @@
+//! Monarch structured-sparse matrices (paper §II-C, §III-A):
+//! block-diagonal factors, the fixed stride permutation, the Frobenius
+//! projection (D2S), permutation folding, and rectangular tiling.
+//!
+//! Index conventions are defined once in `python/compile/kernels/ref.py`
+//! and mirrored here; cross-language parity is enforced by the
+//! integration tests that run the Rust factors through the AOT-compiled
+//! JAX kernels (see `rust/tests/integration_runtime.rs`).
+
+pub mod block_diag;
+pub mod fold;
+pub mod matrix;
+pub mod order_p;
+pub mod permutation;
+pub mod project;
+pub mod rect;
+
+pub use block_diag::BlockDiag;
+pub use fold::{FoldedMonarch, StridedBlockDiag};
+pub use matrix::MonarchMatrix;
+pub use permutation::StridePerm;
+pub use project::{monarch_project, project_with_report};
+pub use rect::RectMonarch;

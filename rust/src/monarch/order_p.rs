@@ -1,0 +1,176 @@
+//! Order-p Monarch matrices (paper §II-C): the general class
+//! `M = (Π_{i=1..p} P_i B_i) P_0` with alternating stride permutations
+//! `P_i` and block-diagonal factors `B_i` [20]. The paper (like prior
+//! work) evaluates p = 2; this module implements the general form so the
+//! framework's mapping/scheduling can be extended to deeper
+//! factorizations (each extra factor multiplies another `O(n b)` stage
+//! at `O(p n^((p+1)/p))` total complexity).
+//!
+//! Convention: with `p = 2` and both permutations the `b x b` stride
+//! permutation, `OrderP` coincides exactly with [`MonarchMatrix`]
+//! (`M = P L P R P`), which the tests pin down.
+
+use super::block_diag::BlockDiag;
+use super::matrix::MonarchMatrix;
+use super::permutation::StridePerm;
+use crate::tensor::Matrix;
+use crate::util::rng::Pcg32;
+
+/// General order-p Monarch operator over `n = b^2` (all factors share
+/// one block size; the stride permutation is the fixed `P`).
+#[derive(Clone, Debug)]
+pub struct OrderP {
+    /// Factors applied right-to-left: `factors[0]` is the innermost
+    /// (first after `P_0`); for p = 2 this is `[R, L]`.
+    pub factors: Vec<BlockDiag>,
+}
+
+impl OrderP {
+    pub fn new(factors: Vec<BlockDiag>) -> Self {
+        assert!(!factors.is_empty(), "order-p needs at least one factor");
+        let b = factors[0].b;
+        for f in &factors {
+            assert_eq!(f.b, b, "all factors share the block size");
+            assert_eq!(f.nblocks, b, "Monarch factors have b blocks");
+        }
+        Self { factors }
+    }
+
+    pub fn randn(p: usize, b: usize, rng: &mut Pcg32) -> Self {
+        Self::new((0..p).map(|_| BlockDiag::randn(b, b, rng)).collect())
+    }
+
+    pub fn from_monarch(m: &MonarchMatrix) -> Self {
+        Self::new(vec![m.r.clone(), m.l.clone()])
+    }
+
+    pub fn p(&self) -> usize {
+        self.factors.len()
+    }
+
+    pub fn b(&self) -> usize {
+        self.factors[0].b
+    }
+
+    pub fn n(&self) -> usize {
+        self.factors[0].n()
+    }
+
+    /// Stored parameters: `p * b^3`.
+    pub fn params(&self) -> usize {
+        self.factors.iter().map(|f| f.params()).sum()
+    }
+
+    /// MVM FLOPs: `p * 2 n b` (sub-quadratic; §II-C's
+    /// `O(p n^((p+1)/p))` at p = 2).
+    pub fn mvm_flops(&self) -> usize {
+        self.p() * 2 * self.n() * self.b()
+    }
+
+    /// `y = (Π_i P B_i) P x`.
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        let perm = StridePerm::new(self.b());
+        let mut v = perm.apply(x); // P_0
+        for f in &self.factors {
+            v = f.matvec(&v);
+            v = perm.apply(&v); // P_i
+        }
+        v
+    }
+
+    /// Dense materialization through the factored product.
+    pub fn to_dense(&self) -> Matrix {
+        let n = self.n();
+        let mut out = Matrix::zeros(n, n);
+        let mut e = vec![0.0f32; n];
+        for col in 0..n {
+            e[col] = 1.0;
+            let y = self.matvec(&e);
+            for (row, &v) in y.iter().enumerate() {
+                out[(row, col)] = v;
+            }
+            e[col] = 0.0;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn p2_coincides_with_monarch() {
+        forall("order-2 == MonarchMatrix", 15, |g| {
+            let b = g.usize(2, 8);
+            let mut rng = Pcg32::new(g.usize(0, 1 << 30) as u64);
+            let m = MonarchMatrix::randn(b, &mut rng);
+            let op = OrderP::from_monarch(&m);
+            let x = rng.normal_vec(m.n());
+            let want = m.matvec(&x);
+            let got = op.matvec(&x);
+            for (a, w) in got.iter().zip(&want) {
+                assert!((a - w).abs() < 2e-3 * (1.0 + w.abs()));
+            }
+        });
+    }
+
+    #[test]
+    fn p1_is_permuted_block_diagonal() {
+        let mut rng = Pcg32::new(1);
+        let b = 4;
+        let bd = BlockDiag::randn(b, b, &mut rng);
+        let op = OrderP::new(vec![bd.clone()]);
+        let x = rng.normal_vec(16);
+        let p = StridePerm::new(b);
+        let want = p.apply(&bd.matvec(&p.apply(&x)));
+        assert_eq!(op.matvec(&x), want);
+    }
+
+    #[test]
+    fn higher_order_still_linear_operator() {
+        let mut rng = Pcg32::new(2);
+        let op = OrderP::randn(3, 4, &mut rng);
+        let x = rng.normal_vec(16);
+        let y = rng.normal_vec(16);
+        let fx = op.matvec(&x);
+        let fy = op.matvec(&y);
+        let mix: Vec<f32> = x.iter().zip(&y).map(|(a, b)| 3.0 * a - b).collect();
+        let fmix = op.matvec(&mix);
+        for i in 0..16 {
+            assert!((fmix[i] - (3.0 * fx[i] - fy[i])).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn params_and_flops_scale_with_p() {
+        let mut rng = Pcg32::new(3);
+        for p in 1..=4 {
+            let op = OrderP::randn(p, 8, &mut rng);
+            assert_eq!(op.params(), p * 8 * 8 * 8);
+            assert_eq!(op.mvm_flops(), p * 2 * 64 * 8);
+        }
+    }
+
+    #[test]
+    fn dense_materialization_matches_matvec() {
+        let mut rng = Pcg32::new(4);
+        let op = OrderP::randn(3, 3, &mut rng);
+        let dense = op.to_dense();
+        let x = rng.normal_vec(9);
+        let want = dense.matvec(&x);
+        let got = op.matvec(&x);
+        for (a, w) in got.iter().zip(&want) {
+            assert!((a - w).abs() < 1e-4 * (1.0 + w.abs()));
+        }
+    }
+
+    #[test]
+    fn deeper_factorization_keeps_subquadratic_params() {
+        // even p = 4 stays far below dense n^2 for realistic b
+        let mut rng = Pcg32::new(5);
+        let op = OrderP::randn(4, 32, &mut rng);
+        assert!(op.params() * 2 < op.n() * op.n());
+    }
+}

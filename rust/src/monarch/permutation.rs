@@ -1,0 +1,117 @@
+//! The fixed Monarch stride permutation `P` (paper Eq. 1).
+//!
+//! For `n = b^2` and flat index `i = i1*b + i2`, `P` maps
+//! `x[i1*b + i2] -> y[i2*b + i1]` — the transpose of the row-major
+//! `(b, b)` view. `P` is an involution (`P^2 = I`), which the folding
+//! rewrite `M = (PLP) . P . (PRP)` relies on.
+
+use crate::tensor::Matrix;
+
+/// Stride permutation over `n = b*b` elements.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StridePerm {
+    pub b: usize,
+}
+
+impl StridePerm {
+    pub fn new(b: usize) -> Self {
+        Self { b }
+    }
+
+    pub fn n(&self) -> usize {
+        self.b * self.b
+    }
+
+    /// Image of a single index.
+    #[inline]
+    pub fn map(&self, i: usize) -> usize {
+        let (i1, i2) = (i / self.b, i % self.b);
+        i2 * self.b + i1
+    }
+
+    /// Apply to a vector: `out[map(i)] = x[i]`.
+    pub fn apply(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.n(), "perm length mismatch");
+        let mut out = vec![0.0f32; x.len()];
+        for (i, &v) in x.iter().enumerate() {
+            out[self.map(i)] = v;
+        }
+        out
+    }
+
+    /// Apply to each row of a matrix (batched vectors).
+    pub fn apply_rows(&self, x: &Matrix) -> Matrix {
+        let mut out = Matrix::zeros(x.rows, x.cols);
+        for r in 0..x.rows {
+            let src = x.row(r);
+            let dst = out.row_mut(r);
+            for (i, &v) in src.iter().enumerate() {
+                dst[self.map(i)] = v;
+            }
+        }
+        out
+    }
+
+    /// Materialize the dense permutation matrix (`P[map(i), i] = 1`),
+    /// so that `P @ x == apply(x)`.
+    pub fn to_matrix(&self) -> Matrix {
+        let n = self.n();
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m[(self.map(i), i)] = 1.0;
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn involution() {
+        let p = StridePerm::new(5);
+        for i in 0..p.n() {
+            assert_eq!(p.map(p.map(i)), i);
+        }
+    }
+
+    #[test]
+    fn apply_matches_matrix_form() {
+        forall("perm apply == dense P @ x", 20, |g| {
+            let b = g.usize(1, 8);
+            let p = StridePerm::new(b);
+            let x = g.normal_vec(p.n());
+            let want = p.to_matrix().matvec(&x);
+            let got = p.apply(&x);
+            for (a, w) in got.iter().zip(&want) {
+                assert!((a - w).abs() < 1e-6);
+            }
+        });
+    }
+
+    #[test]
+    fn known_small_case() {
+        // b=2: [x0, x1, x2, x3] -> [x0, x2, x1, x3]
+        let p = StridePerm::new(2);
+        assert_eq!(p.apply(&[0.0, 1.0, 2.0, 3.0]), vec![0.0, 2.0, 1.0, 3.0]);
+    }
+
+    #[test]
+    fn rows_batched_matches_single() {
+        let p = StridePerm::new(3);
+        let x: Vec<f32> = (0..9).map(|i| i as f32).collect();
+        let m = Matrix::from_vec(2, 9, [x.clone(), x.clone()].concat());
+        let pm = p.apply_rows(&m);
+        assert_eq!(pm.row(0), p.apply(&x).as_slice());
+        assert_eq!(pm.row(0), pm.row(1));
+    }
+
+    #[test]
+    fn matrix_is_orthogonal() {
+        let p = StridePerm::new(4).to_matrix();
+        let prod = p.matmul(&p.transpose());
+        assert!(prod.rel_error(&Matrix::eye(16)) < 1e-6);
+    }
+}

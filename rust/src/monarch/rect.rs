@@ -1,0 +1,192 @@
+//! Rectangular parameterized matmuls as tiled Monarch operators.
+//!
+//! The paper factorizes square `n x n` weights; transformer FFN layers are
+//! rectangular (`d -> 4d -> d`). Following §III-B2 ("partitions of a
+//! single large matrix that has been partitioned to match array
+//! dimensions") we partition a `rows x cols` weight into square `n x n`
+//! tiles (zero-padding the remainder) and factorize each tile
+//! independently. `y = W x` becomes a tile-grid of Monarch applies with
+//! row-wise accumulation.
+
+use super::matrix::MonarchMatrix;
+use super::project::monarch_project;
+use crate::tensor::Matrix;
+
+/// A `rows x cols` operator stored as a grid of `n x n` Monarch tiles.
+#[derive(Clone, Debug)]
+pub struct RectMonarch {
+    pub rows: usize,
+    pub cols: usize,
+    /// Tile dimension (`b^2`).
+    pub n: usize,
+    /// Row-major grid: `tiles[tr * tile_cols + tc]`.
+    pub tiles: Vec<MonarchMatrix>,
+}
+
+impl RectMonarch {
+    pub fn tile_rows(&self) -> usize {
+        self.rows.div_ceil(self.n)
+    }
+
+    pub fn tile_cols(&self) -> usize {
+        self.cols.div_ceil(self.n)
+    }
+
+    /// D2S a dense rectangular weight with tile dimension `n` (= b^2).
+    pub fn from_dense(w: &Matrix, n: usize) -> Self {
+        let b = (n as f64).sqrt().round() as usize;
+        assert_eq!(b * b, n, "tile dim must be a perfect square");
+        let tr = w.rows.div_ceil(n);
+        let tc = w.cols.div_ceil(n);
+        let mut tiles = Vec::with_capacity(tr * tc);
+        for i in 0..tr {
+            for j in 0..tc {
+                // zero-padded tile extraction
+                let mut tile = Matrix::zeros(n, n);
+                let rh = n.min(w.rows - i * n);
+                let cw = n.min(w.cols - j * n);
+                for r in 0..rh {
+                    for c in 0..cw {
+                        tile[(r, c)] = w[(i * n + r, j * n + c)];
+                    }
+                }
+                tiles.push(monarch_project(&tile));
+            }
+        }
+        Self {
+            rows: w.rows,
+            cols: w.cols,
+            n,
+            tiles,
+        }
+    }
+
+    /// `y = W x` through the tiled Monarch operators.
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.cols, "rect matvec shape mismatch");
+        let n = self.n;
+        let (tr, tc) = (self.tile_rows(), self.tile_cols());
+        let mut y = vec![0.0f32; self.rows];
+        let mut xseg = vec![0.0f32; n];
+        for j in 0..tc {
+            // zero-padded input segment
+            let cw = n.min(self.cols - j * n);
+            xseg[..cw].copy_from_slice(&x[j * n..j * n + cw]);
+            xseg[cw..].iter_mut().for_each(|v| *v = 0.0);
+            for i in 0..tr {
+                let part = self.tiles[i * tc + j].matvec(&xseg);
+                let rh = n.min(self.rows - i * n);
+                for (yo, pv) in y[i * n..i * n + rh].iter_mut().zip(&part) {
+                    *yo += pv;
+                }
+            }
+        }
+        y
+    }
+
+    /// Dense materialization of the whole tiled operator.
+    pub fn to_dense(&self) -> Matrix {
+        let (tr, tc) = (self.tile_rows(), self.tile_cols());
+        let n = self.n;
+        let mut w = Matrix::zeros(self.rows, self.cols);
+        for i in 0..tr {
+            for j in 0..tc {
+                let tile = self.tiles[i * tc + j].to_dense();
+                let rh = n.min(self.rows - i * n);
+                let cw = n.min(self.cols - j * n);
+                for r in 0..rh {
+                    for c in 0..cw {
+                        w[(i * n + r, j * n + c)] = tile[(r, c)];
+                    }
+                }
+            }
+        }
+        w
+    }
+
+    /// Total stored parameters across tiles.
+    pub fn params(&self) -> usize {
+        self.tiles.iter().map(|t| t.params()).sum()
+    }
+
+    /// Total MVM FLOPs across tiles.
+    pub fn mvm_flops(&self) -> usize {
+        self.tiles.iter().map(|t| t.mvm_flops()).sum()
+    }
+
+    /// Relative Frobenius error against the original dense weight.
+    pub fn rel_error(&self, w: &Matrix) -> f64 {
+        self.to_dense().rel_error(w)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn square_single_tile_matches_projection() {
+        let mut rng = Pcg32::new(1);
+        let w = Matrix::randn(16, 16, &mut rng);
+        let rect = RectMonarch::from_dense(&w, 16);
+        let direct = monarch_project(&w);
+        assert!(rect.to_dense().rel_error(&direct.to_dense()) < 1e-6);
+    }
+
+    #[test]
+    fn rect_matvec_matches_dense_materialization() {
+        forall("rect matvec == to_dense @ x", 8, |g| {
+            let n = 16; // b = 4
+            let tr = g.usize(1, 3);
+            let tc = g.usize(1, 3);
+            let mut rng = Pcg32::new(g.usize(0, 1 << 30) as u64);
+            let w = Matrix::randn(tr * n, tc * n, &mut rng);
+            let rect = RectMonarch::from_dense(&w, n);
+            let x = rng.normal_vec(tc * n);
+            let want = rect.to_dense().matvec(&x);
+            let got = rect.matvec(&x);
+            for (a, w) in got.iter().zip(&want) {
+                assert!((a - w).abs() < 1e-3 * (1.0 + w.abs()));
+            }
+        });
+    }
+
+    #[test]
+    fn non_multiple_dims_are_padded() {
+        let mut rng = Pcg32::new(2);
+        let w = Matrix::randn(20, 10, &mut rng); // not multiples of 16
+        let rect = RectMonarch::from_dense(&w, 16);
+        assert_eq!(rect.tile_rows(), 2);
+        assert_eq!(rect.tile_cols(), 1);
+        let x = rng.normal_vec(10);
+        let y = rect.matvec(&x);
+        assert_eq!(y.len(), 20);
+    }
+
+    #[test]
+    fn exact_on_blockwise_monarch_input() {
+        // A dense matrix assembled from Monarch tiles round-trips.
+        let mut rng = Pcg32::new(3);
+        let n = 16;
+        let m00 = MonarchMatrix::randn(4, &mut rng);
+        let m01 = MonarchMatrix::randn(4, &mut rng);
+        let mut w = Matrix::zeros(n, 2 * n);
+        w.set_submatrix(0, 0, &m00.to_dense());
+        w.set_submatrix(0, n, &m01.to_dense());
+        let rect = RectMonarch::from_dense(&w, n);
+        assert!(rect.rel_error(&w) < 1e-3);
+    }
+
+    #[test]
+    fn ffn_shape_params_reduction() {
+        // d=64 -> 4d=256: params 4 * (2 * 8^3) vs dense 64*256.
+        let mut rng = Pcg32::new(4);
+        let w = Matrix::randn(256, 64, &mut rng);
+        let rect = RectMonarch::from_dense(&w, 64);
+        assert_eq!(rect.tiles.len(), 4);
+        assert_eq!(rect.params(), 4 * 2 * 8 * 8 * 8);
+        assert!(rect.params() < 256 * 64);
+    }
+}

@@ -1,0 +1,293 @@
+//! Figure/table reproduction: renders each of the paper's evaluation
+//! artifacts (Fig. 2b, Table I, Fig. 6a/b, Fig. 7a/b, Fig. 8a/b, the
+//! §IV-C ADC-resolution claim) as ASCII tables and CSV files under
+//! `reports/`.
+
+use std::path::Path;
+
+use crate::cim::{adc, CimParams};
+use crate::gpu::{gpu_cost, GpuParams};
+use crate::mapping::stats::{fig6_stats, mean_array_reduction, mean_utilization};
+use crate::mapping::Strategy;
+use crate::model::{count_report, ModelConfig};
+use crate::scheduler::timing::cost_report;
+use crate::util::stats::geomean;
+use crate::util::table::{eng_energy_nj, eng_time_ns, ratio, si, Table};
+
+/// Write a table's CSV under `reports/<name>.csv` (best-effort).
+pub fn save_csv(name: &str, t: &Table) {
+    let dir = Path::new("reports");
+    if std::fs::create_dir_all(dir).is_ok() {
+        let _ = std::fs::write(dir.join(format!("{name}.csv")), t.to_csv());
+    }
+}
+
+/// Fig. 2b: parameter and FLOP reduction with the Para/NonPara split.
+pub fn fig2b() -> Table {
+    let mut t = Table::new([
+        "model",
+        "seq",
+        "dense params",
+        "monarch params",
+        "param red. (para)",
+        "param red. (model)",
+        "dense FLOPs",
+        "monarch FLOPs",
+        "FLOPs red.",
+        "para FLOPs share",
+    ]);
+    for cfg in ModelConfig::paper_models() {
+        let r = count_report(&cfg);
+        t.row([
+            r.model.clone(),
+            r.seq.to_string(),
+            si((r.dense_para_params + r.other_params) as f64),
+            si((r.monarch_para_params + r.other_params) as f64),
+            ratio(r.para_param_reduction()),
+            ratio(r.model_param_reduction()),
+            si((r.dense_para_flops + r.nonpara_flops) as f64),
+            si((r.monarch_para_flops + r.nonpara_flops) as f64),
+            ratio(r.flops_reduction()),
+            format!("{:.1}%", 100.0 * r.para_flops_fraction()),
+        ]);
+    }
+    save_csv("fig2b", &t);
+    t
+}
+
+/// Table I: the active CIM configuration.
+pub fn tab1(params: &CimParams) -> Table {
+    let mut t = Table::new(["specification", "latency (ns)", "energy (nJ)"]);
+    t.row([
+        format!("MVM ({0}x{0} PCM)", params.array_dim),
+        format!("{}", params.t_mvm_ns),
+        format!("{}", params.e_mvm_nj),
+    ]);
+    t.row([
+        format!("ADC SAR ({}b)", params.adc_ref_bits),
+        format!("{}", params.t_adc_ref_ns),
+        format!("{}", params.e_adc_ref_nj),
+    ]);
+    t.row([
+        "Communication".to_string(),
+        format!("{}", params.t_comm_ns),
+        format!("{}", params.e_comm_nj),
+    ]);
+    t.row([
+        "LayerNorm".to_string(),
+        format!("{}", params.t_layernorm_ns),
+        format!("{}", params.e_layernorm_nj),
+    ]);
+    t.row([
+        "ReLU / GeLU / Add".to_string(),
+        format!(
+            "{} / {} / {}",
+            params.t_relu_ns, params.t_gelu_ns, params.t_add_ns
+        ),
+        format!(
+            "{} / {} / {}",
+            params.e_relu_nj, params.e_gelu_nj, params.e_add_nj
+        ),
+    ]);
+    save_csv("tab1", &t);
+    t
+}
+
+/// Fig. 6: CIM array counts and utilization per model and strategy.
+pub fn fig6(params: &CimParams) -> Table {
+    let stats = fig6_stats(params);
+    let mut t = Table::new(["model", "strategy", "arrays", "utilization", "weight MiB"]);
+    for s in &stats {
+        t.row([
+            s.model.clone(),
+            s.strategy.name().to_string(),
+            s.arrays.to_string(),
+            format!("{:.1}%", 100.0 * s.utilization),
+            format!("{:.1}", s.memory_mib),
+        ]);
+    }
+    t.row([
+        "MEAN".into(),
+        "SparseMap vs Linear".into(),
+        format!(
+            "-{:.0}%",
+            100.0 * mean_array_reduction(&stats, Strategy::SparseMap, Strategy::Linear)
+        ),
+        format!(
+            "{:.1}%",
+            100.0 * mean_utilization(&stats, Strategy::SparseMap)
+        ),
+        String::new(),
+    ]);
+    t.row([
+        "MEAN".into(),
+        "DenseMap vs Linear".into(),
+        format!(
+            "-{:.0}%",
+            100.0 * mean_array_reduction(&stats, Strategy::DenseMap, Strategy::Linear)
+        ),
+        format!(
+            "{:.1}%",
+            100.0 * mean_utilization(&stats, Strategy::DenseMap)
+        ),
+        String::new(),
+    ]);
+    save_csv("fig6", &t);
+    t
+}
+
+/// Fig. 7: latency and energy across configurations (incl. GPU bar).
+pub fn fig7(params: &CimParams, gpu: &GpuParams) -> Table {
+    let mut t = Table::new([
+        "model",
+        "config",
+        "latency",
+        "energy",
+        "speedup vs Linear",
+        "energy gain vs Linear",
+    ]);
+    let mut sp_lat = Vec::new();
+    let mut de_lat = Vec::new();
+    let mut sp_en = Vec::new();
+    let mut de_en = Vec::new();
+    for cfg in ModelConfig::paper_models() {
+        let g = gpu_cost(&cfg, gpu);
+        let lin = cost_report(&cfg, params, Strategy::Linear);
+        let sp = cost_report(&cfg, params, Strategy::SparseMap);
+        let de = cost_report(&cfg, params, Strategy::DenseMap);
+        t.row([
+            cfg.name.to_string(),
+            "GPU (3090 Ti)".into(),
+            eng_time_ns(g.total_ns),
+            eng_energy_nj(g.total_nj),
+            format!(
+                "{:.2}x slower",
+                g.total_ns / (lin.latency_ms() * 1e6)
+            ),
+            format!(
+                "{:.0}x more",
+                g.total_nj / (lin.energy_mj() * 1e6)
+            ),
+        ]);
+        for r in [&lin, &sp, &de] {
+            t.row([
+                cfg.name.to_string(),
+                r.strategy.name().to_string(),
+                eng_time_ns(r.latency_ms() * 1e6),
+                eng_energy_nj(r.energy_mj() * 1e6),
+                ratio(lin.latency_ms() / r.latency_ms()),
+                ratio(lin.energy_mj() / r.energy_mj()),
+            ]);
+        }
+        sp_lat.push(lin.latency_ms() / sp.latency_ms());
+        de_lat.push(lin.latency_ms() / de.latency_ms());
+        sp_en.push(lin.energy_mj() / sp.energy_mj());
+        de_en.push(lin.energy_mj() / de.energy_mj());
+    }
+    t.row([
+        "GEOMEAN".into(),
+        "SparseMap".into(),
+        String::new(),
+        String::new(),
+        ratio(geomean(&sp_lat)),
+        ratio(geomean(&sp_en)),
+    ]);
+    t.row([
+        "GEOMEAN".into(),
+        "DenseMap".into(),
+        String::new(),
+        String::new(),
+        ratio(geomean(&de_lat)),
+        ratio(geomean(&de_en)),
+    ]);
+    save_csv("fig7", &t);
+    t
+}
+
+/// Fig. 8: BERT latency/energy across ADC-sharing degrees.
+pub fn fig8(adc_counts: &[usize]) -> Table {
+    let cfg = ModelConfig::bert_large();
+    let mut t = Table::new([
+        "ADCs/array",
+        "Linear lat",
+        "SparseMap lat",
+        "DenseMap lat",
+        "Linear en",
+        "SparseMap en",
+        "DenseMap en",
+        "best",
+    ]);
+    for &adcs in adc_counts {
+        let p = CimParams::default().with_adcs_per_array(adcs);
+        let lin = cost_report(&cfg, &p, Strategy::Linear);
+        let sp = cost_report(&cfg, &p, Strategy::SparseMap);
+        let de = cost_report(&cfg, &p, Strategy::DenseMap);
+        let best = [
+            ("Linear", lin.latency_ms()),
+            ("SparseMap", sp.latency_ms()),
+            ("DenseMap", de.latency_ms()),
+        ]
+        .into_iter()
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .unwrap()
+        .0;
+        t.row([
+            adcs.to_string(),
+            format!("{:.3} ms", lin.latency_ms()),
+            format!("{:.3} ms", sp.latency_ms()),
+            format!("{:.3} ms", de.latency_ms()),
+            format!("{:.2} mJ", lin.energy_mj()),
+            format!("{:.2} mJ", sp.energy_mj()),
+            format!("{:.2} mJ", de.energy_mj()),
+            best.to_string(),
+        ]);
+    }
+    save_csv("fig8", &t);
+    t
+}
+
+/// §IV-C ADC resolution sweep: latency/energy vs bits (8b -> 3b = 2.67x).
+pub fn adc_resolution(params: &CimParams) -> Table {
+    let mut t = Table::new([
+        "bits",
+        "t/conv (ns)",
+        "e/conv (nJ)",
+        "vs 8b",
+        "area proxy",
+    ]);
+    let t8 = adc::t_conversion_ns(params, 8);
+    for bits in (3..=8).rev() {
+        let c = adc::cost(params, bits);
+        t.row([
+            bits.to_string(),
+            format!("{:.4}", c.t_ns),
+            format!("{:.5}", c.e_nj),
+            ratio(t8 / c.t_ns),
+            format!("{:.0}", adc::area_proxy(bits)),
+        ]);
+    }
+    save_csv("adc_resolution", &t);
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_figures_render() {
+        let p = CimParams::default();
+        assert!(fig2b().render().contains("bert-large"));
+        assert!(tab1(&p).render().contains("MVM"));
+        assert!(fig6(&p).render().contains("DenseMap"));
+        assert!(fig8(&[4, 8]).render().contains("ADCs"));
+        assert!(adc_resolution(&p).render().contains("2.67x"));
+    }
+
+    #[test]
+    fn fig7_includes_gpu_and_geomean() {
+        let r = fig7(&CimParams::default(), &GpuParams::default()).render();
+        assert!(r.contains("GPU (3090 Ti)"));
+        assert!(r.contains("GEOMEAN"));
+    }
+}

@@ -1,0 +1,369 @@
+//! PJRT runtime: loads the AOT-compiled HLO text artifacts produced by
+//! `python/compile/aot.py` and executes them natively — Python is never
+//! on this path.
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`): jax
+//! >= 0.5 serializes protos with 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+//! /opt/xla-example/README.md). Executables are compiled once and cached
+//! per artifact name.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::monarch::{BlockDiag, MonarchMatrix};
+use crate::tensor::Matrix;
+use crate::util::json::Json;
+
+/// Tensor spec of one artifact input/output.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        let shape = j
+            .get("shape")
+            .and_then(|s| s.as_arr())
+            .ok_or_else(|| anyhow!("spec missing shape"))?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = j
+            .get("dtype")
+            .and_then(|d| d.as_str())
+            .ok_or_else(|| anyhow!("spec missing dtype"))?
+            .to_string();
+        Ok(TensorSpec { shape, dtype })
+    }
+}
+
+/// One entry of `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub meta: Json,
+}
+
+/// Parsed artifact manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        let mut artifacts = Vec::new();
+        for a in j
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .ok_or_else(|| anyhow!("manifest missing artifacts[]"))?
+        {
+            artifacts.push(ArtifactSpec {
+                name: a
+                    .get("name")
+                    .and_then(|n| n.as_str())
+                    .ok_or_else(|| anyhow!("artifact missing name"))?
+                    .to_string(),
+                file: a
+                    .get("file")
+                    .and_then(|f| f.as_str())
+                    .ok_or_else(|| anyhow!("artifact missing file"))?
+                    .to_string(),
+                inputs: a
+                    .get("inputs")
+                    .and_then(|i| i.as_arr())
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect::<Result<Vec<_>>>()?,
+                outputs: a
+                    .get("outputs")
+                    .and_then(|o| o.as_arr())
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect::<Result<Vec<_>>>()?,
+                meta: a.get("meta").cloned().unwrap_or(Json::Null),
+            });
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            artifacts,
+        })
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+}
+
+/// Default artifacts directory (repo-relative, overridable via env).
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var("MONARCH_CIM_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+/// PJRT-backed executor with a compile-once executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Cached weight literals for artifacts with a `.weights.bin`
+    /// sidecar (see `python/compile/aot.py`): jax >= 0.5 hoists model
+    /// constants into leading HLO parameters.
+    weights: HashMap<String, Vec<xla::Literal>>,
+}
+
+impl Runtime {
+    /// CPU PJRT client over the given artifacts directory.
+    pub fn new(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: HashMap::new(),
+            weights: HashMap::new(),
+        })
+    }
+
+    pub fn with_default_dir() -> Result<Runtime> {
+        Self::new(&default_artifacts_dir())
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch cached) executable for an artifact.
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        if self.cache.contains_key(name) {
+            return Ok(());
+        }
+        let spec = self
+            .manifest
+            .find(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?;
+        let path = self.manifest.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling '{name}': {e}"))?;
+        self.cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Load (and cache) the weight literals of an artifact with a
+    /// `weights_file` sidecar. The sidecar is flat little-endian f32 in
+    /// manifest input order; weight inputs are the first `n_weights`.
+    fn load_weights(&mut self, name: &str) -> Result<usize> {
+        let spec = self
+            .manifest
+            .find(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?
+            .clone();
+        let Some(file) = spec.meta.get("weights_file").and_then(Json::as_str) else {
+            return Ok(0);
+        };
+        let n_weights = spec
+            .meta
+            .get("n_weights")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("'{name}' has weights_file but no n_weights"))?;
+        if self.weights.contains_key(name) {
+            return Ok(n_weights);
+        }
+        let path = self.manifest.dir.join(file);
+        let bytes = std::fs::read(&path).with_context(|| format!("reading {path:?}"))?;
+        let floats: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let expect: usize = spec.inputs[..n_weights].iter().map(|t| t.elements()).sum();
+        if floats.len() != expect {
+            bail!(
+                "weights sidecar {path:?}: {} floats, manifest expects {expect}",
+                floats.len()
+            );
+        }
+        let mut lits = Vec::with_capacity(n_weights);
+        let mut off = 0usize;
+        for ts in &spec.inputs[..n_weights] {
+            let n = ts.elements();
+            lits.push(literal_f32(&floats[off..off + n], &ts.shape)?);
+            off += n;
+        }
+        self.weights.insert(name.to_string(), lits);
+        Ok(n_weights)
+    }
+
+    /// Validate shapes and execute an artifact; returns flattened output
+    /// literals (AOT lowers with `return_tuple=True`). For artifacts
+    /// with a weights sidecar, `inputs` are only the *dynamic* trailing
+    /// inputs — the cached weight literals are prepended automatically.
+    pub fn execute(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        self.load(name)?;
+        let n_weights = self.load_weights(name)?;
+        let spec = self.manifest.find(name).unwrap().clone();
+        let dynamic = &spec.inputs[n_weights..];
+        if inputs.len() != dynamic.len() {
+            bail!(
+                "artifact '{name}' expects {} dynamic inputs, got {}",
+                dynamic.len(),
+                inputs.len()
+            );
+        }
+        for (i, (lit, ts)) in inputs.iter().zip(dynamic).enumerate() {
+            let count = lit.element_count();
+            if count != ts.elements() {
+                bail!(
+                    "input {i} of '{name}': expected {:?} ({} elems), got {count} elems",
+                    ts.shape,
+                    ts.elements()
+                );
+            }
+        }
+        let result = {
+            let exe = self.cache.get(name).unwrap();
+            if n_weights > 0 {
+                let weights = self.weights.get(name).unwrap();
+                let all: Vec<&xla::Literal> =
+                    weights.iter().chain(inputs.iter()).collect();
+                exe.execute::<&xla::Literal>(&all)
+            } else {
+                exe.execute::<xla::Literal>(inputs)
+            }
+        }
+        .map_err(|e| anyhow!("executing '{name}': {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of '{name}': {e}"))?;
+        let outs = result
+            .to_tuple()
+            .map_err(|e| anyhow!("untupling result of '{name}': {e}"))?;
+        Ok(outs)
+    }
+
+    /// Execute and read back a single f32 output.
+    pub fn execute_f32(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<f32>> {
+        let outs = self.execute(name, inputs)?;
+        let first = outs
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("'{name}' returned no outputs"))?;
+        first
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("reading f32 output of '{name}': {e}"))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Literal conversion helpers
+// ---------------------------------------------------------------------------
+
+/// f32 data + shape -> Literal.
+pub fn literal_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    if n != data.len() {
+        bail!("literal shape {shape:?} != data len {}", data.len());
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims)
+        .map_err(|e| anyhow!("reshape literal: {e}"))
+}
+
+/// i32 data + shape -> Literal (token ids).
+pub fn literal_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    if n != data.len() {
+        bail!("literal shape {shape:?} != data len {}", data.len());
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims)
+        .map_err(|e| anyhow!("reshape literal: {e}"))
+}
+
+/// Row-major Matrix -> 2-D Literal.
+pub fn literal_from_matrix(m: &Matrix) -> Result<xla::Literal> {
+    literal_f32(&m.data, &[m.rows, m.cols])
+}
+
+/// BlockDiag factor -> (nb, b, b) Literal, the layout the L1 kernels use.
+pub fn literal_from_blockdiag(bd: &BlockDiag) -> Result<xla::Literal> {
+    literal_f32(&bd.data, &[bd.nblocks, bd.b, bd.b])
+}
+
+/// Monarch factors -> (L, R) literals.
+pub fn literals_from_monarch(m: &MonarchMatrix) -> Result<(xla::Literal, xla::Literal)> {
+    Ok((
+        literal_from_blockdiag(&m.l)?,
+        literal_from_blockdiag(&m.r)?,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_shape_validation() {
+        assert!(literal_f32(&[1.0, 2.0], &[3]).is_err());
+        let l = literal_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(l.element_count(), 4);
+    }
+
+    #[test]
+    fn manifest_parsing_minimal() {
+        let dir = std::env::temp_dir().join("monarch_cim_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"version": 1, "artifacts": [
+                {"name": "x", "file": "x.hlo.txt",
+                 "inputs": [{"shape": [2, 3], "dtype": "float32"}],
+                 "outputs": [{"shape": [2, 3], "dtype": "float32"}],
+                 "meta": {"kind": "test"}}
+            ]}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        let a = m.find("x").unwrap();
+        assert_eq!(a.inputs[0].shape, vec![2, 3]);
+        assert_eq!(a.inputs[0].elements(), 6);
+        assert!(m.find("nope").is_none());
+    }
+
+    #[test]
+    fn manifest_missing_dir_errors() {
+        let err = Manifest::load(Path::new("/definitely/not/here")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

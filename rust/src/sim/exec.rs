@@ -1,0 +1,306 @@
+//! Functional execution of mapped Monarch operators on emulated
+//! crossbars — the correctness half of the simulator.
+//!
+//! This module demonstrates, numerically, that the mapping strategies and
+//! the scheduler's row-activation/rotation handling compute the *right
+//! answer*: programming the factor blocks at their placement coordinates,
+//! driving only the scheduled rows, de-rotating lane outputs by the
+//! diagonal index, and applying the stride permutation between stages
+//! reproduces `MonarchMatrix::matvec` exactly. It also exhibits the
+//! §III-C failure mode: activating all rows of a DenseMap array mixes
+//! lanes and corrupts the result.
+
+use crate::cim::crossbar::Crossbar;
+use crate::cim::CimParams;
+use crate::mapping::rotation::rotate_blocks_left;
+use crate::mapping::{map_ops, Factor, ModelMapping};
+use crate::mapping::Strategy;
+use crate::model::{MatmulOp, ModelConfig, OpKind, Stage};
+use crate::monarch::{MonarchMatrix, StridePerm};
+
+/// A programmed chip: one crossbar per allocated array.
+pub struct FunctionalChip {
+    pub m: usize,
+    pub b: usize,
+    pub crossbars: Vec<Crossbar>,
+    pub mapping: ModelMapping,
+}
+
+/// Build a single-op model config/op-list for a d x d Monarch weight.
+pub fn single_op(d: usize) -> (ModelConfig, Vec<MatmulOp>) {
+    let mut cfg = ModelConfig::tiny();
+    cfg.d_model = d;
+    let op = MatmulOp {
+        name: "dec0.wq".to_string(),
+        stage: Stage::Decoder,
+        layer: 0,
+        kind: OpKind::Para,
+        rows: d,
+        cols: d,
+        batch: 1,
+    };
+    (cfg, vec![op])
+}
+
+impl FunctionalChip {
+    /// Program the factors of `ops[i] -> monarchs[i]` according to the
+    /// mapping's placements.
+    pub fn program(
+        cfg: &ModelConfig,
+        ops: &[MatmulOp],
+        monarchs: &[MonarchMatrix],
+        params: &CimParams,
+        strategy: Strategy,
+    ) -> FunctionalChip {
+        assert!(matches!(strategy, Strategy::SparseMap | Strategy::DenseMap));
+        let mapping = map_ops(cfg, ops, params, strategy);
+        let m = params.array_dim;
+        let b = cfg.monarch_b();
+        let mut crossbars: Vec<Crossbar> =
+            (0..mapping.arrays).map(|_| Crossbar::new(m)).collect();
+        for p in &mapping.placements {
+            let mon = &monarchs[p.op];
+            let factor_bd = match p.factor {
+                Factor::Left => &mon.l,
+                Factor::Right => &mon.r,
+                Factor::Dense => unreachable!("functional sim is Monarch-only"),
+            };
+            let lanes = (m / b).max(1);
+            for j in 0..p.blocks {
+                // global block index within the factor
+                let gblk = p.lane_of_factor * lanes + j;
+                // Program the TRANSPOSE: bitline accumulation computes
+                // cells^T @ input, so storing B^T yields y = B x.
+                let blk = factor_bd.block_matrix(gblk).transpose();
+                let (r0, c0) = (j * b, ((j + p.diag) % lanes) * b);
+                crossbars[p.array].program_block(r0, c0, &blk);
+            }
+        }
+        FunctionalChip {
+            m,
+            b,
+            crossbars,
+            mapping,
+        }
+    }
+
+    fn stage_pass(
+        &self,
+        op_idx: usize,
+        factor: Factor,
+        x: &[f32],
+        honor_schedule: bool,
+    ) -> Vec<f32> {
+        let b = self.b;
+        let lanes = (self.m / b).max(1);
+        let n = x.len();
+        let dense = self.mapping.strategy == Strategy::DenseMap;
+        let mut out = vec![0.0f32; n];
+        for p in self
+            .mapping
+            .placements
+            .iter()
+            .filter(|p| p.op == op_idx && p.factor == factor)
+        {
+            // Input segment for this lane: blocks [chunk*lanes, ...)
+            let base = p.lane_of_factor * lanes;
+            if dense && honor_schedule {
+                // DenseMap (§III-C): arrays hold several lanes whose
+                // cells share columns, so the scheduler walks block-row
+                // groups — activate rows of block j only, convert only
+                // the lane's column block (j + diag) % lanes. The analog
+                // passes pipeline behind the ADC stream (sample-and-
+                // hold), which is what `scheduler::timing` models.
+                for j in 0..p.blocks {
+                    let src = (base + j) * b;
+                    let mut input = vec![0.0f32; self.m];
+                    input[j * b..(j + 1) * b].copy_from_slice(&x[src..src + b]);
+                    let rows: Vec<usize> = (j * b..(j + 1) * b).collect();
+                    let cols = self.crossbars[p.array].mvm_pass(&input, &rows);
+                    let cblk = ((j + p.diag) % lanes) * b;
+                    out[src..src + b].copy_from_slice(&cols[cblk..cblk + b]);
+                }
+            } else {
+                // Whole-lane pass: correct for SparseMap (one lane per
+                // array, disjoint rows AND columns); the §III-C naive
+                // failure mode for DenseMap (mixes co-resident lanes).
+                let mut input = vec![0.0f32; self.m];
+                let mut rows = Vec::new();
+                for j in 0..p.blocks {
+                    let src = (base + j) * b;
+                    input[j * b..(j + 1) * b].copy_from_slice(&x[src..src + b]);
+                    rows.extend(j * b..(j + 1) * b);
+                }
+                let cols = self.crossbars[p.array].mvm_pass(&input, &rows);
+                // Block j's output sits at column block (j + diag) %
+                // lanes; de-rotate to logical order.
+                let aligned = rotate_blocks_left(&cols, b, p.diag);
+                for j in 0..p.blocks {
+                    let dst = (base + j) * b;
+                    out[dst..dst + b].copy_from_slice(&aligned[j * b..(j + 1) * b]);
+                }
+            }
+        }
+        out
+    }
+
+    /// Execute one factor stage with the scheduler's row activation.
+    pub fn run_stage(&self, op_idx: usize, factor: Factor, x: &[f32]) -> Vec<f32> {
+        self.stage_pass(op_idx, factor, x, true)
+    }
+
+    /// §III-C negative model: drive ALL rows (ignore the schedule).
+    pub fn run_stage_all_rows(
+        &self,
+        op_idx: usize,
+        factor: Factor,
+        x: &[f32],
+    ) -> Vec<f32> {
+        self.stage_pass(op_idx, factor, x, false)
+    }
+
+    /// Full Monarch MVM for op `op_idx`: P, R stage, P, L stage, P.
+    pub fn run_op(&self, op_idx: usize, x: &[f32]) -> Vec<f32> {
+        let p = StridePerm::new(self.b);
+        let u = p.apply(x);
+        let v = self.run_stage(op_idx, Factor::Right, &u);
+        let w = p.apply(&v);
+        let z = self.run_stage(op_idx, Factor::Left, &w);
+        p.apply(&z)
+    }
+
+    /// Mean array utilization measured from the programmed cells.
+    pub fn measured_utilization(&self) -> f64 {
+        let total: f64 = self.crossbars.iter().map(|c| c.utilization()).sum();
+        total / self.crossbars.len().max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn check_strategy(strategy: Strategy, d: usize, m: usize) {
+        let (cfg, ops) = single_op(d);
+        let mut params = CimParams::default();
+        params.array_dim = m;
+        let mut rng = Pcg32::new(42);
+        let b = cfg.monarch_b();
+        let mon = MonarchMatrix::randn(b, &mut rng);
+        let chip =
+            FunctionalChip::program(&cfg, &ops, std::slice::from_ref(&mon), &params, strategy);
+        let x = rng.normal_vec(d);
+        let got = chip.run_op(0, &x);
+        let want = mon.matvec(&x);
+        for (g, w) in got.iter().zip(&want) {
+            assert!(
+                (g - w).abs() < 1e-3 * (1.0 + w.abs()),
+                "{strategy:?} d={d} m={m}: {g} vs {w}"
+            );
+        }
+    }
+
+    #[test]
+    fn sparse_map_computes_correct_mvm() {
+        check_strategy(Strategy::SparseMap, 64, 32); // b=8, lanes=4
+        check_strategy(Strategy::SparseMap, 64, 16); // b=8, lanes=2
+        check_strategy(Strategy::SparseMap, 16, 16); // b=4, lanes=4
+    }
+
+    #[test]
+    fn dense_map_computes_correct_mvm() {
+        check_strategy(Strategy::DenseMap, 64, 32);
+        check_strategy(Strategy::DenseMap, 64, 64); // lanes=8
+        check_strategy(Strategy::DenseMap, 16, 16);
+    }
+
+    #[test]
+    fn dense_map_multiple_ops_share_arrays_correctly() {
+        // Two ops packed into the same arrays must still compute their own
+        // results (lane isolation via row activation).
+        let d = 64;
+        let (cfg, op0) = single_op(d);
+        let mut ops = op0.clone();
+        let mut op1 = op0[0].clone();
+        op1.name = "dec0.wk".to_string();
+        ops.push(op1);
+        let mut params = CimParams::default();
+        params.array_dim = 32;
+        let mut rng = Pcg32::new(7);
+        let b = cfg.monarch_b();
+        let mons = vec![
+            MonarchMatrix::randn(b, &mut rng),
+            MonarchMatrix::randn(b, &mut rng),
+        ];
+        let chip = FunctionalChip::program(&cfg, &ops, &mons, &params, Strategy::DenseMap);
+        let x = rng.normal_vec(d);
+        for (oi, mon) in mons.iter().enumerate() {
+            let got = chip.run_op(oi, &x);
+            let want = mon.matvec(&x);
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-3 * (1.0 + w.abs()), "op {oi}");
+            }
+        }
+    }
+
+    #[test]
+    fn all_rows_activation_corrupts_densemap() {
+        // §III-C: naively activating all rows must NOT give the right
+        // answer when an array stores multiple lanes.
+        let d = 64;
+        let (cfg, op0) = single_op(d);
+        let mut ops = op0.clone();
+        let mut op1 = op0[0].clone();
+        op1.name = "dec0.wk".to_string();
+        ops.push(op1);
+        let mut params = CimParams::default();
+        params.array_dim = 32;
+        let mut rng = Pcg32::new(9);
+        let b = cfg.monarch_b();
+        let mons = vec![
+            MonarchMatrix::randn(b, &mut rng),
+            MonarchMatrix::randn(b, &mut rng),
+        ];
+        let chip = FunctionalChip::program(&cfg, &ops, &mons, &params, Strategy::DenseMap);
+        let x = rng.normal_vec(d);
+        let xp = StridePerm::new(b).apply(&x);
+        let scheduled = chip.run_stage(0, Factor::Right, &xp);
+        let naive = chip.run_stage_all_rows(0, Factor::Right, &xp);
+        let diff: f32 = scheduled
+            .iter()
+            .zip(&naive)
+            .map(|(a, b)| (a - b).abs())
+            .sum();
+        assert!(
+            diff > 1e-3,
+            "all-row activation should corrupt DenseMap results (diff {diff})"
+        );
+    }
+
+    #[test]
+    fn measured_utilization_matches_mapping_stats() {
+        let (cfg, ops) = single_op(64);
+        let mut params = CimParams::default();
+        params.array_dim = 32;
+        let mut rng = Pcg32::new(5);
+        let mon = MonarchMatrix::randn(cfg.monarch_b(), &mut rng);
+        for strategy in [Strategy::SparseMap, Strategy::DenseMap] {
+            let chip = FunctionalChip::program(
+                &cfg,
+                &ops,
+                std::slice::from_ref(&mon),
+                &params,
+                strategy,
+            );
+            let measured = chip.measured_utilization();
+            let predicted = chip.mapping.utilization();
+            // randn factors have no exact zeros, so programmed-cell count
+            // tracks placement cell accounting
+            assert!(
+                (measured - predicted).abs() < 0.05,
+                "{strategy:?}: measured {measured} vs predicted {predicted}"
+            );
+        }
+    }
+}

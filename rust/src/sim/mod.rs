@@ -1,0 +1,9 @@
+//! Chip-level simulation: [`exec`] provides functional (numeric)
+//! execution of mapped Monarch operators on emulated crossbars, used to
+//! validate that mapping + scheduling compute correct results; the
+//! analytical latency/energy side lives in `scheduler::timing`.
+
+pub mod exec;
+pub mod trace;
+
+pub use exec::FunctionalChip;

@@ -1,0 +1,198 @@
+//! Execution trace: a timestamped record of scheduler events for one
+//! token pass, exportable as JSON (for external timeline visualisation)
+//! and queryable for per-resource occupancy — the observability layer of
+//! the simulator.
+
+use crate::cim::CimParams;
+use crate::mapping::{ModelMapping, Strategy};
+use crate::model::ModelConfig;
+use crate::scheduler::{adc_bits_for, usable_adcs};
+use crate::util::json::{arr, num, obj, s, Json};
+
+/// One traced scheduler event.
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    pub t_start_ns: f64,
+    pub t_end_ns: f64,
+    /// `analog` | `convert` | `comm` | `dpu`
+    pub kind: &'static str,
+    pub op: String,
+    pub layer: usize,
+    /// Arrays occupied by the event.
+    pub arrays: Vec<usize>,
+}
+
+/// A full per-token trace.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub events: Vec<TraceEvent>,
+}
+
+impl Trace {
+    /// Build the slot-model trace of one token pass over a mapping.
+    pub fn of_token(
+        cfg: &ModelConfig,
+        mapping: &ModelMapping,
+        params: &CimParams,
+    ) -> Trace {
+        let mut t = 0.0f64;
+        let mut events = Vec::new();
+        let bits = adc_bits_for(params, mapping.strategy, mapping.b);
+        let adcs = usable_adcs(params, mapping.strategy, mapping.b);
+        let t_conv = crate::cim::adc::t_conversion_ns(params, bits);
+        let layers: std::collections::BTreeSet<usize> =
+            mapping.ops.iter().map(|o| o.layer).collect();
+        for layer in layers {
+            // group ops of this layer by slot order (same as the timing
+            // model: qkv | wo | ffn1 | ffn2)
+            let slot_of = |name: &str| -> usize {
+                if name.ends_with(".wq") || name.ends_with(".wk") || name.ends_with(".wv") {
+                    0
+                } else if name.ends_with(".wo") {
+                    1
+                } else if name.ends_with(".ffn1") {
+                    2
+                } else {
+                    3
+                }
+            };
+            let mut slots: Vec<Vec<usize>> = vec![Vec::new(); 4];
+            for (i, op) in mapping.ops.iter().enumerate() {
+                if op.layer == layer {
+                    slots[slot_of(&op.name)].push(i);
+                }
+            }
+            for slot in slots.iter().filter(|sl| !sl.is_empty()) {
+                let mut slot_end = t;
+                for &oi in slot {
+                    let op = &mapping.ops[oi];
+                    let drive = params.t_drive_ns()
+                        * if mapping.strategy == Strategy::DenseMap {
+                            2.0 * op.analog_phases as f64
+                        } else {
+                            1.0
+                        };
+                    let conv = (op.convs_per_array as f64 / adcs as f64).ceil()
+                        * t_conv
+                        * if mapping.strategy == Strategy::DenseMap {
+                            (1.0 + crate::scheduler::timing::DENSE_STAGE_SERIALIZATION)
+                                * op.analog_phases as f64
+                        } else {
+                            1.0
+                        };
+                    events.push(TraceEvent {
+                        t_start_ns: t,
+                        t_end_ns: t + drive,
+                        kind: "analog",
+                        op: op.name.clone(),
+                        layer,
+                        arrays: op.arrays.clone(),
+                    });
+                    events.push(TraceEvent {
+                        t_start_ns: t + drive,
+                        t_end_ns: t + drive + conv,
+                        kind: "convert",
+                        op: op.name.clone(),
+                        layer,
+                        arrays: op.arrays.clone(),
+                    });
+                    slot_end = slot_end.max(t + drive + conv);
+                }
+                t = slot_end;
+            }
+        }
+        let _ = cfg;
+        Trace { events }
+    }
+
+    /// Makespan of the trace (ns).
+    pub fn makespan_ns(&self) -> f64 {
+        self.events.iter().fold(0.0, |m, e| m.max(e.t_end_ns))
+    }
+
+    /// Busy time of one array (ns).
+    pub fn array_busy_ns(&self, array: usize) -> f64 {
+        self.events
+            .iter()
+            .filter(|e| e.arrays.contains(&array))
+            .map(|e| e.t_end_ns - e.t_start_ns)
+            .sum()
+    }
+
+    /// JSON export (chrome-tracing-like flat list).
+    pub fn to_json(&self) -> Json {
+        arr(self.events.iter().map(|e| {
+            obj(vec![
+                ("ts", num(e.t_start_ns)),
+                ("dur", num(e.t_end_ns - e.t_start_ns)),
+                ("kind", s(e.kind)),
+                ("op", s(&e.op)),
+                ("layer", num(e.layer as f64)),
+                ("arrays", num(e.arrays.len() as f64)),
+            ])
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapping::map_model;
+
+    #[test]
+    fn trace_makespan_matches_cost_model() {
+        let cfg = ModelConfig::bert_large();
+        let params = CimParams::default();
+        for strategy in Strategy::all() {
+            let mm = map_model(&cfg, &params, strategy);
+            let trace = Trace::of_token(&cfg, &mm, &params);
+            let cost = crate::scheduler::timing::per_token_cost(&cfg, &mm, &params);
+            let want = cost.latency.critical_ns();
+            let got = trace.makespan_ns();
+            assert!(
+                (got - want).abs() < 0.02 * want,
+                "{strategy:?}: trace {got} vs model {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn events_ordered_and_nonnegative() {
+        let cfg = ModelConfig::tiny();
+        let params = CimParams::default();
+        let mm = map_model(&cfg, &params, Strategy::SparseMap);
+        let trace = Trace::of_token(&cfg, &mm, &params);
+        assert!(!trace.events.is_empty());
+        for e in &trace.events {
+            assert!(e.t_end_ns >= e.t_start_ns);
+            assert!(e.t_start_ns >= 0.0);
+        }
+    }
+
+    #[test]
+    fn json_export_parses_back() {
+        let cfg = ModelConfig::tiny();
+        let params = CimParams::default();
+        let mm = map_model(&cfg, &params, Strategy::DenseMap);
+        let trace = Trace::of_token(&cfg, &mm, &params);
+        let text = trace.to_json().to_string();
+        let parsed = Json::parse(&text).unwrap();
+        assert_eq!(parsed.as_arr().unwrap().len(), trace.events.len());
+    }
+
+    #[test]
+    fn densemap_arrays_busier_than_sparse() {
+        // capacity packing concentrates work on fewer arrays
+        let cfg = ModelConfig::bert_large();
+        let params = CimParams::default();
+        let sp = map_model(&cfg, &params, Strategy::SparseMap);
+        let de = map_model(&cfg, &params, Strategy::DenseMap);
+        let busiest = |mm: &ModelMapping| {
+            let tr = Trace::of_token(&cfg, mm, &params);
+            (0..mm.arrays)
+                .map(|a| tr.array_busy_ns(a))
+                .fold(0.0f64, f64::max)
+        };
+        assert!(busiest(&de) > busiest(&sp));
+    }
+}

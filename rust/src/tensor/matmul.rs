@@ -1,0 +1,187 @@
+//! Matmul kernels: naive reference, cache-blocked single-thread, and a
+//! std::thread parallel driver. One of the §Perf hot paths (used by the
+//! D2S projection, densification checks and the functional simulator).
+//!
+//! Layout note: we compute `C = A @ B` with all three row-major. The
+//! inner kernel iterates `k` in the middle loop and accumulates along
+//! rows of `B`, which keeps every access unit-stride (the classic ikj
+//! order) — no transpose needed.
+
+use super::Matrix;
+
+/// Tile edge for the blocked kernel (L1-friendly: 3 * 64^2 * 4B = 48 KiB).
+const TILE: usize = 64;
+
+/// Below this many multiply-adds the naive kernel wins (no tiling or
+/// threading overhead).
+const SMALL_FLOPS: usize = 64 * 64 * 64;
+
+/// Threshold for spawning threads.
+const PAR_FLOPS: usize = 256 * 256 * 256;
+
+/// Public entry: picks naive / blocked / parallel by problem size.
+pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.rows, "matmul shape mismatch: {}x{} @ {}x{}", a.rows, a.cols, b.rows, b.cols);
+    let flops = a.rows * a.cols * b.cols;
+    if flops <= SMALL_FLOPS {
+        matmul_naive(a, b)
+    } else if flops <= PAR_FLOPS {
+        matmul_blocked(a, b)
+    } else {
+        matmul_parallel(a, b)
+    }
+}
+
+/// Reference kernel (ikj order, still unit-stride).
+pub fn matmul_naive(a: &Matrix, b: &Matrix) -> Matrix {
+    let mut c = Matrix::zeros(a.rows, b.cols);
+    for i in 0..a.rows {
+        let arow = a.row(i);
+        let crow = c.row_mut(i);
+        for (k, &aik) in arow.iter().enumerate() {
+            if aik == 0.0 {
+                continue; // skips zero-padded rows in sparse layouts
+            }
+            let brow = b.row(k);
+            for (cv, bv) in crow.iter_mut().zip(brow) {
+                *cv += aik * bv;
+            }
+        }
+    }
+    c
+}
+
+/// Cache-blocked kernel.
+pub fn matmul_blocked(a: &Matrix, b: &Matrix) -> Matrix {
+    let mut c = Matrix::zeros(a.rows, b.cols);
+    matmul_blocked_into(a, b, &mut c, 0, a.rows);
+    c
+}
+
+/// Blocked kernel over a row range of `A`/`C` (building block for the
+/// parallel driver). Writes `C[i0..i1, :] = A[i0..i1, :] @ B`.
+fn matmul_blocked_into(a: &Matrix, b: &Matrix, c: &mut Matrix, i0: usize, i1: usize) {
+    let (n, p) = (a.cols, b.cols);
+    for ii in (i0..i1).step_by(TILE) {
+        let ie = (ii + TILE).min(i1);
+        for kk in (0..n).step_by(TILE) {
+            let ke = (kk + TILE).min(n);
+            for jj in (0..p).step_by(TILE) {
+                let je = (jj + TILE).min(p);
+                for i in ii..ie {
+                    let arow = a.row(i);
+                    let crow = &mut c.row_mut(i)[jj..je];
+                    // NOTE (§Perf): branch-free inner loop — the zero-
+                    // skip branch (kept in the naive kernel for sparse
+                    // layouts) defeats vectorization here. A 4-way k
+                    // unroll was tried and measured SLOWER (indexed
+                    // accesses reintroduce bounds checks); see
+                    // EXPERIMENTS.md §Perf for the iteration log.
+                    for k in kk..ke {
+                        let aik = arow[k];
+                        let brow = &b.row(k)[jj..je];
+                        for (cv, bv) in crow.iter_mut().zip(brow) {
+                            *cv += aik * bv;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Parallel driver: splits rows of `A` across `std::thread` workers.
+pub fn matmul_parallel(a: &Matrix, b: &Matrix) -> Matrix {
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(a.rows.max(1));
+    if threads <= 1 {
+        return matmul_blocked(a, b);
+    }
+    let rows_per = a.rows.div_ceil(threads);
+    let mut c = Matrix::zeros(a.rows, b.cols);
+    // Split the output buffer into disjoint row chunks; each worker fills
+    // its own chunk, so no synchronization is required.
+    let chunks: Vec<&mut [f32]> = c.data.chunks_mut(rows_per * b.cols).collect();
+    std::thread::scope(|scope| {
+        for (t, chunk) in chunks.into_iter().enumerate() {
+            let i0 = t * rows_per;
+            let i1 = (i0 + rows_per).min(a.rows);
+            scope.spawn(move || {
+                // Each worker computes its disjoint row range into a local
+                // buffer, then copies into its chunk of C.
+                let mut local = Matrix::zeros(i1 - i0, b.cols);
+                let a_slice = Matrix {
+                    rows: i1 - i0,
+                    cols: a.cols,
+                    data: a.data[i0 * a.cols..i1 * a.cols].to_vec(),
+                };
+                matmul_blocked_into(&a_slice, b, &mut local, 0, i1 - i0);
+                chunk.copy_from_slice(&local.data);
+            });
+        }
+    });
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::util::rng::Pcg32;
+
+    fn close(a: &Matrix, b: &Matrix, tol: f32) {
+        assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+        for (x, y) in a.data.iter().zip(&b.data) {
+            assert!((x - y).abs() <= tol * (1.0 + y.abs()), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn blocked_matches_naive() {
+        let mut rng = Pcg32::new(10);
+        let a = Matrix::randn(130, 70, &mut rng);
+        let b = Matrix::randn(70, 90, &mut rng);
+        close(&matmul_blocked(&a, &b), &matmul_naive(&a, &b), 1e-4);
+    }
+
+    #[test]
+    fn parallel_matches_naive() {
+        let mut rng = Pcg32::new(11);
+        let a = Matrix::randn(97, 123, &mut rng);
+        let b = Matrix::randn(123, 55, &mut rng);
+        close(&matmul_parallel(&a, &b), &matmul_naive(&a, &b), 1e-4);
+    }
+
+    #[test]
+    fn dispatch_consistency_property() {
+        forall("matmul kernels agree", 20, |g| {
+            let (m, k, n) = (g.usize(1, 40), g.usize(1, 40), g.usize(1, 40));
+            let mut rng = Pcg32::new(g.usize(0, 1 << 30) as u64);
+            let a = Matrix::randn(m, k, &mut rng);
+            let b = Matrix::randn(k, n, &mut rng);
+            close(&matmul(&a, &b), &matmul_naive(&a, &b), 1e-4);
+        });
+    }
+
+    #[test]
+    fn known_product() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Matrix::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        let c = matmul(&a, &b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn associativity_with_identity_padding() {
+        // zero rows/cols must not disturb results (sparse-skip path)
+        let mut rng = Pcg32::new(12);
+        let mut a = Matrix::randn(20, 20, &mut rng);
+        for c in 0..20 {
+            a[(7, c)] = 0.0;
+        }
+        let b = Matrix::randn(20, 20, &mut rng);
+        close(&matmul(&a, &b), &matmul_naive(&a, &b), 1e-4);
+    }
+}

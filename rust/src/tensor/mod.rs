@@ -1,0 +1,257 @@
+//! Dense matrix substrate: row-major `f32` matrices with the operations
+//! the D2S pipeline, functional CIM simulator and tests need.
+//!
+//! The blocked/parallel matmul lives in [`matmul`]; `Matrix::matmul`
+//! dispatches to it. This is a deliberate from-scratch substrate (no BLAS
+//! in the offline image) and is one of the §Perf hot paths.
+
+pub mod matmul;
+
+use crate::util::rng::Pcg32;
+
+/// Row-major dense `f32` matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Self { rows, cols, data }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Standard-normal entries from a deterministic PRNG.
+    pub fn randn(rows: usize, cols: usize, rng: &mut Pcg32) -> Self {
+        Self {
+            rows,
+            cols,
+            data: rng.normal_vec(rows * cols),
+        }
+    }
+
+    /// Build from a function of (row, col).
+    pub fn from_fn<F: FnMut(usize, usize) -> f32>(
+        rows: usize,
+        cols: usize,
+        mut f: F,
+    ) -> Self {
+        let mut m = Self::zeros(rows, cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                m[(r, c)] = f(r, c);
+            }
+        }
+        m
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        let c = self.cols;
+        &mut self.data[r * c..(r + 1) * c]
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out[(c, r)] = self[(r, c)];
+            }
+        }
+        out
+    }
+
+    /// `self @ other` via the blocked kernel.
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        matmul::matmul(self, other)
+    }
+
+    /// Matrix-vector product `self @ v`.
+    pub fn matvec(&self, v: &[f32]) -> Vec<f32> {
+        assert_eq!(v.len(), self.cols, "matvec shape mismatch");
+        let mut out = vec![0.0f32; self.rows];
+        for r in 0..self.rows {
+            let row = self.row(r);
+            let mut acc = 0.0f32;
+            for (a, b) in row.iter().zip(v) {
+                acc += a * b;
+            }
+            out[r] = acc;
+        }
+        out
+    }
+
+    /// Copy a `rh x cw` sub-matrix starting at `(r0, c0)`.
+    pub fn submatrix(&self, r0: usize, c0: usize, rh: usize, cw: usize) -> Matrix {
+        assert!(r0 + rh <= self.rows && c0 + cw <= self.cols, "slice oob");
+        let mut out = Matrix::zeros(rh, cw);
+        for r in 0..rh {
+            out.row_mut(r)
+                .copy_from_slice(&self.data[(r0 + r) * self.cols + c0..][..cw]);
+        }
+        out
+    }
+
+    /// Write `block` into this matrix at `(r0, c0)`.
+    pub fn set_submatrix(&mut self, r0: usize, c0: usize, block: &Matrix) {
+        assert!(r0 + block.rows <= self.rows && c0 + block.cols <= self.cols);
+        for r in 0..block.rows {
+            let dst = (r0 + r) * self.cols + c0;
+            self.data[dst..dst + block.cols].copy_from_slice(block.row(r));
+        }
+    }
+
+    pub fn frobenius(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    /// Relative Frobenius distance `||a-b||_F / ||b||_F`.
+    pub fn rel_error(&self, other: &Matrix) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let mut num = 0.0f64;
+        for (a, b) in self.data.iter().zip(&other.data) {
+            let d = (*a - *b) as f64;
+            num += d * d;
+        }
+        num.sqrt() / other.frobenius().max(1e-30)
+    }
+
+    pub fn scale(&self, s: f32) -> Matrix {
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|x| x * s).collect(),
+        }
+    }
+
+    pub fn add(&self, other: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(a, b)| a + b)
+                .collect(),
+        }
+    }
+
+    pub fn sub(&self, other: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(a, b)| a - b)
+                .collect(),
+        }
+    }
+
+    /// Count entries with |x| > eps (utilization accounting).
+    pub fn nnz(&self, eps: f32) -> usize {
+        self.data.iter().filter(|x| x.abs() > eps).count()
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Matrix {
+    type Output = f32;
+
+    #[inline]
+    fn index(&self, (r, c): (usize, usize)) -> &f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &self.data[r * self.cols + c]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Matrix {
+    #[inline]
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_matmul() {
+        let mut rng = Pcg32::new(1);
+        let a = Matrix::randn(7, 7, &mut rng);
+        let i = Matrix::eye(7);
+        let p = a.matmul(&i);
+        assert!(p.rel_error(&a) < 1e-6);
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let mut rng = Pcg32::new(2);
+        let a = Matrix::randn(5, 9, &mut rng);
+        let v: Vec<f32> = rng.normal_vec(9);
+        let vm = Matrix::from_vec(9, 1, v.clone());
+        let want = a.matmul(&vm);
+        let got = a.matvec(&v);
+        for (g, w) in got.iter().zip(&want.data) {
+            assert!((g - w).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Pcg32::new(3);
+        let a = Matrix::randn(4, 6, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn submatrix_roundtrip() {
+        let mut rng = Pcg32::new(4);
+        let a = Matrix::randn(8, 8, &mut rng);
+        let blk = a.submatrix(2, 4, 3, 2);
+        let mut b = Matrix::zeros(8, 8);
+        b.set_submatrix(2, 4, &blk);
+        assert_eq!(b.submatrix(2, 4, 3, 2), blk);
+        assert_eq!(b[(0, 0)], 0.0);
+    }
+
+    #[test]
+    fn frobenius_known() {
+        let m = Matrix::from_vec(2, 2, vec![3.0, 0.0, 0.0, 4.0]);
+        assert!((m.frobenius() - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nnz_counts() {
+        let m = Matrix::from_vec(2, 2, vec![0.0, 1.0, -2.0, 1e-9]);
+        assert_eq!(m.nnz(1e-6), 2);
+    }
+}

@@ -1,0 +1,146 @@
+//! Bench harness for `cargo bench` targets with `harness = false`
+//! (offline image lacks `criterion`).
+//!
+//! Provides warmup, calibrated iteration counts, robust statistics and a
+//! criterion-like one-line report, plus helpers for printing the paper's
+//! tables/figures from bench binaries.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+}
+
+impl Measurement {
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / (self.mean_ns * 1e-9)
+    }
+}
+
+/// Bench runner with a fixed wall-clock budget per case.
+pub struct Bencher {
+    warmup: Duration,
+    budget: Duration,
+    results: Vec<Measurement>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        // Respect a quick mode for CI smoke runs.
+        let quick = std::env::var("BENCH_QUICK").is_ok();
+        Self {
+            warmup: if quick {
+                Duration::from_millis(20)
+            } else {
+                Duration::from_millis(200)
+            },
+            budget: if quick {
+                Duration::from_millis(100)
+            } else {
+                Duration::from_secs(1)
+            },
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f`, preventing the result from being optimized away.
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &Measurement {
+        // Warmup + calibration.
+        let t0 = Instant::now();
+        let mut calib_iters = 0u64;
+        while t0.elapsed() < self.warmup {
+            std::hint::black_box(f());
+            calib_iters += 1;
+        }
+        let per_iter = self.warmup.as_nanos() as f64 / calib_iters.max(1) as f64;
+        // Sample in batches so timer overhead is amortized for fast cases.
+        let batch = ((1_000_00.0 / per_iter).ceil() as u64).clamp(1, 10_000);
+        let mut samples = Vec::new();
+        let run_start = Instant::now();
+        let mut total_iters = 0u64;
+        while run_start.elapsed() < self.budget && samples.len() < 2000 {
+            let s = Instant::now();
+            for _ in 0..batch {
+                std::hint::black_box(f());
+            }
+            samples.push(s.elapsed().as_nanos() as f64 / batch as f64);
+            total_iters += batch;
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let m = Measurement {
+            name: name.to_string(),
+            iters: total_iters,
+            mean_ns: samples.iter().sum::<f64>() / samples.len() as f64,
+            p50_ns: samples[samples.len() / 2],
+            min_ns: samples[0],
+            max_ns: *samples.last().unwrap(),
+        };
+        println!(
+            "{:<52} {:>12}  p50 {:>12}  ({} iters)",
+            m.name,
+            fmt_ns(m.mean_ns),
+            fmt_ns(m.p50_ns),
+            m.iters
+        );
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+}
+
+/// Human-readable nanoseconds.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Section header for bench output.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        std::env::set_var("BENCH_QUICK", "1");
+        let mut b = Bencher::new();
+        let m = b.bench("noop-ish", || std::hint::black_box(1 + 1)).clone();
+        assert!(m.mean_ns > 0.0);
+        assert!(m.iters > 0);
+        assert!(m.min_ns <= m.p50_ns && m.p50_ns <= m.max_ns);
+    }
+
+    #[test]
+    fn fmt_ns_ranges() {
+        assert!(fmt_ns(12.0).contains("ns"));
+        assert!(fmt_ns(12_000.0).contains("µs"));
+        assert!(fmt_ns(12_000_000.0).contains("ms"));
+        assert!(fmt_ns(2e9).contains(" s"));
+    }
+}

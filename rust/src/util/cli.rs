@@ -1,0 +1,149 @@
+//! Hand-rolled CLI argument parser (offline image lacks `clap`).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional
+//! arguments, with typed accessors and a usage printer.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an explicit argument list (no program name).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.flags.entry(k.to_string()).or_default().push(v.to_string());
+                } else {
+                    // `--key value` when the next token is not a flag;
+                    // bare `--key` otherwise.
+                    let takes_value =
+                        matches!(it.peek(), Some(nx) if !nx.starts_with("--"));
+                    if takes_value {
+                        let v = it.next().unwrap();
+                        out.flags.entry(body.to_string()).or_default().push(v);
+                    } else {
+                        out.flags.entry(body.to_string()).or_default().push(String::new());
+                    }
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse from the process environment, skipping argv[0].
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags
+            .get(key)
+            .and_then(|v| v.last())
+            .map(|s| s.as_str())
+            .filter(|s| !s.is_empty())
+    }
+
+    pub fn get_all(&self, key: &str) -> Vec<&str> {
+        self.flags
+            .get(key)
+            .map(|v| v.iter().map(|s| s.as_str()).collect())
+            .unwrap_or_default()
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|s| {
+                s.parse().unwrap_or_else(|_| {
+                    eprintln!("error: --{key} expects an integer, got '{s}'");
+                    std::process::exit(2);
+                })
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|s| {
+                s.parse().unwrap_or_else(|_| {
+                    eprintln!("error: --{key} expects a number, got '{s}'");
+                    std::process::exit(2);
+                })
+            })
+            .unwrap_or(default)
+    }
+
+    /// Comma-separated usize list, e.g. `--adcs 4,8,16,32`.
+    pub fn usize_list_or(&self, key: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(key) {
+            None => default.to_vec(),
+            Some(s) => s
+                .split(',')
+                .map(|p| {
+                    p.trim().parse().unwrap_or_else(|_| {
+                        eprintln!("error: --{key} expects ints, got '{p}'");
+                        std::process::exit(2);
+                    })
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn positional_and_flags() {
+        let a = args("figure fig7 --model bert --adcs=4,8 --verbose");
+        assert_eq!(a.positional, vec!["figure", "fig7"]);
+        assert_eq!(a.get("model"), Some("bert"));
+        assert_eq!(a.usize_list_or("adcs", &[]), vec![4, 8]);
+        assert!(a.has("verbose"));
+        assert_eq!(a.get("verbose"), None); // bare flag has no value
+    }
+
+    #[test]
+    fn key_value_space_form() {
+        let a = args("--m 256 --b 32 run");
+        assert_eq!(a.usize_or("m", 0), 256);
+        assert_eq!(a.usize_or("b", 0), 32);
+        assert_eq!(a.positional, vec!["run"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = args("");
+        assert_eq!(a.usize_or("m", 256), 256);
+        assert_eq!(a.f64_or("x", 1.5), 1.5);
+        assert_eq!(a.str_or("s", "d"), "d");
+    }
+
+    #[test]
+    fn repeated_flags_last_wins() {
+        let a = args("--m 1 --m 2");
+        assert_eq!(a.usize_or("m", 0), 2);
+        assert_eq!(a.get_all("m"), vec!["1", "2"]);
+    }
+}

@@ -1,0 +1,15 @@
+//! Shared substrates: PRNG, JSON, statistics, property testing, CLI
+//! parsing, bench harness and table rendering.
+//!
+//! These exist because the offline build image only vendors the `xla`
+//! crate's dependency closure — `rand`, `serde`, `clap`, `criterion` and
+//! `proptest` are unavailable, so the repo carries small, tested
+//! equivalents (see DESIGN.md §1, substitution table).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,179 @@
+//! Mini property-based testing harness (the offline image has no
+//! `proptest`). Runs a property over many PRNG-derived cases and, on
+//! failure, retries with the failing seed while halving integer sizes
+//! drawn through [`Gen::size`] — a lightweight shrink.
+//!
+//! Usage (`no_run`: doctest binaries lack the xla rpath in this image):
+//! ```no_run
+//! use monarch_cim::util::prop::{forall, Gen};
+//! forall("addition commutes", 100, |g: &mut Gen| {
+//!     let (a, b) = (g.usize(0, 1000), g.usize(0, 1000));
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use super::rng::Pcg32;
+
+/// Case generator handed to properties; wraps a PRNG plus a size budget
+/// that the shrinking pass lowers.
+pub struct Gen {
+    rng: Pcg32,
+    /// Scale factor in (0, 1]; shrink passes lower it so size-driven
+    /// draws get smaller.
+    scale: f64,
+    /// Log of draws for failure reports.
+    log: Vec<String>,
+}
+
+impl Gen {
+    fn new(seed: u64, scale: f64) -> Self {
+        Self {
+            rng: Pcg32::new(seed),
+            scale,
+            log: Vec::new(),
+        }
+    }
+
+    /// Integer in `[lo, hi]`, biased smaller when shrinking.
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        let hi_scaled = lo + (((hi - lo) as f64) * self.scale).round() as usize;
+        let v = self.rng.range(lo, hi_scaled.max(lo) + 1);
+        self.log.push(format!("usize[{lo},{hi}] = {v}"));
+        v
+    }
+
+    /// Uniform f32 in `[lo, hi)`.
+    pub fn f32(&mut self, lo: f32, hi: f32) -> f32 {
+        let v = lo + self.rng.f32() * (hi - lo);
+        self.log.push(format!("f32[{lo},{hi}) = {v}"));
+        v
+    }
+
+    /// Standard normal.
+    pub fn normal(&mut self) -> f32 {
+        self.rng.normal()
+    }
+
+    /// Vector of standard normals.
+    pub fn normal_vec(&mut self, len: usize) -> Vec<f32> {
+        self.rng.normal_vec(len)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u32() & 1 == 1
+    }
+
+    /// Pick one of the provided values.
+    pub fn choose<T: Copy + std::fmt::Debug>(&mut self, xs: &[T]) -> T {
+        let v = *self.rng.choose(xs);
+        self.log.push(format!("choose{xs:?} = {v:?}"));
+        v
+    }
+
+    /// Raw PRNG access for bulk data.
+    pub fn rng(&mut self) -> &mut Pcg32 {
+        &mut self.rng
+    }
+}
+
+/// Run `prop` over `cases` generated cases. Panics (test failure) with the
+/// seed and draw log of the smallest failing case found.
+pub fn forall<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(
+    name: &str,
+    cases: u64,
+    prop: F,
+) {
+    let base_seed = 0xC1A0_0000u64 ^ fxhash(name);
+    for i in 0..cases {
+        let seed = base_seed.wrapping_add(i.wrapping_mul(0x9E37_79B9));
+        if let Err(panic) = run_case(&prop, seed, 1.0) {
+            // Shrink: retry same seed with smaller size scales; report the
+            // smallest still-failing configuration.
+            let mut best_scale = 1.0;
+            for &scale in &[0.5, 0.25, 0.1, 0.05] {
+                if run_case(&prop, seed, scale).is_err() {
+                    best_scale = scale;
+                }
+            }
+            let mut g = Gen::new(seed, best_scale);
+            let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                prop(&mut g)
+            }));
+            panic!(
+                "property '{name}' failed (case {i}, seed {seed:#x}, scale {best_scale}):\n  draws: {}\n  panic: {}",
+                g.log.join(", "),
+                panic_msg(&panic),
+            );
+        }
+    }
+}
+
+fn run_case<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(
+    prop: &F,
+    seed: u64,
+    scale: f64,
+) -> Result<(), Box<dyn std::any::Any + Send>> {
+    let prev = std::panic::take_hook();
+    std::panic::set_hook(Box::new(|_| {})); // silence expected panics
+    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let mut g = Gen::new(seed, scale);
+        prop(&mut g);
+    }));
+    std::panic::set_hook(prev);
+    r
+}
+
+fn panic_msg(p: &Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        s.to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic>".to_string()
+    }
+}
+
+fn fxhash(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall("add commutes", 50, |g| {
+            let a = g.usize(0, 100);
+            let b = g.usize(0, 100);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let r = std::panic::catch_unwind(|| {
+            forall("always fails on big", 50, |g| {
+                let a = g.usize(0, 100);
+                assert!(a < 5, "a too big: {a}");
+            });
+        });
+        let msg = panic_msg(&r.unwrap_err());
+        assert!(msg.contains("seed"), "message should name the seed: {msg}");
+    }
+
+    #[test]
+    fn gen_respects_bounds() {
+        forall("bounds", 100, |g| {
+            let v = g.usize(3, 9);
+            assert!((3..=9).contains(&v));
+            let f = g.f32(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&f));
+        });
+    }
+}

@@ -1,0 +1,169 @@
+//! ASCII table renderer for figure/table reproduction output.
+
+/// Column-aligned ASCII table with a header row.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new<S: Into<String>, I: IntoIterator<Item = S>>(header: I) -> Self {
+        Self {
+            header: header.into_iter().map(Into::into).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row<S: Into<String>, I: IntoIterator<Item = S>>(&mut self, cells: I) {
+        let row: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(
+            row.len(),
+            self.header.len(),
+            "row width must match header"
+        );
+        self.rows.push(row);
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths = vec![0usize; ncols];
+        for (i, h) in self.header.iter().enumerate() {
+            widths[i] = widths[i].max(h.chars().count());
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                line.push_str(&format!(" {:<w$} |", c, w = w));
+            }
+            line
+        };
+        let sep = {
+            let mut s = String::from("+");
+            for w in &widths {
+                s.push_str(&"-".repeat(w + 2));
+                s.push('+');
+            }
+            s
+        };
+        out.push_str(&sep);
+        out.push('\n');
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out
+    }
+
+    /// CSV form (for plotting outside the repo).
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &String| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.clone()
+            }
+        };
+        let mut out = self.header.iter().map(esc).collect::<Vec<_>>().join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(esc).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+}
+
+/// `format!`-friendly ratio, e.g. `1.73x`.
+pub fn ratio(x: f64) -> String {
+    format!("{x:.2}x")
+}
+
+/// SI-ish formatting for large counts.
+pub fn si(x: f64) -> String {
+    if x.abs() >= 1e12 {
+        format!("{:.2}T", x / 1e12)
+    } else if x.abs() >= 1e9 {
+        format!("{:.2}G", x / 1e9)
+    } else if x.abs() >= 1e6 {
+        format!("{:.2}M", x / 1e6)
+    } else if x.abs() >= 1e3 {
+        format!("{:.2}K", x / 1e3)
+    } else {
+        format!("{x:.0}")
+    }
+}
+
+/// Time in engineering units from nanoseconds.
+pub fn eng_time_ns(ns: f64) -> String {
+    crate::util::bench::fmt_ns(ns)
+}
+
+/// Energy in engineering units from nanojoules.
+pub fn eng_energy_nj(nj: f64) -> String {
+    if nj < 1e3 {
+        format!("{nj:.2} nJ")
+    } else if nj < 1e6 {
+        format!("{:.2} µJ", nj / 1e3)
+    } else if nj < 1e9 {
+        format!("{:.2} mJ", nj / 1e6)
+    } else {
+        format!("{:.3} J", nj / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(["model", "arrays", "util %"]);
+        t.row(["bert-large", "1152", "100.0"]);
+        t.row(["gpt2-medium", "96", "78.8"]);
+        let r = t.render();
+        assert!(r.contains("bert-large"));
+        assert!(r.lines().all(|l| l.starts_with('+') || l.starts_with('|')));
+        // all lines same width
+        let ws: Vec<usize> = r.lines().map(|l| l.chars().count()).collect();
+        assert!(ws.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_checked() {
+        let mut t = Table::new(["a", "b"]);
+        t.row(["only-one"]);
+    }
+
+    #[test]
+    fn csv_escapes() {
+        let mut t = Table::new(["k", "v"]);
+        t.row(["a,b", "c\"d"]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"a,b\""));
+        assert!(csv.contains("\"c\"\"d\""));
+    }
+
+    #[test]
+    fn units() {
+        assert_eq!(si(2_500_000.0), "2.50M");
+        assert!(eng_energy_nj(1.5e6).contains("mJ"));
+        assert_eq!(ratio(1.734), "1.73x");
+    }
+}

@@ -1,0 +1,120 @@
+//! Integration: the full framework pipeline (Fig. 2a) across all paper
+//! models and strategies, with cross-module consistency checks.
+
+use monarch_cim::cim::CimParams;
+use monarch_cim::coordinator::{run_pipeline, PipelineConfig};
+use monarch_cim::mapping::{map_model, Strategy};
+use monarch_cim::model::{count_report, ModelConfig};
+use monarch_cim::scheduler::timing::cost_report;
+use monarch_cim::util::stats::geomean;
+
+#[test]
+fn pipeline_all_models_all_strategies() {
+    for model in ModelConfig::paper_models() {
+        for strategy in Strategy::all() {
+            let r = run_pipeline(&PipelineConfig::new(model.clone(), strategy));
+            assert!(r.mapping.arrays > 0, "{}/{:?}", model.name, strategy);
+            assert!(r.cost.latency_ms() > 0.0);
+            assert!(r.cost.energy_mj() > 0.0);
+            assert!(r.mapping.utilization() > 0.0 && r.mapping.utilization() <= 1.0 + 1e-9);
+        }
+    }
+}
+
+#[test]
+fn paper_headline_claims_hold() {
+    // Abstract: ">50% utilization improvement, >4x memory footprint and
+    // FLOPs reduction, >1.7x latency/energy vs dense CIM baseline".
+    let params = CimParams::default();
+
+    // utilization improvement DenseMap vs SparseMap
+    let cfg = ModelConfig::bert_large();
+    let sp = map_model(&cfg, &params, Strategy::SparseMap);
+    let de = map_model(&cfg, &params, Strategy::DenseMap);
+    assert!(de.utilization() - sp.utilization() > 0.5);
+
+    // >4x memory footprint reduction (weights stored)
+    let lin = map_model(&cfg, &params, Strategy::Linear);
+    assert!(lin.used_cells() as f64 / de.used_cells() as f64 > 4.0);
+
+    // >4x FLOPs reduction on parameterized matmuls
+    let counts = count_report(&cfg);
+    assert!(
+        counts.dense_para_flops as f64 / counts.monarch_para_flops as f64 > 4.0
+    );
+
+    // >1.7x latency and energy reduction (geomean, DenseMap)
+    let mut lat = Vec::new();
+    let mut en = Vec::new();
+    for m in ModelConfig::paper_models() {
+        let l = cost_report(&m, &params, Strategy::Linear);
+        let d = cost_report(&m, &params, Strategy::DenseMap);
+        lat.push(l.latency_ms() / d.latency_ms());
+        en.push(l.energy_mj() / d.energy_mj());
+    }
+    assert!(geomean(&lat) > 1.6, "latency geomean {}", geomean(&lat));
+    assert!(geomean(&en) > 1.6, "energy geomean {}", geomean(&en));
+}
+
+#[test]
+fn mapping_ops_cover_all_para_matmuls() {
+    for model in ModelConfig::paper_models() {
+        let para = monarch_cim::model::para_ops(&model);
+        for strategy in Strategy::all() {
+            let mm = map_model(&model, &CimParams::default(), strategy);
+            assert_eq!(
+                mm.ops.len(),
+                para.len(),
+                "{}/{:?}: op count",
+                model.name,
+                strategy
+            );
+            // every op must have at least one placement
+            for (i, op) in mm.ops.iter().enumerate() {
+                assert!(
+                    !op.arrays.is_empty(),
+                    "{}/{:?}: op {i} ({}) has no arrays",
+                    model.name,
+                    strategy,
+                    op.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn placements_within_array_bounds() {
+    for strategy in [Strategy::SparseMap, Strategy::DenseMap] {
+        let mm = map_model(
+            &ModelConfig::bart_large(),
+            &CimParams::default(),
+            strategy,
+        );
+        let lanes = mm.m / mm.b;
+        for p in &mm.placements {
+            assert!(p.array < mm.arrays);
+            assert!(p.diag < lanes, "diag {} >= lanes {lanes}", p.diag);
+            assert!(p.blocks <= lanes);
+            assert!(p.cells <= mm.m * mm.m);
+        }
+    }
+}
+
+#[test]
+fn dse_pipeline_monotone_in_adcs_for_column_muxed() {
+    // more ADCs per array can only help Linear and SparseMap
+    let cfg = ModelConfig::gpt2_medium();
+    for strategy in [Strategy::Linear, Strategy::SparseMap] {
+        let mut prev = f64::INFINITY;
+        for adcs in [1usize, 2, 4, 8, 16, 32] {
+            let p = CimParams::default().with_adcs_per_array(adcs);
+            let r = cost_report(&cfg, &p, strategy);
+            assert!(
+                r.latency_ms() <= prev + 1e-12,
+                "{strategy:?}: latency not monotone at {adcs} ADCs"
+            );
+            prev = r.latency_ms();
+        }
+    }
+}

@@ -1,0 +1,208 @@
+//! Integration: Rust coordinator <-> AOT JAX/Pallas artifacts via PJRT.
+//!
+//! These tests are the cross-language correctness contract: the Rust
+//! Monarch implementation and the Pallas kernels must agree (up to float
+//! tolerance) on the layouts defined in `python/compile/kernels/ref.py`.
+//!
+//! Requires `make artifacts` (the Makefile `test` target guarantees it).
+
+use monarch_cim::monarch::{monarch_project, BlockDiag, MonarchMatrix};
+use monarch_cim::runtime::{
+    literal_f32, literal_from_blockdiag, literal_i32, literals_from_monarch, Runtime,
+};
+use monarch_cim::tensor::Matrix;
+use monarch_cim::util::json::Json;
+use monarch_cim::util::rng::Pcg32;
+
+fn runtime() -> Runtime {
+    Runtime::with_default_dir().expect("artifacts missing — run `make artifacts`")
+}
+
+fn assert_close(got: &[f32], want: &[f32], tol: f32, what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length mismatch");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!(
+            (g - w).abs() <= tol * (1.0 + w.abs()),
+            "{what}[{i}]: {g} vs {w}"
+        );
+    }
+}
+
+#[test]
+fn block_diag_kernel_matches_rust() {
+    let mut rt = runtime();
+    let mut rng = Pcg32::new(11);
+    let bd = BlockDiag::randn(8, 8, &mut rng);
+    let x = Matrix::randn(4, 64, &mut rng);
+    let got = rt
+        .execute_f32(
+            "block_diag_b8",
+            &[
+                literal_from_blockdiag(&bd).unwrap(),
+                literal_f32(&x.data, &[4, 64]).unwrap(),
+            ],
+        )
+        .unwrap();
+    let want = bd.matmul_rows(&x);
+    assert_close(&got, &want.data, 1e-4, "block_diag_b8");
+}
+
+#[test]
+fn monarch_kernel_matches_rust_n64() {
+    let mut rt = runtime();
+    let mut rng = Pcg32::new(12);
+    let m = MonarchMatrix::randn(8, &mut rng);
+    let x = Matrix::randn(8, 64, &mut rng);
+    let (l, r) = literals_from_monarch(&m).unwrap();
+    let got = rt
+        .execute_f32(
+            "monarch_mvm_n64",
+            &[l, r, literal_f32(&x.data, &[8, 64]).unwrap()],
+        )
+        .unwrap();
+    let want = m.matmul_rows(&x);
+    assert_close(&got, &want.data, 1e-4, "monarch_mvm_n64");
+}
+
+#[test]
+fn monarch_kernel_matches_rust_n1024() {
+    // BERT-scale d_model: the production tile size (b = 32).
+    let mut rt = runtime();
+    let mut rng = Pcg32::new(13);
+    let m = MonarchMatrix::randn(32, &mut rng);
+    let x = Matrix::randn(4, 1024, &mut rng);
+    let (l, r) = literals_from_monarch(&m).unwrap();
+    let got = rt
+        .execute_f32(
+            "monarch_mvm_n1024",
+            &[l, r, literal_f32(&x.data, &[4, 1024]).unwrap()],
+        )
+        .unwrap();
+    let want = m.matmul_rows(&x);
+    assert_close(&got, &want.data, 2e-3, "monarch_mvm_n1024");
+}
+
+#[test]
+fn lane_sequential_kernel_matches_plain() {
+    // DenseMap-ordered kernel == plain kernel == Rust reference.
+    let mut rt = runtime();
+    let mut rng = Pcg32::new(14);
+    let m = MonarchMatrix::randn(8, &mut rng);
+    let x = Matrix::randn(8, 64, &mut rng);
+    let (l, r) = literals_from_monarch(&m).unwrap();
+    let got = rt
+        .execute_f32(
+            "monarch_mvm_lanes_n64",
+            &[l, r, literal_f32(&x.data, &[8, 64]).unwrap()],
+        )
+        .unwrap();
+    let want = m.matmul_rows(&x);
+    assert_close(&got, &want.data, 1e-4, "monarch_mvm_lanes_n64");
+}
+
+#[test]
+fn d2s_roundtrip_through_pjrt() {
+    // Rust D2S projection -> factors fed to the AOT kernel -> result
+    // close to the original dense matmul (within projection error).
+    let mut rt = runtime();
+    let mut rng = Pcg32::new(15);
+    let b = 8;
+    // near-Monarch dense weight
+    let base = MonarchMatrix::randn(b, &mut rng)
+        .to_dense()
+        .scale(1.0 / b as f32);
+    let w = base.add(&Matrix::randn(64, 64, &mut rng).scale(0.01));
+    let m = monarch_project(&w);
+    let x = Matrix::randn(8, 64, &mut rng);
+    let (l, r) = literals_from_monarch(&m).unwrap();
+    let got = rt
+        .execute_f32(
+            "monarch_mvm_n64",
+            &[l, r, literal_f32(&x.data, &[8, 64]).unwrap()],
+        )
+        .unwrap();
+    // exact projected-operator reference
+    let want_proj = m.matmul_rows(&x);
+    assert_close(&got, &want_proj.data, 1e-4, "pjrt vs rust projected");
+    // and close to the original dense operator
+    let want_dense = x.matmul(&w.transpose());
+    let got_m = Matrix::from_vec(8, 64, got);
+    let rel = got_m.rel_error(&want_dense);
+    assert!(rel < 0.2, "projected operator strayed too far: rel {rel}");
+}
+
+#[test]
+fn adc_kernel_matches_rust_quantizer() {
+    let mut rt = runtime();
+    let mut rng = Pcg32::new(16);
+    let bd = BlockDiag::randn(8, 8, &mut rng);
+    let x = Matrix::randn(4, 64, &mut rng);
+    let got = rt
+        .execute_f32(
+            "block_diag_adc_b8",
+            &[
+                literal_from_blockdiag(&bd).unwrap(),
+                literal_f32(&x.data, &[4, 64]).unwrap(),
+            ],
+        )
+        .unwrap();
+    // reference: exact block-diag then mid-tread 5b quantization @ fs=8
+    let exact = bd.matmul_rows(&x);
+    let want: Vec<f32> = exact
+        .data
+        .iter()
+        .map(|&v| monarch_cim::cim::crossbar::quantize(v, 5, 8.0))
+        .collect();
+    assert_close(&got, &want, 1e-4, "block_diag_adc_b8");
+}
+
+#[test]
+fn tiny_lm_matches_python_golden() {
+    // The logits the JAX model produced at AOT time must be reproduced by
+    // the PJRT-executed artifact, proving the full L1+L2 -> L3 path.
+    let mut rt = runtime();
+    let golden_text =
+        std::fs::read_to_string("artifacts/tiny_lm_golden.json").expect("golden file");
+    let golden = Json::parse(&golden_text).unwrap();
+    let tokens: Vec<i32> = golden.get("tokens").unwrap().as_arr().unwrap()[0]
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|t| t.as_f64().unwrap() as i32)
+        .collect();
+    let logits = rt
+        .execute_f32("tiny_lm_b1", &[literal_i32(&tokens, &[1, 32]).unwrap()])
+        .unwrap();
+    let want_sum = golden.get("logits_sum").unwrap().as_f64().unwrap();
+    let got_sum: f64 = logits.iter().map(|&v| v as f64).sum();
+    assert!(
+        (got_sum - want_sum).abs() < 1e-1 * (1.0 + want_sum.abs()),
+        "logits sum {got_sum} vs golden {want_sum}"
+    );
+    let first8 = golden.get("logits_first8").unwrap().as_arr().unwrap();
+    for (i, g) in first8.iter().enumerate() {
+        let w = g.as_f64().unwrap() as f32;
+        assert!(
+            (logits[i] - w).abs() < 1e-3 * (1.0 + w.abs()),
+            "logit[{i}] {} vs {w}",
+            logits[i]
+        );
+    }
+}
+
+#[test]
+fn shape_validation_rejects_bad_feeds() {
+    let mut rt = runtime();
+    // wrong number of inputs
+    assert!(rt.execute("monarch_mvm_n64", &[]).is_err());
+    // wrong shape
+    let bad = literal_f32(&[0.0; 16], &[4, 4]).unwrap();
+    let bad2 = literal_f32(&[0.0; 16], &[4, 4]).unwrap();
+    let err = match rt.execute("block_diag_b8", &[bad, bad2]) {
+        Err(e) => e,
+        Ok(_) => panic!("bad shapes must be rejected"),
+    };
+    assert!(err.to_string().contains("expected"), "{err}");
+    // unknown artifact
+    assert!(rt.execute("nope", &[]).is_err());
+}

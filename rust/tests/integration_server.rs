@@ -1,0 +1,157 @@
+//! Integration: the batching inference server over the PJRT runtime —
+//! concurrency, batching behaviour, golden-output fidelity, error paths
+//! and clean shutdown. Requires `make artifacts`.
+
+use monarch_cim::coordinator::{InferenceServer, ServerConfig};
+use monarch_cim::coordinator::batching::BatchPolicy;
+use monarch_cim::util::json::Json;
+use monarch_cim::util::rng::Pcg32;
+
+fn start_server() -> InferenceServer {
+    InferenceServer::start(ServerConfig::default())
+        .expect("server start — run `make artifacts` first")
+}
+
+#[test]
+fn serves_concurrent_requests() {
+    let server = start_server();
+    let seq = server.seq;
+    let vocab = server.vocab as u32;
+    std::thread::scope(|scope| {
+        for i in 0..24u64 {
+            let srv = &server;
+            scope.spawn(move || {
+                let mut rng = Pcg32::new(i);
+                let toks: Vec<i32> = (0..seq).map(|_| rng.below(vocab) as i32).collect();
+                let logits = srv.infer(toks).expect("inference");
+                assert_eq!(logits.len(), seq * srv.vocab);
+                assert!(logits.iter().all(|v| v.is_finite()));
+            });
+        }
+    });
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap.requests, 24);
+    assert!(snap.batches <= 24);
+    assert_eq!(snap.errors, 0);
+    server.shutdown();
+}
+
+#[test]
+fn batching_actually_groups() {
+    let server = InferenceServer::start(ServerConfig {
+        policy: BatchPolicy {
+            max_batch: 8,
+            max_delay: std::time::Duration::from_millis(30),
+        },
+        ..Default::default()
+    })
+    .expect("server start");
+    let seq = server.seq;
+    std::thread::scope(|scope| {
+        for _ in 0..16 {
+            let srv = &server;
+            scope.spawn(move || {
+                let toks = vec![1i32; seq];
+                srv.infer(toks).expect("inference");
+            });
+        }
+    });
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap.requests, 16);
+    assert!(
+        snap.mean_batch > 1.0,
+        "expected batching, got mean batch {}",
+        snap.mean_batch
+    );
+    server.shutdown();
+}
+
+#[test]
+fn server_output_matches_python_golden() {
+    let golden_text =
+        std::fs::read_to_string("artifacts/tiny_lm_golden.json").expect("golden");
+    let golden = Json::parse(&golden_text).unwrap();
+    let tokens: Vec<i32> = golden.get("tokens").unwrap().as_arr().unwrap()[0]
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|t| t.as_f64().unwrap() as i32)
+        .collect();
+    let server = start_server();
+    let logits = server.infer(tokens).expect("inference");
+    let want_sum = golden.get("logits_sum").unwrap().as_f64().unwrap();
+    let got_sum: f64 = logits.iter().map(|&v| v as f64).sum();
+    assert!(
+        (got_sum - want_sum).abs() < 1e-1 * (1.0 + want_sum.abs()),
+        "sum {got_sum} vs golden {want_sum}"
+    );
+    server.shutdown();
+}
+
+#[test]
+fn batch_identity_independent_of_batchmates() {
+    // The same request must produce the same logits whether it is alone
+    // in a batch or padded in with others.
+    let server = start_server();
+    let seq = server.seq;
+    let mut rng = Pcg32::new(99);
+    let toks: Vec<i32> = (0..seq)
+        .map(|_| rng.below(server.vocab as u32) as i32)
+        .collect();
+    let solo = server.infer(toks.clone()).unwrap();
+    // now issue it together with 7 concurrent others
+    let mut grouped = Vec::new();
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for i in 0..8u64 {
+            let srv = &server;
+            let t = if i == 0 {
+                toks.clone()
+            } else {
+                let mut r = Pcg32::new(1000 + i);
+                (0..seq).map(|_| r.below(srv.vocab as u32) as i32).collect()
+            };
+            handles.push(scope.spawn(move || srv.infer(t).unwrap()));
+        }
+        for (i, h) in handles.into_iter().enumerate() {
+            let r = h.join().unwrap();
+            if i == 0 {
+                grouped = r;
+            }
+        }
+    });
+    for (a, b) in solo.iter().zip(&grouped) {
+        assert!((a - b).abs() < 1e-4 * (1.0 + b.abs()), "{a} vs {b}");
+    }
+    server.shutdown();
+}
+
+#[test]
+fn invalid_requests_get_errors_not_hangs() {
+    let server = start_server();
+    // wrong length
+    let err = server.infer(vec![0i32; 3]).unwrap_err();
+    assert!(err.to_string().contains("invalid request"), "{err}");
+    // out-of-vocab token
+    let seq = server.seq;
+    let mut toks = vec![0i32; seq];
+    toks[0] = 1_000_000;
+    assert!(server.infer(toks).is_err());
+    // server still healthy afterwards
+    let ok = server.infer(vec![1i32; seq]);
+    assert!(ok.is_ok());
+    server.shutdown();
+}
+
+#[test]
+fn startup_fails_cleanly_without_artifacts() {
+    let cfg = ServerConfig {
+        artifacts_dir: std::path::PathBuf::from("/nonexistent/artifacts"),
+        ..Default::default()
+    };
+    let err = match InferenceServer::start(cfg) {
+        Err(e) => e,
+        Ok(_) => panic!("startup must fail without artifacts"),
+    };
+    assert!(err.to_string().contains("artifacts"), "{err}");
+}

@@ -1,0 +1,132 @@
+//! Property tests: Monarch algebra invariants (heavier case counts than
+//! the in-module tests; uses the repo's mini property harness).
+
+use monarch_cim::monarch::{
+    monarch_project, FoldedMonarch, MonarchMatrix, RectMonarch, StridePerm,
+};
+use monarch_cim::tensor::Matrix;
+use monarch_cim::util::prop::forall;
+use monarch_cim::util::rng::Pcg32;
+
+#[test]
+fn prop_projection_is_idempotent() {
+    // proj(proj(W)) == proj(W): the projection lands in the Monarch class
+    // and projecting a Monarch matrix recovers it.
+    forall("projection idempotent", 25, |g| {
+        let b = g.usize(2, 6);
+        let n = b * b;
+        let data = g.normal_vec(n * n);
+        let w = Matrix::from_vec(n, n, data);
+        let once = monarch_project(&w).to_dense();
+        let twice = monarch_project(&once).to_dense();
+        assert!(
+            twice.rel_error(&once) < 1e-3,
+            "idempotence violated: {}",
+            twice.rel_error(&once)
+        );
+    });
+}
+
+#[test]
+fn prop_projection_error_never_increases_with_structure() {
+    // Interpolating toward the Monarch class never increases error.
+    forall("error monotone in structure", 15, |g| {
+        let b = g.usize(2, 5);
+        let n = b * b;
+        let mut rng = Pcg32::new(g.usize(0, 1 << 30) as u64);
+        let m = MonarchMatrix::randn(b, &mut rng).to_dense();
+        let noise = Matrix::randn(n, n, &mut rng);
+        let err_at = |alpha: f32| {
+            let w = m.scale(1.0 - alpha).add(&noise.scale(alpha));
+            monarch_project(&w).to_dense().rel_error(&w)
+        };
+        let e_low = err_at(0.1);
+        let e_high = err_at(0.9);
+        assert!(
+            e_low <= e_high + 0.02,
+            "structure monotonicity: {e_low} vs {e_high}"
+        );
+    });
+}
+
+#[test]
+fn prop_monarch_composition_via_permutation() {
+    // y = P L P R P x computed factored == dense M @ x, across sizes.
+    forall("factored == dense", 30, |g| {
+        let b = g.usize(2, 8);
+        let mut rng = Pcg32::new(g.usize(0, 1 << 30) as u64);
+        let m = MonarchMatrix::randn(b, &mut rng);
+        let x = rng.normal_vec(m.n());
+        let got = m.matvec(&x);
+        let want = m.to_dense().matvec(&x);
+        for (a, w) in got.iter().zip(&want) {
+            assert!((a - w).abs() < 2e-3 * (1.0 + w.abs()));
+        }
+    });
+}
+
+#[test]
+fn prop_folding_preserves_operator() {
+    forall("fold == unfold", 30, |g| {
+        let b = g.usize(2, 8);
+        let mut rng = Pcg32::new(g.usize(0, 1 << 30) as u64);
+        let m = MonarchMatrix::randn(b, &mut rng);
+        let f = FoldedMonarch::from_monarch(&m);
+        let x = rng.normal_vec(m.n());
+        let a = m.matvec(&x);
+        let c = f.matvec(&x);
+        for (p, q) in a.iter().zip(&c) {
+            assert!((p - q).abs() < 2e-3 * (1.0 + q.abs()));
+        }
+    });
+}
+
+#[test]
+fn prop_permutation_group_structure() {
+    forall("P^2 = I and P orthogonal", 40, |g| {
+        let b = g.usize(1, 12);
+        let p = StridePerm::new(b);
+        // involution on indices
+        for i in 0..p.n() {
+            assert_eq!(p.map(p.map(i)), i);
+        }
+        // preserves inner products (orthogonality) on a random pair
+        let x = g.normal_vec(p.n());
+        let y = g.normal_vec(p.n());
+        let dot = |a: &[f32], c: &[f32]| -> f64 {
+            a.iter().zip(c).map(|(u, v)| (*u as f64) * (*v as f64)).sum()
+        };
+        let d1 = dot(&x, &y);
+        let d2 = dot(&p.apply(&x), &p.apply(&y));
+        assert!((d1 - d2).abs() < 1e-3 * (1.0 + d1.abs()));
+    });
+}
+
+#[test]
+fn prop_rect_tiling_matches_dense() {
+    forall("rect monarch == densified", 10, |g| {
+        let n = 16;
+        let tr = g.usize(1, 3);
+        let tc = g.usize(1, 3);
+        let mut rng = Pcg32::new(g.usize(0, 1 << 30) as u64);
+        let w = Matrix::randn(tr * n, tc * n, &mut rng);
+        let rect = RectMonarch::from_dense(&w, n);
+        let x = rng.normal_vec(tc * n);
+        let got = rect.matvec(&x);
+        let want = rect.to_dense().matvec(&x);
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 2e-3 * (1.0 + b.abs()));
+        }
+    });
+}
+
+#[test]
+fn prop_params_always_subquadratic() {
+    forall("monarch params < dense for b >= 3", 20, |g| {
+        let b = g.usize(3, 16);
+        let mut rng = Pcg32::new(1);
+        let m = MonarchMatrix::randn(b, &mut rng);
+        assert!(m.params() < m.n() * m.n());
+        assert_eq!(m.params(), 2 * b * b * b);
+    });
+}

@@ -1,0 +1,156 @@
+//! Property tests: scheduler/timing invariants — cost positivity and
+//! monotonicity, ADC policy bounds, functional-vs-schedule agreement on
+//! random geometries.
+
+use monarch_cim::cim::{adc, CimParams};
+use monarch_cim::mapping::{Factor, Strategy};
+use monarch_cim::model::ModelConfig;
+use monarch_cim::monarch::{MonarchMatrix, StridePerm};
+use monarch_cim::scheduler::timing::cost_report;
+use monarch_cim::scheduler::{adc_bits_for, usable_adcs};
+use monarch_cim::sim::exec::{single_op, FunctionalChip};
+use monarch_cim::util::prop::forall;
+use monarch_cim::util::rng::Pcg32;
+
+#[test]
+fn prop_costs_positive_and_finite() {
+    forall("costs positive", 20, |g| {
+        let model = g.choose(&[0usize, 1, 2]);
+        let cfg = ModelConfig::paper_models()[model].clone();
+        let adcs = g.choose(&[1usize, 2, 4, 8, 16, 32]);
+        let p = CimParams::default().with_adcs_per_array(adcs);
+        for s in Strategy::all() {
+            let r = cost_report(&cfg, &p, s);
+            assert!(r.latency_ms().is_finite() && r.latency_ms() > 0.0);
+            assert!(r.energy_mj().is_finite() && r.energy_mj() > 0.0);
+        }
+    });
+}
+
+#[test]
+fn prop_more_adcs_never_hurt() {
+    forall("adcs monotone", 15, |g| {
+        let cfg = ModelConfig::paper_models()[g.choose(&[0usize, 1, 2])].clone();
+        let a1 = g.usize(1, 16);
+        let a2 = a1 * 2;
+        for s in Strategy::all() {
+            let r1 = cost_report(&cfg, &CimParams::default().with_adcs_per_array(a1), s);
+            let r2 = cost_report(&cfg, &CimParams::default().with_adcs_per_array(a2), s);
+            assert!(
+                r2.latency_ms() <= r1.latency_ms() + 1e-12,
+                "{s:?}: {a2} ADCs slower than {a1}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_adc_policy_bounds() {
+    forall("adc bits within [1, ref]", 30, |g| {
+        let p = CimParams::default();
+        let b = g.usize(1, 64);
+        for s in Strategy::all() {
+            let bits = adc_bits_for(&p, s, b);
+            assert!((1..=p.adc_ref_bits).contains(&bits));
+            let u = usable_adcs(&p, s, b);
+            assert!(u >= 1 && u <= p.adcs_per_array.max(1));
+        }
+        // resolution ordering: Linear >= SparseMap >= DenseMap at the
+        // paper geometry family (b <= m)
+        if (2..=p.array_dim).contains(&b) {
+            let lin = adc_bits_for(&p, Strategy::Linear, b);
+            let sp = adc_bits_for(&p, Strategy::SparseMap, b);
+            let de = adc_bits_for(&p, Strategy::DenseMap, b);
+            assert!(lin >= sp, "linear {lin} < sparse {sp} at b={b}");
+            // dense uses m/b rows; for b <= sqrt(m) this can exceed b
+            if b * b >= p.array_dim {
+                assert!(sp >= de, "sparse {sp} < dense {de} at b={b}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_sar_scaling_linear_in_bits() {
+    forall("sar linear scaling", 20, |g| {
+        let p = CimParams::default();
+        let b1 = g.usize(1, 8) as u32;
+        let b2 = g.usize(1, 8) as u32;
+        let t1 = adc::t_conversion_ns(&p, b1);
+        let t2 = adc::t_conversion_ns(&p, b2);
+        assert!(
+            (t1 / t2 - b1 as f64 / b2 as f64).abs() < 1e-9,
+            "latency not linear in bits"
+        );
+        let e1 = adc::e_conversion_nj(&p, b1);
+        let e2 = adc::e_conversion_nj(&p, b2);
+        assert!((e1 / e2 - b1 as f64 / b2 as f64).abs() < 1e-9);
+    });
+}
+
+#[test]
+fn prop_functional_chip_correct_across_geometries() {
+    // Random (d, m) geometry: the scheduled execution always reproduces
+    // the Monarch operator.
+    forall("functional correct", 12, |g| {
+        let d = g.choose(&[16usize, 64]);
+        let b = (d as f64).sqrt() as usize;
+        let m = g.choose(&[16usize, 32, 64]);
+        if b > m {
+            return;
+        }
+        let strategy = if g.bool() {
+            Strategy::SparseMap
+        } else {
+            Strategy::DenseMap
+        };
+        let (cfg, ops) = single_op(d);
+        let mut params = CimParams::default();
+        params.array_dim = m;
+        let mut rng = Pcg32::new(g.usize(0, 1 << 30) as u64);
+        let mon = MonarchMatrix::randn(b, &mut rng);
+        let chip =
+            FunctionalChip::program(&cfg, &ops, std::slice::from_ref(&mon), &params, strategy);
+        let x = rng.normal_vec(d);
+        let got = chip.run_op(0, &x);
+        let want = mon.matvec(&x);
+        for (gv, w) in got.iter().zip(&want) {
+            assert!(
+                (gv - w).abs() < 2e-3 * (1.0 + w.abs()),
+                "{strategy:?} d={d} m={m}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_dense_stage_isolation() {
+    // Running only the R stage touches only Right placements: outputs
+    // must be independent of the L factor's values.
+    forall("stage isolation", 8, |g| {
+        let d = 64;
+        let m = 32;
+        let (cfg, ops) = single_op(d);
+        let mut params = CimParams::default();
+        params.array_dim = m;
+        let seed = g.usize(0, 1 << 30) as u64;
+        let mut rng = Pcg32::new(seed);
+        let b = cfg.monarch_b();
+        let mon1 = MonarchMatrix::randn(b, &mut rng);
+        let mut mon2 = mon1.clone();
+        // different L, same R
+        let mut rng2 = Pcg32::new(seed ^ 0xdead);
+        mon2.l = monarch_cim::monarch::BlockDiag::randn(b, b, &mut rng2);
+        let chip1 =
+            FunctionalChip::program(&cfg, &ops, std::slice::from_ref(&mon1), &params, Strategy::DenseMap);
+        let chip2 =
+            FunctionalChip::program(&cfg, &ops, std::slice::from_ref(&mon2), &params, Strategy::DenseMap);
+        let x = rng.normal_vec(d);
+        let xp = StridePerm::new(b).apply(&x);
+        let r1 = chip1.run_stage(0, Factor::Right, &xp);
+        let r2 = chip2.run_stage(0, Factor::Right, &xp);
+        for (a, c) in r1.iter().zip(&r2) {
+            assert!((a - c).abs() < 1e-6, "R stage leaked L values");
+        }
+    });
+}
