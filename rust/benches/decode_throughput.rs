@@ -1,0 +1,76 @@
+//! Bench: autoregressive decode throughput of the functional CIM chip
+//! across the three mapping strategies, plus the modeled per-token
+//! latency/energy the scheduler attributes to each (the paper's Fig. 7
+//! quantities measured in their native regime — token-by-token decode
+//! with a growing KV cache — instead of per-op matvecs).
+//!
+//! `cargo bench --bench decode_throughput`
+
+use monarch_cim::cim::CimParams;
+use monarch_cim::mapping::Strategy;
+use monarch_cim::model::ModelConfig;
+use monarch_cim::sim::decode::{DecodeEngine, DecodeModel};
+use monarch_cim::util::bench::{section, Bencher};
+
+const PROMPT: [i32; 4] = [11, 48, 85, 122];
+const TOKENS: usize = 16;
+
+fn main() {
+    let cfg = ModelConfig::tiny();
+    let params = CimParams::default();
+    let mut b = Bencher::new();
+
+    section("decode engine — functional-sim throughput (tiny model)");
+    let mut reference = DecodeEngine::reference(DecodeModel::synth(&cfg, 2025));
+    // each generate() runs prompt + generated forward passes
+    let passes = (PROMPT.len() + TOKENS) as f64;
+    let m = b
+        .bench("reference decode 16 tokens", || {
+            std::hint::black_box(reference.generate(&PROMPT, TOKENS))
+        })
+        .clone();
+    println!(
+        "  -> {:.0} simulated forward passes/s (host wall-clock)",
+        passes / (m.mean_ns * 1e-9)
+    );
+
+    for strategy in Strategy::all() {
+        let mut eng =
+            DecodeEngine::on_chip(DecodeModel::synth(&cfg, 2025), &params, strategy);
+        let m = b
+            .bench(&format!("{} decode 16 tokens", strategy.name()), || {
+                std::hint::black_box(eng.generate(&PROMPT, TOKENS))
+            })
+            .clone();
+        let r = eng.generate(&PROMPT, TOKENS);
+        let total = eng.trace.total();
+        println!(
+            "  -> {:.0} simulated forward passes/s wall | modeled chip: {:.3} µs/token, {:.1} nJ/token ({} arrays)",
+            passes / (m.mean_ns * 1e-9),
+            eng.trace.mean_token_ns() / 1e3,
+            eng.trace.mean_token_nj(),
+            eng.mapping().map(|mm| mm.arrays).unwrap_or(0),
+        );
+        println!(
+            "  -> last-token MHA share: {:.0} ns of {:.0} ns critical path (KV cache {} entries)",
+            r.per_token.last().map(|c| c.latency.mha_ns).unwrap_or(0.0),
+            r.per_token
+                .last()
+                .map(|c| c.latency.critical_ns())
+                .unwrap_or(0.0),
+            PROMPT.len() + TOKENS,
+        );
+        let _ = total;
+    }
+
+    section("chip programming cost (map + write commands)");
+    for strategy in Strategy::all() {
+        b.bench(&format!("program chip / {}", strategy.name()), || {
+            std::hint::black_box(DecodeEngine::on_chip(
+                DecodeModel::synth(&cfg, 2025),
+                &params,
+                strategy,
+            ))
+        });
+    }
+}

@@ -14,6 +14,11 @@ struct Inner {
     requests: u64,
     batches: u64,
     errors: u64,
+    /// Tokens processed by the CIM-sim backend.
+    sim_tokens: u64,
+    /// Summed *modeled* chip latency (ns) and energy (nJ) of those tokens.
+    sim_latency_ns: f64,
+    sim_energy_nj: f64,
 }
 
 /// Thread-safe metrics sink.
@@ -33,6 +38,12 @@ pub struct Snapshot {
     pub latency_p50_us: f64,
     pub latency_p99_us: f64,
     pub throughput_rps: f64,
+    /// CIM-sim backend: tokens decoded/scored on the emulated chip.
+    pub sim_tokens: u64,
+    /// CIM-sim backend: mean modeled chip latency per token (ns).
+    pub sim_token_latency_ns: f64,
+    /// CIM-sim backend: summed modeled energy (nJ).
+    pub sim_energy_nj: f64,
 }
 
 impl Metrics {
@@ -55,6 +66,15 @@ impl Metrics {
 
     pub fn record_error(&self) {
         self.inner.lock().unwrap().errors += 1;
+    }
+
+    /// Account tokens processed on the CIM-sim backend together with
+    /// their *modeled* (simulated-chip) latency and energy.
+    pub fn record_sim_tokens(&self, tokens: usize, latency_ns: f64, energy_nj: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.sim_tokens += tokens as u64;
+        g.sim_latency_ns += latency_ns;
+        g.sim_energy_nj += energy_nj;
     }
 
     pub fn snapshot(&self) -> Snapshot {
@@ -84,6 +104,13 @@ impl Metrics {
                 g.latency_us.p99()
             },
             throughput_rps: g.requests as f64 / elapsed,
+            sim_tokens: g.sim_tokens,
+            sim_token_latency_ns: if g.sim_tokens == 0 {
+                0.0
+            } else {
+                g.sim_latency_ns / g.sim_tokens as f64
+            },
+            sim_energy_nj: g.sim_energy_nj,
         }
     }
 }
@@ -113,5 +140,18 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.requests, 0);
         assert_eq!(s.latency_p50_us, 0.0);
+        assert_eq!(s.sim_tokens, 0);
+        assert_eq!(s.sim_token_latency_ns, 0.0);
+    }
+
+    #[test]
+    fn sim_token_accounting() {
+        let m = Metrics::new();
+        m.record_sim_tokens(32, 3200.0, 640.0);
+        m.record_sim_tokens(32, 6400.0, 640.0);
+        let s = m.snapshot();
+        assert_eq!(s.sim_tokens, 64);
+        assert!((s.sim_token_latency_ns - 150.0).abs() < 1e-9);
+        assert!((s.sim_energy_nj - 1280.0).abs() < 1e-9);
     }
 }

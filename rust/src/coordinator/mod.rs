@@ -1,6 +1,7 @@
 //! Layer-3 coordinator: the end-to-end framework pipeline (D2S -> map ->
-//! schedule -> simulate), the threaded batching inference server over the
-//! PJRT runtime, dynamic batching policy and serving metrics.
+//! schedule -> simulate), the threaded batching inference server with
+//! selectable execution backend (PJRT artifacts or the emulated-crossbar
+//! CIM simulator), dynamic batching policy and serving metrics.
 
 pub mod batching;
 pub mod dse;
@@ -9,4 +10,4 @@ pub mod pipeline;
 pub mod server;
 
 pub use pipeline::{run_pipeline, PipelineConfig, PipelineResult};
-pub use server::{InferenceServer, ServerConfig};
+pub use server::{Backend, CimSimConfig, InferenceServer, ServerConfig};

@@ -1,13 +1,21 @@
 //! Threaded batching inference server — the L3 request loop.
 //!
 //! Architecture (tokio-free; DESIGN.md §1): callers submit token
-//! sequences through a channel; a dedicated worker thread owns the PJRT
-//! [`Runtime`], batches requests (`batching::next_batch`), pads each
-//! batch to the nearest compiled batch bucket of the `tiny_lm_b{N}`
-//! artifacts, executes, splits the logits and answers each caller
-//! through its response channel. Python is never involved.
+//! sequences through a channel; a dedicated worker thread owns the
+//! execution backend, batches requests (`batching::next_batch`),
+//! executes, and answers each caller through its response channel.
+//!
+//! Two backends ([`Backend`]):
+//! * [`Backend::Pjrt`] — the AOT-compiled `tiny_lm_b{N}` artifacts via
+//!   the PJRT [`Runtime`]; batches are padded to the nearest compiled
+//!   batch bucket. Requires `make artifacts` and a PJRT-enabled build.
+//! * [`Backend::CimSim`] — the emulated-crossbar decode engine
+//!   (`sim::decode`): per-position logits computed on the functional
+//!   chip under a chosen mapping strategy, with modeled per-token
+//!   latency/energy fed into [`Metrics`]. Needs no artifacts — this is
+//!   the self-contained serving path of the offline image.
 
-use std::sync::mpsc::{channel, Sender};
+use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
@@ -16,14 +24,49 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use super::batching::{next_batch, pick_bucket, BatchPolicy};
 use super::metrics::Metrics;
+use crate::cim::CimParams;
+use crate::mapping::Strategy;
+use crate::model::ModelConfig;
 use crate::runtime::{literal_i32, Runtime};
+use crate::sim::decode::{DecodeEngine, DecodeModel};
 use crate::util::json::Json;
 
-/// One inference request: fixed-length token window (the tiny-LM
-/// artifact's seq) answered with per-position logits.
+/// One inference request: fixed-length token window answered with
+/// per-position logits.
 struct Request {
     tokens: Vec<i32>,
     resp: Sender<Result<Vec<f32>>>,
+}
+
+/// CIM-sim backend configuration.
+#[derive(Clone, Debug)]
+pub struct CimSimConfig {
+    pub model: ModelConfig,
+    pub strategy: Strategy,
+    pub cim: CimParams,
+    /// Weight-synthesis seed (deterministic across servers).
+    pub seed: u64,
+}
+
+impl Default for CimSimConfig {
+    fn default() -> Self {
+        Self {
+            model: ModelConfig::tiny(),
+            strategy: Strategy::DenseMap,
+            cim: CimParams::default(),
+            seed: 2025,
+        }
+    }
+}
+
+/// Execution backend of the server worker.
+#[derive(Clone, Debug, Default)]
+pub enum Backend {
+    /// PJRT-executed AOT artifacts (the original path).
+    #[default]
+    Pjrt,
+    /// Emulated crossbar chip (`sim::decode`), no artifacts needed.
+    CimSim(CimSimConfig),
 }
 
 /// Server configuration.
@@ -31,6 +74,7 @@ struct Request {
 pub struct ServerConfig {
     pub artifacts_dir: std::path::PathBuf,
     pub policy: BatchPolicy,
+    pub backend: Backend,
 }
 
 impl Default for ServerConfig {
@@ -38,6 +82,20 @@ impl Default for ServerConfig {
         Self {
             artifacts_dir: crate::runtime::default_artifacts_dir(),
             policy: BatchPolicy::default(),
+            backend: Backend::Pjrt,
+        }
+    }
+}
+
+impl ServerConfig {
+    /// Convenience: a CIM-sim server with the default tiny model.
+    pub fn cim_sim(strategy: Strategy) -> ServerConfig {
+        ServerConfig {
+            backend: Backend::CimSim(CimSimConfig {
+                strategy,
+                ..Default::default()
+            }),
+            ..Default::default()
         }
     }
 }
@@ -51,10 +109,188 @@ pub struct InferenceServer {
     pub vocab: usize,
 }
 
+/// Validate one request window against the model contract.
+fn validate(tokens: &[i32], seq: usize, vocab: usize) -> Result<()> {
+    if tokens.len() != seq || tokens.iter().any(|&t| t < 0 || t as usize >= vocab) {
+        bail!("invalid request: need {seq} tokens in [0, {vocab})");
+    }
+    Ok(())
+}
+
+/// Worker loop for the PJRT backend.
+fn run_pjrt_worker(
+    dir: std::path::PathBuf,
+    policy: BatchPolicy,
+    metrics: Arc<Metrics>,
+    rx: Receiver<Request>,
+    ready_tx: Sender<Result<(usize, usize)>>,
+) {
+    // --- startup: build runtime + discover tiny_lm buckets ---
+    let setup = (|| -> Result<(Runtime, Vec<(usize, String, usize, usize)>)> {
+        let mut runtime = Runtime::new(&dir)?;
+        let mut buckets: Vec<(usize, String, usize, usize)> = Vec::new();
+        for a in &runtime.manifest().artifacts {
+            if a.meta.get("kind").and_then(Json::as_str) == Some("tiny_lm") {
+                let batch = a
+                    .meta
+                    .get("batch")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("tiny_lm artifact missing batch"))?;
+                let seq = a.meta.get("seq").and_then(Json::as_usize).unwrap_or(0);
+                let vocab = a.meta.get("vocab").and_then(Json::as_usize).unwrap_or(0);
+                buckets.push((batch, a.name.clone(), seq, vocab));
+            }
+        }
+        if buckets.is_empty() {
+            bail!("no tiny_lm artifacts in manifest — run `make artifacts`");
+        }
+        buckets.sort();
+        // eager compile so first-request latency is steady-state
+        for (_, name, _, _) in &buckets {
+            runtime.load(name).context("precompiling artifact")?;
+        }
+        Ok((runtime, buckets))
+    })();
+    let (mut runtime, buckets) = match setup {
+        Ok((r, b)) => {
+            let _ = ready_tx.send(Ok((b[0].2, b[0].3)));
+            (r, b)
+        }
+        Err(e) => {
+            let _ = ready_tx.send(Err(e));
+            return;
+        }
+    };
+    let seq = buckets[0].2;
+    let vocab = buckets[0].3;
+    let sizes: Vec<usize> = buckets.iter().map(|b| b.0).collect();
+    while let Some(batch) = next_batch(&rx, &policy) {
+        // process in bucket-sized chunks (a linger window can collect
+        // more than the largest compiled batch size)
+        let mut remaining: &[Request] = &batch;
+        while !remaining.is_empty() {
+            let t0 = Instant::now();
+            let n = remaining.len();
+            let bucket = pick_bucket(&sizes, n).unwrap_or(*sizes.last().unwrap());
+            let take = n.min(bucket);
+            let (now, rest) = remaining.split_at(take);
+            remaining = rest;
+            let artifact = &buckets.iter().find(|b| b.0 == bucket).unwrap().1;
+            // assemble padded token matrix; O(1) membership mask instead
+            // of a per-reply linear scan over a bad-index list
+            let mut toks = vec![0i32; bucket * seq];
+            let mut bad = vec![false; take];
+            for (i, r) in now.iter().enumerate() {
+                if validate(&r.tokens, seq, vocab).is_err() {
+                    bad[i] = true;
+                    continue;
+                }
+                toks[i * seq..(i + 1) * seq].copy_from_slice(&r.tokens);
+            }
+            let result = literal_i32(&toks, &[bucket, seq])
+                .and_then(|lit| runtime.execute_f32(artifact, &[lit]));
+            match result {
+                Ok(logits) => {
+                    // record before replying so snapshots taken by a
+                    // caller right after its reply see this batch
+                    metrics.record_batch(take, t0.elapsed().as_micros() as f64);
+                    let per_row = seq * vocab;
+                    for (i, r) in now.iter().enumerate() {
+                        let reply = if bad[i] {
+                            metrics.record_error();
+                            Err(anyhow!(
+                                "invalid request: need {seq} tokens in [0, {vocab})"
+                            ))
+                        } else {
+                            Ok(logits[i * per_row..(i + 1) * per_row].to_vec())
+                        };
+                        let _ = r.resp.send(reply);
+                    }
+                }
+                Err(e) => {
+                    metrics.record_error();
+                    for r in now {
+                        let _ = r.resp.send(Err(anyhow!("execution failed: {e}")));
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Worker loop for the CIM-sim backend: one decode engine owned by the
+/// worker thread scores each request window position by position on the
+/// emulated chip.
+fn run_cimsim_worker(
+    cfg: CimSimConfig,
+    policy: BatchPolicy,
+    metrics: Arc<Metrics>,
+    rx: Receiver<Request>,
+    ready_tx: Sender<Result<(usize, usize)>>,
+) {
+    let setup = (|| -> Result<DecodeEngine> {
+        if cfg.model.enc_layers != 0 || cfg.model.dec_layers == 0 {
+            bail!(
+                "CIM-sim backend needs a decoder-only model, got {}",
+                cfg.model.name
+            );
+        }
+        let b = (cfg.model.d_model as f64).sqrt().round() as usize;
+        if b * b != cfg.model.d_model || b > cfg.cim.array_dim {
+            bail!(
+                "model d_model {} incompatible with array dim {}",
+                cfg.model.d_model,
+                cfg.cim.array_dim
+            );
+        }
+        let model = DecodeModel::synth(&cfg.model, cfg.seed);
+        Ok(DecodeEngine::on_chip(model, &cfg.cim, cfg.strategy))
+    })();
+    let mut engine = match setup {
+        Ok(e) => {
+            let _ = ready_tx.send(Ok((cfg.model.seq, cfg.model.vocab)));
+            e
+        }
+        Err(e) => {
+            let _ = ready_tx.send(Err(e));
+            return;
+        }
+    };
+    let (seq, vocab) = (cfg.model.seq, cfg.model.vocab);
+    while let Some(batch) = next_batch(&rx, &policy) {
+        let t0 = Instant::now();
+        let mut replies = Vec::with_capacity(batch.len());
+        for r in &batch {
+            replies.push(match validate(&r.tokens, seq, vocab) {
+                Err(e) => {
+                    metrics.record_error();
+                    Err(e)
+                }
+                Ok(()) => {
+                    let (logits, cost) = engine.score(&r.tokens);
+                    metrics.record_sim_tokens(
+                        seq,
+                        cost.latency.critical_ns(),
+                        cost.energy.total_nj(),
+                    );
+                    Ok(logits)
+                }
+            });
+        }
+        // record before replying so snapshots taken by a caller right
+        // after its reply see this batch (same invariant as the PJRT
+        // worker — callers assert on counters immediately after infer)
+        metrics.record_batch(batch.len(), t0.elapsed().as_micros() as f64);
+        for (r, reply) in batch.iter().zip(replies) {
+            let _ = r.resp.send(reply);
+        }
+    }
+}
+
 impl InferenceServer {
-    /// Start the worker thread (loads + compiles artifacts eagerly).
+    /// Start the worker thread (loads + compiles the backend eagerly).
     ///
-    /// The PJRT client is not `Send`, so the [`Runtime`] is constructed
+    /// The PJRT client is not `Send`, so the backend is constructed
     /// *inside* the worker thread; readiness (or the startup error) is
     /// reported back through a one-shot channel.
     pub fn start(cfg: ServerConfig) -> Result<InferenceServer> {
@@ -63,106 +299,17 @@ impl InferenceServer {
         let (tx, rx) = channel::<Request>();
         let (ready_tx, ready_rx) = channel::<Result<(usize, usize)>>();
         let policy = cfg.policy.clone();
-        let dir = cfg.artifacts_dir.clone();
-        let worker = std::thread::spawn(move || {
-            // --- startup: build runtime + discover tiny_lm buckets ---
-            let setup = (|| -> Result<(Runtime, Vec<(usize, String, usize, usize)>)> {
-                let mut runtime = Runtime::new(&dir)?;
-                let mut buckets: Vec<(usize, String, usize, usize)> = Vec::new();
-                for a in &runtime.manifest().artifacts {
-                    if a.meta.get("kind").and_then(Json::as_str) == Some("tiny_lm") {
-                        let batch = a
-                            .meta
-                            .get("batch")
-                            .and_then(Json::as_usize)
-                            .ok_or_else(|| anyhow!("tiny_lm artifact missing batch"))?;
-                        let seq = a.meta.get("seq").and_then(Json::as_usize).unwrap_or(0);
-                        let vocab =
-                            a.meta.get("vocab").and_then(Json::as_usize).unwrap_or(0);
-                        buckets.push((batch, a.name.clone(), seq, vocab));
-                    }
-                }
-                if buckets.is_empty() {
-                    bail!("no tiny_lm artifacts in manifest — run `make artifacts`");
-                }
-                buckets.sort();
-                // eager compile so first-request latency is steady-state
-                for (_, name, _, _) in &buckets {
-                    runtime.load(name).context("precompiling artifact")?;
-                }
-                Ok((runtime, buckets))
-            })();
-            let (mut runtime, buckets) = match setup {
-                Ok((r, b)) => {
-                    let _ = ready_tx.send(Ok((b[0].2, b[0].3)));
-                    (r, b)
-                }
-                Err(e) => {
-                    let _ = ready_tx.send(Err(e));
-                    return;
-                }
-            };
-            let seq = buckets[0].2;
-            let vocab = buckets[0].3;
-            let sizes: Vec<usize> = buckets.iter().map(|b| b.0).collect();
-            while let Some(batch) = next_batch(&rx, &policy) {
-                // process in bucket-sized chunks (a linger window can
-                // collect more than the largest compiled batch size)
-                let mut remaining: &[Request] = &batch;
-                while !remaining.is_empty() {
-                    let t0 = Instant::now();
-                    let n = remaining.len();
-                    let bucket =
-                        pick_bucket(&sizes, n).unwrap_or(*sizes.last().unwrap());
-                    let take = n.min(bucket);
-                    let (now, rest) = remaining.split_at(take);
-                    remaining = rest;
-                    let artifact =
-                        &buckets.iter().find(|b| b.0 == bucket).unwrap().1;
-                    // assemble padded token matrix
-                    let mut toks = vec![0i32; bucket * seq];
-                    let mut bad: Vec<usize> = Vec::new();
-                    for (i, r) in now.iter().enumerate() {
-                        if r.tokens.len() != seq
-                            || r.tokens.iter().any(|&t| t < 0 || t as usize >= vocab)
-                        {
-                            bad.push(i);
-                            continue;
-                        }
-                        toks[i * seq..(i + 1) * seq].copy_from_slice(&r.tokens);
-                    }
-                    let result = literal_i32(&toks, &[bucket, seq])
-                        .and_then(|lit| runtime.execute_f32(artifact, &[lit]));
-                    match result {
-                        Ok(logits) => {
-                            // record before replying so snapshots taken by a
-                            // caller right after its reply see this batch
-                            metrics_w
-                                .record_batch(take, t0.elapsed().as_micros() as f64);
-                            let per_row = seq * vocab;
-                            for (i, r) in now.iter().enumerate() {
-                                let reply = if bad.contains(&i) {
-                                    metrics_w.record_error();
-                                    Err(anyhow!(
-                                        "invalid request: need {seq} tokens in [0, {vocab})"
-                                    ))
-                                } else {
-                                    Ok(logits[i * per_row..(i + 1) * per_row].to_vec())
-                                };
-                                let _ = r.resp.send(reply);
-                            }
-                        }
-                        Err(e) => {
-                            metrics_w.record_error();
-                            for r in now {
-                                let _ =
-                                    r.resp.send(Err(anyhow!("execution failed: {e}")));
-                            }
-                        }
-                    }
-                }
+        let worker = match cfg.backend {
+            Backend::Pjrt => {
+                let dir = cfg.artifacts_dir.clone();
+                std::thread::spawn(move || {
+                    run_pjrt_worker(dir, policy, metrics_w, rx, ready_tx)
+                })
             }
-        });
+            Backend::CimSim(sim_cfg) => std::thread::spawn(move || {
+                run_cimsim_worker(sim_cfg, policy, metrics_w, rx, ready_tx)
+            }),
+        };
 
         let (seq, vocab) = ready_rx
             .recv()

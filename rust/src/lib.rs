@@ -33,3 +33,4 @@ pub mod scheduler;
 pub mod sim;
 pub mod tensor;
 pub mod util;
+pub mod xla;

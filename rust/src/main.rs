@@ -7,7 +7,11 @@
 //!   dense matrix and report the Frobenius error.
 //! * `map --model M --strategy S` — mapping statistics (Fig. 6 row).
 //! * `simulate --model M --strategy S [--adcs N]` — latency/energy.
-//! * `serve [--requests N]` — batching-server demo over PJRT artifacts.
+//! * `decode [--model tiny] [--strategy all] [--tokens 32]` — greedy
+//!   autoregressive generation on the emulated CIM chip with per-token
+//!   latency/energy, cross-checked against the factored reference model.
+//! * `serve [--requests N] [--backend pjrt|cim-sim]` — batching-server
+//!   demo (PJRT artifacts, or the CIM-sim backend with no artifacts).
 //! * `e2e` — pipeline + runtime round-trip summary.
 
 use monarch_cim::cim::CimParams;
@@ -29,7 +33,10 @@ fn usage() -> ! {
            d2s      [--d 1024] [--noise 0.02] [--seed N]\n\
            map      [--model bert|bart|gpt2] [--strategy linear|sparse|dense]\n\
            simulate [--model ...] [--strategy ...] [--adcs N]\n\
-           serve    [--requests 64] [--artifacts DIR]\n\
+           decode   [--model tiny] [--strategy all|linear|sparse|dense]\n\
+                    [--tokens 32] [--prompt 4] [--seed 2025] [--adcs N]\n\
+           serve    [--requests 64] [--artifacts DIR] [--backend pjrt|cim-sim]\n\
+                    [--strategy dense]\n\
            dse      [--model ...] [--adcs 1,4,8,16,32] [--budget N]\n\
            e2e      [--artifacts DIR]"
     );
@@ -44,6 +51,7 @@ fn main() {
         "d2s" => cmd_d2s(&args),
         "map" => cmd_map(&args),
         "simulate" => cmd_simulate(&args),
+        "decode" => cmd_decode(&args),
         "serve" => cmd_serve(&args),
         "dse" => cmd_dse(&args),
         "e2e" => cmd_e2e(&args),
@@ -195,13 +203,137 @@ fn cmd_simulate(args: &Args) {
     );
 }
 
+fn cmd_decode(args: &Args) {
+    use monarch_cim::sim::decode::{DecodeEngine, DecodeModel};
+    let cfg = model_of_decoder(args);
+    let n_tokens = args.usize_or("tokens", 32);
+    let prompt_len = args.usize_or("prompt", 4).max(1);
+    let seed = args.usize_or("seed", 2025) as u64;
+    let mut cim = CimParams::default();
+    if args.has("adcs") {
+        cim = cim.with_adcs_per_array(args.usize_or("adcs", 1));
+    }
+    let strategies: Vec<Strategy> = match args.str_or("strategy", "all").as_str() {
+        "all" => Strategy::all().to_vec(),
+        s => vec![Strategy::by_name(s).unwrap_or_else(|| {
+            eprintln!("unknown strategy '{s}' (all|linear|sparse|dense)");
+            std::process::exit(2);
+        })],
+    };
+    let prompt: Vec<i32> = (0..prompt_len)
+        .map(|i| ((i * 37 + 11) % cfg.vocab) as i32)
+        .collect();
+
+    println!(
+        "autoregressive decode: {} ({} layers, d={}, vocab={}), prompt {:?}, {} tokens",
+        cfg.name, cfg.dec_layers, cfg.d_model, cfg.vocab, prompt, n_tokens
+    );
+    if prompt_len + n_tokens > cfg.seq {
+        println!(
+            "note: {} positions exceed the model's context window (seq={}); \
+             positional embeddings clamp at position {} beyond it",
+            prompt_len + n_tokens,
+            cfg.seq,
+            cfg.seq - 1
+        );
+    }
+    let mut reference = DecodeEngine::reference(DecodeModel::synth(&cfg, seed));
+    let golden = reference.generate(&prompt, n_tokens);
+    println!("reference (factored Monarch matvec): {:?}", golden.tokens);
+
+    for strategy in strategies {
+        let mut eng = DecodeEngine::on_chip(DecodeModel::synth(&cfg, seed), &cim, strategy);
+        let t0 = std::time::Instant::now();
+        let r = eng.generate(&prompt, n_tokens);
+        let wall = t0.elapsed();
+        let mapping_arrays = eng.mapping().map(|m| m.arrays).unwrap_or(0);
+        let total = eng.trace.total();
+        println!(
+            "\n{} — {} arrays, {} generated tokens in {:.2?} wall ({} chip passes modeled):",
+            strategy.name(),
+            mapping_arrays,
+            r.tokens.len(),
+            wall,
+            r.per_token.len(),
+        );
+        println!("  tokens: {:?}", r.tokens);
+        println!("  tok  latency(µs)  energy(nJ)   mha(ns)");
+        for (i, c) in r.per_token.iter().enumerate().skip(prompt_len) {
+            println!(
+                "  {:>3}  {:>11.3}  {:>10.1}  {:>8.0}",
+                i - prompt_len,
+                c.latency.critical_ns() / 1e3,
+                c.energy.total_nj(),
+                c.latency.mha_ns,
+            );
+        }
+        println!(
+            "  totals: {:.3} µs latency, {:.1} nJ energy, mean {:.3} µs/token",
+            total.latency.critical_ns() / 1e3,
+            total.energy.total_nj(),
+            eng.trace.mean_token_ns() / 1e3,
+        );
+        // numeric agreement vs the reference model over the same window
+        let window: Vec<i32> = prompt.iter().chain(&r.tokens).copied().collect();
+        let (chip_logits, _) = eng.score(&window);
+        let (ref_logits, _) = reference.score(&window);
+        let max_diff = chip_logits
+            .iter()
+            .zip(&ref_logits)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        let tokens_match = r.tokens == golden.tokens;
+        println!(
+            "  vs reference: tokens {} | max |logit diff| = {:.3e} {}",
+            if tokens_match { "IDENTICAL" } else { "MISMATCH" },
+            max_diff,
+            if strategy == Strategy::Linear {
+                "(dense baseline: float-tolerance expected)"
+            } else if max_diff <= 1e-5 {
+                "(<= 1e-5 OK)"
+            } else {
+                "(EXCEEDS 1e-5)"
+            },
+        );
+    }
+}
+
+fn model_of_decoder(args: &Args) -> ModelConfig {
+    let name = args.str_or("model", "tiny");
+    let cfg = ModelConfig::by_name(&name).unwrap_or_else(|| {
+        eprintln!("unknown model '{name}' (tiny|gpt2)");
+        std::process::exit(2);
+    });
+    if cfg.enc_layers != 0 || cfg.dec_layers == 0 {
+        eprintln!("decode needs a decoder-only model; '{name}' is not");
+        std::process::exit(2);
+    }
+    cfg
+}
+
 fn cmd_serve(args: &Args) {
     let n = args.usize_or("requests", 64);
     let mut cfg = ServerConfig::default();
     if let Some(dir) = args.get("artifacts") {
         cfg.artifacts_dir = dir.into();
     }
-    println!("starting batching inference server (PJRT CPU)...");
+    let backend_name = args.str_or("backend", "pjrt");
+    match backend_name.as_str() {
+        "pjrt" => {}
+        "cim-sim" | "cimsim" | "sim" => {
+            let name = args.str_or("strategy", "dense");
+            let strategy = Strategy::by_name(&name).unwrap_or_else(|| {
+                eprintln!("unknown strategy '{name}' (linear|sparse|dense)");
+                std::process::exit(2);
+            });
+            cfg = ServerConfig::cim_sim(strategy);
+        }
+        other => {
+            eprintln!("unknown backend '{other}' (pjrt|cim-sim)");
+            std::process::exit(2);
+        }
+    }
+    println!("starting batching inference server ({backend_name})...");
     let server = match InferenceServer::start(cfg) {
         Ok(s) => s,
         Err(e) => {
@@ -230,6 +362,14 @@ fn cmd_serve(args: &Args) {
         "served {} requests in {:.2?}: {:.1} req/s, mean batch {:.2}, p50 {:.1} µs, p99 {:.1} µs, errors {}",
         s.requests, elapsed, s.throughput_rps, s.mean_batch, s.latency_p50_us, s.latency_p99_us, s.errors
     );
+    if s.sim_tokens > 0 {
+        println!(
+            "cim-sim chip model: {} tokens, {:.3} µs/token latency, {:.2} µJ total energy",
+            s.sim_tokens,
+            s.sim_token_latency_ns / 1e3,
+            s.sim_energy_nj / 1e3
+        );
+    }
     server.shutdown();
 }
 

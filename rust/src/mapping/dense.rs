@@ -285,6 +285,8 @@ pub fn map(cfg: &ModelConfig, ops: &[MatmulOp], params: &CimParams) -> ModelMapp
         mapped_ops.push(MappedOp {
             name: op.name.clone(),
             layer: op.layer,
+            rows: op.rows,
+            cols: op.cols,
             tiles,
             stage_arrays,
             arrays: std::mem::take(&mut op_array_sets[oi]),

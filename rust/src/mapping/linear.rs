@@ -43,6 +43,8 @@ pub fn map(cfg: &ModelConfig, ops: &[MatmulOp], params: &CimParams) -> ModelMapp
         mapped_ops.push(MappedOp {
             name: op.name.clone(),
             layer: op.layer,
+            rows: op.rows,
+            cols: op.cols,
             tiles: row_parts * col_parts,
             arrays,
             stage_arrays,

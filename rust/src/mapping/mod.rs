@@ -99,6 +99,10 @@ pub struct Placement {
 pub struct MappedOp {
     pub name: String,
     pub layer: usize,
+    /// Weight rows (output features) of the original matmul.
+    pub rows: usize,
+    /// Weight cols (input features) of the original matmul.
+    pub cols: usize,
     /// d x d tiles (rectangular partition of the weight).
     pub tiles: usize,
     /// Arrays whose placements belong to this op.

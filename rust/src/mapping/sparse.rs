@@ -59,6 +59,8 @@ pub fn map(cfg: &ModelConfig, ops: &[MatmulOp], params: &CimParams) -> ModelMapp
         mapped_ops.push(MappedOp {
             name: op.name.clone(),
             layer: op.layer,
+            rows: op.rows,
+            cols: op.cols,
             tiles,
             stage_arrays: tiles * arrays_per_factor,
             arrays,

@@ -16,6 +16,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::monarch::{BlockDiag, MonarchMatrix};
 use crate::tensor::Matrix;
 use crate::util::json::Json;
+use crate::xla;
 
 /// Tensor spec of one artifact input/output.
 #[derive(Clone, Debug, PartialEq)]

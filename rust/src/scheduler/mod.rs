@@ -54,6 +54,65 @@ pub fn placement_block_coords(p: &Placement, m: usize) -> Vec<(usize, usize)> {
         .collect()
 }
 
+/// One analog pass: the rows to drive and the columns to convert.
+/// `rows[k]` carries element `k` of the placement's input segment, and
+/// `cols[k]` yields element `k` of its (pre-routing) output segment.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AnalogPass {
+    pub rows: Vec<usize>,
+    pub cols: Vec<usize>,
+}
+
+/// Scheduler-issued execution plan for one placement's per-token work:
+/// the ordered analog passes plus the block rotation the router must
+/// undo afterwards (§III-B2a lane de-rotation).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlacementSchedule {
+    pub array: usize,
+    pub passes: Vec<AnalogPass>,
+    pub rotation: usize,
+}
+
+/// Build the activation schedule for one placement.
+///
+/// * `dense_walk = false` — whole-lane pass: drive every block's rows at
+///   once, convert every block's columns, route by `diag`. Correct for
+///   SparseMap/Linear (row- and column-disjoint blocks).
+/// * `dense_walk = true` — the §III-C DenseMap walk: one pass per block-
+///   row group (other co-resident lanes stay quiescent), converting only
+///   that block's column group; outputs come out pre-aligned
+///   (rotation 0) because the walk follows the diagonal.
+pub fn placement_schedule(p: &Placement, m: usize, dense_walk: bool) -> PlacementSchedule {
+    let b = p.block_dim.min(m);
+    let coords = placement_block_coords(p, m);
+    if dense_walk && p.factor != Factor::Dense {
+        let passes = coords
+            .iter()
+            .map(|&(r0, c0)| AnalogPass {
+                rows: (r0..r0 + b).collect(),
+                cols: (c0..c0 + b).collect(),
+            })
+            .collect();
+        PlacementSchedule {
+            array: p.array,
+            passes,
+            rotation: 0,
+        }
+    } else {
+        let mut rows = Vec::new();
+        let mut cols = Vec::new();
+        for &(r0, c0) in &coords {
+            rows.extend(r0..r0 + b);
+            cols.extend(c0..c0 + b);
+        }
+        PlacementSchedule {
+            array: p.array,
+            passes: vec![AnalogPass { rows, cols }],
+            rotation: p.diag,
+        }
+    }
+}
+
 /// Generate the per-token command stream to execute one placement's
 /// analog pass: activate exactly the rows its blocks occupy, convert
 /// exactly the columns they drive, then route the rotated output.
@@ -62,26 +121,77 @@ pub fn commands_for_placement(
     m: usize,
     bits: u32,
 ) -> Vec<CimCommand> {
-    let b = p.block_dim;
-    let coords = placement_block_coords(p, m);
-    let mut rows = Vec::new();
-    let mut cols = Vec::new();
-    for &(r0, c0) in &coords {
-        rows.extend(r0..r0 + b);
-        cols.extend(c0..c0 + b);
-    }
-    vec![
-        CimCommand::DriveRows {
-            array: p.array,
-            rows,
-        },
-        CimCommand::Convert {
-            array: p.array,
-            cols,
+    placement_pass_commands(p, m, bits, false)
+}
+
+/// Command form of [`placement_schedule`]: a `DriveRows`/`Convert` pair
+/// per analog pass, closed by the `Route` realignment.
+pub fn placement_pass_commands(
+    p: &Placement,
+    m: usize,
+    bits: u32,
+    dense_walk: bool,
+) -> Vec<CimCommand> {
+    let sched = placement_schedule(p, m, dense_walk);
+    let mut out = Vec::with_capacity(2 * sched.passes.len() + 1);
+    for pass in &sched.passes {
+        out.push(CimCommand::DriveRows {
+            array: sched.array,
+            rows: pass.rows.clone(),
+        });
+        out.push(CimCommand::Convert {
+            array: sched.array,
+            cols: pass.cols.clone(),
             bits,
-        },
-        CimCommand::Route { rotation: p.diag },
-    ]
+        });
+    }
+    out.push(CimCommand::Route {
+        rotation: sched.rotation,
+    });
+    out
+}
+
+/// Per-token command stream over the WHOLE mapped model: layers in
+/// order, dependency slots in order (`timing::layer_slots`), the Right
+/// factor's placements before the Left's (Monarch stage order), with
+/// one `ShiftAdd` per column-partition partial-sum combine. The decode
+/// engine's executor consumes the same per-placement schedules
+/// ([`placement_schedule`]) this stream is built from; the stream
+/// itself is the auditable command-level view (property-tested against
+/// the placements in `tests/prop_scheduler.rs`).
+pub fn token_commands(
+    mapping: &ModelMapping,
+    params: &crate::cim::CimParams,
+) -> Vec<CimCommand> {
+    let bits = adc_bits_for(params, mapping.strategy, mapping.b);
+    let dense_walk = mapping.strategy == Strategy::DenseMap;
+    let mut out = Vec::new();
+    let layers: std::collections::BTreeSet<usize> =
+        mapping.ops.iter().map(|o| o.layer).collect();
+    for layer in layers {
+        for slot in timing::layer_slots(mapping, layer) {
+            for &oi in &slot {
+                for factor in [Factor::Right, Factor::Left, Factor::Dense] {
+                    for p in mapping
+                        .placements
+                        .iter()
+                        .filter(|p| p.op == oi && p.factor == factor)
+                    {
+                        out.extend(placement_pass_commands(p, mapping.m, bits, dense_walk));
+                    }
+                }
+                let op = &mapping.ops[oi];
+                if let Some(&a) = op.arrays.first() {
+                    // one accumulate per column-partition combine, matching
+                    // the partial_adds the timing model charges for
+                    for _ in 0..op.partial_adds {
+                        out.push(CimCommand::ShiftAdd { array: a });
+                    }
+                }
+            }
+        }
+    }
+    out
 }
 
 /// Program-time command stream: one `WriteArray` per placed block.
@@ -184,6 +294,54 @@ mod tests {
         diags.sort_unstable();
         diags.dedup();
         assert_eq!(diags.len(), same_array.len());
+    }
+
+    #[test]
+    fn placement_schedule_walk_vs_whole_lane() {
+        let cfg = ModelConfig::tiny();
+        let p = CimParams::default();
+        let mm = map_model(&cfg, &p, Strategy::DenseMap);
+        let pl = &mm.placements[0];
+        let whole = placement_schedule(pl, mm.m, false);
+        assert_eq!(whole.passes.len(), 1);
+        assert_eq!(whole.rotation, pl.diag);
+        assert_eq!(whole.passes[0].rows.len(), pl.blocks * mm.b);
+        let walk = placement_schedule(pl, mm.m, true);
+        assert_eq!(walk.passes.len(), pl.blocks);
+        assert_eq!(walk.rotation, 0, "walk outputs come out pre-aligned");
+        for pass in &walk.passes {
+            assert_eq!(pass.rows.len(), mm.b);
+            assert_eq!(pass.cols.len(), mm.b);
+        }
+        // the walk covers exactly the whole-lane row set
+        let mut walk_rows: Vec<usize> =
+            walk.passes.iter().flat_map(|p| p.rows.clone()).collect();
+        let mut whole_rows = whole.passes[0].rows.clone();
+        walk_rows.sort_unstable();
+        whole_rows.sort_unstable();
+        assert_eq!(walk_rows, whole_rows);
+    }
+
+    #[test]
+    fn token_commands_cover_every_op() {
+        let cfg = ModelConfig::tiny();
+        let p = CimParams::default();
+        for strategy in Strategy::all() {
+            let mm = map_model(&cfg, &p, strategy);
+            let cmds = token_commands(&mm, &p);
+            // every op's every placement contributes at least one drive
+            let drives = cmds
+                .iter()
+                .filter(|c| matches!(c, CimCommand::DriveRows { .. }))
+                .count();
+            let min_expected = mm.placements.len();
+            assert!(
+                drives >= min_expected,
+                "{strategy:?}: {drives} drives < {min_expected} placements"
+            );
+            // stream replays identically (pure function of the mapping)
+            assert_eq!(cmds, token_commands(&mm, &p));
+        }
     }
 
     #[test]

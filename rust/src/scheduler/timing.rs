@@ -59,8 +59,10 @@ impl CostReport {
 
 /// Dependency slots of one transformer layer's parameterized matmuls.
 /// Returns groups of op indices (into `mapping.ops`) that run in
-/// parallel; groups execute sequentially.
-fn layer_slots(mapping: &ModelMapping, layer: usize) -> Vec<Vec<usize>> {
+/// parallel; groups execute sequentially. Public: the per-token command
+/// stream (`scheduler::token_commands`) and the decode engine replay the
+/// same slot order.
+pub fn layer_slots(mapping: &ModelMapping, layer: usize) -> Vec<Vec<usize>> {
     let mut qkv = Vec::new();
     let mut wo = Vec::new();
     let mut xqkv = Vec::new();

@@ -1,0 +1,502 @@
+//! Autoregressive decode engine: a full decoder-only transformer forward
+//! pass, token by token with a growing KV cache, whose *parameterized*
+//! matmuls run on the emulated crossbar chip ([`FunctionalChip`]) under
+//! any of the three mapping strategies — the workload the paper actually
+//! measures (Fig. 7/8's token-streaming decode regime), not an isolated
+//! matvec.
+//!
+//! Split of responsibilities (paper Fig. 2b):
+//! * **Para ops** (`wq/wk/wv/wo/ffn1/ffn2`) — weight-stationary in CIM
+//!   arrays; executed by `FunctionalChip::run_op` with scheduler-issued
+//!   row-activation masks, lane de-rotation and stride permutations.
+//! * **NonPara ops** (attention scores `qk` and context `av`) — digital,
+//!   on the MHA unit: computed here in f32 against the KV cache; their
+//!   cost is `trace::mha_token_cost` (grows with the cache).
+//! * Everything else (LayerNorm, GeLU, residuals, embedding/LM head) —
+//!   DPU vector ops, identical across backends.
+//!
+//! Because the chip's Monarch passes replay the factored reference's f32
+//! operations in the same order, SparseMap/DenseMap decode is
+//! bit-identical to the [`RectMonarch`] reference model; Linear programs
+//! the *dense materialization* of the same operator and agrees to float
+//! tolerance — so greedy token sequences match across all three
+//! strategies (tier-1 `tests/integration_decode.rs`).
+
+use std::collections::HashMap;
+
+use crate::cim::{CimParams, Cost};
+use crate::mapping::Strategy;
+use crate::model::{para_ops, MatmulOp, ModelConfig};
+use crate::monarch::{MonarchMatrix, RectMonarch};
+use crate::sim::exec::FunctionalChip;
+use crate::sim::trace::{decode_token_cost, DecodeTrace};
+use crate::tensor::Matrix;
+use crate::util::rng::Pcg32;
+
+/// Parameterized-op indices of one decoder layer (into the para-op list).
+#[derive(Clone, Copy, Debug)]
+struct LayerOps {
+    wq: usize,
+    wk: usize,
+    wv: usize,
+    wo: usize,
+    ffn1: usize,
+    ffn2: usize,
+}
+
+/// A synthetic Monarch decoder-only transformer: every Para weight is a
+/// tile grid of Monarch factors (deterministically seeded), plus token
+/// embeddings, learned positional embeddings and an untied LM head (a
+/// tied head makes a random-weight model echo its input token forever —
+/// untied gives non-degenerate greedy sequences, with comfortable
+/// argmax margins, ~0.01 at the tiny config).
+pub struct DecodeModel {
+    pub cfg: ModelConfig,
+    pub ops: Vec<MatmulOp>,
+    pub weights: Vec<RectMonarch>,
+    /// Token embedding table (vocab x d).
+    pub embedding: Matrix,
+    /// Learned positional embeddings (seq x d).
+    pub positional: Matrix,
+    /// Untied LM head (vocab x d).
+    pub lm_head: Matrix,
+    layers: Vec<LayerOps>,
+}
+
+/// Variance-preserving random Monarch tile (factors scaled by 1/sqrt(b)).
+fn scaled_monarch(b: usize, rng: &mut Pcg32) -> MonarchMatrix {
+    let mut m = MonarchMatrix::randn(b, rng);
+    let s = 1.0 / (b as f32).sqrt();
+    for v in m.l.data.iter_mut() {
+        *v *= s;
+    }
+    for v in m.r.data.iter_mut() {
+        *v *= s;
+    }
+    m
+}
+
+impl DecodeModel {
+    /// Deterministically synthesize weights for a decoder-only config.
+    pub fn synth(cfg: &ModelConfig, seed: u64) -> DecodeModel {
+        assert_eq!(
+            cfg.enc_layers, 0,
+            "decode engine targets decoder-only models (got {})",
+            cfg.name
+        );
+        assert!(cfg.dec_layers > 0, "model has no decoder layers");
+        let d = cfg.d_model;
+        let b = cfg.monarch_b();
+        let ops = para_ops(cfg);
+        let weights: Vec<RectMonarch> = ops
+            .iter()
+            .enumerate()
+            .map(|(i, op)| {
+                let mut rng = Pcg32::stream(seed, i as u64);
+                let tiles = op.rows.div_ceil(d) * op.cols.div_ceil(d);
+                RectMonarch {
+                    rows: op.rows,
+                    cols: op.cols,
+                    n: d,
+                    tiles: (0..tiles).map(|_| scaled_monarch(b, &mut rng)).collect(),
+                }
+            })
+            .collect();
+        let by_name: HashMap<&str, usize> = ops
+            .iter()
+            .enumerate()
+            .map(|(i, op)| (op.name.as_str(), i))
+            .collect();
+        let layers = (0..cfg.dec_layers)
+            .map(|l| {
+                let idx = |w: &str| -> usize {
+                    *by_name
+                        .get(format!("dec{l}.{w}").as_str())
+                        .unwrap_or_else(|| panic!("missing op dec{l}.{w}"))
+                };
+                LayerOps {
+                    wq: idx("wq"),
+                    wk: idx("wk"),
+                    wv: idx("wv"),
+                    wo: idx("wo"),
+                    ffn1: idx("ffn1"),
+                    ffn2: idx("ffn2"),
+                }
+            })
+            .collect();
+        DecodeModel {
+            cfg: cfg.clone(),
+            ops,
+            weights,
+            embedding: Matrix::randn(cfg.vocab, d, &mut Pcg32::stream(seed, 0x5eed)),
+            positional: Matrix::randn(cfg.seq, d, &mut Pcg32::stream(seed, 0x905e)).scale(0.1),
+            lm_head: Matrix::randn(cfg.vocab, d, &mut Pcg32::stream(seed, 0xeadd)),
+            layers,
+        }
+    }
+
+    /// Reference Para matmul (`y = W x`) through the factored tiles.
+    pub fn reference_matvec(&self, op_idx: usize, x: &[f32]) -> Vec<f32> {
+        self.weights[op_idx].matvec(x)
+    }
+}
+
+/// Where the Para matmuls execute.
+pub enum ParaBackend {
+    /// Plain `RectMonarch::matvec` — the golden model.
+    Reference,
+    /// Emulated crossbar chip programmed under one mapping strategy.
+    Chip(Box<FunctionalChip>),
+}
+
+/// The decode engine: owns the model, the Para backend and the KV cache;
+/// generates tokens greedily and accounts latency/energy per token.
+pub struct DecodeEngine {
+    pub model: DecodeModel,
+    backend: ParaBackend,
+    params: CimParams,
+    /// Per-layer key/value cache (one d-vector per cached position).
+    keys: Vec<Vec<Vec<f32>>>,
+    values: Vec<Vec<Vec<f32>>>,
+    pub trace: DecodeTrace,
+}
+
+/// Result of one greedy generation run.
+#[derive(Clone, Debug)]
+pub struct DecodeResult {
+    /// The generated token ids (prompt excluded).
+    pub tokens: Vec<i32>,
+    /// Modeled cost of every processed position (prompt + generated).
+    pub per_token: Vec<Cost>,
+}
+
+fn layer_norm(x: &[f32]) -> Vec<f32> {
+    let n = x.len() as f32;
+    let mean = x.iter().sum::<f32>() / n;
+    let var = x.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / n;
+    let inv = 1.0 / (var + 1e-5).sqrt();
+    x.iter().map(|v| (v - mean) * inv).collect()
+}
+
+fn gelu(x: &mut [f32]) {
+    // tanh approximation (identical across backends; DPU op)
+    const C: f32 = 0.797_884_6; // sqrt(2/pi)
+    for v in x.iter_mut() {
+        let u = *v;
+        *v = 0.5 * u * (1.0 + (C * (u + 0.044_715 * u * u * u)).tanh());
+    }
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0usize;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > bv {
+            bv = v;
+            best = i;
+        }
+    }
+    best
+}
+
+impl DecodeEngine {
+    /// Engine with the golden (non-CIM) Para backend.
+    pub fn reference(model: DecodeModel) -> DecodeEngine {
+        let layers = model.cfg.dec_layers;
+        DecodeEngine {
+            model,
+            backend: ParaBackend::Reference,
+            params: CimParams::default(),
+            keys: vec![Vec::new(); layers],
+            values: vec![Vec::new(); layers],
+            trace: DecodeTrace::new(),
+        }
+    }
+
+    /// Engine whose Para ops run on an emulated chip programmed with the
+    /// given mapping strategy.
+    pub fn on_chip(
+        model: DecodeModel,
+        params: &CimParams,
+        strategy: Strategy,
+    ) -> DecodeEngine {
+        let chip = FunctionalChip::program_rect(
+            &model.cfg,
+            &model.ops,
+            &model.weights,
+            params,
+            strategy,
+        );
+        let layers = model.cfg.dec_layers;
+        DecodeEngine {
+            model,
+            backend: ParaBackend::Chip(Box::new(chip)),
+            params: params.clone(),
+            keys: vec![Vec::new(); layers],
+            values: vec![Vec::new(); layers],
+            trace: DecodeTrace::new(),
+        }
+    }
+
+    /// The chip's mapping (None for the reference backend).
+    pub fn mapping(&self) -> Option<&crate::mapping::ModelMapping> {
+        match &self.backend {
+            ParaBackend::Chip(c) => Some(&c.mapping),
+            ParaBackend::Reference => None,
+        }
+    }
+
+    /// Clear the KV cache and the trace (new sequence).
+    pub fn reset(&mut self) {
+        for k in self.keys.iter_mut() {
+            k.clear();
+        }
+        for v in self.values.iter_mut() {
+            v.clear();
+        }
+        self.trace.clear();
+    }
+
+    /// Cached positions so far.
+    pub fn kv_len(&self) -> usize {
+        self.keys.first().map(|k| k.len()).unwrap_or(0)
+    }
+
+    fn para(&self, op_idx: usize, x: &[f32]) -> Vec<f32> {
+        match &self.backend {
+            ParaBackend::Reference => self.model.reference_matvec(op_idx, x),
+            ParaBackend::Chip(chip) => chip.run_op(op_idx, x),
+        }
+    }
+
+    /// Process one token at the next position; returns the LM-head
+    /// logits. Appends K/V to the cache and records the position's cost.
+    pub fn forward(&mut self, token: i32) -> Vec<f32> {
+        let d = self.model.cfg.d_model;
+        let heads = self.model.cfg.n_heads;
+        let dh = self.model.cfg.d_head();
+        let vocab = self.model.cfg.vocab;
+        let n_layers = self.model.cfg.dec_layers;
+        let pos = self.kv_len().min(self.model.cfg.seq - 1);
+        let tok = (token.max(0) as usize).min(vocab - 1);
+
+        let mut h: Vec<f32> = self
+            .model
+            .embedding
+            .row(tok)
+            .iter()
+            .zip(self.model.positional.row(pos))
+            .map(|(e, p)| e + p)
+            .collect();
+
+        for l in 0..n_layers {
+            let ops = self.model.layers[l];
+            // --- self-attention sub-block (pre-LN) ---
+            let x = layer_norm(&h);
+            let q = self.para(ops.wq, &x);
+            let k = self.para(ops.wk, &x);
+            let v = self.para(ops.wv, &x);
+            self.keys[l].push(k);
+            self.values[l].push(v);
+            let ctx = attend(&q, &self.keys[l], &self.values[l], heads, dh);
+            let o = self.para(ops.wo, &ctx);
+            for (hv, ov) in h.iter_mut().zip(&o) {
+                *hv += ov;
+            }
+            // --- feed-forward sub-block (pre-LN) ---
+            let x2 = layer_norm(&h);
+            let mut f = self.para(ops.ffn1, &x2);
+            gelu(&mut f);
+            let g = self.para(ops.ffn2, &f);
+            for (hv, gv) in h.iter_mut().zip(&g) {
+                *hv += gv;
+            }
+        }
+
+        // untied LM head over the final LayerNorm
+        let hn = layer_norm(&h);
+        let inv_sqrt_d = 1.0 / (d as f32).sqrt();
+        let mut logits = vec![0.0f32; vocab];
+        for (t, lv) in logits.iter_mut().enumerate() {
+            let row = self.model.lm_head.row(t);
+            let mut acc = 0.0f32;
+            for (r, x) in row.iter().zip(&hn) {
+                acc += r * x;
+            }
+            *lv = acc * inv_sqrt_d;
+        }
+
+        // cost accounting: the mapped Para path + cache-sized MHA work
+        let cost = match &self.backend {
+            ParaBackend::Chip(chip) => decode_token_cost(
+                &self.model.cfg,
+                &chip.mapping,
+                &self.params,
+                self.kv_len(),
+            ),
+            ParaBackend::Reference => Cost::default(),
+        };
+        self.trace.record(cost);
+        logits
+    }
+
+    /// Greedy autoregressive generation: feed `prompt`, then emit
+    /// `n_tokens` argmax continuations. The engine is reset first.
+    pub fn generate(&mut self, prompt: &[i32], n_tokens: usize) -> DecodeResult {
+        assert!(!prompt.is_empty(), "need at least one prompt token");
+        self.reset();
+        let mut logits = Vec::new();
+        for &t in prompt {
+            logits = self.forward(t);
+        }
+        let mut tokens = Vec::with_capacity(n_tokens);
+        for _ in 0..n_tokens {
+            let next = argmax(&logits) as i32;
+            tokens.push(next);
+            logits = self.forward(next);
+        }
+        DecodeResult {
+            tokens,
+            per_token: self.trace.per_token.clone(),
+        }
+    }
+
+    /// Teacher-forced scoring: per-position logits (`seq * vocab`) for a
+    /// full token window, plus the summed modeled cost — the CIM-sim
+    /// serving contract (`coordinator::server::Backend::CimSim`).
+    pub fn score(&mut self, tokens: &[i32]) -> (Vec<f32>, Cost) {
+        self.reset();
+        let vocab = self.model.cfg.vocab;
+        let mut out = Vec::with_capacity(tokens.len() * vocab);
+        for &t in tokens {
+            out.extend(self.forward(t));
+        }
+        (out, self.trace.total())
+    }
+}
+
+/// Digital multi-head attention of one query against the KV cache.
+fn attend(
+    q: &[f32],
+    keys: &[Vec<f32>],
+    values: &[Vec<f32>],
+    heads: usize,
+    dh: usize,
+) -> Vec<f32> {
+    let t = keys.len();
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut ctx = vec![0.0f32; heads * dh];
+    let mut scores = vec![0.0f32; t];
+    for h in 0..heads {
+        let o = h * dh;
+        for (i, k) in keys.iter().enumerate() {
+            let mut s = 0.0f32;
+            for j in 0..dh {
+                s += q[o + j] * k[o + j];
+            }
+            scores[i] = s * scale;
+        }
+        let m = scores.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let mut z = 0.0f32;
+        for s in scores.iter_mut() {
+            *s = (*s - m).exp();
+            z += *s;
+        }
+        let inv = 1.0 / z;
+        for (i, v) in values.iter().enumerate() {
+            let a = scores[i] * inv;
+            for j in 0..dh {
+                ctx[o + j] += a * v[o + j];
+            }
+        }
+    }
+    ctx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> ModelConfig {
+        ModelConfig::tiny()
+    }
+
+    #[test]
+    fn model_synthesis_is_deterministic() {
+        let a = DecodeModel::synth(&tiny(), 7);
+        let b = DecodeModel::synth(&tiny(), 7);
+        assert_eq!(a.weights.len(), b.weights.len());
+        for (wa, wb) in a.weights.iter().zip(&b.weights) {
+            for (ta, tb) in wa.tiles.iter().zip(&wb.tiles) {
+                assert_eq!(ta.l.data, tb.l.data);
+                assert_eq!(ta.r.data, tb.r.data);
+            }
+        }
+        assert_eq!(a.embedding.data, b.embedding.data);
+        let c = DecodeModel::synth(&tiny(), 8);
+        assert_ne!(a.embedding.data, c.embedding.data);
+    }
+
+    #[test]
+    fn reference_engine_generates_and_caches() {
+        let mut eng = DecodeEngine::reference(DecodeModel::synth(&tiny(), 3));
+        let r = eng.generate(&[1, 2, 3], 8);
+        assert_eq!(r.tokens.len(), 8);
+        assert_eq!(eng.kv_len(), 3 + 8);
+        let vocab = tiny().vocab as i32;
+        assert!(r.tokens.iter().all(|&t| t >= 0 && t < vocab));
+        // regeneration from the same prompt is identical
+        let r2 = eng.generate(&[1, 2, 3], 8);
+        assert_eq!(r.tokens, r2.tokens);
+    }
+
+    #[test]
+    fn kv_cache_matches_full_recompute() {
+        // Scoring [t0..t3] incrementally must give the same final-position
+        // logits as re-running the prefix from scratch.
+        let model = DecodeModel::synth(&tiny(), 11);
+        let mut eng = DecodeEngine::reference(model);
+        let toks = [5i32, 9, 2, 40];
+        let (all, _) = eng.score(&toks);
+        let vocab = tiny().vocab;
+        let last = &all[3 * vocab..4 * vocab];
+        // recompute: fresh engine, same sequence
+        let mut eng2 = DecodeEngine::reference(DecodeModel::synth(&tiny(), 11));
+        let mut logits = Vec::new();
+        for &t in &toks {
+            logits = eng2.forward(t);
+        }
+        assert_eq!(last, logits.as_slice());
+    }
+
+    #[test]
+    fn chip_engine_records_costs_reference_does_not() {
+        let params = CimParams::default();
+        let model = DecodeModel::synth(&tiny(), 5);
+        let mut chip = DecodeEngine::on_chip(model, &params, Strategy::SparseMap);
+        let r = chip.generate(&[1, 2], 4);
+        assert_eq!(r.per_token.len(), 6); // 2 prompt + 4 generated
+        assert!(r.per_token.iter().all(|c| c.latency.critical_ns() > 0.0));
+        // MHA share grows with the cache
+        assert!(
+            r.per_token.last().unwrap().latency.mha_ns
+                > r.per_token.first().unwrap().latency.mha_ns
+        );
+        let mut reference = DecodeEngine::reference(DecodeModel::synth(&tiny(), 5));
+        let rr = reference.generate(&[1, 2], 4);
+        assert!(rr.per_token.iter().all(|c| c.latency.critical_ns() == 0.0));
+        assert!(chip.mapping().is_some());
+        assert!(reference.mapping().is_none());
+    }
+
+    #[test]
+    fn score_is_reset_safe() {
+        let mut eng = DecodeEngine::reference(DecodeModel::synth(&tiny(), 13));
+        let toks = vec![7i32; tiny().seq];
+        let (a, _) = eng.score(&toks);
+        let (b, _) = eng.score(&toks);
+        assert_eq!(a, b, "score must be independent of prior requests");
+        assert_eq!(a.len(), tiny().seq * tiny().vocab);
+        assert!(a.iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,22 +1,32 @@
-//! Functional execution of mapped Monarch operators on emulated
-//! crossbars — the correctness half of the simulator.
+//! Functional execution of mapped operators on emulated crossbars — the
+//! correctness half of the simulator.
 //!
 //! This module demonstrates, numerically, that the mapping strategies and
 //! the scheduler's row-activation/rotation handling compute the *right
 //! answer*: programming the factor blocks at their placement coordinates,
-//! driving only the scheduled rows, de-rotating lane outputs by the
+//! driving only the scheduled rows ([`crate::scheduler::placement_schedule`]
+//! supplies every activation mask), de-rotating lane outputs by the
 //! diagonal index, and applying the stride permutation between stages
 //! reproduces `MonarchMatrix::matvec` exactly. It also exhibits the
 //! §III-C failure mode: activating all rows of a DenseMap array mixes
 //! lanes and corrupts the result.
+//!
+//! Beyond the original single-op checker, the chip now executes *whole
+//! models*: rectangular weights as tile grids of Monarch operators
+//! ([`RectMonarch`], mirroring `mapping`'s d x d partition) and the
+//! Linear baseline (dense tiles, partial-sum accumulation over column
+//! partitions) — the substrate of the autoregressive decode engine
+//! (`sim::decode`).
 
 use crate::cim::crossbar::Crossbar;
 use crate::cim::CimParams;
 use crate::mapping::rotation::rotate_blocks_left;
-use crate::mapping::{map_ops, Factor, ModelMapping};
+use crate::mapping::{map_ops, Factor, MappedOp, ModelMapping};
 use crate::mapping::Strategy;
 use crate::model::{MatmulOp, ModelConfig, OpKind, Stage};
-use crate::monarch::{MonarchMatrix, StridePerm};
+use crate::monarch::{MonarchMatrix, RectMonarch, StridePerm};
+use crate::scheduler::placement_schedule;
+use crate::tensor::Matrix;
 
 /// A programmed chip: one crossbar per allocated array.
 pub struct FunctionalChip {
@@ -24,6 +34,10 @@ pub struct FunctionalChip {
     pub b: usize,
     pub crossbars: Vec<Crossbar>,
     pub mapping: ModelMapping,
+    /// Placement indices grouped per op (insertion order preserved), so
+    /// per-token execution doesn't rescan the whole model's placements
+    /// for every stage of every tile.
+    op_placements: Vec<Vec<usize>>,
 }
 
 /// Build a single-op model config/op-list for a d x d Monarch weight.
@@ -42,9 +56,30 @@ pub fn single_op(d: usize) -> (ModelConfig, Vec<MatmulOp>) {
     (cfg, vec![op])
 }
 
+/// Geometry of one Linear placement's m x m tile: `(rp, cp, rows_here,
+/// cols_here)`. Single source of the `tile == rp * col_parts + cp`
+/// convention `mapping::linear` allocates with — used for both
+/// programming and execution so the two can't drift apart.
+fn linear_tile_geometry(op: &MappedOp, tile: usize, m: usize) -> (usize, usize, usize, usize) {
+    let col_parts = op.cols.div_ceil(m);
+    let (rp, cp) = (tile / col_parts, tile % col_parts);
+    (rp, cp, m.min(op.rows - rp * m), m.min(op.cols - cp * m))
+}
+
+/// Wrap a square single-tile Monarch as a 1x1 [`RectMonarch`] grid.
+fn rect_of(mon: &MonarchMatrix) -> RectMonarch {
+    RectMonarch {
+        rows: mon.n(),
+        cols: mon.n(),
+        n: mon.n(),
+        tiles: vec![mon.clone()],
+    }
+}
+
 impl FunctionalChip {
-    /// Program the factors of `ops[i] -> monarchs[i]` according to the
-    /// mapping's placements.
+    /// Program the factors of `ops[i] -> monarchs[i]` (square d x d ops)
+    /// according to the mapping's placements. Monarch strategies only;
+    /// for Linear or rectangular weights use [`FunctionalChip::program_rect`].
     pub fn program(
         cfg: &ModelConfig,
         ops: &[MatmulOp],
@@ -53,40 +88,91 @@ impl FunctionalChip {
         strategy: Strategy,
     ) -> FunctionalChip {
         assert!(matches!(strategy, Strategy::SparseMap | Strategy::DenseMap));
+        let rects: Vec<RectMonarch> = monarchs.iter().map(rect_of).collect();
+        Self::program_rect(cfg, ops, &rects, params, strategy)
+    }
+
+    /// Program a whole op list whose weights are tile grids of Monarch
+    /// operators, under any of the three mapping strategies.
+    ///
+    /// * SparseMap/DenseMap: each placement's factor blocks are taken
+    ///   from `weights[op].tiles[tile]` and programmed **transposed** at
+    ///   their placement coordinates (bitline accumulation computes
+    ///   `cells^T @ input`, so storing `B^T` yields `y = B x`).
+    /// * Linear: the dense materialization of each weight is cut into
+    ///   m x m tiles and programmed transposed, one tile per array — the
+    ///   paper's baseline of running the *same* operator un-factored.
+    pub fn program_rect(
+        cfg: &ModelConfig,
+        ops: &[MatmulOp],
+        weights: &[RectMonarch],
+        params: &CimParams,
+        strategy: Strategy,
+    ) -> FunctionalChip {
+        assert_eq!(ops.len(), weights.len(), "one weight grid per op");
+        for (op, w) in ops.iter().zip(weights) {
+            assert_eq!(
+                (op.rows, op.cols),
+                (w.rows, w.cols),
+                "weight shape mismatch for op {}",
+                op.name
+            );
+        }
         let mapping = map_ops(cfg, ops, params, strategy);
         let m = params.array_dim;
         let b = cfg.monarch_b();
         let mut crossbars: Vec<Crossbar> =
             (0..mapping.arrays).map(|_| Crossbar::new(m)).collect();
-        for p in &mapping.placements {
-            let mon = &monarchs[p.op];
-            let factor_bd = match p.factor {
-                Factor::Left => &mon.l,
-                Factor::Right => &mon.r,
-                Factor::Dense => unreachable!("functional sim is Monarch-only"),
-            };
-            let lanes = (m / b).max(1);
-            for j in 0..p.blocks {
-                // global block index within the factor
-                let gblk = p.lane_of_factor * lanes + j;
-                // Program the TRANSPOSE: bitline accumulation computes
-                // cells^T @ input, so storing B^T yields y = B x.
-                let blk = factor_bd.block_matrix(gblk).transpose();
-                let (r0, c0) = (j * b, ((j + p.diag) % lanes) * b);
-                crossbars[p.array].program_block(r0, c0, &blk);
+        if strategy == Strategy::Linear {
+            let denses: Vec<Matrix> = weights.iter().map(|w| w.to_dense()).collect();
+            for p in &mapping.placements {
+                let op = &mapping.ops[p.op];
+                let (rp, cp, rows_here, cols_here) = linear_tile_geometry(op, p.tile, m);
+                let tile = denses[p.op].submatrix(rp * m, cp * m, rows_here, cols_here);
+                crossbars[p.array].program_block(0, 0, &tile.transpose());
             }
+        } else {
+            for p in &mapping.placements {
+                let rect = &weights[p.op];
+                assert_eq!(rect.n, b * b, "tile dim must match d_model");
+                let mon = &rect.tiles[p.tile];
+                let factor_bd = match p.factor {
+                    Factor::Left => &mon.l,
+                    Factor::Right => &mon.r,
+                    Factor::Dense => unreachable!("dense placement in Monarch mapping"),
+                };
+                let lanes = (m / b).max(1);
+                for j in 0..p.blocks {
+                    // global block index within the factor
+                    let gblk = p.lane_of_factor * lanes + j;
+                    let blk = factor_bd.block_matrix(gblk).transpose();
+                    let (r0, c0) = (j * b, ((j + p.diag) % lanes) * b);
+                    crossbars[p.array].program_block(r0, c0, &blk);
+                }
+            }
+        }
+        let mut op_placements: Vec<Vec<usize>> = vec![Vec::new(); mapping.ops.len()];
+        for (i, p) in mapping.placements.iter().enumerate() {
+            op_placements[p.op].push(i);
         }
         FunctionalChip {
             m,
             b,
             crossbars,
             mapping,
+            op_placements,
         }
     }
 
+    /// Execute one Monarch factor stage of one op. `tile = None` spans
+    /// every tile's placements (the original single-tile behaviour);
+    /// `Some(t)` restricts to one d x d tile of a rectangular weight.
+    /// Row activation, column selection and output rotation all come
+    /// from the scheduler's [`placement_schedule`].
     fn stage_pass(
         &self,
         op_idx: usize,
+        tile: Option<usize>,
         factor: Factor,
         x: &[f32],
         honor_schedule: bool,
@@ -95,46 +181,47 @@ impl FunctionalChip {
         let lanes = (self.m / b).max(1);
         let n = x.len();
         let dense = self.mapping.strategy == Strategy::DenseMap;
+        let walk = dense && honor_schedule;
         let mut out = vec![0.0f32; n];
-        for p in self
-            .mapping
-            .placements
+        for p in self.op_placements[op_idx]
             .iter()
-            .filter(|p| p.op == op_idx && p.factor == factor)
+            .map(|&i| &self.mapping.placements[i])
+            .filter(|p| p.factor == factor && tile.map_or(true, |t| p.tile == t))
         {
             // Input segment for this lane: blocks [chunk*lanes, ...)
             let base = p.lane_of_factor * lanes;
-            if dense && honor_schedule {
+            let sched = placement_schedule(p, self.m, walk);
+            if walk {
                 // DenseMap (§III-C): arrays hold several lanes whose
                 // cells share columns, so the scheduler walks block-row
-                // groups — activate rows of block j only, convert only
-                // the lane's column block (j + diag) % lanes. The analog
-                // passes pipeline behind the ADC stream (sample-and-
-                // hold), which is what `scheduler::timing` models.
-                for j in 0..p.blocks {
+                // groups — one pass per block, converting only the
+                // lane's own column group. The analog passes pipeline
+                // behind the ADC stream (sample-and-hold), which is what
+                // `scheduler::timing` models.
+                for (j, pass) in sched.passes.iter().enumerate() {
                     let src = (base + j) * b;
                     let mut input = vec![0.0f32; self.m];
-                    input[j * b..(j + 1) * b].copy_from_slice(&x[src..src + b]);
-                    let rows: Vec<usize> = (j * b..(j + 1) * b).collect();
-                    let cols = self.crossbars[p.array].mvm_pass(&input, &rows);
-                    let cblk = ((j + p.diag) % lanes) * b;
-                    out[src..src + b].copy_from_slice(&cols[cblk..cblk + b]);
+                    for (k, &r) in pass.rows.iter().enumerate() {
+                        input[r] = x[src + k];
+                    }
+                    let cols = self.crossbars[p.array].mvm_pass(&input, &pass.rows);
+                    for (k, &c) in pass.cols.iter().enumerate() {
+                        out[src + k] = cols[c];
+                    }
                 }
             } else {
                 // Whole-lane pass: correct for SparseMap (one lane per
                 // array, disjoint rows AND columns); the §III-C naive
                 // failure mode for DenseMap (mixes co-resident lanes).
+                let pass = &sched.passes[0];
                 let mut input = vec![0.0f32; self.m];
-                let mut rows = Vec::new();
-                for j in 0..p.blocks {
-                    let src = (base + j) * b;
-                    input[j * b..(j + 1) * b].copy_from_slice(&x[src..src + b]);
-                    rows.extend(j * b..(j + 1) * b);
+                for (k, &r) in pass.rows.iter().enumerate() {
+                    input[r] = x[base * b + k];
                 }
-                let cols = self.crossbars[p.array].mvm_pass(&input, &rows);
+                let cols = self.crossbars[p.array].mvm_pass(&input, &pass.rows);
                 // Block j's output sits at column block (j + diag) %
-                // lanes; de-rotate to logical order.
-                let aligned = rotate_blocks_left(&cols, b, p.diag);
+                // lanes; de-rotate to logical order per the Route command.
+                let aligned = rotate_blocks_left(&cols, b, sched.rotation);
                 for j in 0..p.blocks {
                     let dst = (base + j) * b;
                     out[dst..dst + b].copy_from_slice(&aligned[j * b..(j + 1) * b]);
@@ -146,7 +233,7 @@ impl FunctionalChip {
 
     /// Execute one factor stage with the scheduler's row activation.
     pub fn run_stage(&self, op_idx: usize, factor: Factor, x: &[f32]) -> Vec<f32> {
-        self.stage_pass(op_idx, factor, x, true)
+        self.stage_pass(op_idx, None, factor, x, true)
     }
 
     /// §III-C negative model: drive ALL rows (ignore the schedule).
@@ -156,17 +243,74 @@ impl FunctionalChip {
         factor: Factor,
         x: &[f32],
     ) -> Vec<f32> {
-        self.stage_pass(op_idx, factor, x, false)
+        self.stage_pass(op_idx, None, factor, x, false)
     }
 
-    /// Full Monarch MVM for op `op_idx`: P, R stage, P, L stage, P.
+    /// Full MVM for op `op_idx`: `y = W x` with `x.len() == op.cols` and
+    /// `y.len() == op.rows`. Monarch strategies run P, R, P, L, P per
+    /// d x d tile with row-tile accumulation (mirroring
+    /// `RectMonarch::matvec` exactly, so results are bit-comparable);
+    /// Linear runs dense tile passes with column-partition partial sums.
     pub fn run_op(&self, op_idx: usize, x: &[f32]) -> Vec<f32> {
-        let p = StridePerm::new(self.b);
-        let u = p.apply(x);
-        let v = self.run_stage(op_idx, Factor::Right, &u);
-        let w = p.apply(&v);
-        let z = self.run_stage(op_idx, Factor::Left, &w);
-        p.apply(&z)
+        match self.mapping.strategy {
+            Strategy::Linear => self.run_op_linear(op_idx, x),
+            _ => self.run_op_monarch(op_idx, x),
+        }
+    }
+
+    fn run_op_linear(&self, op_idx: usize, x: &[f32]) -> Vec<f32> {
+        let m = self.m;
+        let op = &self.mapping.ops[op_idx];
+        assert_eq!(x.len(), op.cols, "linear op input length");
+        let mut out = vec![0.0f32; op.rows];
+        // Placements were allocated row-partition-major with ascending
+        // column partitions, so iterating in order fixes the partial-sum
+        // accumulation order (shift-add tree determinism).
+        for p in self.op_placements[op_idx]
+            .iter()
+            .map(|&i| &self.mapping.placements[i])
+        {
+            let (rp, cp, rows_here, cols_here) = linear_tile_geometry(op, p.tile, m);
+            let sched = placement_schedule(p, m, false);
+            let pass = &sched.passes[0];
+            let mut input = vec![0.0f32; m];
+            input[..cols_here].copy_from_slice(&x[cp * m..cp * m + cols_here]);
+            let cols = self.crossbars[p.array].mvm_pass(&input, &pass.rows);
+            for (yo, pv) in out[rp * m..rp * m + rows_here].iter_mut().zip(&cols) {
+                *yo += pv;
+            }
+        }
+        out
+    }
+
+    fn run_op_monarch(&self, op_idx: usize, x: &[f32]) -> Vec<f32> {
+        let op = &self.mapping.ops[op_idx];
+        let d = self.b * self.b;
+        assert_eq!(x.len(), op.cols, "monarch op input length");
+        let perm = StridePerm::new(self.b);
+        let (tr, tc) = (op.rows.div_ceil(d), op.cols.div_ceil(d));
+        let mut y = vec![0.0f32; op.rows];
+        let mut xseg = vec![0.0f32; d];
+        for j in 0..tc {
+            // zero-padded input segment (same loop structure as
+            // RectMonarch::matvec for bit-identical accumulation order)
+            let cw = d.min(op.cols - j * d);
+            xseg[..cw].copy_from_slice(&x[j * d..j * d + cw]);
+            xseg[cw..].iter_mut().for_each(|v| *v = 0.0);
+            let u = perm.apply(&xseg);
+            for i in 0..tr {
+                let tile = i * tc + j;
+                let v = self.stage_pass(op_idx, Some(tile), Factor::Right, &u, true);
+                let w = perm.apply(&v);
+                let z = self.stage_pass(op_idx, Some(tile), Factor::Left, &w, true);
+                let part = perm.apply(&z);
+                let rh = d.min(op.rows - i * d);
+                for (yo, pv) in y[i * d..i * d + rh].iter_mut().zip(&part) {
+                    *yo += pv;
+                }
+            }
+        }
+        y
     }
 
     /// Mean array utilization measured from the programmed cells.
@@ -301,6 +445,90 @@ mod tests {
                 (measured - predicted).abs() < 0.05,
                 "{strategy:?}: measured {measured} vs predicted {predicted}"
             );
+        }
+    }
+
+    /// Random tile grid for a rows x cols weight (d = tile dim).
+    fn rect_randn(rows: usize, cols: usize, d: usize, rng: &mut Pcg32) -> RectMonarch {
+        let b = (d as f64).sqrt().round() as usize;
+        let tiles = rows.div_ceil(d) * cols.div_ceil(d);
+        RectMonarch {
+            rows,
+            cols,
+            n: d,
+            tiles: (0..tiles).map(|_| MonarchMatrix::randn(b, rng)).collect(),
+        }
+    }
+
+    fn ffn_ops(d: usize, d_ff: usize) -> (ModelConfig, Vec<MatmulOp>) {
+        let (cfg, mut ops) = single_op(d);
+        ops[0].name = "dec0.ffn1".to_string();
+        ops[0].rows = d_ff;
+        ops.push(MatmulOp {
+            name: "dec0.ffn2".to_string(),
+            stage: Stage::Decoder,
+            layer: 0,
+            kind: OpKind::Para,
+            rows: d,
+            cols: d_ff,
+            batch: 1,
+        });
+        (cfg, ops)
+    }
+
+    #[test]
+    fn rect_ops_match_reference_all_strategies() {
+        // ffn-shaped rectangular weights (row tiles + col tiles) computed
+        // on-chip must match the RectMonarch reference for every mapping.
+        let (d, d_ff) = (64usize, 256usize);
+        let (cfg, ops) = ffn_ops(d, d_ff);
+        let mut rng = Pcg32::new(21);
+        let weights = vec![
+            rect_randn(d_ff, d, d, &mut rng),
+            rect_randn(d, d_ff, d, &mut rng),
+        ];
+        let mut params = CimParams::default();
+        params.array_dim = 32;
+        for strategy in Strategy::all() {
+            let chip = FunctionalChip::program_rect(&cfg, &ops, &weights, &params, strategy);
+            for (oi, w) in weights.iter().enumerate() {
+                let x = Pcg32::new(100 + oi as u64).normal_vec(w.cols);
+                let got = chip.run_op(oi, &x);
+                let want = w.matvec(&x);
+                assert_eq!(got.len(), w.rows);
+                for (g, wv) in got.iter().zip(&want) {
+                    assert!(
+                        (g - wv).abs() < 2e-3 * (1.0 + wv.abs()),
+                        "{strategy:?} op {oi}: {g} vs {wv}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn monarch_chip_is_bit_identical_to_reference() {
+        // SparseMap/DenseMap passes replay the factored reference's
+        // f32 operations in the same order — outputs must be bit-equal,
+        // which is what lets decode compare strategies exactly.
+        let d = 64;
+        let (cfg, ops) = single_op(d);
+        let mut params = CimParams::default();
+        params.array_dim = 256;
+        let mut rng = Pcg32::new(33);
+        let mon = MonarchMatrix::randn(cfg.monarch_b(), &mut rng);
+        let x = rng.normal_vec(d);
+        let want = mon.matvec(&x);
+        for strategy in [Strategy::SparseMap, Strategy::DenseMap] {
+            let chip = FunctionalChip::program(
+                &cfg,
+                &ops,
+                std::slice::from_ref(&mon),
+                &params,
+                strategy,
+            );
+            let got = chip.run_op(0, &x);
+            assert_eq!(got, want, "{strategy:?} not bit-identical");
         }
     }
 }

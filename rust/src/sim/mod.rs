@@ -1,9 +1,13 @@
 //! Chip-level simulation: [`exec`] provides functional (numeric)
-//! execution of mapped Monarch operators on emulated crossbars, used to
-//! validate that mapping + scheduling compute correct results; the
-//! analytical latency/energy side lives in `scheduler::timing`.
+//! execution of mapped operators on emulated crossbars, used to validate
+//! that mapping + scheduling compute correct results; [`decode`] runs a
+//! full decoder-only transformer on that chip autoregressively (KV
+//! cache, greedy sampling, per-token cost accounting); the analytical
+//! latency/energy side lives in `scheduler::timing` and [`trace`].
 
+pub mod decode;
 pub mod exec;
 pub mod trace;
 
+pub use decode::{DecodeEngine, DecodeModel, DecodeResult};
 pub use exec::FunctionalChip;

@@ -1,9 +1,10 @@
 //! Execution trace: a timestamped record of scheduler events for one
 //! token pass, exportable as JSON (for external timeline visualisation)
 //! and queryable for per-resource occupancy — the observability layer of
-//! the simulator.
+//! the simulator. [`DecodeTrace`] extends it to autoregressive decode:
+//! per-token latency/energy with the growing-KV-cache attention cost.
 
-use crate::cim::CimParams;
+use crate::cim::{CimParams, Cost, Energy, Latency};
 use crate::mapping::{ModelMapping, Strategy};
 use crate::model::ModelConfig;
 use crate::scheduler::{adc_bits_for, usable_adcs};
@@ -134,6 +135,105 @@ impl Trace {
     }
 }
 
+/// NonPara attention cost of one decode step at a given KV-cache length:
+/// per layer, the digital MHA unit performs one `q · K^T` sweep and one
+/// `A · V` accumulation over the cache — two vector events per cached
+/// position at Table-I `Add` granularity. This is the component that
+/// *grows* with the token position (the memory-bound decode regime the
+/// paper motivates); the parameterized-matmul cost stays constant.
+pub fn mha_token_cost(cfg: &ModelConfig, params: &CimParams, kv_len: usize) -> Cost {
+    let layers = cfg.total_layers().max(1) as f64;
+    let events = 2.0 * kv_len as f64 * layers;
+    Cost {
+        latency: Latency {
+            mha_ns: events * params.t_add_ns,
+            ..Default::default()
+        },
+        energy: Energy {
+            mha_nj: events * params.e_add_nj,
+            ..Default::default()
+        },
+    }
+}
+
+/// Full cost of decoding one token at KV length `kv_len`: the mapped
+/// parameterized-matmul path (`scheduler::timing::per_token_cost`) plus
+/// the cache-proportional MHA work.
+pub fn decode_token_cost(
+    cfg: &ModelConfig,
+    mapping: &ModelMapping,
+    params: &CimParams,
+    kv_len: usize,
+) -> Cost {
+    let mut c = crate::scheduler::timing::per_token_cost(cfg, mapping, params);
+    c += mha_token_cost(cfg, params, kv_len);
+    c
+}
+
+/// Per-token cost accounting of one autoregressive decode run.
+#[derive(Clone, Debug, Default)]
+pub struct DecodeTrace {
+    /// Cost of token `i` (position order).
+    pub per_token: Vec<Cost>,
+}
+
+impl DecodeTrace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, cost: Cost) {
+        self.per_token.push(cost);
+    }
+
+    pub fn clear(&mut self) {
+        self.per_token.clear();
+    }
+
+    pub fn tokens(&self) -> usize {
+        self.per_token.len()
+    }
+
+    /// Summed cost of every decoded token.
+    pub fn total(&self) -> Cost {
+        let mut t = Cost::default();
+        for c in &self.per_token {
+            t += *c;
+        }
+        t
+    }
+
+    /// Mean critical-path latency per token (ns).
+    pub fn mean_token_ns(&self) -> f64 {
+        if self.per_token.is_empty() {
+            return 0.0;
+        }
+        self.total().latency.critical_ns() / self.per_token.len() as f64
+    }
+
+    /// Mean energy per token (nJ).
+    pub fn mean_token_nj(&self) -> f64 {
+        if self.per_token.is_empty() {
+            return 0.0;
+        }
+        self.total().energy.total_nj() / self.per_token.len() as f64
+    }
+
+    /// JSON export: one record per token with the component breakdown.
+    pub fn to_json(&self) -> Json {
+        arr(self.per_token.iter().enumerate().map(|(i, c)| {
+            obj(vec![
+                ("token", num(i as f64)),
+                ("latency_ns", num(c.latency.critical_ns())),
+                ("analog_ns", num(c.latency.analog_ns)),
+                ("adc_ns", num(c.latency.adc_ns)),
+                ("mha_ns", num(c.latency.mha_ns)),
+                ("energy_nj", num(c.energy.total_nj())),
+            ])
+        }))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -178,6 +278,39 @@ mod tests {
         let text = trace.to_json().to_string();
         let parsed = Json::parse(&text).unwrap();
         assert_eq!(parsed.as_arr().unwrap().len(), trace.events.len());
+    }
+
+    #[test]
+    fn decode_cost_grows_with_kv_length() {
+        let cfg = ModelConfig::tiny();
+        let params = CimParams::default();
+        let mm = map_model(&cfg, &params, Strategy::DenseMap);
+        let c1 = decode_token_cost(&cfg, &mm, &params, 1);
+        let c32 = decode_token_cost(&cfg, &mm, &params, 32);
+        assert!(c32.latency.critical_ns() > c1.latency.critical_ns());
+        assert!(c32.latency.mha_ns > c1.latency.mha_ns);
+        assert!(c32.energy.mha_nj > c1.energy.mha_nj);
+        // the para path is position-independent
+        assert!((c32.latency.adc_ns - c1.latency.adc_ns).abs() < 1e-9);
+    }
+
+    #[test]
+    fn decode_trace_accumulates_and_exports() {
+        let cfg = ModelConfig::tiny();
+        let params = CimParams::default();
+        let mm = map_model(&cfg, &params, Strategy::SparseMap);
+        let mut tr = DecodeTrace::new();
+        for kv in 1..=4 {
+            tr.record(decode_token_cost(&cfg, &mm, &params, kv));
+        }
+        assert_eq!(tr.tokens(), 4);
+        assert!(tr.mean_token_ns() > 0.0);
+        assert!(tr.mean_token_nj() > 0.0);
+        let parsed = Json::parse(&tr.to_json().to_string()).unwrap();
+        assert_eq!(parsed.as_arr().unwrap().len(), 4);
+        tr.clear();
+        assert_eq!(tr.tokens(), 0);
+        assert_eq!(tr.mean_token_ns(), 0.0);
     }
 
     #[test]

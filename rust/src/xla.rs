@@ -1,0 +1,243 @@
+//! Offline stand-in for the `xla` (PJRT) crate.
+//!
+//! The build image this repo targets does not ship the XLA/PJRT native
+//! bundle, so the real `xla` crate cannot be linked. This module keeps
+//! the exact API surface `runtime` consumes — `PjRtClient`,
+//! `PjRtLoadedExecutable`, `HloModuleProto`, `XlaComputation`,
+//! [`Literal`] — with host-side literal handling implemented for real
+//! (construction, reshape, readback) and the device/compile entry points
+//! returning a descriptive [`XlaError`].
+//!
+//! Consequences:
+//! * `Runtime::new` fails with "PJRT unavailable" instead of a link
+//!   error; integration tests and benches detect this and skip the PJRT
+//!   path (they exercise the CIM-sim backend instead).
+//! * When a PJRT-enabled image is available again, deleting this module
+//!   and adding the real `xla` dependency restores the native path —
+//!   nothing in `runtime` needs to change.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type matching the real crate's surface (`Display` + `Error`,
+/// `Send + Sync` so `anyhow::Context` can wrap it).
+#[derive(Debug)]
+pub struct XlaError {
+    msg: String,
+}
+
+impl XlaError {
+    fn new(msg: impl Into<String>) -> Self {
+        Self { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+/// Element types a [`Literal`] can hold (what the repo feeds PJRT).
+/// Public only because [`NativeType`]'s methods mention it; treat it as
+/// an implementation detail.
+#[doc(hidden)]
+#[derive(Clone, Debug, PartialEq)]
+pub enum Payload {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Payload {
+    fn len(&self) -> usize {
+        match self {
+            Payload::F32(v) => v.len(),
+            Payload::I32(v) => v.len(),
+        }
+    }
+}
+
+/// Host-side tensor literal: flat payload + dims. Fully functional.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    payload: Payload,
+    dims: Vec<i64>,
+}
+
+/// Conversion trait mirroring the real crate's element genericity.
+pub trait NativeType: Sized {
+    fn wrap(data: &[Self]) -> Payload;
+    fn unwrap(p: &Payload) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn wrap(data: &[f32]) -> Payload {
+        Payload::F32(data.to_vec())
+    }
+
+    fn unwrap(p: &Payload) -> Option<Vec<f32>> {
+        match p {
+            Payload::F32(v) => Some(v.clone()),
+            Payload::I32(_) => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(data: &[i32]) -> Payload {
+        Payload::I32(data.to_vec())
+    }
+
+    fn unwrap(p: &Payload) -> Option<Vec<i32>> {
+        match p {
+            Payload::I32(v) => Some(v.clone()),
+            Payload::F32(_) => None,
+        }
+    }
+}
+
+impl Literal {
+    /// 1-D literal from a flat slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal {
+            dims: vec![data.len() as i64],
+            payload: T::wrap(data),
+        }
+    }
+
+    /// Reshape to new dims (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.payload.len() {
+            return Err(XlaError::new(format!(
+                "reshape {:?} -> {:?}: element count mismatch",
+                self.dims, dims
+            )));
+        }
+        Ok(Literal {
+            payload: self.payload.clone(),
+            dims: dims.to_vec(),
+        })
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.payload.len()
+    }
+
+    /// Read back as a flat vector of `T`.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.payload)
+            .ok_or_else(|| XlaError::new("literal element type mismatch"))
+    }
+
+    /// Split a tuple literal into its elements (stub literals are never
+    /// tuples — only device execution produces them).
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(XlaError::new("stub literal is not a tuple"))
+    }
+}
+
+/// Parsed HLO module handle (never constructible offline).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &Path) -> Result<HloModuleProto> {
+        Err(XlaError::new(format!(
+            "PJRT unavailable in this build (xla stub): cannot parse {path:?}"
+        )))
+    }
+}
+
+/// Computation wrapper (constructible from a proto for API parity).
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// Device buffer returned by `execute` (never produced offline).
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(XlaError::new("PJRT unavailable in this build (xla stub)"))
+    }
+}
+
+/// Compiled executable handle (never produced offline).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _inputs: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(XlaError::new("PJRT unavailable in this build (xla stub)"))
+    }
+}
+
+/// PJRT client. `cpu()` fails deterministically in the offline build.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(XlaError::new(
+            "PJRT unavailable in this build (xla stub): the offline image \
+             does not bundle the XLA native libraries — use the CIM-sim \
+             backend (`Backend::CimSim`) or rebuild with the real `xla` crate",
+        ))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(XlaError::new("PJRT unavailable in this build (xla stub)"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        assert_eq!(l.element_count(), 4);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3, 3]).is_err());
+    }
+
+    #[test]
+    fn literal_type_checked() {
+        let l = Literal::vec1(&[1i32, 2]);
+        assert!(l.to_vec::<f32>().is_err());
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![1, 2]);
+    }
+
+    #[test]
+    fn client_fails_with_actionable_message() {
+        let err = PjRtClient::cpu().err().unwrap();
+        assert!(err.to_string().contains("PJRT unavailable"), "{err}");
+    }
+
+    #[test]
+    fn hlo_parse_fails_offline() {
+        assert!(HloModuleProto::from_text_file(Path::new("x.hlo.txt")).is_err());
+    }
+}

@@ -1,0 +1,173 @@
+//! Integration: end-to-end autoregressive decode on the emulated CIM
+//! chip — the tier-1 correctness contract of `sim::decode`.
+//!
+//! * Greedy token sequences must be identical across Linear, SparseMap
+//!   and DenseMap, and identical to the factored reference model.
+//! * SparseMap/DenseMap per-position logits must match the reference
+//!   within 1e-5 max abs diff (they are in fact bit-identical: the chip
+//!   replays the reference's f32 operations in the same order).
+//! * Per-token modeled cost must be positive and grow with the KV cache.
+//! * The CIM-sim serving backend must batch, validate and stay
+//!   deterministic without any PJRT artifacts.
+
+use monarch_cim::cim::CimParams;
+use monarch_cim::coordinator::batching::BatchPolicy;
+use monarch_cim::coordinator::{Backend, CimSimConfig, InferenceServer, ServerConfig};
+use monarch_cim::mapping::Strategy;
+use monarch_cim::model::ModelConfig;
+use monarch_cim::sim::decode::{DecodeEngine, DecodeModel, DecodeResult};
+use monarch_cim::util::rng::Pcg32;
+
+const SEED: u64 = 2025;
+const PROMPT: [i32; 4] = [11, 48, 85, 122];
+const TOKENS: usize = 32;
+
+fn tiny() -> ModelConfig {
+    ModelConfig::tiny()
+}
+
+fn chip_engine(strategy: Strategy) -> DecodeEngine {
+    DecodeEngine::on_chip(
+        DecodeModel::synth(&tiny(), SEED),
+        &CimParams::default(),
+        strategy,
+    )
+}
+
+fn reference_engine() -> DecodeEngine {
+    DecodeEngine::reference(DecodeModel::synth(&tiny(), SEED))
+}
+
+#[test]
+fn greedy_sequences_identical_across_strategies() {
+    let golden: DecodeResult = reference_engine().generate(&PROMPT, TOKENS);
+    assert_eq!(golden.tokens.len(), TOKENS);
+    for strategy in Strategy::all() {
+        let r = chip_engine(strategy).generate(&PROMPT, TOKENS);
+        assert_eq!(
+            r.tokens, golden.tokens,
+            "{strategy:?} diverged from the reference token sequence"
+        );
+    }
+}
+
+#[test]
+fn monarch_strategies_match_reference_logits_within_1e5() {
+    let window: Vec<i32> = {
+        let mut g = reference_engine();
+        let r = g.generate(&PROMPT, TOKENS);
+        PROMPT.iter().chain(&r.tokens).copied().collect()
+    };
+    let (ref_logits, _) = reference_engine().score(&window);
+    for strategy in [Strategy::SparseMap, Strategy::DenseMap] {
+        let (chip_logits, _) = chip_engine(strategy).score(&window);
+        let max_diff = chip_logits
+            .iter()
+            .zip(&ref_logits)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(
+            max_diff <= 1e-5,
+            "{strategy:?}: max |logit diff| {max_diff} > 1e-5"
+        );
+    }
+    // Linear programs the dense materialization of the same operator —
+    // equal tokens, float-tolerance logits.
+    let (lin_logits, _) = chip_engine(Strategy::Linear).score(&window);
+    let max_diff = lin_logits
+        .iter()
+        .zip(&ref_logits)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(
+        max_diff <= 1e-2,
+        "Linear baseline strayed too far from the operator it stores: {max_diff}"
+    );
+}
+
+#[test]
+fn per_token_costs_positive_and_kv_monotone() {
+    for strategy in Strategy::all() {
+        let mut eng = chip_engine(strategy);
+        let r = eng.generate(&PROMPT, 8);
+        assert_eq!(r.per_token.len(), PROMPT.len() + 8);
+        for c in &r.per_token {
+            assert!(c.latency.critical_ns() > 0.0, "{strategy:?}: zero latency");
+            assert!(c.energy.total_nj() > 0.0, "{strategy:?}: zero energy");
+        }
+        // MHA work grows strictly with the cache; the Para path is flat
+        let mha: Vec<f64> = r.per_token.iter().map(|c| c.latency.mha_ns).collect();
+        assert!(
+            mha.windows(2).all(|w| w[1] > w[0]),
+            "{strategy:?}: MHA cost not monotone: {mha:?}"
+        );
+        let adc: Vec<f64> = r.per_token.iter().map(|c| c.latency.adc_ns).collect();
+        assert!(adc.windows(2).all(|w| (w[1] - w[0]).abs() < 1e-9));
+    }
+}
+
+#[test]
+fn decode_is_deterministic_across_engine_instances() {
+    for strategy in Strategy::all() {
+        let a = chip_engine(strategy).generate(&PROMPT, 12);
+        let b = chip_engine(strategy).generate(&PROMPT, 12);
+        assert_eq!(a.tokens, b.tokens, "{strategy:?} not deterministic");
+    }
+}
+
+#[test]
+fn cimsim_server_serves_batches_without_artifacts() {
+    let server = InferenceServer::start(ServerConfig {
+        backend: Backend::CimSim(CimSimConfig {
+            strategy: Strategy::DenseMap,
+            ..Default::default()
+        }),
+        policy: BatchPolicy {
+            max_batch: 4,
+            max_delay: std::time::Duration::from_millis(20),
+        },
+        ..Default::default()
+    })
+    .expect("CIM-sim server must start with no artifacts");
+    let seq = server.seq;
+    let vocab = server.vocab;
+    std::thread::scope(|scope| {
+        for i in 0..8u64 {
+            let srv = &server;
+            scope.spawn(move || {
+                let mut rng = Pcg32::new(i);
+                let toks: Vec<i32> =
+                    (0..seq).map(|_| rng.below(vocab as u32) as i32).collect();
+                let logits = srv.infer(toks).expect("inference");
+                assert_eq!(logits.len(), seq * vocab);
+                assert!(logits.iter().all(|v| v.is_finite()));
+            });
+        }
+    });
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap.requests, 8);
+    assert_eq!(snap.errors, 0);
+    assert_eq!(snap.sim_tokens, 8 * seq as u64);
+    assert!(snap.sim_token_latency_ns > 0.0);
+    assert!(snap.sim_energy_nj > 0.0);
+    server.shutdown();
+}
+
+#[test]
+fn cimsim_server_matches_local_engine() {
+    // The serving path must produce exactly what a local engine computes
+    // (same seed, same strategy) — no batching contamination.
+    let server = InferenceServer::start(ServerConfig::cim_sim(Strategy::SparseMap))
+        .expect("server start");
+    let seq = server.seq;
+    let toks: Vec<i32> = (0..seq).map(|i| ((i * 7 + 3) % server.vocab) as i32).collect();
+    let served = server.infer(toks.clone()).unwrap();
+    server.shutdown();
+    let mut local = DecodeEngine::on_chip(
+        DecodeModel::synth(&tiny(), SEED),
+        &CimParams::default(),
+        Strategy::SparseMap,
+    );
+    let (want, _) = local.score(&toks);
+    assert_eq!(served, want, "served logits differ from the local engine");
+}

@@ -3,11 +3,14 @@
 //! random geometries.
 
 use monarch_cim::cim::{adc, CimParams};
-use monarch_cim::mapping::{Factor, Strategy};
-use monarch_cim::model::ModelConfig;
+use monarch_cim::mapping::rotation::net_rotation;
+use monarch_cim::mapping::{map_ops, Factor, Strategy};
+use monarch_cim::model::{MatmulOp, ModelConfig, OpKind, Stage};
 use monarch_cim::monarch::{MonarchMatrix, StridePerm};
 use monarch_cim::scheduler::timing::cost_report;
-use monarch_cim::scheduler::{adc_bits_for, usable_adcs};
+use monarch_cim::scheduler::{
+    adc_bits_for, placement_block_coords, token_commands, usable_adcs, CimCommand,
+};
 use monarch_cim::sim::exec::{single_op, FunctionalChip};
 use monarch_cim::util::prop::forall;
 use monarch_cim::util::rng::Pcg32;
@@ -119,6 +122,157 @@ fn prop_functional_chip_correct_across_geometries() {
                 (gv - w).abs() < 2e-3 * (1.0 + w.abs()),
                 "{strategy:?} d={d} m={m}"
             );
+        }
+    });
+}
+
+/// Random transformer-shaped Para op list over d x d tiles.
+fn random_model_ops(
+    g: &mut monarch_cim::util::prop::Gen,
+    d: usize,
+) -> (ModelConfig, Vec<MatmulOp>) {
+    let mut cfg = ModelConfig::tiny();
+    cfg.d_model = d;
+    let layers = g.usize(1, 2);
+    let ff_mult = g.usize(1, 4);
+    let mut ops = Vec::new();
+    for l in 0..layers {
+        for w in ["wq", "wk", "wv", "wo"] {
+            ops.push(MatmulOp {
+                name: format!("dec{l}.{w}"),
+                stage: Stage::Decoder,
+                layer: l,
+                kind: OpKind::Para,
+                rows: d,
+                cols: d,
+                batch: 1,
+            });
+        }
+        ops.push(MatmulOp {
+            name: format!("dec{l}.ffn1"),
+            stage: Stage::Decoder,
+            layer: l,
+            kind: OpKind::Para,
+            rows: ff_mult * d,
+            cols: d,
+            batch: 1,
+        });
+        ops.push(MatmulOp {
+            name: format!("dec{l}.ffn2"),
+            stage: Stage::Decoder,
+            layer: l,
+            kind: OpKind::Para,
+            rows: d,
+            cols: ff_mult * d,
+            batch: 1,
+        });
+    }
+    (cfg, ops)
+}
+
+#[test]
+fn prop_token_commands_activate_only_mapped_rows() {
+    // Every DriveRows/Convert in the per-token command stream of a whole
+    // mapped model must stay within the rows/columns its array actually
+    // has placements on — the §III-C guarantee that packed layouts are
+    // never driven outside their blocks.
+    forall("token commands within placements", 12, |g| {
+        let d = g.choose(&[16usize, 64]);
+        let b = (d as f64).sqrt() as usize;
+        let m = g.choose(&[16usize, 32, 64]);
+        if b > m {
+            return;
+        }
+        let (cfg, ops) = random_model_ops(g, d);
+        let mut params = CimParams::default();
+        params.array_dim = m;
+        for strategy in Strategy::all() {
+            let mm = map_ops(&cfg, &ops, &params, strategy);
+            // allowed rows/cols per array, from the placements themselves
+            let mut rows_ok = vec![std::collections::HashSet::new(); mm.arrays];
+            let mut cols_ok = vec![std::collections::HashSet::new(); mm.arrays];
+            for p in &mm.placements {
+                let edge = p.block_dim.min(mm.m);
+                for (r0, c0) in placement_block_coords(p, mm.m) {
+                    rows_ok[p.array].extend(r0..r0 + edge);
+                    cols_ok[p.array].extend(c0..c0 + edge);
+                }
+            }
+            let cmds = token_commands(&mm, &params);
+            assert!(!cmds.is_empty(), "{strategy:?}: empty command stream");
+            let expected_bits = adc_bits_for(&params, strategy, mm.b);
+            for cmd in &cmds {
+                match cmd {
+                    CimCommand::DriveRows { array, rows } => {
+                        assert!(*array < mm.arrays);
+                        assert!(!rows.is_empty());
+                        for r in rows {
+                            assert!(
+                                rows_ok[*array].contains(r),
+                                "{strategy:?}: array {array} row {r} driven without a placement"
+                            );
+                        }
+                        if strategy == Strategy::DenseMap {
+                            // §III-C row-group walk: one block per pass
+                            assert_eq!(rows.len(), mm.b, "{strategy:?}: walk granularity");
+                        }
+                    }
+                    CimCommand::Convert { array, cols, bits } => {
+                        assert_eq!(*bits, expected_bits);
+                        for c in cols {
+                            assert!(
+                                cols_ok[*array].contains(c),
+                                "{strategy:?}: array {array} col {c} converted without a placement"
+                            );
+                        }
+                    }
+                    _ => {}
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_densemap_lane_pairs_cancel_rotation() {
+    // Under random model configs, every DenseMap (op, tile, chunk) pair
+    // of L/R lanes must satisfy i_R = -i_L (mod lanes) so that the two
+    // stage rotations cancel (§III-B2a).
+    forall("i_R = -i_L mod lanes", 15, |g| {
+        let d = g.choose(&[16usize, 64]);
+        let b = (d as f64).sqrt() as usize;
+        let m = g.choose(&[16usize, 32, 64]);
+        if b > m {
+            return;
+        }
+        let (cfg, ops) = random_model_ops(g, d);
+        let mut params = CimParams::default();
+        params.array_dim = m;
+        let mm = map_ops(&cfg, &ops, &params, Strategy::DenseMap);
+        let lanes = m / b;
+        let mut left = std::collections::HashMap::new();
+        let mut right = std::collections::HashMap::new();
+        for p in &mm.placements {
+            let key = (p.op, p.tile, p.lane_of_factor);
+            match p.factor {
+                Factor::Left => {
+                    assert!(left.insert(key, p.diag).is_none(), "dup L at {key:?}");
+                }
+                Factor::Right => {
+                    assert!(right.insert(key, p.diag).is_none(), "dup R at {key:?}");
+                }
+                Factor::Dense => panic!("dense placement in DenseMap"),
+            }
+        }
+        assert_eq!(left.len(), right.len(), "unpaired lanes");
+        for (key, &il) in &left {
+            let ir = *right.get(key).unwrap_or_else(|| panic!("no R for {key:?}"));
+            assert_eq!(
+                ir,
+                (lanes - il % lanes) % lanes,
+                "{key:?}: i_R != -i_L mod lanes (i_L={il}, i_R={ir})"
+            );
+            assert_eq!(net_rotation(il, ir, lanes), 0);
         }
     });
 }
