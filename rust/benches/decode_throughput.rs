@@ -2,54 +2,97 @@
 //! across the three mapping strategies, plus the modeled per-token
 //! latency/energy the scheduler attributes to each (the paper's Fig. 7
 //! quantities measured in their native regime — token-by-token decode
-//! with a growing KV cache — instead of per-op matvecs).
+//! with a growing KV cache, instead of per-op matvecs).
 //!
-//! `cargo bench --bench decode_throughput`
+//! Reports host-wall-clock **tokens/sec** per strategy (the number the
+//! compiled-plan replay optimizes) and writes a machine-readable
+//! `BENCH_decode.json` so the perf trajectory is trackable per commit.
+//!
+//! ```text
+//! cargo bench --bench decode_throughput                      # writes BENCH_decode.json
+//! cargo bench --bench decode_throughput -- --bench-json out.json
+//! BENCH_JSON=out.json cargo bench --bench decode_throughput  # env override
+//! BENCH_QUICK=1 ...                                          # CI smoke mode
+//! ```
 
 use monarch_cim::cim::CimParams;
 use monarch_cim::mapping::Strategy;
 use monarch_cim::model::ModelConfig;
 use monarch_cim::sim::decode::{DecodeEngine, DecodeModel};
 use monarch_cim::util::bench::{section, Bencher};
+use monarch_cim::util::json::{num, obj, s, Json};
 
 const PROMPT: [i32; 4] = [11, 48, 85, 122];
 const TOKENS: usize = 16;
+
+/// Output path for the JSON artifact: `--bench-json <path>` (or
+/// `--bench-json=<path>`) > `BENCH_JSON` env var > `BENCH_decode.json`.
+fn bench_json_path() -> std::path::PathBuf {
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        if a == "--bench-json" {
+            if let Some(p) = args.next() {
+                return p.into();
+            }
+        } else if let Some(p) = a.strip_prefix("--bench-json=") {
+            return p.into();
+        }
+    }
+    if let Some(p) = std::env::var_os("BENCH_JSON") {
+        return p.into();
+    }
+    "BENCH_decode.json".into()
+}
 
 fn main() {
     let cfg = ModelConfig::tiny();
     let params = CimParams::default();
     let mut b = Bencher::new();
-
-    section("decode engine — functional-sim throughput (tiny model)");
-    let mut reference = DecodeEngine::reference(DecodeModel::synth(&cfg, 2025));
     // each generate() runs prompt + generated forward passes
     let passes = (PROMPT.len() + TOKENS) as f64;
-    let m = b
+    let mut records: Vec<(String, Json)> = Vec::new();
+
+    section("decode engine — functional-sim throughput (tiny model)");
+    let mut reference = DecodeEngine::reference(DecodeModel::synth(cfg.clone(), 2025));
+    let meas = b
         .bench("reference decode 16 tokens", || {
             std::hint::black_box(reference.generate(&PROMPT, TOKENS))
         })
         .clone();
-    println!(
-        "  -> {:.0} simulated forward passes/s (host wall-clock)",
-        passes / (m.mean_ns * 1e-9)
-    );
+    let ref_tps = passes / (meas.mean_ns * 1e-9);
+    println!("  -> {ref_tps:.0} tokens/s (host wall-clock)");
+    records.push((
+        "Reference".to_string(),
+        obj(vec![
+            ("tokens_per_sec", num(ref_tps)),
+            ("ns_per_token", num(meas.mean_ns / passes)),
+        ]),
+    ));
 
     for strategy in Strategy::all() {
-        let mut eng =
-            DecodeEngine::on_chip(DecodeModel::synth(&cfg, 2025), &params, strategy);
-        let m = b
+        let mut eng = DecodeEngine::on_chip(
+            DecodeModel::synth(cfg.clone(), 2025),
+            params.clone(),
+            strategy,
+        );
+        let meas = b
             .bench(&format!("{} decode 16 tokens", strategy.name()), || {
                 std::hint::black_box(eng.generate(&PROMPT, TOKENS))
             })
             .clone();
+        let tps = passes / (meas.mean_ns * 1e-9);
+        let arrays = eng.mapping().map(|mm| mm.arrays).unwrap_or(0);
+        // one un-timed run for the modeled per-token cost breakdown
         let r = eng.generate(&PROMPT, TOKENS);
-        let total = eng.trace.total();
+        let total = r.total();
+        let n_tok = r.per_token.len().max(1) as f64;
         println!(
-            "  -> {:.0} simulated forward passes/s wall | modeled chip: {:.3} µs/token, {:.1} nJ/token ({} arrays)",
-            passes / (m.mean_ns * 1e-9),
-            eng.trace.mean_token_ns() / 1e3,
-            eng.trace.mean_token_nj(),
-            eng.mapping().map(|mm| mm.arrays).unwrap_or(0),
+            "  -> {:.0} tokens/s wall ({:.2} µs/token) | modeled chip: {:.3} µs/token, {:.1} nJ/token ({} arrays)",
+            tps,
+            meas.mean_ns / passes / 1e3,
+            total.latency.critical_ns() / n_tok / 1e3,
+            total.energy.total_nj() / n_tok,
+            arrays,
         );
         println!(
             "  -> last-token MHA share: {:.0} ns of {:.0} ns critical path (KV cache {} entries)",
@@ -60,17 +103,45 @@ fn main() {
                 .unwrap_or(0.0),
             PROMPT.len() + TOKENS,
         );
-        let _ = total;
+        records.push((
+            strategy.name().to_string(),
+            obj(vec![
+                ("tokens_per_sec", num(tps)),
+                ("ns_per_token", num(meas.mean_ns / passes)),
+                ("speedup_vs_reference", num(tps / ref_tps)),
+                ("modeled_ns_per_token", num(total.latency.critical_ns() / n_tok)),
+                ("modeled_nj_per_token", num(total.energy.total_nj() / n_tok)),
+                ("arrays", num(arrays as f64)),
+            ]),
+        ));
     }
 
-    section("chip programming cost (map + write commands)");
+    section("chip programming cost (map + compile plan + write)");
     for strategy in Strategy::all() {
         b.bench(&format!("program chip / {}", strategy.name()), || {
             std::hint::black_box(DecodeEngine::on_chip(
-                DecodeModel::synth(&cfg, 2025),
-                &params,
+                DecodeModel::synth(cfg.clone(), 2025),
+                params.clone(),
                 strategy,
             ))
         });
+    }
+
+    // machine-readable perf artifact
+    let path = bench_json_path();
+    let doc = obj(vec![
+        ("bench", s("decode_throughput")),
+        ("model", s(cfg.name)),
+        ("prompt_len", num(PROMPT.len() as f64)),
+        ("generated_tokens", num(TOKENS as f64)),
+        ("tokens_per_iter", num(passes)),
+        (
+            "strategies",
+            obj(records.iter().map(|(k, v)| (k.as_str(), v.clone())).collect()),
+        ),
+    ]);
+    match std::fs::write(&path, format!("{doc}\n")) {
+        Ok(()) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\nfailed to write {}: {e}", path.display()),
     }
 }

@@ -54,24 +54,64 @@ impl Crossbar {
     /// read accumulated bitline currents on all columns.
     /// `y[c] = sum_{r in active} input[r] * cells[r][c]`.
     pub fn mvm_pass(&self, input: &[f32], active_rows: &[usize]) -> Vec<f32> {
-        assert_eq!(input.len(), self.dim, "input must span all rows");
         let mut y = vec![0.0f32; self.dim];
+        self.mvm_pass_into(input, active_rows, &mut y);
+        y
+    }
+
+    /// Allocation-free form of [`Crossbar::mvm_pass`]: accumulate into a
+    /// caller-owned full-width buffer (every element is overwritten).
+    pub fn mvm_pass_into(&self, input: &[f32], active_rows: &[usize], out: &mut [f32]) {
+        assert_eq!(input.len(), self.dim, "input must span all rows");
+        assert_eq!(out.len(), self.dim, "output must span all columns");
+        out.fill(0.0);
         for &r in active_rows {
             let xv = input[r];
             if xv == 0.0 {
                 continue;
             }
             let row = &self.cells[r * self.dim..(r + 1) * self.dim];
-            for (acc, w) in y.iter_mut().zip(row) {
+            for (acc, w) in out.iter_mut().zip(row) {
                 *acc += xv * w;
             }
         }
-        y
+    }
+
+    /// Column-restricted analog pass: convert ONLY the listed columns —
+    /// `out[k] = sum_{r in active} input[r] * cells[r][cols[k]]`.
+    ///
+    /// This is the sparsity-aware inner loop of the compiled-plan replay
+    /// (`scheduler::plan`): O(active_rows × cols) work instead of
+    /// O(active_rows × m), an m/b reduction for DenseMap block walks.
+    /// Accumulation order per column is identical to [`Crossbar::mvm_pass`]
+    /// (rows in `active_rows` order, zero inputs skipped), so each
+    /// converted column is bit-identical to the full pass.
+    pub fn mvm_pass_cols(
+        &self,
+        input: &[f32],
+        active_rows: &[usize],
+        cols: &[usize],
+        out: &mut [f32],
+    ) {
+        assert_eq!(input.len(), self.dim, "input must span all rows");
+        assert_eq!(out.len(), cols.len(), "one output per converted column");
+        out.fill(0.0);
+        for &r in active_rows {
+            let xv = input[r];
+            if xv == 0.0 {
+                continue;
+            }
+            let row = &self.cells[r * self.dim..(r + 1) * self.dim];
+            for (acc, &c) in out.iter_mut().zip(cols) {
+                *acc += xv * row[c];
+            }
+        }
     }
 
     /// MVM pass followed by SAR ADC readout quantization (mid-tread,
     /// `bits` resolution over ±`full_scale`). Mirrors the L1 kernel
-    /// `block_diag_mm_adc` / `ref.adc_quantize`.
+    /// `block_diag_mm_adc` / `ref.adc_quantize`. Quantizes in place —
+    /// no second buffer behind the pass itself.
     pub fn mvm_pass_quantized(
         &self,
         input: &[f32],
@@ -79,10 +119,11 @@ impl Crossbar {
         bits: u32,
         full_scale: f32,
     ) -> Vec<f32> {
-        let y = self.mvm_pass(input, active_rows);
-        y.into_iter()
-            .map(|v| quantize(v, bits, full_scale))
-            .collect()
+        let mut y = self.mvm_pass(input, active_rows);
+        for v in y.iter_mut() {
+            *v = quantize(*v, bits, full_scale);
+        }
+        y
     }
 
     /// Fraction of cells holding non-zero weights (utilization).
@@ -173,6 +214,28 @@ mod tests {
             errs.push(err);
         }
         assert!(errs[0] > errs[1] && errs[1] > errs[2]);
+    }
+
+    #[test]
+    fn mvm_pass_cols_bit_identical_to_full_pass() {
+        // Any column subset, in any order, must reproduce the full pass's
+        // values exactly (same accumulation order per column) — the
+        // contract the compiled-plan replay relies on.
+        let mut rng = Pcg32::new(3);
+        let w = Matrix::randn(16, 16, &mut rng);
+        let mut xb = Crossbar::new(16);
+        xb.program_block(0, 0, &w);
+        let mut x = rng.normal_vec(16);
+        x[3] = 0.0; // exercise the zero-input skip on both paths
+        let active: Vec<usize> = vec![0, 3, 5, 6, 9, 15];
+        let full = xb.mvm_pass(&x, &active);
+        for cols in [vec![0usize, 1, 2], vec![15, 2, 7], (0..16).collect()] {
+            let mut out = vec![f32::NAN; cols.len()];
+            xb.mvm_pass_cols(&x, &active, &cols, &mut out);
+            for (k, &c) in cols.iter().enumerate() {
+                assert_eq!(out[k].to_bits(), full[c].to_bits(), "col {c}");
+            }
+        }
     }
 
     #[test]

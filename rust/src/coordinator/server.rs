@@ -218,9 +218,12 @@ fn run_pjrt_worker(
     }
 }
 
-/// Worker loop for the CIM-sim backend: one decode engine owned by the
+/// Worker loop for the CIM-sim backend: ONE decode engine owned by the
 /// worker thread scores each request window position by position on the
-/// emulated chip.
+/// emulated chip. Because the engine is constructed once and reused, its
+/// compiled execution plan, chip pass scratch and activation buffers are
+/// shared across every request this worker ever serves — the steady-state
+/// serving path performs no per-pass allocation.
 fn run_cimsim_worker(
     cfg: CimSimConfig,
     policy: BatchPolicy,
@@ -228,27 +231,34 @@ fn run_cimsim_worker(
     rx: Receiver<Request>,
     ready_tx: Sender<Result<(usize, usize)>>,
 ) {
-    let setup = (|| -> Result<DecodeEngine> {
-        if cfg.model.enc_layers != 0 || cfg.model.dec_layers == 0 {
+    let CimSimConfig {
+        model: model_cfg,
+        strategy,
+        cim,
+        seed,
+    } = cfg;
+    let (seq, vocab) = (model_cfg.seq, model_cfg.vocab);
+    let setup = (move || -> Result<DecodeEngine> {
+        if model_cfg.enc_layers != 0 || model_cfg.dec_layers == 0 {
             bail!(
                 "CIM-sim backend needs a decoder-only model, got {}",
-                cfg.model.name
+                model_cfg.name
             );
         }
-        let b = (cfg.model.d_model as f64).sqrt().round() as usize;
-        if b * b != cfg.model.d_model || b > cfg.cim.array_dim {
+        let b = (model_cfg.d_model as f64).sqrt().round() as usize;
+        if b * b != model_cfg.d_model || b > cim.array_dim {
             bail!(
                 "model d_model {} incompatible with array dim {}",
-                cfg.model.d_model,
-                cfg.cim.array_dim
+                model_cfg.d_model,
+                cim.array_dim
             );
         }
-        let model = DecodeModel::synth(&cfg.model, cfg.seed);
-        Ok(DecodeEngine::on_chip(model, &cfg.cim, cfg.strategy))
+        let model = DecodeModel::synth(model_cfg, seed);
+        Ok(DecodeEngine::on_chip(model, cim, strategy))
     })();
     let mut engine = match setup {
         Ok(e) => {
-            let _ = ready_tx.send(Ok((cfg.model.seq, cfg.model.vocab)));
+            let _ = ready_tx.send(Ok((seq, vocab)));
             e
         }
         Err(e) => {
@@ -256,7 +266,6 @@ fn run_cimsim_worker(
             return;
         }
     };
-    let (seq, vocab) = (cfg.model.seq, cfg.model.vocab);
     while let Some(batch) = next_batch(&rx, &policy) {
         let t0 = Instant::now();
         let mut replies = Vec::with_capacity(batch.len());

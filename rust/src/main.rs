@@ -237,17 +237,19 @@ fn cmd_decode(args: &Args) {
             cfg.seq - 1
         );
     }
-    let mut reference = DecodeEngine::reference(DecodeModel::synth(&cfg, seed));
+    let mut reference = DecodeEngine::reference(DecodeModel::synth(cfg.clone(), seed));
     let golden = reference.generate(&prompt, n_tokens);
     println!("reference (factored Monarch matvec): {:?}", golden.tokens);
 
     for strategy in strategies {
-        let mut eng = DecodeEngine::on_chip(DecodeModel::synth(&cfg, seed), &cim, strategy);
+        let mut eng =
+            DecodeEngine::on_chip(DecodeModel::synth(cfg.clone(), seed), cim.clone(), strategy);
         let t0 = std::time::Instant::now();
         let r = eng.generate(&prompt, n_tokens);
         let wall = t0.elapsed();
         let mapping_arrays = eng.mapping().map(|m| m.arrays).unwrap_or(0);
-        let total = eng.trace.total();
+        // generate moves the run's trace into the result
+        let total = r.total();
         println!(
             "\n{} — {} arrays, {} generated tokens in {:.2?} wall ({} chip passes modeled):",
             strategy.name(),
@@ -271,7 +273,7 @@ fn cmd_decode(args: &Args) {
             "  totals: {:.3} µs latency, {:.1} nJ energy, mean {:.3} µs/token",
             total.latency.critical_ns() / 1e3,
             total.energy.total_nj(),
-            eng.trace.mean_token_ns() / 1e3,
+            total.latency.critical_ns() / r.per_token.len().max(1) as f64 / 1e3,
         );
         // numeric agreement vs the reference model over the same window
         let window: Vec<i32> = prompt.iter().chain(&r.tokens).copied().collect();

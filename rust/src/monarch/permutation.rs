@@ -31,12 +31,20 @@ impl StridePerm {
 
     /// Apply to a vector: `out[map(i)] = x[i]`.
     pub fn apply(&self, x: &[f32]) -> Vec<f32> {
-        assert_eq!(x.len(), self.n(), "perm length mismatch");
         let mut out = vec![0.0f32; x.len()];
+        self.apply_into(x, &mut out);
+        out
+    }
+
+    /// Allocation-free form of [`StridePerm::apply`]: permute `x` into a
+    /// caller-owned buffer (every element of `out` is overwritten). This
+    /// is the hot-path entry point of the per-token replay loop.
+    pub fn apply_into(&self, x: &[f32], out: &mut [f32]) {
+        assert_eq!(x.len(), self.n(), "perm length mismatch");
+        assert_eq!(out.len(), self.n(), "perm output length mismatch");
         for (i, &v) in x.iter().enumerate() {
             out[self.map(i)] = v;
         }
-        out
     }
 
     /// Apply to each row of a matrix (batched vectors).
@@ -106,6 +114,15 @@ mod tests {
         let pm = p.apply_rows(&m);
         assert_eq!(pm.row(0), p.apply(&x).as_slice());
         assert_eq!(pm.row(0), pm.row(1));
+    }
+
+    #[test]
+    fn apply_into_matches_apply() {
+        let p = StridePerm::new(4);
+        let x: Vec<f32> = (0..16).map(|i| i as f32 * 0.5).collect();
+        let mut out = vec![7.0f32; 16]; // stale contents must be overwritten
+        p.apply_into(&x, &mut out);
+        assert_eq!(out, p.apply(&x));
     }
 
     #[test]

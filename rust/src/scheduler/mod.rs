@@ -6,9 +6,14 @@
 //! layouts execute *correctly* (activating all rows of a DenseMap array
 //! would mix lanes — `sim::exec` demonstrates both the correct schedules
 //! and that failure mode). `timing` walks the same structures to produce
-//! Fig. 7/8 latency and energy.
+//! Fig. 7/8 latency and energy, and `plan` compiles them once into the
+//! allocation-free per-token replay tables the executor runs from
+//! ([`compile_plan`], built next to [`placement_schedule`]).
 
+pub mod plan;
 pub mod timing;
+
+pub use plan::{compile_plan, CompiledOpPlan, CompiledPass, ModelPlan, TilePasses};
 
 use crate::mapping::{Factor, ModelMapping, Placement, Strategy};
 

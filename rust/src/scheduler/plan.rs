@@ -1,0 +1,346 @@
+//! Compiled execution plans (§III-C, executed): the per-token work of a
+//! whole mapped model resolved ONCE, at chip-programming time, into a
+//! flat pass table the simulator replays allocation-free.
+//!
+//! [`super::placement_schedule`] derives each placement's row-activation
+//! masks, conversion columns and output rotation from the mapping — but
+//! re-deriving it per token allocates index vectors on every analog pass
+//! and leaves the rotation as a separate realignment step. `compile_plan`
+//! walks the same schedules exactly once and folds everything into
+//! [`CompiledPass`] records:
+//!
+//! * `rows` — the rows to drive, verbatim the scheduler's `DriveRows` set
+//!   (`rows[k]` for `k < n_in` carries input element `src + k`; any
+//!   remaining rows are driven at zero — Linear's padding rows).
+//! * `cols` — the columns to convert, **pre-rotated**: `cols[k]` is the
+//!   column whose bitline feeds output element `dst + k`, so the
+//!   §III-B2a lane de-rotation costs nothing at token time and only the
+//!   columns the schedule actually converts are computed
+//!   ([`crate::cim::crossbar::Crossbar::mvm_pass_cols`]).
+//! * `src`/`dst` — offsets into the stage input/output vectors, so the
+//!   executor's token loop is pure index-driven replay.
+//!
+//! The replay is bit-identical to a freshly recomputed
+//! `placement_schedule` execution (property-tested in
+//! `tests/prop_exec_plan.rs`) — the plan changes *when* scheduling work
+//! happens, never *what* the chip computes.
+
+use std::ops::Range;
+
+use super::placement_schedule;
+use crate::mapping::{Factor, MappedOp, ModelMapping, Strategy};
+
+/// One fully resolved analog pass of the per-token command stream.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CompiledPass {
+    /// Physical array driven by this pass.
+    pub array: usize,
+    /// Rows to drive — exactly the scheduler's `DriveRows` set.
+    pub rows: Vec<usize>,
+    /// `rows[..n_in]` carry input elements `src..src + n_in`; rows past
+    /// `n_in` are driven at zero (Linear's zero-padded tail).
+    pub n_in: usize,
+    /// Offset of this pass's input segment in the stage input vector.
+    pub src: usize,
+    /// Columns to convert; `cols[k]`'s bitline feeds output `dst + k`
+    /// (lane rotation already folded in).
+    pub cols: Vec<usize>,
+    /// Offset of this pass's output segment in the stage output vector.
+    pub dst: usize,
+}
+
+/// Pass ranges of one d x d tile: the Right-factor passes run first,
+/// then (after the stride permutation) the Left-factor passes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TilePasses {
+    pub right: Range<usize>,
+    pub left: Range<usize>,
+}
+
+/// Compiled per-token plan of one mapped op.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CompiledOpPlan {
+    /// Monarch strategies: pass ranges per d x d tile (indexed by the
+    /// row-major tile id `i * col_tiles + j`). Empty for Linear.
+    pub tiles: Vec<TilePasses>,
+    /// Flat resolved pass table (tile-major for Monarch; placement
+    /// allocation order for Linear, fixing partial-sum order).
+    pub passes: Vec<CompiledPass>,
+    /// Linear partial sums accumulate (`+=`) into the output; Monarch
+    /// stage passes assign (their output segments are disjoint & total).
+    pub accumulate: bool,
+}
+
+/// Compiled per-token plan of a whole mapped model — one entry per op,
+/// aligned with `mapping.ops`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelPlan {
+    pub ops: Vec<CompiledOpPlan>,
+    /// Array dimension the passes index into.
+    pub m: usize,
+}
+
+impl ModelPlan {
+    /// Widest conversion any pass performs (scratch sizing).
+    pub fn max_cols(&self) -> usize {
+        self.ops
+            .iter()
+            .flat_map(|o| o.passes.iter())
+            .map(|p| p.cols.len())
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+/// Geometry of one Linear placement's m x m tile: `(rp, cp, rows_here,
+/// cols_here)`. Single source of the `tile == rp * col_parts + cp`
+/// convention `mapping::linear` allocates with — shared by programming,
+/// plan compilation and the recompute path so they can't drift apart.
+pub fn linear_tile_geometry(
+    op: &MappedOp,
+    tile: usize,
+    m: usize,
+) -> (usize, usize, usize, usize) {
+    let col_parts = op.cols.div_ceil(m);
+    let (rp, cp) = (tile / col_parts, tile % col_parts);
+    (rp, cp, m.min(op.rows - rp * m), m.min(op.cols - cp * m))
+}
+
+/// Resolve the whole mapping's per-token schedules into a [`ModelPlan`].
+///
+/// Pure function of the mapping (deterministic), called once at
+/// `FunctionalChip::program_rect` time; the token loop only reads it.
+pub fn compile_plan(mapping: &ModelMapping) -> ModelPlan {
+    let m = mapping.m;
+    // placement indices grouped per op, insertion order preserved
+    let mut per_op: Vec<Vec<usize>> = vec![Vec::new(); mapping.ops.len()];
+    for (i, p) in mapping.placements.iter().enumerate() {
+        per_op[p.op].push(i);
+    }
+    let ops = mapping
+        .ops
+        .iter()
+        .enumerate()
+        .map(|(oi, op)| match mapping.strategy {
+            Strategy::Linear => compile_linear_op(mapping, op, &per_op[oi]),
+            _ => compile_monarch_op(mapping, op, &per_op[oi]),
+        })
+        .collect();
+    ModelPlan { ops, m }
+}
+
+fn compile_linear_op(
+    mapping: &ModelMapping,
+    op: &MappedOp,
+    op_placements: &[usize],
+) -> CompiledOpPlan {
+    let m = mapping.m;
+    let mut passes = Vec::with_capacity(op_placements.len());
+    for &pi in op_placements {
+        let p = &mapping.placements[pi];
+        let (rp, cp, rows_here, cols_here) = linear_tile_geometry(op, p.tile, m);
+        let sched = placement_schedule(p, m, false);
+        let pass = sched.passes.into_iter().next().expect("schedule has a pass");
+        passes.push(CompiledPass {
+            array: p.array,
+            n_in: cols_here,
+            src: cp * m,
+            // The executor consumes only the columns that land in the
+            // output tile; the command stream still converts all m.
+            cols: pass.cols[..rows_here].to_vec(),
+            rows: pass.rows,
+            dst: rp * m,
+        });
+    }
+    CompiledOpPlan {
+        tiles: Vec::new(),
+        passes,
+        accumulate: true,
+    }
+}
+
+fn compile_monarch_op(
+    mapping: &ModelMapping,
+    op: &MappedOp,
+    op_placements: &[usize],
+) -> CompiledOpPlan {
+    let m = mapping.m;
+    let b = mapping.b.max(1);
+    let lanes = (m / b).max(1);
+    let dense_walk = mapping.strategy == Strategy::DenseMap;
+    let mut passes = Vec::new();
+    let mut tiles = Vec::with_capacity(op.tiles);
+    for tile in 0..op.tiles {
+        let right_start = passes.len();
+        push_factor_passes(
+            mapping,
+            op_placements,
+            tile,
+            Factor::Right,
+            dense_walk,
+            lanes,
+            b,
+            &mut passes,
+        );
+        let left_start = passes.len();
+        push_factor_passes(
+            mapping,
+            op_placements,
+            tile,
+            Factor::Left,
+            dense_walk,
+            lanes,
+            b,
+            &mut passes,
+        );
+        tiles.push(TilePasses {
+            right: right_start..left_start,
+            left: left_start..passes.len(),
+        });
+    }
+    CompiledOpPlan {
+        tiles,
+        passes,
+        accumulate: false,
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn push_factor_passes(
+    mapping: &ModelMapping,
+    op_placements: &[usize],
+    tile: usize,
+    factor: Factor,
+    dense_walk: bool,
+    lanes: usize,
+    b: usize,
+    passes: &mut Vec<CompiledPass>,
+) {
+    let m = mapping.m;
+    for &pi in op_placements {
+        let p = &mapping.placements[pi];
+        if p.factor != factor || p.tile != tile {
+            continue;
+        }
+        // Input segment of this lane starts at block `lane_of_factor *
+        // lanes` of the stage vector (same convention as the executor).
+        let base = p.lane_of_factor * lanes;
+        let sched = placement_schedule(p, m, dense_walk);
+        if dense_walk {
+            // §III-C walk: one pass per block-row group; outputs arrive
+            // pre-aligned (the walk follows the diagonal), so src == dst.
+            for (j, pass) in sched.passes.into_iter().enumerate() {
+                let off = (base + j) * b;
+                let n_in = pass.rows.len();
+                passes.push(CompiledPass {
+                    array: p.array,
+                    rows: pass.rows,
+                    n_in,
+                    src: off,
+                    cols: pass.cols,
+                    dst: off,
+                });
+            }
+        } else {
+            // Whole-lane pass: the schedule's column list already walks
+            // the diagonal layout (block j reads column block
+            // (j + diag) % lanes), which IS the §III-B2a de-rotation —
+            // `cols[k]` feeds output `dst + k` directly.
+            let pass = sched.passes.into_iter().next().expect("schedule has a pass");
+            let off = base * b;
+            let n_in = pass.rows.len();
+            passes.push(CompiledPass {
+                array: p.array,
+                rows: pass.rows,
+                n_in,
+                src: off,
+                cols: pass.cols,
+                dst: off,
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cim::CimParams;
+    use crate::mapping::map_model;
+    use crate::model::ModelConfig;
+
+    #[test]
+    fn plan_is_deterministic_and_covers_all_ops() {
+        let cfg = ModelConfig::tiny();
+        let params = CimParams::default();
+        for strategy in Strategy::all() {
+            let mm = map_model(&cfg, &params, strategy);
+            let plan = compile_plan(&mm);
+            assert_eq!(plan.ops.len(), mm.ops.len());
+            assert_eq!(plan, compile_plan(&mm), "{strategy:?} not deterministic");
+            let total_passes: usize = plan.ops.iter().map(|o| o.passes.len()).sum();
+            assert!(total_passes >= mm.placements.len(), "{strategy:?}");
+            assert!(plan.max_cols() <= mm.m, "{strategy:?}");
+        }
+    }
+
+    #[test]
+    fn monarch_tiles_partition_the_pass_table() {
+        let cfg = ModelConfig::tiny();
+        let params = CimParams::default();
+        for strategy in [Strategy::SparseMap, Strategy::DenseMap] {
+            let mm = map_model(&cfg, &params, strategy);
+            let plan = compile_plan(&mm);
+            for (oi, op) in plan.ops.iter().enumerate() {
+                assert_eq!(op.tiles.len(), mm.ops[oi].tiles);
+                assert!(!op.accumulate);
+                let mut next = 0usize;
+                for t in &op.tiles {
+                    assert_eq!(t.right.start, next);
+                    assert_eq!(t.right.end, t.left.start);
+                    assert!(t.right.end > t.right.start, "empty Right stage");
+                    assert!(t.left.end > t.left.start, "empty Left stage");
+                    next = t.left.end;
+                }
+                assert_eq!(next, op.passes.len());
+            }
+        }
+    }
+
+    #[test]
+    fn densemap_passes_are_block_granular() {
+        let cfg = ModelConfig::tiny();
+        let params = CimParams::default();
+        let mm = map_model(&cfg, &params, Strategy::DenseMap);
+        let plan = compile_plan(&mm);
+        for op in &plan.ops {
+            for pass in &op.passes {
+                assert_eq!(pass.rows.len(), mm.b, "walk drives one block");
+                assert_eq!(pass.cols.len(), mm.b, "walk converts one block");
+                assert_eq!(pass.n_in, mm.b);
+                assert_eq!(pass.src, pass.dst, "walk outputs pre-aligned");
+            }
+        }
+    }
+
+    #[test]
+    fn linear_passes_truncate_to_tile_geometry() {
+        let cfg = ModelConfig::tiny();
+        let params = CimParams::default();
+        let mm = map_model(&cfg, &params, Strategy::Linear);
+        let plan = compile_plan(&mm);
+        for (oi, op) in plan.ops.iter().enumerate() {
+            assert!(op.accumulate);
+            assert_eq!(op.passes.len(), mm.ops[oi].tiles);
+            for (tile, pass) in op.passes.iter().enumerate() {
+                let (rp, cp, rows_here, cols_here) =
+                    linear_tile_geometry(&mm.ops[oi], tile, mm.m);
+                assert_eq!(pass.rows.len(), mm.m, "all rows driven");
+                assert_eq!(pass.n_in, cols_here);
+                assert_eq!(pass.src, cp * mm.m);
+                assert_eq!(pass.dst, rp * mm.m);
+                let want: Vec<usize> = (0..rows_here).collect();
+                assert_eq!(pass.cols, want, "identity columns, truncated");
+            }
+        }
+    }
+}

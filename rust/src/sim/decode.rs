@@ -7,13 +7,20 @@
 //!
 //! Split of responsibilities (paper Fig. 2b):
 //! * **Para ops** (`wq/wk/wv/wo/ffn1/ffn2`) — weight-stationary in CIM
-//!   arrays; executed by `FunctionalChip::run_op` with scheduler-issued
-//!   row-activation masks, lane de-rotation and stride permutations.
+//!   arrays; executed by `FunctionalChip::run_op_into` replaying the
+//!   compiled plan (`scheduler::plan`) with scheduler-issued
+//!   row-activation masks, pre-rotated column conversion and stride
+//!   permutations.
 //! * **NonPara ops** (attention scores `qk` and context `av`) — digital,
 //!   on the MHA unit: computed here in f32 against the KV cache; their
 //!   cost is `trace::mha_token_cost` (grows with the cache).
 //! * Everything else (LayerNorm, GeLU, residuals, embedding/LM head) —
 //!   DPU vector ops, identical across backends.
+//!
+//! The steady-state token loop is allocation-free: the engine owns one
+//! [`EngineBufs`] set of activation buffers (reused every token, every
+//! request), the chip owns its pass scratch, and the only per-token heap
+//! traffic is the KV-cache append — state, not scratch.
 //!
 //! Because the chip's Monarch passes replay the factored reference's f32
 //! operations in the same order, SparseMap/DenseMap decode is
@@ -78,7 +85,9 @@ fn scaled_monarch(b: usize, rng: &mut Pcg32) -> MonarchMatrix {
 
 impl DecodeModel {
     /// Deterministically synthesize weights for a decoder-only config.
-    pub fn synth(cfg: &ModelConfig, seed: u64) -> DecodeModel {
+    /// Takes the config by value — callers that keep one pass a clone,
+    /// everyone else just moves it in.
+    pub fn synth(cfg: ModelConfig, seed: u64) -> DecodeModel {
         assert_eq!(
             cfg.enc_layers, 0,
             "decode engine targets decoder-only models (got {})",
@@ -87,7 +96,7 @@ impl DecodeModel {
         assert!(cfg.dec_layers > 0, "model has no decoder layers");
         let d = cfg.d_model;
         let b = cfg.monarch_b();
-        let ops = para_ops(cfg);
+        let ops = para_ops(&cfg);
         let weights: Vec<RectMonarch> = ops
             .iter()
             .enumerate()
@@ -124,13 +133,17 @@ impl DecodeModel {
                 }
             })
             .collect();
+        let embedding = Matrix::randn(cfg.vocab, d, &mut Pcg32::stream(seed, 0x5eed));
+        let positional =
+            Matrix::randn(cfg.seq, d, &mut Pcg32::stream(seed, 0x905e)).scale(0.1);
+        let lm_head = Matrix::randn(cfg.vocab, d, &mut Pcg32::stream(seed, 0xeadd));
         DecodeModel {
-            cfg: cfg.clone(),
+            cfg,
             ops,
             weights,
-            embedding: Matrix::randn(cfg.vocab, d, &mut Pcg32::stream(seed, 0x5eed)),
-            positional: Matrix::randn(cfg.seq, d, &mut Pcg32::stream(seed, 0x905e)).scale(0.1),
-            lm_head: Matrix::randn(cfg.vocab, d, &mut Pcg32::stream(seed, 0xeadd)),
+            embedding,
+            positional,
+            lm_head,
             layers,
         }
     }
@@ -149,8 +162,70 @@ pub enum ParaBackend {
     Chip(Box<FunctionalChip>),
 }
 
-/// The decode engine: owns the model, the Para backend and the KV cache;
-/// generates tokens greedily and accounts latency/energy per token.
+impl ParaBackend {
+    /// Execute `y = W x` for op `op_idx` into a caller buffer. The chip
+    /// path replays the compiled plan allocation-free; the reference
+    /// path runs the golden factored matvec.
+    fn run_into(&mut self, model: &DecodeModel, op_idx: usize, x: &[f32], y: &mut [f32]) {
+        match self {
+            ParaBackend::Reference => {
+                let r = model.reference_matvec(op_idx, x);
+                y.copy_from_slice(&r);
+            }
+            ParaBackend::Chip(chip) => chip.run_op_into(op_idx, x, y),
+        }
+    }
+}
+
+/// Per-token activation buffers, allocated once per engine and reused
+/// across tokens and requests (the serving worker keeps one engine, so
+/// this scratch also persists across requests).
+struct EngineBufs {
+    /// Residual stream (d).
+    h: Vec<f32>,
+    /// LayerNorm output feeding the current sub-block (d).
+    x: Vec<f32>,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// Attention context (d).
+    ctx: Vec<f32>,
+    o: Vec<f32>,
+    /// FFN hidden (d_ff).
+    f: Vec<f32>,
+    g: Vec<f32>,
+    /// Final LayerNorm output (d).
+    hn: Vec<f32>,
+    /// Attention score scratch (grows to the KV length; capacity
+    /// reserved for the model's context window).
+    scores: Vec<f32>,
+    /// LM-head logits of the latest forwarded position (vocab).
+    logits: Vec<f32>,
+}
+
+impl EngineBufs {
+    fn new(cfg: &ModelConfig) -> Self {
+        let d = cfg.d_model;
+        Self {
+            h: vec![0.0; d],
+            x: vec![0.0; d],
+            q: vec![0.0; d],
+            k: vec![0.0; d],
+            v: vec![0.0; d],
+            ctx: vec![0.0; d],
+            o: vec![0.0; d],
+            f: vec![0.0; cfg.d_ff],
+            g: vec![0.0; d],
+            hn: vec![0.0; d],
+            scores: Vec::with_capacity(cfg.seq),
+            logits: vec![0.0; cfg.vocab],
+        }
+    }
+}
+
+/// The decode engine: owns the model, the Para backend, the KV cache and
+/// the per-token scratch; generates tokens greedily and accounts
+/// latency/energy per token.
 pub struct DecodeEngine {
     pub model: DecodeModel,
     backend: ParaBackend,
@@ -159,9 +234,12 @@ pub struct DecodeEngine {
     keys: Vec<Vec<Vec<f32>>>,
     values: Vec<Vec<Vec<f32>>>,
     pub trace: DecodeTrace,
+    bufs: EngineBufs,
 }
 
-/// Result of one greedy generation run.
+/// Result of one greedy generation run. The per-token costs are *moved*
+/// out of the engine's trace (no deep copy): after `generate` returns,
+/// the engine's own trace is empty until the next run records into it.
 #[derive(Clone, Debug)]
 pub struct DecodeResult {
     /// The generated token ids (prompt excluded).
@@ -170,12 +248,22 @@ pub struct DecodeResult {
     pub per_token: Vec<Cost>,
 }
 
-fn layer_norm(x: &[f32]) -> Vec<f32> {
+impl DecodeResult {
+    /// Summed modeled cost of the whole run (the counterpart of
+    /// `DecodeTrace::total` for the moved-out per-token records).
+    pub fn total(&self) -> Cost {
+        crate::sim::trace::sum_costs(&self.per_token)
+    }
+}
+
+fn layer_norm_into(x: &[f32], out: &mut [f32]) {
     let n = x.len() as f32;
     let mean = x.iter().sum::<f32>() / n;
     let var = x.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / n;
     let inv = 1.0 / (var + 1e-5).sqrt();
-    x.iter().map(|v| (v - mean) * inv).collect()
+    for (o, v) in out.iter_mut().zip(x) {
+        *o = (v - mean) * inv;
+    }
 }
 
 fn gelu(x: &mut [f32]) {
@@ -203,6 +291,7 @@ impl DecodeEngine {
     /// Engine with the golden (non-CIM) Para backend.
     pub fn reference(model: DecodeModel) -> DecodeEngine {
         let layers = model.cfg.dec_layers;
+        let bufs = EngineBufs::new(&model.cfg);
         DecodeEngine {
             model,
             backend: ParaBackend::Reference,
@@ -210,31 +299,35 @@ impl DecodeEngine {
             keys: vec![Vec::new(); layers],
             values: vec![Vec::new(); layers],
             trace: DecodeTrace::new(),
+            bufs,
         }
     }
 
     /// Engine whose Para ops run on an emulated chip programmed with the
-    /// given mapping strategy.
+    /// given mapping strategy. Takes the CIM parameters by value (the
+    /// engine stores them for per-token cost accounting).
     pub fn on_chip(
         model: DecodeModel,
-        params: &CimParams,
+        params: CimParams,
         strategy: Strategy,
     ) -> DecodeEngine {
         let chip = FunctionalChip::program_rect(
             &model.cfg,
             &model.ops,
             &model.weights,
-            params,
+            &params,
             strategy,
         );
         let layers = model.cfg.dec_layers;
+        let bufs = EngineBufs::new(&model.cfg);
         DecodeEngine {
             model,
             backend: ParaBackend::Chip(Box::new(chip)),
-            params: params.clone(),
+            params,
             keys: vec![Vec::new(); layers],
             values: vec![Vec::new(); layers],
             trace: DecodeTrace::new(),
+            bufs,
         }
     }
 
@@ -262,82 +355,91 @@ impl DecodeEngine {
         self.keys.first().map(|k| k.len()).unwrap_or(0)
     }
 
-    fn para(&self, op_idx: usize, x: &[f32]) -> Vec<f32> {
-        match &self.backend {
-            ParaBackend::Reference => self.model.reference_matvec(op_idx, x),
-            ParaBackend::Chip(chip) => chip.run_op(op_idx, x),
-        }
-    }
-
     /// Process one token at the next position; returns the LM-head
-    /// logits. Appends K/V to the cache and records the position's cost.
-    pub fn forward(&mut self, token: i32) -> Vec<f32> {
-        let d = self.model.cfg.d_model;
-        let heads = self.model.cfg.n_heads;
-        let dh = self.model.cfg.d_head();
-        let vocab = self.model.cfg.vocab;
-        let n_layers = self.model.cfg.dec_layers;
+    /// logits (borrowed from the engine's reusable logit buffer — copy
+    /// them out if they must outlive the next forward). Appends K/V to
+    /// the cache and records the position's cost.
+    pub fn forward(&mut self, token: i32) -> &[f32] {
         let pos = self.kv_len().min(self.model.cfg.seq - 1);
+        let DecodeEngine {
+            model,
+            backend,
+            params,
+            keys,
+            values,
+            trace,
+            bufs,
+        } = self;
+        let d = model.cfg.d_model;
+        let heads = model.cfg.n_heads;
+        let dh = model.cfg.d_head();
+        let vocab = model.cfg.vocab;
+        let n_layers = model.cfg.dec_layers;
         let tok = (token.max(0) as usize).min(vocab - 1);
 
-        let mut h: Vec<f32> = self
-            .model
-            .embedding
-            .row(tok)
-            .iter()
-            .zip(self.model.positional.row(pos))
-            .map(|(e, p)| e + p)
-            .collect();
+        for ((hv, e), p) in bufs
+            .h
+            .iter_mut()
+            .zip(model.embedding.row(tok))
+            .zip(model.positional.row(pos))
+        {
+            *hv = e + p;
+        }
 
         for l in 0..n_layers {
-            let ops = self.model.layers[l];
+            let ops = model.layers[l];
             // --- self-attention sub-block (pre-LN) ---
-            let x = layer_norm(&h);
-            let q = self.para(ops.wq, &x);
-            let k = self.para(ops.wk, &x);
-            let v = self.para(ops.wv, &x);
-            self.keys[l].push(k);
-            self.values[l].push(v);
-            let ctx = attend(&q, &self.keys[l], &self.values[l], heads, dh);
-            let o = self.para(ops.wo, &ctx);
-            for (hv, ov) in h.iter_mut().zip(&o) {
+            layer_norm_into(&bufs.h, &mut bufs.x);
+            backend.run_into(model, ops.wq, &bufs.x, &mut bufs.q);
+            backend.run_into(model, ops.wk, &bufs.x, &mut bufs.k);
+            backend.run_into(model, ops.wv, &bufs.x, &mut bufs.v);
+            keys[l].push(bufs.k.clone());
+            values[l].push(bufs.v.clone());
+            attend_into(
+                &bufs.q,
+                &keys[l],
+                &values[l],
+                heads,
+                dh,
+                &mut bufs.scores,
+                &mut bufs.ctx,
+            );
+            backend.run_into(model, ops.wo, &bufs.ctx, &mut bufs.o);
+            for (hv, ov) in bufs.h.iter_mut().zip(&bufs.o) {
                 *hv += ov;
             }
             // --- feed-forward sub-block (pre-LN) ---
-            let x2 = layer_norm(&h);
-            let mut f = self.para(ops.ffn1, &x2);
-            gelu(&mut f);
-            let g = self.para(ops.ffn2, &f);
-            for (hv, gv) in h.iter_mut().zip(&g) {
+            layer_norm_into(&bufs.h, &mut bufs.x);
+            backend.run_into(model, ops.ffn1, &bufs.x, &mut bufs.f);
+            gelu(&mut bufs.f);
+            backend.run_into(model, ops.ffn2, &bufs.f, &mut bufs.g);
+            for (hv, gv) in bufs.h.iter_mut().zip(&bufs.g) {
                 *hv += gv;
             }
         }
 
         // untied LM head over the final LayerNorm
-        let hn = layer_norm(&h);
+        layer_norm_into(&bufs.h, &mut bufs.hn);
         let inv_sqrt_d = 1.0 / (d as f32).sqrt();
-        let mut logits = vec![0.0f32; vocab];
-        for (t, lv) in logits.iter_mut().enumerate() {
-            let row = self.model.lm_head.row(t);
+        for (t, lv) in bufs.logits.iter_mut().enumerate() {
+            let row = model.lm_head.row(t);
             let mut acc = 0.0f32;
-            for (r, x) in row.iter().zip(&hn) {
+            for (r, x) in row.iter().zip(&bufs.hn) {
                 acc += r * x;
             }
             *lv = acc * inv_sqrt_d;
         }
 
         // cost accounting: the mapped Para path + cache-sized MHA work
-        let cost = match &self.backend {
-            ParaBackend::Chip(chip) => decode_token_cost(
-                &self.model.cfg,
-                &chip.mapping,
-                &self.params,
-                self.kv_len(),
-            ),
+        let kv_len = keys.first().map(|k| k.len()).unwrap_or(0);
+        let cost = match backend {
+            ParaBackend::Chip(chip) => {
+                decode_token_cost(&model.cfg, &chip.mapping, params, kv_len)
+            }
             ParaBackend::Reference => Cost::default(),
         };
-        self.trace.record(cost);
-        logits
+        trace.record(cost);
+        &bufs.logits[..]
     }
 
     /// Greedy autoregressive generation: feed `prompt`, then emit
@@ -345,19 +447,18 @@ impl DecodeEngine {
     pub fn generate(&mut self, prompt: &[i32], n_tokens: usize) -> DecodeResult {
         assert!(!prompt.is_empty(), "need at least one prompt token");
         self.reset();
-        let mut logits = Vec::new();
         for &t in prompt {
-            logits = self.forward(t);
+            self.forward(t);
         }
         let mut tokens = Vec::with_capacity(n_tokens);
         for _ in 0..n_tokens {
-            let next = argmax(&logits) as i32;
+            let next = argmax(&self.bufs.logits) as i32;
             tokens.push(next);
-            logits = self.forward(next);
+            self.forward(next);
         }
         DecodeResult {
             tokens,
-            per_token: self.trace.per_token.clone(),
+            per_token: std::mem::take(&mut self.trace.per_token),
         }
     }
 
@@ -369,24 +470,28 @@ impl DecodeEngine {
         let vocab = self.model.cfg.vocab;
         let mut out = Vec::with_capacity(tokens.len() * vocab);
         for &t in tokens {
-            out.extend(self.forward(t));
+            let logits = self.forward(t);
+            out.extend_from_slice(logits);
         }
         (out, self.trace.total())
     }
 }
 
-/// Digital multi-head attention of one query against the KV cache.
-fn attend(
+/// Digital multi-head attention of one query against the KV cache, into
+/// caller-owned context/score scratch (every entry overwritten).
+fn attend_into(
     q: &[f32],
     keys: &[Vec<f32>],
     values: &[Vec<f32>],
     heads: usize,
     dh: usize,
-) -> Vec<f32> {
+    scores: &mut Vec<f32>,
+    ctx: &mut [f32],
+) {
     let t = keys.len();
     let scale = 1.0 / (dh as f32).sqrt();
-    let mut ctx = vec![0.0f32; heads * dh];
-    let mut scores = vec![0.0f32; t];
+    ctx.fill(0.0);
+    scores.resize(t, 0.0);
     for h in 0..heads {
         let o = h * dh;
         for (i, k) in keys.iter().enumerate() {
@@ -410,7 +515,6 @@ fn attend(
             }
         }
     }
-    ctx
 }
 
 #[cfg(test)]
@@ -423,8 +527,8 @@ mod tests {
 
     #[test]
     fn model_synthesis_is_deterministic() {
-        let a = DecodeModel::synth(&tiny(), 7);
-        let b = DecodeModel::synth(&tiny(), 7);
+        let a = DecodeModel::synth(tiny(), 7);
+        let b = DecodeModel::synth(tiny(), 7);
         assert_eq!(a.weights.len(), b.weights.len());
         for (wa, wb) in a.weights.iter().zip(&b.weights) {
             for (ta, tb) in wa.tiles.iter().zip(&wb.tiles) {
@@ -433,13 +537,13 @@ mod tests {
             }
         }
         assert_eq!(a.embedding.data, b.embedding.data);
-        let c = DecodeModel::synth(&tiny(), 8);
+        let c = DecodeModel::synth(tiny(), 8);
         assert_ne!(a.embedding.data, c.embedding.data);
     }
 
     #[test]
     fn reference_engine_generates_and_caches() {
-        let mut eng = DecodeEngine::reference(DecodeModel::synth(&tiny(), 3));
+        let mut eng = DecodeEngine::reference(DecodeModel::synth(tiny(), 3));
         let r = eng.generate(&[1, 2, 3], 8);
         assert_eq!(r.tokens.len(), 8);
         assert_eq!(eng.kv_len(), 3 + 8);
@@ -454,17 +558,17 @@ mod tests {
     fn kv_cache_matches_full_recompute() {
         // Scoring [t0..t3] incrementally must give the same final-position
         // logits as re-running the prefix from scratch.
-        let model = DecodeModel::synth(&tiny(), 11);
+        let model = DecodeModel::synth(tiny(), 11);
         let mut eng = DecodeEngine::reference(model);
         let toks = [5i32, 9, 2, 40];
         let (all, _) = eng.score(&toks);
         let vocab = tiny().vocab;
         let last = &all[3 * vocab..4 * vocab];
         // recompute: fresh engine, same sequence
-        let mut eng2 = DecodeEngine::reference(DecodeModel::synth(&tiny(), 11));
+        let mut eng2 = DecodeEngine::reference(DecodeModel::synth(tiny(), 11));
         let mut logits = Vec::new();
         for &t in &toks {
-            logits = eng2.forward(t);
+            logits = eng2.forward(t).to_vec();
         }
         assert_eq!(last, logits.as_slice());
     }
@@ -472,8 +576,8 @@ mod tests {
     #[test]
     fn chip_engine_records_costs_reference_does_not() {
         let params = CimParams::default();
-        let model = DecodeModel::synth(&tiny(), 5);
-        let mut chip = DecodeEngine::on_chip(model, &params, Strategy::SparseMap);
+        let model = DecodeModel::synth(tiny(), 5);
+        let mut chip = DecodeEngine::on_chip(model, params, Strategy::SparseMap);
         let r = chip.generate(&[1, 2], 4);
         assert_eq!(r.per_token.len(), 6); // 2 prompt + 4 generated
         assert!(r.per_token.iter().all(|c| c.latency.critical_ns() > 0.0));
@@ -482,7 +586,9 @@ mod tests {
             r.per_token.last().unwrap().latency.mha_ns
                 > r.per_token.first().unwrap().latency.mha_ns
         );
-        let mut reference = DecodeEngine::reference(DecodeModel::synth(&tiny(), 5));
+        // the result owns the run's trace (moved, not copied)
+        assert_eq!(chip.trace.tokens(), 0);
+        let mut reference = DecodeEngine::reference(DecodeModel::synth(tiny(), 5));
         let rr = reference.generate(&[1, 2], 4);
         assert!(rr.per_token.iter().all(|c| c.latency.critical_ns() == 0.0));
         assert!(chip.mapping().is_some());
@@ -491,7 +597,7 @@ mod tests {
 
     #[test]
     fn score_is_reset_safe() {
-        let mut eng = DecodeEngine::reference(DecodeModel::synth(&tiny(), 13));
+        let mut eng = DecodeEngine::reference(DecodeModel::synth(tiny(), 13));
         let toks = vec![7i32; tiny().seq];
         let (a, _) = eng.score(&toks);
         let (b, _) = eng.score(&toks);

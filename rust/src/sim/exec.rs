@@ -4,40 +4,90 @@
 //! This module demonstrates, numerically, that the mapping strategies and
 //! the scheduler's row-activation/rotation handling compute the *right
 //! answer*: programming the factor blocks at their placement coordinates,
-//! driving only the scheduled rows ([`crate::scheduler::placement_schedule`]
-//! supplies every activation mask), de-rotating lane outputs by the
+//! driving only the scheduled rows, de-rotating lane outputs by the
 //! diagonal index, and applying the stride permutation between stages
 //! reproduces `MonarchMatrix::matvec` exactly. It also exhibits the
 //! §III-C failure mode: activating all rows of a DenseMap array mixes
 //! lanes and corrupts the result.
 //!
-//! Beyond the original single-op checker, the chip now executes *whole
-//! models*: rectangular weights as tile grids of Monarch operators
-//! ([`RectMonarch`], mirroring `mapping`'s d x d partition) and the
-//! Linear baseline (dense tiles, partial-sum accumulation over column
-//! partitions) — the substrate of the autoregressive decode engine
-//! (`sim::decode`).
+//! Execution is split into two paths:
+//!
+//! * **Compiled replay** (the hot path, [`FunctionalChip::run_op`] /
+//!   [`FunctionalChip::run_op_into`]): every op's per-token work is
+//!   resolved once at [`FunctionalChip::program_rect`] time into a
+//!   [`ModelPlan`] ([`crate::scheduler::compile_plan`]) — flat pass
+//!   tables with pre-rotated column indices — and each token replays the
+//!   tables through reusable scratch ([`ExecScratch`]) and the
+//!   column-restricted [`Crossbar::mvm_pass_cols`]. The steady-state
+//!   token loop performs **no per-pass heap allocation** and converts
+//!   only the columns the schedule names (O(rows × b) instead of
+//!   O(rows × m) per DenseMap pass).
+//! * **Schedule recompute** (the audit path,
+//!   [`FunctionalChip::run_op_recompute`], [`FunctionalChip::run_stage`],
+//!   [`FunctionalChip::run_stage_all_rows`]): re-derives
+//!   [`crate::scheduler::placement_schedule`] per pass, exactly as the
+//!   original checker did. `tests/prop_exec_plan.rs` proves the two
+//!   paths bit-identical; the all-rows variant exhibits the negative
+//!   model.
 
 use crate::cim::crossbar::Crossbar;
 use crate::cim::CimParams;
 use crate::mapping::rotation::rotate_blocks_left;
-use crate::mapping::{map_ops, Factor, MappedOp, ModelMapping};
+use crate::mapping::{map_ops, Factor, ModelMapping};
 use crate::mapping::Strategy;
 use crate::model::{MatmulOp, ModelConfig, OpKind, Stage};
 use crate::monarch::{MonarchMatrix, RectMonarch, StridePerm};
-use crate::scheduler::placement_schedule;
+use crate::scheduler::plan::linear_tile_geometry;
+use crate::scheduler::{compile_plan, placement_schedule, CompiledPass, ModelPlan};
 use crate::tensor::Matrix;
 
-/// A programmed chip: one crossbar per allocated array.
+/// Reusable per-chip scratch: every buffer the per-token replay writes
+/// through, allocated once at programming time and overwritten per pass.
+#[derive(Clone, Debug)]
+struct ExecScratch {
+    /// Full-width (m) row-voltage staging buffer; only the rows a pass
+    /// drives are (re)written, and only those rows are read back.
+    input: Vec<f32>,
+    /// Converted-column landing buffer (sized to the widest pass).
+    colbuf: Vec<f32>,
+    /// d-length Monarch stage vectors (d = b²): zero-padded input
+    /// segment, and the P/R/P/L/P pipeline stops.
+    xseg: Vec<f32>,
+    u: Vec<f32>,
+    v: Vec<f32>,
+    w: Vec<f32>,
+    z: Vec<f32>,
+    part: Vec<f32>,
+}
+
+impl ExecScratch {
+    fn new(m: usize, d: usize, max_cols: usize) -> Self {
+        Self {
+            input: vec![0.0; m],
+            colbuf: vec![0.0; max_cols],
+            xseg: vec![0.0; d],
+            u: vec![0.0; d],
+            v: vec![0.0; d],
+            w: vec![0.0; d],
+            z: vec![0.0; d],
+            part: vec![0.0; d],
+        }
+    }
+}
+
+/// A programmed chip: one crossbar per allocated array, plus the
+/// compiled per-token plan and the scratch the replay runs through.
 pub struct FunctionalChip {
     pub m: usize,
     pub b: usize,
     pub crossbars: Vec<Crossbar>,
     pub mapping: ModelMapping,
-    /// Placement indices grouped per op (insertion order preserved), so
-    /// per-token execution doesn't rescan the whole model's placements
-    /// for every stage of every tile.
+    /// Per-token execution plan, resolved once at programming time.
+    pub plan: ModelPlan,
+    /// Placement indices grouped per op (insertion order preserved) —
+    /// the audit/recompute path's index.
     op_placements: Vec<Vec<usize>>,
+    scratch: ExecScratch,
 }
 
 /// Build a single-op model config/op-list for a d x d Monarch weight.
@@ -56,16 +106,6 @@ pub fn single_op(d: usize) -> (ModelConfig, Vec<MatmulOp>) {
     (cfg, vec![op])
 }
 
-/// Geometry of one Linear placement's m x m tile: `(rp, cp, rows_here,
-/// cols_here)`. Single source of the `tile == rp * col_parts + cp`
-/// convention `mapping::linear` allocates with — used for both
-/// programming and execution so the two can't drift apart.
-fn linear_tile_geometry(op: &MappedOp, tile: usize, m: usize) -> (usize, usize, usize, usize) {
-    let col_parts = op.cols.div_ceil(m);
-    let (rp, cp) = (tile / col_parts, tile % col_parts);
-    (rp, cp, m.min(op.rows - rp * m), m.min(op.cols - cp * m))
-}
-
 /// Wrap a square single-tile Monarch as a 1x1 [`RectMonarch`] grid.
 fn rect_of(mon: &MonarchMatrix) -> RectMonarch {
     RectMonarch {
@@ -73,6 +113,44 @@ fn rect_of(mon: &MonarchMatrix) -> RectMonarch {
         cols: mon.n(),
         n: mon.n(),
         tiles: vec![mon.clone()],
+    }
+}
+
+/// Stage one pass's input rows into the shared staging buffer and run
+/// the column-restricted conversion. Only `pass.rows` entries of
+/// `input` are written (zeros for the padded tail) and only those are
+/// read, so no inter-pass clearing is needed.
+#[inline]
+fn replay_pass(
+    crossbars: &[Crossbar],
+    pass: &CompiledPass,
+    x: &[f32],
+    input: &mut [f32],
+    colbuf: &mut [f32],
+) -> usize {
+    for (k, &r) in pass.rows.iter().enumerate() {
+        input[r] = if k < pass.n_in { x[pass.src + k] } else { 0.0 };
+    }
+    let n = pass.cols.len();
+    crossbars[pass.array].mvm_pass_cols(input, &pass.rows, &pass.cols, &mut colbuf[..n]);
+    n
+}
+
+/// Replay one Monarch factor stage: each pass assigns its converted
+/// columns into its (disjoint) output segment; the passes of a stage
+/// cover the whole d-vector.
+fn replay_stage(
+    crossbars: &[Crossbar],
+    passes: &[CompiledPass],
+    x: &[f32],
+    out: &mut [f32],
+    input: &mut [f32],
+    colbuf: &mut [f32],
+) {
+    out.fill(0.0);
+    for pass in passes {
+        let n = replay_pass(crossbars, pass, x, input, colbuf);
+        out[pass.dst..pass.dst + n].copy_from_slice(&colbuf[..n]);
     }
 }
 
@@ -93,7 +171,8 @@ impl FunctionalChip {
     }
 
     /// Program a whole op list whose weights are tile grids of Monarch
-    /// operators, under any of the three mapping strategies.
+    /// operators, under any of the three mapping strategies, and compile
+    /// the per-token execution plan.
     ///
     /// * SparseMap/DenseMap: each placement's factor blocks are taken
     ///   from `weights[op].tiles[tile]` and programmed **transposed** at
@@ -155,20 +234,28 @@ impl FunctionalChip {
         for (i, p) in mapping.placements.iter().enumerate() {
             op_placements[p.op].push(i);
         }
+        // resolve every op's per-token schedule ONCE — the token loop
+        // below is pure index-driven replay
+        let plan = compile_plan(&mapping);
+        let scratch = ExecScratch::new(m, b * b, plan.max_cols());
         FunctionalChip {
             m,
             b,
             crossbars,
             mapping,
+            plan,
             op_placements,
+            scratch,
         }
     }
 
-    /// Execute one Monarch factor stage of one op. `tile = None` spans
-    /// every tile's placements (the original single-tile behaviour);
-    /// `Some(t)` restricts to one d x d tile of a rectangular weight.
-    /// Row activation, column selection and output rotation all come
-    /// from the scheduler's [`placement_schedule`].
+    /// Execute one Monarch factor stage of one op by re-deriving the
+    /// schedule per pass. `tile = None` spans every tile's placements
+    /// (the original single-tile behaviour); `Some(t)` restricts to one
+    /// d x d tile of a rectangular weight. Row activation, column
+    /// selection and output rotation all come from the scheduler's
+    /// [`placement_schedule`]. Audit path — the compiled plan replays
+    /// exactly this computation without the per-pass allocations.
     fn stage_pass(
         &self,
         op_idx: usize,
@@ -231,7 +318,8 @@ impl FunctionalChip {
         out
     }
 
-    /// Execute one factor stage with the scheduler's row activation.
+    /// Execute one factor stage with the scheduler's row activation
+    /// (schedule-recompute audit path).
     pub fn run_stage(&self, op_idx: usize, factor: Factor, x: &[f32]) -> Vec<f32> {
         self.stage_pass(op_idx, None, factor, x, true)
     }
@@ -247,25 +335,127 @@ impl FunctionalChip {
     }
 
     /// Full MVM for op `op_idx`: `y = W x` with `x.len() == op.cols` and
-    /// `y.len() == op.rows`. Monarch strategies run P, R, P, L, P per
-    /// d x d tile with row-tile accumulation (mirroring
-    /// `RectMonarch::matvec` exactly, so results are bit-comparable);
-    /// Linear runs dense tile passes with column-partition partial sums.
-    pub fn run_op(&self, op_idx: usize, x: &[f32]) -> Vec<f32> {
+    /// `y.len() == op.rows`, via compiled-plan replay. Monarch strategies
+    /// run P, R, P, L, P per d x d tile with row-tile accumulation
+    /// (mirroring `RectMonarch::matvec` exactly, so results are
+    /// bit-comparable); Linear runs dense tile passes with
+    /// column-partition partial sums.
+    pub fn run_op(&mut self, op_idx: usize, x: &[f32]) -> Vec<f32> {
+        let mut y = vec![0.0f32; self.mapping.ops[op_idx].rows];
+        self.run_op_into(op_idx, x, &mut y);
+        y
+    }
+
+    /// Allocation-free form of [`FunctionalChip::run_op`]: replay the
+    /// compiled plan into a caller-owned output (len == op.rows). This
+    /// is the decode engine's per-token entry point — no heap
+    /// allocation happens anywhere below it.
+    pub fn run_op_into(&mut self, op_idx: usize, x: &[f32], y: &mut [f32]) {
         match self.mapping.strategy {
-            Strategy::Linear => self.run_op_linear(op_idx, x),
-            _ => self.run_op_monarch(op_idx, x),
+            Strategy::Linear => self.replay_op_linear(op_idx, x, y),
+            _ => self.replay_op_monarch(op_idx, x, y),
         }
     }
 
-    fn run_op_linear(&self, op_idx: usize, x: &[f32]) -> Vec<f32> {
+    fn replay_op_linear(&mut self, op_idx: usize, x: &[f32], y: &mut [f32]) {
+        let op = &self.mapping.ops[op_idx];
+        assert_eq!(x.len(), op.cols, "linear op input length");
+        assert_eq!(y.len(), op.rows, "linear op output length");
+        y.fill(0.0);
+        let FunctionalChip {
+            crossbars,
+            plan,
+            scratch,
+            ..
+        } = self;
+        let ExecScratch { input, colbuf, .. } = scratch;
+        // Pass order is placement allocation order (row-partition-major,
+        // ascending column partitions), fixing the partial-sum
+        // accumulation order (shift-add tree determinism).
+        for pass in &plan.ops[op_idx].passes {
+            let n = replay_pass(&crossbars[..], pass, x, &mut input[..], &mut colbuf[..]);
+            for (yo, pv) in y[pass.dst..pass.dst + n].iter_mut().zip(&colbuf[..n]) {
+                *yo += pv;
+            }
+        }
+    }
+
+    fn replay_op_monarch(&mut self, op_idx: usize, x: &[f32], y: &mut [f32]) {
+        let op = &self.mapping.ops[op_idx];
+        let d = self.b * self.b;
+        assert_eq!(x.len(), op.cols, "monarch op input length");
+        assert_eq!(y.len(), op.rows, "monarch op output length");
+        y.fill(0.0);
+        let (op_rows, op_cols) = (op.rows, op.cols);
+        let (tr, tc) = (op_rows.div_ceil(d), op_cols.div_ceil(d));
+        let perm = StridePerm::new(self.b);
+        let FunctionalChip {
+            crossbars,
+            plan,
+            scratch,
+            ..
+        } = self;
+        let oplan = &plan.ops[op_idx];
+        let ExecScratch {
+            input,
+            colbuf,
+            xseg,
+            u,
+            v,
+            w,
+            z,
+            part,
+        } = scratch;
+        for j in 0..tc {
+            // zero-padded input segment (same loop structure as
+            // RectMonarch::matvec for bit-identical accumulation order)
+            let cw = d.min(op_cols - j * d);
+            xseg[..cw].copy_from_slice(&x[j * d..j * d + cw]);
+            xseg[cw..].fill(0.0);
+            perm.apply_into(&xseg[..], &mut u[..]);
+            for i in 0..tr {
+                let tile = &oplan.tiles[i * tc + j];
+                replay_stage(
+                    &crossbars[..],
+                    &oplan.passes[tile.right.clone()],
+                    &u[..],
+                    &mut v[..],
+                    &mut input[..],
+                    &mut colbuf[..],
+                );
+                perm.apply_into(&v[..], &mut w[..]);
+                replay_stage(
+                    &crossbars[..],
+                    &oplan.passes[tile.left.clone()],
+                    &w[..],
+                    &mut z[..],
+                    &mut input[..],
+                    &mut colbuf[..],
+                );
+                perm.apply_into(&z[..], &mut part[..]);
+                let rh = d.min(op_rows - i * d);
+                for (yo, pv) in y[i * d..i * d + rh].iter_mut().zip(&part[..rh]) {
+                    *yo += pv;
+                }
+            }
+        }
+    }
+
+    /// Full MVM via per-pass schedule recomputation — the pre-plan
+    /// execution path, kept as the audit reference the compiled replay
+    /// is property-tested against (`tests/prop_exec_plan.rs`).
+    pub fn run_op_recompute(&self, op_idx: usize, x: &[f32]) -> Vec<f32> {
+        match self.mapping.strategy {
+            Strategy::Linear => self.recompute_op_linear(op_idx, x),
+            _ => self.recompute_op_monarch(op_idx, x),
+        }
+    }
+
+    fn recompute_op_linear(&self, op_idx: usize, x: &[f32]) -> Vec<f32> {
         let m = self.m;
         let op = &self.mapping.ops[op_idx];
         assert_eq!(x.len(), op.cols, "linear op input length");
         let mut out = vec![0.0f32; op.rows];
-        // Placements were allocated row-partition-major with ascending
-        // column partitions, so iterating in order fixes the partial-sum
-        // accumulation order (shift-add tree determinism).
         for p in self.op_placements[op_idx]
             .iter()
             .map(|&i| &self.mapping.placements[i])
@@ -283,7 +473,7 @@ impl FunctionalChip {
         out
     }
 
-    fn run_op_monarch(&self, op_idx: usize, x: &[f32]) -> Vec<f32> {
+    fn recompute_op_monarch(&self, op_idx: usize, x: &[f32]) -> Vec<f32> {
         let op = &self.mapping.ops[op_idx];
         let d = self.b * self.b;
         assert_eq!(x.len(), op.cols, "monarch op input length");
@@ -292,8 +482,6 @@ impl FunctionalChip {
         let mut y = vec![0.0f32; op.rows];
         let mut xseg = vec![0.0f32; d];
         for j in 0..tc {
-            // zero-padded input segment (same loop structure as
-            // RectMonarch::matvec for bit-identical accumulation order)
             let cw = d.min(op.cols - j * d);
             xseg[..cw].copy_from_slice(&x[j * d..j * d + cw]);
             xseg[cw..].iter_mut().for_each(|v| *v = 0.0);
@@ -332,7 +520,7 @@ mod tests {
         let mut rng = Pcg32::new(42);
         let b = cfg.monarch_b();
         let mon = MonarchMatrix::randn(b, &mut rng);
-        let chip =
+        let mut chip =
             FunctionalChip::program(&cfg, &ops, std::slice::from_ref(&mon), &params, strategy);
         let x = rng.normal_vec(d);
         let got = chip.run_op(0, &x);
@@ -343,6 +531,9 @@ mod tests {
                 "{strategy:?} d={d} m={m}: {g} vs {w}"
             );
         }
+        // the compiled replay must equal the schedule-recompute path
+        // bit for bit
+        assert_eq!(got, chip.run_op_recompute(0, &x), "{strategy:?} plan drift");
     }
 
     #[test]
@@ -377,7 +568,7 @@ mod tests {
             MonarchMatrix::randn(b, &mut rng),
             MonarchMatrix::randn(b, &mut rng),
         ];
-        let chip = FunctionalChip::program(&cfg, &ops, &mons, &params, Strategy::DenseMap);
+        let mut chip = FunctionalChip::program(&cfg, &ops, &mons, &params, Strategy::DenseMap);
         let x = rng.normal_vec(d);
         for (oi, mon) in mons.iter().enumerate() {
             let got = chip.run_op(oi, &x);
@@ -490,7 +681,7 @@ mod tests {
         let mut params = CimParams::default();
         params.array_dim = 32;
         for strategy in Strategy::all() {
-            let chip = FunctionalChip::program_rect(&cfg, &ops, &weights, &params, strategy);
+            let mut chip = FunctionalChip::program_rect(&cfg, &ops, &weights, &params, strategy);
             for (oi, w) in weights.iter().enumerate() {
                 let x = Pcg32::new(100 + oi as u64).normal_vec(w.cols);
                 let got = chip.run_op(oi, &x);
@@ -502,6 +693,8 @@ mod tests {
                         "{strategy:?} op {oi}: {g} vs {wv}"
                     );
                 }
+                // replay == recompute, bit for bit, on rectangular grids
+                assert_eq!(got, chip.run_op_recompute(oi, &x), "{strategy:?} op {oi}");
             }
         }
     }
@@ -520,7 +713,7 @@ mod tests {
         let x = rng.normal_vec(d);
         let want = mon.matvec(&x);
         for strategy in [Strategy::SparseMap, Strategy::DenseMap] {
-            let chip = FunctionalChip::program(
+            let mut chip = FunctionalChip::program(
                 &cfg,
                 &ops,
                 std::slice::from_ref(&mon),
@@ -529,6 +722,31 @@ mod tests {
             );
             let got = chip.run_op(0, &x);
             assert_eq!(got, want, "{strategy:?} not bit-identical");
+        }
+    }
+
+    #[test]
+    fn replay_reuses_scratch_across_calls() {
+        // Back-to-back run_op calls must be independent (stale scratch
+        // contents never leak into the next token's result).
+        let (cfg, ops) = single_op(64);
+        let mut params = CimParams::default();
+        params.array_dim = 32;
+        let mut rng = Pcg32::new(77);
+        let mon = MonarchMatrix::randn(cfg.monarch_b(), &mut rng);
+        for strategy in [Strategy::SparseMap, Strategy::DenseMap] {
+            let mut chip = FunctionalChip::program(
+                &cfg,
+                &ops,
+                std::slice::from_ref(&mon),
+                &params,
+                strategy,
+            );
+            let x1 = rng.normal_vec(64);
+            let x2 = rng.normal_vec(64);
+            let first = chip.run_op(0, &x1);
+            let _ = chip.run_op(0, &x2); // dirty the scratch
+            assert_eq!(first, chip.run_op(0, &x1), "{strategy:?} scratch leak");
         }
     }
 }

@@ -170,6 +170,16 @@ pub fn decode_token_cost(
     c
 }
 
+/// Sum a slice of per-token costs (shared by [`DecodeTrace::total`] and
+/// `DecodeResult::total` so the aggregation can't drift between them).
+pub fn sum_costs(costs: &[Cost]) -> Cost {
+    let mut t = Cost::default();
+    for c in costs {
+        t += *c;
+    }
+    t
+}
+
 /// Per-token cost accounting of one autoregressive decode run.
 #[derive(Clone, Debug, Default)]
 pub struct DecodeTrace {
@@ -196,11 +206,7 @@ impl DecodeTrace {
 
     /// Summed cost of every decoded token.
     pub fn total(&self) -> Cost {
-        let mut t = Cost::default();
-        for c in &self.per_token {
-            t += *c;
-        }
-        t
+        sum_costs(&self.per_token)
     }
 
     /// Mean critical-path latency per token (ns).

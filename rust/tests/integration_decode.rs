@@ -28,14 +28,14 @@ fn tiny() -> ModelConfig {
 
 fn chip_engine(strategy: Strategy) -> DecodeEngine {
     DecodeEngine::on_chip(
-        DecodeModel::synth(&tiny(), SEED),
-        &CimParams::default(),
+        DecodeModel::synth(tiny(), SEED),
+        CimParams::default(),
         strategy,
     )
 }
 
 fn reference_engine() -> DecodeEngine {
-    DecodeEngine::reference(DecodeModel::synth(&tiny(), SEED))
+    DecodeEngine::reference(DecodeModel::synth(tiny(), SEED))
 }
 
 #[test]
@@ -164,8 +164,8 @@ fn cimsim_server_matches_local_engine() {
     let served = server.infer(toks.clone()).unwrap();
     server.shutdown();
     let mut local = DecodeEngine::on_chip(
-        DecodeModel::synth(&tiny(), SEED),
-        &CimParams::default(),
+        DecodeModel::synth(tiny(), SEED),
+        CimParams::default(),
         Strategy::SparseMap,
     );
     let (want, _) = local.score(&toks);

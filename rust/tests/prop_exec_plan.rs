@@ -1,0 +1,228 @@
+//! Property tests for the compiled execution plans (`scheduler::plan`):
+//!
+//! * Replaying the compiled plan is **bit-identical** to a freshly
+//!   recomputed `placement_schedule` execution, for random transformer
+//!   geometries under all three mapping strategies.
+//! * The plan's driven rows / converted columns exactly match the
+//!   scheduler's auditable per-token command stream (`token_commands`) —
+//!   the plan is a resolved view of the same schedule, never a different
+//!   one.
+//! * Pass tables respect array bounds and the §III-C DenseMap walk
+//!   granularity.
+
+use monarch_cim::cim::CimParams;
+use monarch_cim::mapping::{map_ops, Strategy};
+use monarch_cim::model::{MatmulOp, ModelConfig, OpKind, Stage};
+use monarch_cim::monarch::{MonarchMatrix, RectMonarch};
+use monarch_cim::scheduler::{compile_plan, token_commands, CimCommand};
+use monarch_cim::sim::exec::FunctionalChip;
+use monarch_cim::util::prop::forall;
+use monarch_cim::util::rng::Pcg32;
+
+/// Random transformer-shaped Para op list over d x d tiles.
+fn random_model_ops(
+    g: &mut monarch_cim::util::prop::Gen,
+    d: usize,
+) -> (ModelConfig, Vec<MatmulOp>) {
+    let mut cfg = ModelConfig::tiny();
+    cfg.d_model = d;
+    let layers = g.usize(1, 2);
+    let ff_mult = g.usize(1, 4);
+    let mut ops = Vec::new();
+    for l in 0..layers {
+        for w in ["wq", "wk", "wv", "wo"] {
+            ops.push(MatmulOp {
+                name: format!("dec{l}.{w}"),
+                stage: Stage::Decoder,
+                layer: l,
+                kind: OpKind::Para,
+                rows: d,
+                cols: d,
+                batch: 1,
+            });
+        }
+        ops.push(MatmulOp {
+            name: format!("dec{l}.ffn1"),
+            stage: Stage::Decoder,
+            layer: l,
+            kind: OpKind::Para,
+            rows: ff_mult * d,
+            cols: d,
+            batch: 1,
+        });
+        ops.push(MatmulOp {
+            name: format!("dec{l}.ffn2"),
+            stage: Stage::Decoder,
+            layer: l,
+            kind: OpKind::Para,
+            rows: d,
+            cols: ff_mult * d,
+            batch: 1,
+        });
+    }
+    (cfg, ops)
+}
+
+/// Random tile grid for a rows x cols weight (d = tile dim).
+fn rect_randn(rows: usize, cols: usize, d: usize, rng: &mut Pcg32) -> RectMonarch {
+    let b = (d as f64).sqrt().round() as usize;
+    let tiles = rows.div_ceil(d) * cols.div_ceil(d);
+    RectMonarch {
+        rows,
+        cols,
+        n: d,
+        tiles: (0..tiles).map(|_| MonarchMatrix::randn(b, rng)).collect(),
+    }
+}
+
+#[test]
+fn prop_compiled_replay_bit_identical_to_recompute() {
+    forall("plan replay == schedule recompute (bitwise)", 10, |g| {
+        let d = g.choose(&[16usize, 64]);
+        let b = (d as f64).sqrt() as usize;
+        let m = g.choose(&[16usize, 32, 64]);
+        if b > m {
+            return;
+        }
+        let (cfg, ops) = random_model_ops(g, d);
+        let mut params = CimParams::default();
+        params.array_dim = m;
+        let mut rng = Pcg32::new(g.usize(0, 1 << 30) as u64);
+        let weights: Vec<RectMonarch> = ops
+            .iter()
+            .map(|op| rect_randn(op.rows, op.cols, d, &mut rng))
+            .collect();
+        for strategy in Strategy::all() {
+            let mut chip =
+                FunctionalChip::program_rect(&cfg, &ops, &weights, &params, strategy);
+            for oi in 0..ops.len() {
+                let x = rng.normal_vec(ops[oi].cols);
+                let planned = chip.run_op(oi, &x);
+                let recomputed = chip.run_op_recompute(oi, &x);
+                assert_eq!(
+                    planned, recomputed,
+                    "{strategy:?} op {oi}: compiled replay diverged from \
+                     freshly recomputed schedules"
+                );
+                if strategy != Strategy::Linear {
+                    // Monarch replay also reproduces the factored
+                    // reference bit for bit (same f32 ops, same order).
+                    assert_eq!(
+                        planned,
+                        weights[oi].matvec(&x),
+                        "{strategy:?} op {oi}: replay vs reference"
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_plan_matches_token_commands() {
+    forall("plan rows/cols == token_commands", 10, |g| {
+        let d = g.choose(&[16usize, 64]);
+        let b = (d as f64).sqrt() as usize;
+        let m = g.choose(&[16usize, 32, 64]);
+        if b > m {
+            return;
+        }
+        let (cfg, ops) = random_model_ops(g, d);
+        let mut params = CimParams::default();
+        params.array_dim = m;
+        for strategy in Strategy::all() {
+            let mm = map_ops(&cfg, &ops, &params, strategy);
+            let plan = compile_plan(&mm);
+            // The stream pairs every DriveRows with the Convert that
+            // follows it; collect those (array, rows, cols) triples.
+            let mut cmd_passes: Vec<(usize, Vec<usize>, Vec<usize>)> = Vec::new();
+            let mut pending: Option<(usize, Vec<usize>)> = None;
+            for cmd in token_commands(&mm, &params) {
+                match cmd {
+                    CimCommand::DriveRows { array, rows } => {
+                        assert!(pending.is_none(), "{strategy:?}: unpaired drive");
+                        pending = Some((array, rows));
+                    }
+                    CimCommand::Convert { array, cols, .. } => {
+                        let (a, rows) = pending.take().expect("convert without drive");
+                        assert_eq!(a, array, "{strategy:?}: drive/convert array");
+                        cmd_passes.push((array, rows, cols));
+                    }
+                    _ => {}
+                }
+            }
+            assert!(pending.is_none());
+            let plan_passes: Vec<(usize, Vec<usize>, Vec<usize>)> = plan
+                .ops
+                .iter()
+                .flat_map(|o| o.passes.iter())
+                .map(|p| (p.array, p.rows.clone(), p.cols.clone()))
+                .collect();
+            assert_eq!(
+                plan_passes.len(),
+                cmd_passes.len(),
+                "{strategy:?}: pass count"
+            );
+            if strategy == Strategy::Linear {
+                // One placement (and one pass) per array: pair by array.
+                // The stream converts all m columns; the plan keeps the
+                // truncated prefix that lands in the output tile.
+                for (array, rows, cols) in &plan_passes {
+                    let cmd = cmd_passes
+                        .iter()
+                        .find(|(a, _, _)| a == array)
+                        .unwrap_or_else(|| panic!("no commands for array {array}"));
+                    assert_eq!(rows, &cmd.1, "Linear rows, array {array}");
+                    assert_eq!(
+                        cols.as_slice(),
+                        &cmd.2[..cols.len()],
+                        "Linear cols prefix, array {array}"
+                    );
+                }
+            } else {
+                // Multiset equality: the plan is exactly the command
+                // stream's drive/convert work, reordered per-op.
+                let mut a = plan_passes;
+                let mut c = cmd_passes;
+                a.sort();
+                c.sort();
+                assert_eq!(a, c, "{strategy:?}: plan != command stream");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_plan_passes_respect_geometry() {
+    forall("plan pass geometry", 10, |g| {
+        let d = g.choose(&[16usize, 64]);
+        let b = (d as f64).sqrt() as usize;
+        let m = g.choose(&[16usize, 32, 64]);
+        if b > m {
+            return;
+        }
+        let (cfg, ops) = random_model_ops(g, d);
+        let mut params = CimParams::default();
+        params.array_dim = m;
+        for strategy in Strategy::all() {
+            let mm = map_ops(&cfg, &ops, &params, strategy);
+            let plan = compile_plan(&mm);
+            assert_eq!(plan.ops.len(), mm.ops.len());
+            assert_eq!(plan.m, mm.m);
+            for (oi, oplan) in plan.ops.iter().enumerate() {
+                assert!(!oplan.passes.is_empty(), "{strategy:?} op {oi}: no passes");
+                for pass in &oplan.passes {
+                    assert!(pass.array < mm.arrays);
+                    assert!(pass.n_in <= pass.rows.len());
+                    assert!(pass.rows.iter().all(|&r| r < mm.m), "{strategy:?} rows");
+                    assert!(pass.cols.iter().all(|&c| c < mm.m), "{strategy:?} cols");
+                    if strategy == Strategy::DenseMap {
+                        // §III-C walk: block-granular passes
+                        assert_eq!(pass.rows.len(), mm.b);
+                        assert_eq!(pass.cols.len(), mm.b);
+                    }
+                }
+            }
+        }
+    });
+}

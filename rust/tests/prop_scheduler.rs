@@ -112,7 +112,7 @@ fn prop_functional_chip_correct_across_geometries() {
         params.array_dim = m;
         let mut rng = Pcg32::new(g.usize(0, 1 << 30) as u64);
         let mon = MonarchMatrix::randn(b, &mut rng);
-        let chip =
+        let mut chip =
             FunctionalChip::program(&cfg, &ops, std::slice::from_ref(&mon), &params, strategy);
         let x = rng.normal_vec(d);
         let got = chip.run_op(0, &x);
