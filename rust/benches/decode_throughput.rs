@@ -5,8 +5,11 @@
 //! with a growing KV cache, instead of per-op matvecs).
 //!
 //! Reports host-wall-clock **tokens/sec** per strategy (the number the
-//! compiled-plan replay optimizes) and writes a machine-readable
-//! `BENCH_decode.json` so the perf trajectory is trackable per commit.
+//! compiled-plan replay optimizes), plus a batched sweep (B ∈ {1,2,4,8}
+//! concurrent streams through one DenseMap chip via
+//! `BatchDecodeEngine::generate_batch` — the serving amortization), and
+//! writes a machine-readable `BENCH_decode.json` so the perf trajectory
+//! is trackable per commit.
 //!
 //! ```text
 //! cargo bench --bench decode_throughput                      # writes BENCH_decode.json
@@ -18,7 +21,7 @@
 use monarch_cim::cim::CimParams;
 use monarch_cim::mapping::Strategy;
 use monarch_cim::model::ModelConfig;
-use monarch_cim::sim::decode::{DecodeEngine, DecodeModel};
+use monarch_cim::sim::decode::{BatchDecodeEngine, DecodeEngine, DecodeModel};
 use monarch_cim::util::bench::{section, Bencher};
 use monarch_cim::util::json::{num, obj, s, Json};
 
@@ -116,6 +119,46 @@ fn main() {
         ));
     }
 
+    section("batched decode sweep — B concurrent streams, one DenseMap chip");
+    let mut batched_records: Vec<(String, Json)> = Vec::new();
+    let mut b1_tps = 0.0f64;
+    for batch in [1usize, 2, 4, 8] {
+        let mut eng = BatchDecodeEngine::on_chip(
+            DecodeModel::synth(cfg.clone(), 2025),
+            params.clone(),
+            Strategy::DenseMap,
+            batch,
+        );
+        let prompts: Vec<Vec<i32>> = (0..batch)
+            .map(|s| PROMPT.iter().map(|&t| (t + s as i32) % cfg.vocab as i32).collect())
+            .collect();
+        let meas = b
+            .bench(&format!("dense batched decode B={batch}"), || {
+                std::hint::black_box(eng.generate_batch(&prompts, TOKENS))
+            })
+            .clone();
+        // every stream advances prompt+TOKENS positions per iteration
+        let tps = batch as f64 * passes / (meas.mean_ns * 1e-9);
+        if batch == 1 {
+            b1_tps = tps;
+        }
+        println!(
+            "  -> B={batch}: {:.0} tokens/s wall ({:.2} µs/token-step), {:.2}x vs B=1",
+            tps,
+            meas.mean_ns / passes / 1e3,
+            tps / b1_tps.max(1e-12),
+        );
+        batched_records.push((
+            format!("batch_{batch}"),
+            obj(vec![
+                ("batch", num(batch as f64)),
+                ("tokens_per_sec", num(tps)),
+                ("ns_per_token", num(meas.mean_ns / (batch as f64 * passes))),
+                ("speedup_vs_b1", num(tps / b1_tps.max(1e-12))),
+            ]),
+        ));
+    }
+
     section("chip programming cost (map + compile plan + write)");
     for strategy in Strategy::all() {
         b.bench(&format!("program chip / {}", strategy.name()), || {
@@ -138,6 +181,13 @@ fn main() {
         (
             "strategies",
             obj(records.iter().map(|(k, v)| (k.as_str(), v.clone())).collect()),
+        ),
+        (
+            "batched",
+            obj(batched_records
+                .iter()
+                .map(|(k, v)| (k.as_str(), v.clone()))
+                .collect()),
         ),
     ]);
     match std::fs::write(&path, format!("{doc}\n")) {

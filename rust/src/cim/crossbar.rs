@@ -108,6 +108,44 @@ impl Crossbar {
         }
     }
 
+    /// Batched column-restricted pass: convert the listed columns for
+    /// `batch` stacked input vectors in one analog pass. Lanes are
+    /// stride-`batch` interleaved — `input[r * batch + l]` is lane `l`'s
+    /// voltage on row `r`, `out[k * batch + l]` is lane `l`'s conversion
+    /// of column `cols[k]`.
+    ///
+    /// Once the weights are resident this is how serving amortizes the
+    /// pass: the same driven-rows/conversion-cols schedule converts a
+    /// column-*block* of activations instead of one vector. Per lane the
+    /// accumulation order is identical to [`Crossbar::mvm_pass_cols`]
+    /// (rows in `active_rows` order, zero inputs skipped), so every lane
+    /// is bit-identical to a B=1 pass over that lane's vector.
+    pub fn mvm_batch_cols(
+        &self,
+        input: &[f32],
+        batch: usize,
+        active_rows: &[usize],
+        cols: &[usize],
+        out: &mut [f32],
+    ) {
+        assert!(batch > 0, "batch must be positive");
+        assert_eq!(input.len(), self.dim * batch, "input must span rows x batch");
+        assert_eq!(out.len(), cols.len() * batch, "one output per column per lane");
+        out.fill(0.0);
+        for &r in active_rows {
+            let lanes = &input[r * batch..(r + 1) * batch];
+            let row = &self.cells[r * self.dim..(r + 1) * self.dim];
+            for (k, &c) in cols.iter().enumerate() {
+                let w = row[c];
+                for (acc, &xv) in out[k * batch..(k + 1) * batch].iter_mut().zip(lanes) {
+                    if xv != 0.0 {
+                        *acc += xv * w;
+                    }
+                }
+            }
+        }
+    }
+
     /// MVM pass followed by SAR ADC readout quantization (mid-tread,
     /// `bits` resolution over ±`full_scale`). Mirrors the L1 kernel
     /// `block_diag_mm_adc` / `ref.adc_quantize`. Quantizes in place —
@@ -234,6 +272,47 @@ mod tests {
             xb.mvm_pass_cols(&x, &active, &cols, &mut out);
             for (k, &c) in cols.iter().enumerate() {
                 assert_eq!(out[k].to_bits(), full[c].to_bits(), "col {c}");
+            }
+        }
+    }
+
+    #[test]
+    fn mvm_batch_cols_bit_identical_per_lane() {
+        // Each lane of a batched pass must equal the single-vector
+        // column-restricted pass over that lane, bit for bit — the
+        // contract the batched replay (and batched decode) rests on.
+        let mut rng = Pcg32::new(4);
+        let w = Matrix::randn(16, 16, &mut rng);
+        let mut xb = Crossbar::new(16);
+        xb.program_block(0, 0, &w);
+        let active: Vec<usize> = vec![1, 4, 7, 8, 12];
+        let cols: Vec<usize> = vec![3, 0, 11, 15];
+        for batch in [1usize, 2, 3, 8] {
+            let lanes: Vec<Vec<f32>> = (0..batch)
+                .map(|l| {
+                    let mut x = rng.normal_vec(16);
+                    x[4] = if l % 2 == 0 { 0.0 } else { x[4] }; // zero-skip path
+                    x
+                })
+                .collect();
+            let mut xi = vec![0.0f32; 16 * batch];
+            for (l, x) in lanes.iter().enumerate() {
+                for (r, &v) in x.iter().enumerate() {
+                    xi[r * batch + l] = v;
+                }
+            }
+            let mut out = vec![f32::NAN; cols.len() * batch];
+            xb.mvm_batch_cols(&xi, batch, &active, &cols, &mut out);
+            for (l, x) in lanes.iter().enumerate() {
+                let mut want = vec![0.0f32; cols.len()];
+                xb.mvm_pass_cols(x, &active, &cols, &mut want);
+                for k in 0..cols.len() {
+                    assert_eq!(
+                        out[k * batch + l].to_bits(),
+                        want[k].to_bits(),
+                        "batch {batch} lane {l} col {k}"
+                    );
+                }
             }
         }
     }

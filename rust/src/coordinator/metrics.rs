@@ -19,6 +19,12 @@ struct Inner {
     /// Summed *modeled* chip latency (ns) and energy (nJ) of those tokens.
     sim_latency_ns: f64,
     sim_energy_nj: f64,
+    /// Continuous batching: per-step occupied-slot samples.
+    occ_steps: u64,
+    occ_sum: u64,
+    occ_peak: usize,
+    /// Slot capacity of the batched engine (latest reported).
+    occ_capacity: usize,
 }
 
 /// Thread-safe metrics sink.
@@ -34,6 +40,12 @@ pub struct Snapshot {
     pub requests: u64,
     pub batches: u64,
     pub errors: u64,
+    /// PJRT backend: mean requests per executed batch. CIM-sim backend:
+    /// mean requests per *completion group* (requests finishing in the
+    /// same token step) — ragged windows finish at different steps, so
+    /// this can read 1.0 while the chip ran fully batched; use
+    /// [`Snapshot::occupancy_mean`] to judge continuous-batching
+    /// efficiency.
     pub mean_batch: f64,
     pub latency_p50_us: f64,
     pub latency_p99_us: f64,
@@ -44,6 +56,15 @@ pub struct Snapshot {
     pub sim_token_latency_ns: f64,
     /// CIM-sim backend: summed modeled energy (nJ).
     pub sim_energy_nj: f64,
+    /// CIM-sim backend: host wall-clock token throughput (tokens/sec
+    /// since server start).
+    pub sim_tokens_per_sec: f64,
+    /// Continuous batching: mean occupied slots per token step.
+    pub occupancy_mean: f64,
+    /// Continuous batching: peak occupied slots over any step.
+    pub occupancy_peak: usize,
+    /// Continuous batching: slot capacity of the batched engine.
+    pub slot_capacity: usize,
 }
 
 impl Metrics {
@@ -68,6 +89,25 @@ impl Metrics {
         self.inner.lock().unwrap().errors += 1;
     }
 
+    /// Record one continuous-batching completion group: requests that
+    /// finished in the same token step, each with its OWN end-to-end
+    /// latency (unlike [`Metrics::record_batch`]'s shared batch latency
+    /// — under continuous batching, same-step finishers may have been
+    /// admitted hundreds of steps apart, and averaging them would hide
+    /// tail latency from the percentiles).
+    pub fn record_completions(&self, latencies_us: &[f64]) {
+        if latencies_us.is_empty() {
+            return;
+        }
+        let mut g = self.inner.lock().unwrap();
+        g.batches += 1;
+        g.requests += latencies_us.len() as u64;
+        g.batch_sizes.push(latencies_us.len());
+        for &us in latencies_us {
+            g.latency_us.record(us);
+        }
+    }
+
     /// Account tokens processed on the CIM-sim backend together with
     /// their *modeled* (simulated-chip) latency and energy.
     pub fn record_sim_tokens(&self, tokens: usize, latency_ns: f64, energy_nj: f64) {
@@ -75,6 +115,16 @@ impl Metrics {
         g.sim_tokens += tokens as u64;
         g.sim_latency_ns += latency_ns;
         g.sim_energy_nj += energy_nj;
+    }
+
+    /// Sample the continuous-batching occupancy after one token step:
+    /// `active` slots held in-flight sequences out of `capacity`.
+    pub fn record_occupancy(&self, active: usize, capacity: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.occ_steps += 1;
+        g.occ_sum += active as u64;
+        g.occ_peak = g.occ_peak.max(active);
+        g.occ_capacity = capacity;
     }
 
     pub fn snapshot(&self) -> Snapshot {
@@ -111,6 +161,14 @@ impl Metrics {
                 g.sim_latency_ns / g.sim_tokens as f64
             },
             sim_energy_nj: g.sim_energy_nj,
+            sim_tokens_per_sec: g.sim_tokens as f64 / elapsed,
+            occupancy_mean: if g.occ_steps == 0 {
+                0.0
+            } else {
+                g.occ_sum as f64 / g.occ_steps as f64
+            },
+            occupancy_peak: g.occ_peak,
+            slot_capacity: g.occ_capacity,
         }
     }
 }
@@ -142,6 +200,35 @@ mod tests {
         assert_eq!(s.latency_p50_us, 0.0);
         assert_eq!(s.sim_tokens, 0);
         assert_eq!(s.sim_token_latency_ns, 0.0);
+    }
+
+    #[test]
+    fn completion_groups_keep_per_request_latency() {
+        let m = Metrics::new();
+        m.record_completions(&[100.0, 10_000.0]);
+        m.record_completions(&[]); // no-op
+        let s = m.snapshot();
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.batches, 1);
+        assert!((s.mean_batch - 2.0).abs() < 1e-9);
+        // both individual latencies survive into the histogram
+        assert!(s.latency_p50_us <= 10_000.0 && s.latency_p50_us >= 100.0);
+        assert!(s.latency_p99_us >= 9_000.0, "tail hidden: {}", s.latency_p99_us);
+    }
+
+    #[test]
+    fn occupancy_accounting() {
+        let m = Metrics::new();
+        let s = m.snapshot();
+        assert_eq!(s.occupancy_mean, 0.0);
+        assert_eq!(s.occupancy_peak, 0);
+        m.record_occupancy(1, 8);
+        m.record_occupancy(5, 8);
+        m.record_occupancy(3, 8);
+        let s = m.snapshot();
+        assert!((s.occupancy_mean - 3.0).abs() < 1e-9);
+        assert_eq!(s.occupancy_peak, 5);
+        assert_eq!(s.slot_capacity, 8);
     }
 
     #[test]

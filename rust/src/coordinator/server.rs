@@ -9,13 +9,20 @@
 //! * [`Backend::Pjrt`] — the AOT-compiled `tiny_lm_b{N}` artifacts via
 //!   the PJRT [`Runtime`]; batches are padded to the nearest compiled
 //!   batch bucket. Requires `make artifacts` and a PJRT-enabled build.
-//! * [`Backend::CimSim`] — the emulated-crossbar decode engine
-//!   (`sim::decode`): per-position logits computed on the functional
-//!   chip under a chosen mapping strategy, with modeled per-token
-//!   latency/energy fed into [`Metrics`]. Needs no artifacts — this is
-//!   the self-contained serving path of the offline image.
+//! * [`Backend::CimSim`] — the emulated-crossbar batched decode engine
+//!   (`sim::decode::BatchDecodeEngine`) behind a **continuous batching**
+//!   loop: `policy.max_batch` sequence slots share one programmed chip,
+//!   requests (ragged windows of 1..=seq tokens) are admitted into free
+//!   slots *between token steps*, every step advances all in-flight
+//!   sequences by one position through a single batched plan replay, and
+//!   finished slots are evicted and refilled without stalling their
+//!   neighbours. Per-lane bit-identicality of the batched replay means
+//!   a request's logits never depend on who it shared the chip with.
+//!   Needs no artifacts — this is the self-contained serving path of
+//!   the offline image. [`Metrics`] additionally reports per-step slot
+//!   occupancy and wall-clock tokens/sec.
 
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
@@ -28,14 +35,19 @@ use crate::cim::CimParams;
 use crate::mapping::Strategy;
 use crate::model::ModelConfig;
 use crate::runtime::{literal_i32, Runtime};
-use crate::sim::decode::{DecodeEngine, DecodeModel};
+use crate::sim::decode::{BatchDecodeEngine, DecodeModel};
+use crate::sim::trace::sum_costs;
 use crate::util::json::Json;
 
-/// One inference request: fixed-length token window answered with
-/// per-position logits.
+/// One inference request: a token window answered with per-position
+/// logits.
 struct Request {
     tokens: Vec<i32>,
     resp: Sender<Result<Vec<f32>>>,
+    /// Submission time — queue wait counts toward the request's
+    /// recorded latency (a request can sit in the channel while every
+    /// slot is busy).
+    t0: Instant,
 }
 
 /// CIM-sim backend configuration.
@@ -109,10 +121,25 @@ pub struct InferenceServer {
     pub vocab: usize,
 }
 
-/// Validate one request window against the model contract.
+/// Validate one request window against the PJRT artifact contract
+/// (fixed-length windows — the AOT graphs are compiled for exactly
+/// `seq` positions).
 fn validate(tokens: &[i32], seq: usize, vocab: usize) -> Result<()> {
     if tokens.len() != seq || tokens.iter().any(|&t| t < 0 || t as usize >= vocab) {
         bail!("invalid request: need {seq} tokens in [0, {vocab})");
+    }
+    Ok(())
+}
+
+/// Validate one request window for the CIM-sim backend: the decode
+/// engine scores token by token, so any ragged window of 1..=seq
+/// positions is servable (continuous batching admits mixed lengths).
+fn validate_window(tokens: &[i32], seq: usize, vocab: usize) -> Result<()> {
+    if tokens.is_empty()
+        || tokens.len() > seq
+        || tokens.iter().any(|&t| t < 0 || t as usize >= vocab)
+    {
+        bail!("invalid request: need 1..={seq} tokens in [0, {vocab})");
     }
     Ok(())
 }
@@ -218,12 +245,35 @@ fn run_pjrt_worker(
     }
 }
 
-/// Worker loop for the CIM-sim backend: ONE decode engine owned by the
-/// worker thread scores each request window position by position on the
-/// emulated chip. Because the engine is constructed once and reused, its
-/// compiled execution plan, chip pass scratch and activation buffers are
-/// shared across every request this worker ever serves — the steady-state
-/// serving path performs no per-pass allocation.
+/// One in-flight CIM-sim request: the token window being scored, how
+/// many positions have been fed, the per-position logits accumulated so
+/// far, and the reply channel.
+struct InFlight {
+    tokens: Vec<i32>,
+    fed: usize,
+    out: Vec<f32>,
+    resp: Sender<Result<Vec<f32>>>,
+    t0: Instant,
+}
+
+/// Worker loop for the CIM-sim backend: a continuous-batching scheduler
+/// over ONE [`BatchDecodeEngine`] owned by the worker thread. The chip
+/// is programmed once; `policy.max_batch` sequence slots share it.
+///
+/// Each iteration: (1) **admit** — free slots are filled from the
+/// request queue (blocking only when the chip is idle, so admission
+/// never stalls in-flight sequences); (2) **step** — every occupied
+/// slot advances one position through a single batched plan replay;
+/// (3) **evict** — slots whose window is fully scored reply with their
+/// per-position logits and free the slot for the next waiting request.
+/// The worker drains naturally on shutdown: queued requests are still
+/// admitted after the channel closes, and in-flight ones run to
+/// completion.
+///
+/// Because the engine is constructed once and reused, its compiled
+/// execution plan, chip pass scratch and per-slot activation buffers
+/// are shared across every request this worker ever serves — the
+/// steady-state serving path performs no per-pass allocation.
 fn run_cimsim_worker(
     cfg: CimSimConfig,
     policy: BatchPolicy,
@@ -238,7 +288,8 @@ fn run_cimsim_worker(
         seed,
     } = cfg;
     let (seq, vocab) = (model_cfg.seq, model_cfg.vocab);
-    let setup = (move || -> Result<DecodeEngine> {
+    let slots = policy.max_batch.max(1);
+    let setup = (move || -> Result<BatchDecodeEngine> {
         if model_cfg.enc_layers != 0 || model_cfg.dec_layers == 0 {
             bail!(
                 "CIM-sim backend needs a decoder-only model, got {}",
@@ -254,7 +305,7 @@ fn run_cimsim_worker(
             );
         }
         let model = DecodeModel::synth(model_cfg, seed);
-        Ok(DecodeEngine::on_chip(model, cim, strategy))
+        Ok(BatchDecodeEngine::on_chip(model, cim, strategy, slots))
     })();
     let mut engine = match setup {
         Ok(e) => {
@@ -266,32 +317,95 @@ fn run_cimsim_worker(
             return;
         }
     };
-    while let Some(batch) = next_batch(&rx, &policy) {
-        let t0 = Instant::now();
-        let mut replies = Vec::with_capacity(batch.len());
-        for r in &batch {
-            replies.push(match validate(&r.tokens, seq, vocab) {
-                Err(e) => {
-                    metrics.record_error();
-                    Err(e)
+    let capacity = engine.capacity();
+    let mut active: Vec<Option<InFlight>> = (0..capacity).map(|_| None).collect();
+    let mut open = true; // request channel still connected
+    let mut inputs: Vec<(usize, i32)> = Vec::with_capacity(capacity);
+    loop {
+        // --- admit: fill free slots between token steps ---
+        while open && engine.occupancy() < capacity {
+            let req = if engine.occupancy() == 0 {
+                // idle chip: block until work arrives (or shutdown)
+                match rx.recv() {
+                    Ok(r) => Some(r),
+                    Err(_) => {
+                        open = false;
+                        None
+                    }
                 }
-                Ok(()) => {
-                    let (logits, cost) = engine.score(&r.tokens);
-                    metrics.record_sim_tokens(
-                        seq,
-                        cost.latency.critical_ns(),
-                        cost.energy.total_nj(),
-                    );
-                    Ok(logits)
+            } else {
+                // busy chip: opportunistic, never stalls the batch
+                match rx.try_recv() {
+                    Ok(r) => Some(r),
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => {
+                        open = false;
+                        None
+                    }
                 }
+            };
+            let Some(req) = req else { break };
+            if let Err(e) = validate_window(&req.tokens, seq, vocab) {
+                metrics.record_error();
+                let _ = req.resp.send(Err(e));
+                continue;
+            }
+            let slot = engine.try_admit().expect("occupancy < capacity");
+            let window = req.tokens.len();
+            active[slot] = Some(InFlight {
+                tokens: req.tokens,
+                fed: 0,
+                out: Vec::with_capacity(window * vocab),
+                resp: req.resp,
+                t0: req.t0, // submission time, so queue wait is counted
             });
         }
-        // record before replying so snapshots taken by a caller right
-        // after its reply see this batch (same invariant as the PJRT
-        // worker — callers assert on counters immediately after infer)
-        metrics.record_batch(batch.len(), t0.elapsed().as_micros() as f64);
-        for (r, reply) in batch.iter().zip(replies) {
-            let _ = r.resp.send(reply);
+        if engine.occupancy() == 0 {
+            if open {
+                continue; // raced an invalid request; go back to recv
+            }
+            break; // drained and disconnected
+        }
+        // --- step: advance every in-flight sequence by one position ---
+        inputs.clear();
+        for (slot, a) in active.iter().enumerate() {
+            if let Some(a) = a {
+                inputs.push((slot, a.tokens[a.fed]));
+            }
+        }
+        engine.step(&inputs);
+        metrics.record_occupancy(inputs.len(), capacity);
+        // --- evict: finished windows reply and free their slot ---
+        let mut finished: Vec<InFlight> = Vec::new();
+        for &(slot, _) in &inputs {
+            let a = active[slot].as_mut().expect("stepped slot is active");
+            a.out.extend_from_slice(engine.logits(slot));
+            a.fed += 1;
+            if a.fed == a.tokens.len() {
+                let costs = engine.take_trace(slot);
+                let total = sum_costs(&costs);
+                metrics.record_sim_tokens(
+                    a.tokens.len(),
+                    total.latency.critical_ns(),
+                    total.energy.total_nj(),
+                );
+                engine.release(slot);
+                finished.push(active[slot].take().expect("finished slot"));
+            }
+        }
+        if !finished.is_empty() {
+            // record before replying so snapshots taken by a caller
+            // right after its reply see this completion group (same
+            // invariant as the PJRT worker); per-request latencies keep
+            // the percentiles honest under ragged admission times
+            let latencies: Vec<f64> = finished
+                .iter()
+                .map(|f| f.t0.elapsed().as_micros() as f64)
+                .collect();
+            metrics.record_completions(&latencies);
+            for f in finished {
+                let _ = f.resp.send(Ok(f.out));
+            }
         }
     }
 }
@@ -332,13 +446,18 @@ impl InferenceServer {
         })
     }
 
-    /// Blocking inference: returns per-position logits (seq * vocab).
+    /// Blocking inference: returns per-position logits (window len *
+    /// vocab; the CIM-sim backend accepts ragged windows of 1..=seq).
     pub fn infer(&self, tokens: Vec<i32>) -> Result<Vec<f32>> {
         let (rtx, rrx) = channel();
         self.tx
             .as_ref()
             .ok_or_else(|| anyhow!("server stopped"))?
-            .send(Request { tokens, resp: rtx })
+            .send(Request {
+                tokens,
+                resp: rtx,
+                t0: Instant::now(),
+            })
             .map_err(|_| anyhow!("server worker gone"))?;
         rrx.recv().map_err(|_| anyhow!("server dropped request"))?
     }

@@ -35,6 +35,7 @@ fn usage() -> ! {
            simulate [--model ...] [--strategy ...] [--adcs N]\n\
            decode   [--model tiny] [--strategy all|linear|sparse|dense]\n\
                     [--tokens 32] [--prompt 4] [--seed 2025] [--adcs N]\n\
+                    [--batch N]  (N>1: N concurrent streams, one chip)\n\
            serve    [--requests 64] [--artifacts DIR] [--backend pjrt|cim-sim]\n\
                     [--strategy dense]\n\
            dse      [--model ...] [--adcs 1,4,8,16,32] [--budget N]\n\
@@ -204,10 +205,11 @@ fn cmd_simulate(args: &Args) {
 }
 
 fn cmd_decode(args: &Args) {
-    use monarch_cim::sim::decode::{DecodeEngine, DecodeModel};
+    use monarch_cim::sim::decode::{BatchDecodeEngine, DecodeEngine, DecodeModel};
     let cfg = model_of_decoder(args);
     let n_tokens = args.usize_or("tokens", 32);
     let prompt_len = args.usize_or("prompt", 4).max(1);
+    let batch = args.usize_or("batch", 1).max(1);
     let seed = args.usize_or("seed", 2025) as u64;
     let mut cim = CimParams::default();
     if args.has("adcs") {
@@ -241,7 +243,7 @@ fn cmd_decode(args: &Args) {
     let golden = reference.generate(&prompt, n_tokens);
     println!("reference (factored Monarch matvec): {:?}", golden.tokens);
 
-    for strategy in strategies {
+    for &strategy in &strategies {
         let mut eng =
             DecodeEngine::on_chip(DecodeModel::synth(cfg.clone(), seed), cim.clone(), strategy);
         let t0 = std::time::Instant::now();
@@ -297,6 +299,57 @@ fn cmd_decode(args: &Args) {
                 "(EXCEEDS 1e-5)"
             },
         );
+    }
+
+    if batch > 1 {
+        println!("\nbatched decode ({batch} concurrent streams, one chip):");
+        // distinct prompts per stream (stream 0 = the single-stream prompt)
+        let prompts: Vec<Vec<i32>> = (0..batch)
+            .map(|s| {
+                (0..prompt_len)
+                    .map(|i| ((i * 37 + 11 + s * 101) % cfg.vocab) as i32)
+                    .collect()
+            })
+            .collect();
+        for &strategy in &strategies {
+            let mut be = BatchDecodeEngine::on_chip(
+                DecodeModel::synth(cfg.clone(), seed),
+                cim.clone(),
+                strategy,
+                batch,
+            );
+            let t0 = std::time::Instant::now();
+            let results = be.generate_batch(&prompts, n_tokens);
+            let wall = t0.elapsed();
+            let total_positions: usize =
+                results.iter().map(|r| r.per_token.len()).sum();
+            let tps = total_positions as f64 / wall.as_secs_f64();
+            // every stream must match an independent single-stream run;
+            // one engine suffices — generate() resets between requests
+            let mut single = DecodeEngine::on_chip(
+                DecodeModel::synth(cfg.clone(), seed),
+                cim.clone(),
+                strategy,
+            );
+            let mut identical = true;
+            for (p, r) in prompts.iter().zip(&results) {
+                if single.generate(p, n_tokens).tokens != r.tokens {
+                    identical = false;
+                }
+            }
+            println!(
+                "  {:<7} {} streams x {} tokens in {:.2?} wall = {:.0} tokens/s | vs single-stream: {}",
+                strategy.name(),
+                batch,
+                n_tokens,
+                wall,
+                tps,
+                if identical { "IDENTICAL" } else { "MISMATCH" },
+            );
+            for (s, r) in results.iter().enumerate() {
+                println!("    stream {s}: {:?}", r.tokens);
+            }
+        }
     }
 }
 
@@ -370,6 +423,10 @@ fn cmd_serve(args: &Args) {
             s.sim_tokens,
             s.sim_token_latency_ns / 1e3,
             s.sim_energy_nj / 1e3
+        );
+        println!(
+            "continuous batching: {:.1} tokens/s wall, occupancy mean {:.2} / peak {} of {} slots",
+            s.sim_tokens_per_sec, s.occupancy_mean, s.occupancy_peak, s.slot_capacity
         );
     }
     server.shutdown();

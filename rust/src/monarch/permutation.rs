@@ -47,6 +47,21 @@ impl StridePerm {
         }
     }
 
+    /// Batched interleaved form of [`StridePerm::apply_into`]: `batch`
+    /// lanes stored stride-`batch` (`x[i * batch + l]` is lane `l`'s
+    /// element `i`); each lane-block moves as one contiguous chunk, so
+    /// the permutation is applied per lane-block with no per-lane loop.
+    pub fn apply_batch_into(&self, x: &[f32], batch: usize, out: &mut [f32]) {
+        assert!(batch > 0, "batch must be positive");
+        assert_eq!(x.len(), self.n() * batch, "perm length mismatch");
+        assert_eq!(out.len(), self.n() * batch, "perm output length mismatch");
+        for i in 0..self.n() {
+            let j = self.map(i);
+            out[j * batch..(j + 1) * batch]
+                .copy_from_slice(&x[i * batch..(i + 1) * batch]);
+        }
+    }
+
     /// Apply to each row of a matrix (batched vectors).
     pub fn apply_rows(&self, x: &Matrix) -> Matrix {
         let mut out = Matrix::zeros(x.rows, x.cols);
@@ -123,6 +138,30 @@ mod tests {
         let mut out = vec![7.0f32; 16]; // stale contents must be overwritten
         p.apply_into(&x, &mut out);
         assert_eq!(out, p.apply(&x));
+    }
+
+    #[test]
+    fn apply_batch_into_matches_per_lane_apply() {
+        let p = StridePerm::new(3);
+        for batch in [1usize, 2, 5] {
+            let lanes: Vec<Vec<f32>> = (0..batch)
+                .map(|l| (0..9).map(|i| (i * (l + 1)) as f32).collect())
+                .collect();
+            let mut xi = vec![0.0f32; 9 * batch];
+            for (l, x) in lanes.iter().enumerate() {
+                for (i, &v) in x.iter().enumerate() {
+                    xi[i * batch + l] = v;
+                }
+            }
+            let mut out = vec![f32::NAN; 9 * batch];
+            p.apply_batch_into(&xi, batch, &mut out);
+            for (l, x) in lanes.iter().enumerate() {
+                let want = p.apply(x);
+                for i in 0..9 {
+                    assert_eq!(out[i * batch + l], want[i], "batch {batch} lane {l}");
+                }
+            }
+        }
     }
 
     #[test]

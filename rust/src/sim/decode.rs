@@ -28,6 +28,14 @@
 //! the *dense materialization* of the same operator and agrees to float
 //! tolerance — so greedy token sequences match across all three
 //! strategies (tier-1 `tests/integration_decode.rs`).
+//!
+//! [`BatchDecodeEngine`] extends the same loop to a slot pool: B
+//! sequences share one programmed chip, every Para op replays its pass
+//! tables once per step for the whole batch
+//! (`FunctionalChip::run_op_batch_into`, stride-B interleaved lanes),
+//! and slots admit/evict between steps (continuous batching). Each lane
+//! is bit-identical to the single-stream path, so batched logits never
+//! depend on batchmates (`tests/prop_batch_decode.rs`).
 
 use std::collections::HashMap;
 
@@ -173,6 +181,38 @@ impl ParaBackend {
                 y.copy_from_slice(&r);
             }
             ParaBackend::Chip(chip) => chip.run_op_into(op_idx, x, y),
+        }
+    }
+
+    /// Batched form: `batch` stride-B interleaved input vectors through
+    /// one plan replay (`xs[c * batch + l]` is lane `l`'s element `c`).
+    /// The chip path amortizes every analog pass over the batch; the
+    /// reference path runs the golden matvec lane by lane. Either way,
+    /// lane `l` is bit-identical to a `run_into` call over lane `l`'s
+    /// vector — the invariant batched decode rests on.
+    fn run_batch_into(
+        &mut self,
+        model: &DecodeModel,
+        op_idx: usize,
+        batch: usize,
+        xs: &[f32],
+        ys: &mut [f32],
+    ) {
+        match self {
+            ParaBackend::Reference => {
+                let cols = model.ops[op_idx].cols;
+                let mut x = vec![0.0f32; cols];
+                for l in 0..batch {
+                    for (c, xv) in x.iter_mut().enumerate() {
+                        *xv = xs[c * batch + l];
+                    }
+                    let r = model.reference_matvec(op_idx, &x);
+                    for (i, v) in r.iter().enumerate() {
+                        ys[i * batch + l] = *v;
+                    }
+                }
+            }
+            ParaBackend::Chip(chip) => chip.run_op_batch_into(op_idx, batch, xs, ys),
         }
     }
 }
@@ -339,15 +379,19 @@ impl DecodeEngine {
         }
     }
 
-    /// Clear the KV cache and the trace (new sequence).
+    /// Clear the KV cache, the trace and the stale per-request scratch
+    /// (new sequence). After `reset` the engine is observationally
+    /// indistinguishable from a freshly constructed one: the attention
+    /// score window and the previous request's logits are wiped too, so
+    /// a caller that reads logits before the first `forward` of the new
+    /// request can never see the old request's distribution.
     pub fn reset(&mut self) {
-        for k in self.keys.iter_mut() {
-            k.clear();
-        }
-        for v in self.values.iter_mut() {
-            v.clear();
-        }
-        self.trace.clear();
+        clear_request_state(
+            &mut self.keys,
+            &mut self.values,
+            &mut self.trace,
+            &mut self.bufs,
+        );
     }
 
     /// Cached positions so far.
@@ -477,6 +521,483 @@ impl DecodeEngine {
     }
 }
 
+/// Wipe one request's state — KV cache, cost trace, attention score
+/// window and logits. Single definition of "request state", shared by
+/// [`DecodeEngine::reset`] and [`BatchSlot::clear`] so the two reuse
+/// paths can never drift apart on what gets cleared.
+fn clear_request_state(
+    keys: &mut [Vec<Vec<f32>>],
+    values: &mut [Vec<Vec<f32>>],
+    trace: &mut DecodeTrace,
+    bufs: &mut EngineBufs,
+) {
+    for k in keys.iter_mut() {
+        k.clear();
+    }
+    for v in values.iter_mut() {
+        v.clear();
+    }
+    trace.clear();
+    bufs.scores.clear();
+    bufs.logits.fill(0.0);
+}
+
+/// One sequence slot of the batched engine: its own KV cache, activation
+/// buffers and per-position cost trace — everything request-private, so
+/// slots at different positions (ragged lengths) coexist in one batch.
+struct BatchSlot {
+    /// Occupied by an in-flight sequence.
+    active: bool,
+    keys: Vec<Vec<Vec<f32>>>,
+    values: Vec<Vec<Vec<f32>>>,
+    bufs: EngineBufs,
+    trace: DecodeTrace,
+}
+
+impl BatchSlot {
+    fn new(cfg: &ModelConfig) -> Self {
+        Self {
+            active: false,
+            keys: vec![Vec::new(); cfg.dec_layers],
+            values: vec![Vec::new(); cfg.dec_layers],
+            bufs: EngineBufs::new(cfg),
+            trace: DecodeTrace::new(),
+        }
+    }
+
+    fn kv_len(&self) -> usize {
+        self.keys.first().map(|k| k.len()).unwrap_or(0)
+    }
+
+    /// Wipe all request state (KV cache, trace, score window, logits) so
+    /// the next occupant starts from a provably clean slot.
+    fn clear(&mut self) {
+        clear_request_state(
+            &mut self.keys,
+            &mut self.values,
+            &mut self.trace,
+            &mut self.bufs,
+        );
+    }
+}
+
+// Stride-B staging accessors, named `fn`s so the function pointers get
+// the usual elided-lifetime signatures.
+fn buf_x(b: &EngineBufs) -> &[f32] {
+    &b.x
+}
+fn buf_ctx(b: &EngineBufs) -> &[f32] {
+    &b.ctx
+}
+fn buf_f(b: &EngineBufs) -> &[f32] {
+    &b.f
+}
+fn buf_q_mut(b: &mut EngineBufs) -> &mut [f32] {
+    &mut b.q
+}
+fn buf_k_mut(b: &mut EngineBufs) -> &mut [f32] {
+    &mut b.k
+}
+fn buf_v_mut(b: &mut EngineBufs) -> &mut [f32] {
+    &mut b.v
+}
+fn buf_o_mut(b: &mut EngineBufs) -> &mut [f32] {
+    &mut b.o
+}
+fn buf_f_mut(b: &mut EngineBufs) -> &mut [f32] {
+    &mut b.f
+}
+fn buf_g_mut(b: &mut EngineBufs) -> &mut [f32] {
+    &mut b.g
+}
+
+/// Gather each lane's slot buffer into the stride-B interleaved staging
+/// buffer: `xb[k * batch + l]` = element `k` of lane `l`'s vector.
+fn pack_lanes(
+    xb: &mut [f32],
+    width: usize,
+    slots: &[BatchSlot],
+    lanes: &[usize],
+    get: fn(&EngineBufs) -> &[f32],
+) {
+    let batch = lanes.len();
+    for (l, &si) in lanes.iter().enumerate() {
+        let src = get(&slots[si].bufs);
+        for k in 0..width {
+            xb[k * batch + l] = src[k];
+        }
+    }
+}
+
+/// Scatter the stride-B interleaved landing buffer back into each
+/// lane's slot buffer (inverse of [`pack_lanes`]).
+fn unpack_lanes(
+    yb: &[f32],
+    width: usize,
+    slots: &mut [BatchSlot],
+    lanes: &[usize],
+    get: fn(&mut EngineBufs) -> &mut [f32],
+) {
+    let batch = lanes.len();
+    for (l, &si) in lanes.iter().enumerate() {
+        let dst = get(&mut slots[si].bufs);
+        for k in 0..width {
+            dst[k] = yb[k * batch + l];
+        }
+    }
+}
+
+/// Batched decode engine: a fixed set of sequence slots sharing ONE
+/// programmed chip. Each [`BatchDecodeEngine::step`] advances any subset
+/// of the slots by one token, replaying every Para op's compiled pass
+/// tables once for the whole batch (`FunctionalChip::run_op_batch_into`)
+/// — the weight-stationary amortization that turns the memory-bound
+/// decode stage into a throughput-oriented serving core. Slots are
+/// request-private (own KV cache, own [`EngineBufs`]), may sit at
+/// different positions (ragged lengths), and can be admitted/evicted
+/// between steps without touching in-flight neighbours (continuous
+/// batching, `coordinator::server`).
+///
+/// Because every lane of the batched replay is bit-identical to the
+/// single-stream path, a slot's logits never depend on its batchmates:
+/// any interleaving of admissions/evictions produces exactly the tokens
+/// of independent [`DecodeEngine`]s (`tests/prop_batch_decode.rs`).
+pub struct BatchDecodeEngine {
+    pub model: DecodeModel,
+    backend: ParaBackend,
+    params: CimParams,
+    slots: Vec<BatchSlot>,
+    /// Stride-B interleaved staging (op input) buffer, `max(d, d_ff) *
+    /// capacity` wide — allocated once, reused every step.
+    xb: Vec<f32>,
+    /// Stride-B interleaved landing (op output) buffer.
+    yb: Vec<f32>,
+}
+
+impl BatchDecodeEngine {
+    /// Batched engine with the golden (non-CIM) Para backend.
+    pub fn reference(model: DecodeModel, capacity: usize) -> BatchDecodeEngine {
+        Self::with_backend(model, ParaBackend::Reference, CimParams::default(), capacity)
+    }
+
+    /// Batched engine whose Para ops run on an emulated chip programmed
+    /// with the given mapping strategy (one chip for all slots — the
+    /// weights are resident once, the batch rides for free).
+    pub fn on_chip(
+        model: DecodeModel,
+        params: CimParams,
+        strategy: Strategy,
+        capacity: usize,
+    ) -> BatchDecodeEngine {
+        let chip = FunctionalChip::program_rect(
+            &model.cfg,
+            &model.ops,
+            &model.weights,
+            &params,
+            strategy,
+        );
+        Self::with_backend(model, ParaBackend::Chip(Box::new(chip)), params, capacity)
+    }
+
+    fn with_backend(
+        model: DecodeModel,
+        backend: ParaBackend,
+        params: CimParams,
+        capacity: usize,
+    ) -> BatchDecodeEngine {
+        assert!(capacity >= 1, "need at least one sequence slot");
+        let slots: Vec<BatchSlot> =
+            (0..capacity).map(|_| BatchSlot::new(&model.cfg)).collect();
+        let wide = model.cfg.d_model.max(model.cfg.d_ff);
+        BatchDecodeEngine {
+            xb: vec![0.0; wide * capacity],
+            yb: vec![0.0; wide * capacity],
+            model,
+            backend,
+            params,
+            slots,
+        }
+    }
+
+    /// Total sequence slots.
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Currently occupied slots.
+    pub fn occupancy(&self) -> usize {
+        self.slots.iter().filter(|s| s.active).count()
+    }
+
+    /// Whether `slot` currently holds an in-flight sequence.
+    pub fn is_active(&self, slot: usize) -> bool {
+        self.slots[slot].active
+    }
+
+    /// Claim a free slot for a new sequence (cleared KV/trace/logits);
+    /// `None` when every slot is occupied.
+    pub fn try_admit(&mut self) -> Option<usize> {
+        let s = self.slots.iter().position(|s| !s.active)?;
+        let slot = &mut self.slots[s];
+        slot.active = true;
+        slot.clear();
+        Some(s)
+    }
+
+    /// Evict a slot (finished or cancelled sequence). All request state
+    /// is wiped immediately, so a later occupant can never observe it.
+    pub fn release(&mut self, slot: usize) {
+        let s = &mut self.slots[slot];
+        s.active = false;
+        s.clear();
+    }
+
+    /// Cached positions of one slot.
+    pub fn kv_len(&self, slot: usize) -> usize {
+        self.slots[slot].kv_len()
+    }
+
+    /// LM-head logits of the slot's latest stepped position (borrowed
+    /// from the slot's buffer — valid until its next step).
+    pub fn logits(&self, slot: usize) -> &[f32] {
+        &self.slots[slot].bufs.logits
+    }
+
+    /// Move the slot's accumulated per-position costs out (one entry
+    /// per stepped position since admission).
+    pub fn take_trace(&mut self, slot: usize) -> Vec<Cost> {
+        std::mem::take(&mut self.slots[slot].trace.per_token)
+    }
+
+    /// The chip's mapping (None for the reference backend).
+    pub fn mapping(&self) -> Option<&crate::mapping::ModelMapping> {
+        match &self.backend {
+            ParaBackend::Chip(c) => Some(&c.mapping),
+            ParaBackend::Reference => None,
+        }
+    }
+
+    /// Advance the listed slots by one token each (`(slot, token)`
+    /// pairs; slots must be active and distinct, any subset and order).
+    /// Every Para matmul runs once, batched over the lanes; everything
+    /// per-sequence (LayerNorm, attention against the slot's own KV
+    /// cache, residuals, LM head) runs lane by lane on the slot's
+    /// private buffers. Appends K/V to each slot's cache and records a
+    /// per-slot cost at the slot's own KV length.
+    pub fn step(&mut self, inputs: &[(usize, i32)]) {
+        let batch = inputs.len();
+        assert!(batch > 0, "step needs at least one active slot");
+        let BatchDecodeEngine {
+            model,
+            backend,
+            params,
+            slots,
+            xb,
+            yb,
+        } = self;
+        let d = model.cfg.d_model;
+        let d_ff = model.cfg.d_ff;
+        let heads = model.cfg.n_heads;
+        let dh = model.cfg.d_head();
+        let vocab = model.cfg.vocab;
+        let n_layers = model.cfg.dec_layers;
+        let lane_slots: Vec<usize> = inputs.iter().map(|&(s, _)| s).collect();
+        for (i, &si) in lane_slots.iter().enumerate() {
+            assert!(si < slots.len(), "slot {si} out of range");
+            assert!(slots[si].active, "step on inactive slot {si}");
+            assert!(
+                !lane_slots[..i].contains(&si),
+                "duplicate slot {si} in one step"
+            );
+        }
+
+        // token + positional embedding, per lane at the lane's position
+        for &(si, token) in inputs {
+            let slot = &mut slots[si];
+            let pos = slot.kv_len().min(model.cfg.seq - 1);
+            let tok = (token.max(0) as usize).min(vocab - 1);
+            for ((hv, e), p) in slot
+                .bufs
+                .h
+                .iter_mut()
+                .zip(model.embedding.row(tok))
+                .zip(model.positional.row(pos))
+            {
+                *hv = e + p;
+            }
+        }
+
+        for l in 0..n_layers {
+            let ops = model.layers[l];
+            // --- self-attention sub-block (pre-LN) ---
+            for &si in &lane_slots {
+                let b = &mut slots[si].bufs;
+                layer_norm_into(&b.h, &mut b.x);
+            }
+            pack_lanes(&mut xb[..d * batch], d, &slots[..], &lane_slots, buf_x);
+            backend.run_batch_into(model, ops.wq, batch, &xb[..d * batch], &mut yb[..d * batch]);
+            unpack_lanes(&yb[..d * batch], d, &mut slots[..], &lane_slots, buf_q_mut);
+            backend.run_batch_into(model, ops.wk, batch, &xb[..d * batch], &mut yb[..d * batch]);
+            unpack_lanes(&yb[..d * batch], d, &mut slots[..], &lane_slots, buf_k_mut);
+            backend.run_batch_into(model, ops.wv, batch, &xb[..d * batch], &mut yb[..d * batch]);
+            unpack_lanes(&yb[..d * batch], d, &mut slots[..], &lane_slots, buf_v_mut);
+            for &si in &lane_slots {
+                let slot = &mut slots[si];
+                slot.keys[l].push(slot.bufs.k.clone());
+                slot.values[l].push(slot.bufs.v.clone());
+                attend_into(
+                    &slot.bufs.q,
+                    &slot.keys[l],
+                    &slot.values[l],
+                    heads,
+                    dh,
+                    &mut slot.bufs.scores,
+                    &mut slot.bufs.ctx,
+                );
+            }
+            pack_lanes(&mut xb[..d * batch], d, &slots[..], &lane_slots, buf_ctx);
+            backend.run_batch_into(model, ops.wo, batch, &xb[..d * batch], &mut yb[..d * batch]);
+            unpack_lanes(&yb[..d * batch], d, &mut slots[..], &lane_slots, buf_o_mut);
+            // --- feed-forward sub-block (pre-LN) ---
+            for &si in &lane_slots {
+                let b = &mut slots[si].bufs;
+                for (hv, ov) in b.h.iter_mut().zip(&b.o) {
+                    *hv += ov;
+                }
+                layer_norm_into(&b.h, &mut b.x);
+            }
+            pack_lanes(&mut xb[..d * batch], d, &slots[..], &lane_slots, buf_x);
+            backend.run_batch_into(
+                model,
+                ops.ffn1,
+                batch,
+                &xb[..d * batch],
+                &mut yb[..d_ff * batch],
+            );
+            unpack_lanes(&yb[..d_ff * batch], d_ff, &mut slots[..], &lane_slots, buf_f_mut);
+            for &si in &lane_slots {
+                gelu(&mut slots[si].bufs.f);
+            }
+            pack_lanes(&mut xb[..d_ff * batch], d_ff, &slots[..], &lane_slots, buf_f);
+            backend.run_batch_into(
+                model,
+                ops.ffn2,
+                batch,
+                &xb[..d_ff * batch],
+                &mut yb[..d * batch],
+            );
+            unpack_lanes(&yb[..d * batch], d, &mut slots[..], &lane_slots, buf_g_mut);
+            for &si in &lane_slots {
+                let b = &mut slots[si].bufs;
+                for (hv, gv) in b.h.iter_mut().zip(&b.g) {
+                    *hv += gv;
+                }
+            }
+        }
+
+        // untied LM head over the final LayerNorm + per-slot cost record
+        let inv_sqrt_d = 1.0 / (d as f32).sqrt();
+        for &si in &lane_slots {
+            let slot = &mut slots[si];
+            layer_norm_into(&slot.bufs.h, &mut slot.bufs.hn);
+            for (t, lv) in slot.bufs.logits.iter_mut().enumerate() {
+                let row = model.lm_head.row(t);
+                let mut acc = 0.0f32;
+                for (r, x) in row.iter().zip(&slot.bufs.hn) {
+                    acc += r * x;
+                }
+                *lv = acc * inv_sqrt_d;
+            }
+            let kv_len = slot.kv_len();
+            let cost = match backend {
+                ParaBackend::Chip(chip) => {
+                    decode_token_cost(&model.cfg, &chip.mapping, params, kv_len)
+                }
+                ParaBackend::Reference => Cost::default(),
+            };
+            slot.trace.record(cost);
+        }
+    }
+
+    /// Greedy generation of a whole request list through the slot pool
+    /// with continuous batching: requests are admitted into free slots
+    /// as they open up (more requests than slots exercises mid-run
+    /// admission), each slot feeds its prompt then argmax-extends for
+    /// `n_tokens`, and finished slots are evicted — and refilled —
+    /// without stalling in-flight neighbours. Per request the semantics
+    /// (and, bit for bit, the tokens) equal
+    /// [`DecodeEngine::generate`] on a fresh single-stream engine.
+    pub fn generate_batch(
+        &mut self,
+        prompts: &[Vec<i32>],
+        n_tokens: usize,
+    ) -> Vec<DecodeResult> {
+        for p in prompts {
+            assert!(!p.is_empty(), "need at least one prompt token");
+        }
+        let cap = self.slots.len();
+        // start clean: evict anything left over from a previous run
+        for s in 0..cap {
+            if self.slots[s].active {
+                self.release(s);
+            }
+        }
+        let mut results: Vec<DecodeResult> = prompts
+            .iter()
+            .map(|_| DecodeResult {
+                tokens: Vec::with_capacity(n_tokens),
+                per_token: Vec::new(),
+            })
+            .collect();
+        // per-slot (request index, forwards done so far)
+        let mut running: Vec<Option<(usize, usize)>> = vec![None; cap];
+        let mut next_req = 0usize;
+        let mut inputs: Vec<(usize, i32)> = Vec::with_capacity(cap);
+        loop {
+            while next_req < prompts.len() {
+                match self.try_admit() {
+                    Some(s) => {
+                        running[s] = Some((next_req, 0));
+                        next_req += 1;
+                    }
+                    None => break,
+                }
+            }
+            inputs.clear();
+            for (s, run) in running.iter().enumerate() {
+                if let Some((req, fed)) = *run {
+                    let tok = if fed < prompts[req].len() {
+                        prompts[req][fed]
+                    } else {
+                        // argmax over the slot's last logits — exactly
+                        // DecodeEngine::generate's continuation rule
+                        let t = argmax(self.logits(s)) as i32;
+                        results[req].tokens.push(t);
+                        t
+                    };
+                    inputs.push((s, tok));
+                }
+            }
+            if inputs.is_empty() {
+                break;
+            }
+            self.step(&inputs);
+            for &(s, _) in inputs.iter() {
+                let (req, fed) = running[s].expect("stepped slot is running");
+                let done = fed + 1;
+                if done == prompts[req].len() + n_tokens {
+                    results[req].per_token = self.take_trace(s);
+                    self.release(s);
+                    running[s] = None;
+                } else {
+                    running[s] = Some((req, done));
+                }
+            }
+        }
+        results
+    }
+}
+
 /// Digital multi-head attention of one query against the KV cache, into
 /// caller-owned context/score scratch (every entry overwritten).
 fn attend_into(
@@ -593,6 +1114,102 @@ mod tests {
         assert!(rr.per_token.iter().all(|c| c.latency.critical_ns() == 0.0));
         assert!(chip.mapping().is_some());
         assert!(reference.mapping().is_none());
+    }
+
+    #[test]
+    fn engine_reuse_equals_fresh_engine() {
+        // Slot-reuse regression (ISSUE 3): generating on a dirtied
+        // engine must equal a fresh engine token-for-token — reset
+        // leaves no KV, trace, score-window or logit residue behind.
+        let params = CimParams::default();
+        for strategy in [Strategy::SparseMap, Strategy::DenseMap] {
+            let mut used = DecodeEngine::on_chip(
+                DecodeModel::synth(tiny(), 21),
+                params.clone(),
+                strategy,
+            );
+            let _ = used.generate(&[9, 1, 7, 13], 6); // dirty KV/trace/logits
+            let reused = used.generate(&[3, 4], 6);
+            let mut fresh = DecodeEngine::on_chip(
+                DecodeModel::synth(tiny(), 21),
+                params.clone(),
+                strategy,
+            );
+            let direct = fresh.generate(&[3, 4], 6);
+            assert_eq!(reused.tokens, direct.tokens, "{strategy:?}: reuse drifted");
+            assert_eq!(reused.per_token.len(), direct.per_token.len());
+        }
+    }
+
+    #[test]
+    fn batch_step_logits_match_single_forward_bitwise() {
+        // Teacher-forced: two ragged slots stepped together produce, at
+        // every position, exactly the single-stream forward's logits.
+        let mut be = BatchDecodeEngine::reference(DecodeModel::synth(tiny(), 3), 2);
+        let s0 = be.try_admit().unwrap();
+        let s1 = be.try_admit().unwrap();
+        assert!(be.try_admit().is_none(), "capacity 2 means 2 slots");
+        let seqs = [vec![5i32, 9, 2], vec![8i32, 1, 30]];
+        let mut singles = [
+            DecodeEngine::reference(DecodeModel::synth(tiny(), 3)),
+            DecodeEngine::reference(DecodeModel::synth(tiny(), 3)),
+        ];
+        for t in 0..3 {
+            be.step(&[(s0, seqs[0][t]), (s1, seqs[1][t])]);
+            for (i, &s) in [s0, s1].iter().enumerate() {
+                let want = singles[i].forward(seqs[i][t]).to_vec();
+                assert_eq!(be.logits(s), want.as_slice(), "slot {i} pos {t}");
+            }
+        }
+        // evict slot 0; the freed slot readmits clean while slot 1 keeps
+        // its cache (ragged coexistence)
+        be.release(s0);
+        assert_eq!(be.occupancy(), 1);
+        let s2 = be.try_admit().unwrap();
+        assert_eq!(s2, s0, "freed slot is reusable");
+        assert_eq!(be.kv_len(s2), 0, "readmitted slot starts empty");
+        assert_eq!(be.kv_len(s1), 3, "neighbour cache untouched");
+    }
+
+    #[test]
+    fn generate_batch_matches_single_stream_engines() {
+        let params = CimParams::default();
+        let mut be = BatchDecodeEngine::on_chip(
+            DecodeModel::synth(tiny(), 5),
+            params.clone(),
+            Strategy::DenseMap,
+            3,
+        );
+        let prompts = vec![vec![1, 2, 3], vec![7, 8], vec![40, 41, 42, 43]];
+        let results = be.generate_batch(&prompts, 5);
+        for (p, r) in prompts.iter().zip(&results) {
+            let mut single = DecodeEngine::on_chip(
+                DecodeModel::synth(tiny(), 5),
+                params.clone(),
+                Strategy::DenseMap,
+            );
+            let want = single.generate(p, 5);
+            assert_eq!(r.tokens, want.tokens, "prompt {p:?}");
+            assert_eq!(r.per_token.len(), want.per_token.len());
+        }
+    }
+
+    #[test]
+    fn generate_batch_admits_beyond_capacity() {
+        // 5 requests through 2 slots: finished slots are evicted and
+        // refilled mid-run without disturbing in-flight neighbours.
+        let mut be = BatchDecodeEngine::reference(DecodeModel::synth(tiny(), 9), 2);
+        let prompts: Vec<Vec<i32>> = (0..5)
+            .map(|i| (0..(i % 3 + 1)).map(|j| (i * 13 + j * 7 + 1) as i32).collect())
+            .collect();
+        let results = be.generate_batch(&prompts, 4);
+        assert_eq!(results.len(), 5);
+        assert_eq!(be.occupancy(), 0, "all slots evicted at end");
+        assert!(results.iter().all(|r| r.tokens.len() == 4));
+        for (p, r) in prompts.iter().zip(&results) {
+            let mut single = DecodeEngine::reference(DecodeModel::synth(tiny(), 9));
+            assert_eq!(r.tokens, single.generate(p, 4).tokens, "prompt {p:?}");
+        }
     }
 
     #[test]

@@ -58,6 +58,20 @@ struct ExecScratch {
     w: Vec<f32>,
     z: Vec<f32>,
     part: Vec<f32>,
+    /// Lane capacity the `b*` buffers below are sized for. The batched
+    /// replay grows them on demand (`ensure_batch`), so the steady-state
+    /// token loop at a fixed batch width allocates nothing.
+    batch: usize,
+    /// Stride-B interleaved counterparts of the buffers above: element
+    /// `i` of lane `l` lives at `buf[i * batch + l]`.
+    binput: Vec<f32>,
+    bcolbuf: Vec<f32>,
+    bxseg: Vec<f32>,
+    bu: Vec<f32>,
+    bv: Vec<f32>,
+    bw: Vec<f32>,
+    bz: Vec<f32>,
+    bpart: Vec<f32>,
 }
 
 impl ExecScratch {
@@ -71,7 +85,36 @@ impl ExecScratch {
             w: vec![0.0; d],
             z: vec![0.0; d],
             part: vec![0.0; d],
+            batch: 0,
+            binput: Vec::new(),
+            bcolbuf: Vec::new(),
+            bxseg: Vec::new(),
+            bu: Vec::new(),
+            bv: Vec::new(),
+            bw: Vec::new(),
+            bz: Vec::new(),
+            bpart: Vec::new(),
         }
+    }
+
+    /// Grow the batched staging/landing buffers to hold `batch` lanes.
+    fn ensure_batch(&mut self, m: usize, d: usize, max_cols: usize, batch: usize) {
+        if batch <= self.batch {
+            return;
+        }
+        self.binput.resize(m * batch, 0.0);
+        self.bcolbuf.resize(max_cols * batch, 0.0);
+        for buf in [
+            &mut self.bxseg,
+            &mut self.bu,
+            &mut self.bv,
+            &mut self.bw,
+            &mut self.bz,
+            &mut self.bpart,
+        ] {
+            buf.resize(d * batch, 0.0);
+        }
+        self.batch = batch;
     }
 }
 
@@ -151,6 +194,57 @@ fn replay_stage(
     for pass in passes {
         let n = replay_pass(crossbars, pass, x, input, colbuf);
         out[pass.dst..pass.dst + n].copy_from_slice(&colbuf[..n]);
+    }
+}
+
+/// Batched form of [`replay_pass`]: stage `batch` interleaved input
+/// lanes and convert the scheduled columns for all of them in one
+/// analog pass. `input` must be exactly `m * batch` long; lane `l` of
+/// element `src + k` comes from `x[(src + k) * batch + l]`.
+#[inline]
+fn replay_pass_batch(
+    crossbars: &[Crossbar],
+    pass: &CompiledPass,
+    batch: usize,
+    x: &[f32],
+    input: &mut [f32],
+    colbuf: &mut [f32],
+) -> usize {
+    for (k, &r) in pass.rows.iter().enumerate() {
+        let dst = &mut input[r * batch..(r + 1) * batch];
+        if k < pass.n_in {
+            let s = (pass.src + k) * batch;
+            dst.copy_from_slice(&x[s..s + batch]);
+        } else {
+            dst.fill(0.0);
+        }
+    }
+    let n = pass.cols.len();
+    crossbars[pass.array].mvm_batch_cols(
+        input,
+        batch,
+        &pass.rows,
+        &pass.cols,
+        &mut colbuf[..n * batch],
+    );
+    n
+}
+
+/// Batched form of [`replay_stage`] over stride-B interleaved lanes.
+fn replay_stage_batch(
+    crossbars: &[Crossbar],
+    passes: &[CompiledPass],
+    batch: usize,
+    x: &[f32],
+    out: &mut [f32],
+    input: &mut [f32],
+    colbuf: &mut [f32],
+) {
+    out.fill(0.0);
+    for pass in passes {
+        let n = replay_pass_batch(crossbars, pass, batch, x, input, colbuf);
+        out[pass.dst * batch..(pass.dst + n) * batch]
+            .copy_from_slice(&colbuf[..n * batch]);
     }
 }
 
@@ -354,6 +448,136 @@ impl FunctionalChip {
         match self.mapping.strategy {
             Strategy::Linear => self.replay_op_linear(op_idx, x, y),
             _ => self.replay_op_monarch(op_idx, x, y),
+        }
+    }
+
+    /// Batched MVM: replay the compiled plan once for `batch` stacked
+    /// input vectors. `xs`/`ys` are stride-B interleaved (`xs[c * batch
+    /// + l]` is lane `l`'s input element `c`), so each analog pass
+    /// converts a column-block of activations — the near-free batch
+    /// amortization of weight-stationary CIM serving.
+    ///
+    /// Every lane is **bit-identical** to a [`FunctionalChip::run_op_into`]
+    /// call over that lane's vector (same f32 operations in the same
+    /// order per lane); `batch == 1` takes the single-stream path
+    /// directly (the layouts coincide at B=1).
+    pub fn run_op_batch_into(
+        &mut self,
+        op_idx: usize,
+        batch: usize,
+        xs: &[f32],
+        ys: &mut [f32],
+    ) {
+        assert!(batch > 0, "batch must be positive");
+        if batch == 1 {
+            return self.run_op_into(op_idx, xs, ys);
+        }
+        self.scratch
+            .ensure_batch(self.m, self.b * self.b, self.plan.max_cols(), batch);
+        match self.mapping.strategy {
+            Strategy::Linear => self.replay_op_linear_batch(op_idx, batch, xs, ys),
+            _ => self.replay_op_monarch_batch(op_idx, batch, xs, ys),
+        }
+    }
+
+    /// Allocating convenience form of [`FunctionalChip::run_op_batch_into`].
+    pub fn run_op_batch(&mut self, op_idx: usize, batch: usize, xs: &[f32]) -> Vec<f32> {
+        let mut ys = vec![0.0f32; self.mapping.ops[op_idx].rows * batch];
+        self.run_op_batch_into(op_idx, batch, xs, &mut ys);
+        ys
+    }
+
+    fn replay_op_linear_batch(&mut self, op_idx: usize, batch: usize, xs: &[f32], ys: &mut [f32]) {
+        let op = &self.mapping.ops[op_idx];
+        assert_eq!(xs.len(), op.cols * batch, "linear batch input length");
+        assert_eq!(ys.len(), op.rows * batch, "linear batch output length");
+        ys.fill(0.0);
+        let m = self.m;
+        let FunctionalChip {
+            crossbars,
+            plan,
+            scratch,
+            ..
+        } = self;
+        let max_cols = plan.max_cols();
+        let input = &mut scratch.binput[..m * batch];
+        let colbuf = &mut scratch.bcolbuf[..max_cols * batch];
+        for pass in &plan.ops[op_idx].passes {
+            let n = replay_pass_batch(&crossbars[..], pass, batch, xs, input, colbuf);
+            let seg = &mut ys[pass.dst * batch..(pass.dst + n) * batch];
+            for (yo, pv) in seg.iter_mut().zip(&colbuf[..n * batch]) {
+                *yo += pv;
+            }
+        }
+    }
+
+    fn replay_op_monarch_batch(
+        &mut self,
+        op_idx: usize,
+        batch: usize,
+        xs: &[f32],
+        ys: &mut [f32],
+    ) {
+        let op = &self.mapping.ops[op_idx];
+        let d = self.b * self.b;
+        assert_eq!(xs.len(), op.cols * batch, "monarch batch input length");
+        assert_eq!(ys.len(), op.rows * batch, "monarch batch output length");
+        ys.fill(0.0);
+        let (op_rows, op_cols) = (op.rows, op.cols);
+        let (tr, tc) = (op_rows.div_ceil(d), op_cols.div_ceil(d));
+        let perm = StridePerm::new(self.b);
+        let m = self.m;
+        let FunctionalChip {
+            crossbars,
+            plan,
+            scratch,
+            ..
+        } = self;
+        let oplan = &plan.ops[op_idx];
+        let max_cols = plan.max_cols();
+        let input = &mut scratch.binput[..m * batch];
+        let colbuf = &mut scratch.bcolbuf[..max_cols * batch];
+        let xseg = &mut scratch.bxseg[..d * batch];
+        let u = &mut scratch.bu[..d * batch];
+        let v = &mut scratch.bv[..d * batch];
+        let w = &mut scratch.bw[..d * batch];
+        let z = &mut scratch.bz[..d * batch];
+        let part = &mut scratch.bpart[..d * batch];
+        for j in 0..tc {
+            // zero-padded interleaved input segment (per lane, the same
+            // loop structure as the single-stream replay)
+            let cw = d.min(op_cols - j * d);
+            xseg[..cw * batch].copy_from_slice(&xs[j * d * batch..(j * d + cw) * batch]);
+            xseg[cw * batch..].fill(0.0);
+            perm.apply_batch_into(xseg, batch, u);
+            for i in 0..tr {
+                let tile = &oplan.tiles[i * tc + j];
+                replay_stage_batch(
+                    &crossbars[..],
+                    &oplan.passes[tile.right.clone()],
+                    batch,
+                    u,
+                    v,
+                    input,
+                    colbuf,
+                );
+                perm.apply_batch_into(v, batch, w);
+                replay_stage_batch(
+                    &crossbars[..],
+                    &oplan.passes[tile.left.clone()],
+                    batch,
+                    w,
+                    z,
+                    input,
+                    colbuf,
+                );
+                perm.apply_batch_into(z, batch, part);
+                let rh = d.min(op_rows - i * d);
+                let seg = &mut ys[i * d * batch..(i * d + rh) * batch];
+                for (yo, pv) in seg.iter_mut().zip(&part[..rh * batch]) {
+                    *yo += pv;
+                }
+            }
         }
     }
 
@@ -722,6 +946,106 @@ mod tests {
             );
             let got = chip.run_op(0, &x);
             assert_eq!(got, want, "{strategy:?} not bit-identical");
+        }
+    }
+
+    /// Interleave per-lane vectors into a stride-B buffer.
+    fn interleave(lanes: &[Vec<f32>]) -> Vec<f32> {
+        let batch = lanes.len();
+        let n = lanes[0].len();
+        let mut out = vec![0.0f32; n * batch];
+        for (l, x) in lanes.iter().enumerate() {
+            for (i, &v) in x.iter().enumerate() {
+                out[i * batch + l] = v;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn batched_replay_bit_identical_per_lane() {
+        // run_op_batch_into lane l == run_op_into over lane l's vector,
+        // bitwise, for rectangular grids under every strategy.
+        let (d, d_ff) = (64usize, 256usize);
+        let (cfg, ops) = ffn_ops(d, d_ff);
+        let mut rng = Pcg32::new(55);
+        let weights = vec![
+            rect_randn(d_ff, d, d, &mut rng),
+            rect_randn(d, d_ff, d, &mut rng),
+        ];
+        let mut params = CimParams::default();
+        params.array_dim = 32;
+        for strategy in Strategy::all() {
+            let mut chip =
+                FunctionalChip::program_rect(&cfg, &ops, &weights, &params, strategy);
+            for (oi, wgt) in weights.iter().enumerate() {
+                for batch in [2usize, 3, 8] {
+                    let lanes: Vec<Vec<f32>> = (0..batch)
+                        .map(|l| Pcg32::new(500 + (oi * 10 + l) as u64).normal_vec(wgt.cols))
+                        .collect();
+                    let ys = chip.run_op_batch(oi, batch, &interleave(&lanes));
+                    for (l, x) in lanes.iter().enumerate() {
+                        let want = chip.run_op(oi, x);
+                        for i in 0..wgt.rows {
+                            assert_eq!(
+                                ys[i * batch + l].to_bits(),
+                                want[i].to_bits(),
+                                "{strategy:?} op {oi} batch {batch} lane {l} row {i}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batched_replay_handles_shrinking_and_growing_widths() {
+        // ensure_batch keeps capacity; running B=8 then B=2 then B=8
+        // again must not leak stale lanes between calls.
+        let (cfg, ops) = single_op(64);
+        let mut params = CimParams::default();
+        params.array_dim = 32;
+        let mut rng = Pcg32::new(91);
+        let mon = MonarchMatrix::randn(cfg.monarch_b(), &mut rng);
+        let mut chip = FunctionalChip::program(
+            &cfg,
+            &ops,
+            std::slice::from_ref(&mon),
+            &params,
+            Strategy::DenseMap,
+        );
+        let lanes8: Vec<Vec<f32>> = (0..8).map(|_| rng.normal_vec(64)).collect();
+        let lanes2: Vec<Vec<f32>> = lanes8[..2].to_vec();
+        let first = chip.run_op_batch(0, 8, &interleave(&lanes8));
+        let two = chip.run_op_batch(0, 2, &interleave(&lanes2));
+        for (l, x) in lanes2.iter().enumerate() {
+            let want = chip.run_op(0, x);
+            for i in 0..64 {
+                assert_eq!(two[i * 2 + l], want[i], "lane {l} after shrink");
+            }
+        }
+        assert_eq!(first, chip.run_op_batch(0, 8, &interleave(&lanes8)));
+    }
+
+    #[test]
+    fn batch_of_one_equals_single_stream() {
+        // The B=1 fast path must be byte-for-byte the run_op_into path.
+        let (cfg, ops) = single_op(16);
+        let mut params = CimParams::default();
+        params.array_dim = 16;
+        let mut rng = Pcg32::new(13);
+        let mon = MonarchMatrix::randn(cfg.monarch_b(), &mut rng);
+        for strategy in [Strategy::SparseMap, Strategy::DenseMap] {
+            let mut chip = FunctionalChip::program(
+                &cfg,
+                &ops,
+                std::slice::from_ref(&mon),
+                &params,
+                strategy,
+            );
+            let x = rng.normal_vec(16);
+            assert_eq!(chip.run_op_batch(0, 1, &x), chip.run_op(0, &x));
         }
     }
 

@@ -9,5 +9,5 @@ pub mod decode;
 pub mod exec;
 pub mod trace;
 
-pub use decode::{DecodeEngine, DecodeModel, DecodeResult};
+pub use decode::{BatchDecodeEngine, DecodeEngine, DecodeModel, DecodeResult};
 pub use exec::FunctionalChip;

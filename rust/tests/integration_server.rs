@@ -1,14 +1,16 @@
-//! Integration: the batching inference server — concurrency, batching
-//! behaviour, output fidelity, error paths and clean shutdown.
+//! Integration: the batching inference server — concurrency, continuous
+//! batching behaviour, output fidelity, error paths and clean shutdown.
 //!
 //! The behavioural tests run on [`Backend::CimSim`] (the emulated
-//! crossbar decode engine), which needs no AOT artifacts and therefore
-//! runs everywhere; the PJRT-specific startup contract is covered at the
-//! end. PJRT kernel fidelity itself lives in `integration_runtime.rs`.
+//! crossbar decode engine behind the continuous-batching slot loop),
+//! which needs no AOT artifacts and therefore runs everywhere; the
+//! PJRT-specific startup contract is covered at the end. PJRT kernel
+//! fidelity itself lives in `integration_runtime.rs`.
 
 use monarch_cim::coordinator::batching::BatchPolicy;
 use monarch_cim::coordinator::{Backend, CimSimConfig, InferenceServer, ServerConfig};
 use monarch_cim::mapping::Strategy;
+use monarch_cim::sim::decode::{DecodeEngine, DecodeModel};
 use monarch_cim::util::rng::Pcg32;
 
 fn start_server() -> InferenceServer {
@@ -42,7 +44,10 @@ fn serves_concurrent_requests() {
 }
 
 #[test]
-fn batching_actually_groups() {
+fn continuous_batching_overlaps_requests() {
+    // 16 concurrent full-window requests through 8 slots: the slot loop
+    // must actually overlap sequences (mean per-step occupancy > 1)
+    // instead of serving them one after another.
     let server = InferenceServer::start(ServerConfig {
         backend: Backend::CimSim(CimSimConfig::default()),
         policy: BatchPolicy {
@@ -64,11 +69,61 @@ fn batching_actually_groups() {
     });
     let snap = server.metrics.snapshot();
     assert_eq!(snap.requests, 16);
+    assert_eq!(snap.slot_capacity, 8);
     assert!(
-        snap.mean_batch > 1.0,
-        "expected batching, got mean batch {}",
-        snap.mean_batch
+        snap.occupancy_mean > 1.0,
+        "expected overlapped sequences, got mean occupancy {}",
+        snap.occupancy_mean
     );
+    assert!(snap.occupancy_peak >= 2, "peak {}", snap.occupancy_peak);
+    assert!(snap.occupancy_peak <= 8, "peak exceeds capacity");
+    assert!(snap.sim_tokens_per_sec > 0.0);
+    server.shutdown();
+}
+
+#[test]
+fn concurrent_ragged_clients_match_reference_engine() {
+    // The ISSUE-3 serving contract: N threads submit windows of
+    // DIFFERENT lengths; continuous batching interleaves them at
+    // ragged positions, yet every client gets logits identical to a
+    // single-stream reference engine scoring its window alone (the
+    // DenseMap chip replay is bit-identical to the factored reference),
+    // and the occupancy metric is exercised.
+    let server = start_server();
+    let seq = server.seq;
+    let vocab = server.vocab;
+    // windows of mixed lengths, long enough that admissions overlap
+    let windows: Vec<Vec<i32>> = (0..12u64)
+        .map(|i| {
+            let mut rng = Pcg32::new(4000 + i);
+            let len = 8 + (i as usize * 7) % (seq - 8);
+            (0..len).map(|_| rng.below(vocab as u32) as i32).collect()
+        })
+        .collect();
+    // golden logits from one single-stream reference engine (same
+    // synthesis seed as CimSimConfig::default)
+    let mut golden = DecodeEngine::reference(DecodeModel::synth(
+        monarch_cim::model::ModelConfig::tiny(),
+        2025,
+    ));
+    let expected: Vec<Vec<f32>> = windows.iter().map(|w| golden.score(w).0).collect();
+    std::thread::scope(|scope| {
+        for (w, want) in windows.iter().zip(&expected) {
+            let srv = &server;
+            scope.spawn(move || {
+                let got = srv.infer(w.clone()).expect("inference");
+                assert_eq!(got.len(), w.len() * srv.vocab);
+                assert_eq!(&got, want, "ragged batchmates changed the logits");
+            });
+        }
+    });
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap.requests, 12);
+    assert_eq!(snap.errors, 0);
+    let tokens: usize = windows.iter().map(|w| w.len()).sum();
+    assert_eq!(snap.sim_tokens, tokens as u64);
+    assert!(snap.occupancy_mean >= 1.0, "occupancy not recorded");
+    assert!(snap.occupancy_peak >= 1);
     server.shutdown();
 }
 
@@ -131,19 +186,25 @@ fn batch_identity_independent_of_batchmates() {
 #[test]
 fn invalid_requests_get_errors_not_hangs() {
     let server = start_server();
-    // wrong length
-    let err = server.infer(vec![0i32; 3]).unwrap_err();
+    let seq = server.seq;
+    // empty window
+    let err = server.infer(Vec::new()).unwrap_err();
+    assert!(err.to_string().contains("invalid request"), "{err}");
+    // window longer than the context
+    let err = server.infer(vec![0i32; seq + 1]).unwrap_err();
     assert!(err.to_string().contains("invalid request"), "{err}");
     // out-of-vocab token
-    let seq = server.seq;
     let mut toks = vec![0i32; seq];
     toks[0] = 1_000_000;
     assert!(server.infer(toks).is_err());
+    // ragged-but-valid short window IS servable now
+    let short = server.infer(vec![1i32; 3]).expect("short window");
+    assert_eq!(short.len(), 3 * server.vocab);
     // server still healthy afterwards
     let ok = server.infer(vec![1i32; seq]);
     assert!(ok.is_ok());
     let snap = server.metrics.snapshot();
-    assert_eq!(snap.errors, 2);
+    assert_eq!(snap.errors, 3);
     server.shutdown();
 }
 

@@ -1,0 +1,206 @@
+//! Property tests for batched decode (`sim::decode::BatchDecodeEngine`):
+//! over random model geometries, mapping strategies, batch sizes 1..8
+//! and ragged prompt lengths — including mid-run slot eviction and
+//! admission (more requests than slots) — the batched engine is
+//! **bit-identical** to B independent single-stream [`DecodeEngine`]s.
+//!
+//! This is the ISSUE-3 acceptance property: a slot's logits (and hence
+//! its greedy tokens and per-position cost records) never depend on its
+//! batchmates, because every lane of `run_op_batch_into` replays exactly
+//! the f32 operations of the single-stream compiled plan.
+
+use monarch_cim::cim::CimParams;
+use monarch_cim::mapping::Strategy;
+use monarch_cim::model::ModelConfig;
+use monarch_cim::sim::decode::{BatchDecodeEngine, DecodeEngine, DecodeModel};
+use monarch_cim::util::prop::forall;
+
+/// Random decoder-only config with a perfect-square d_model and heads
+/// dividing it (the decode engine's contract).
+fn random_decoder_cfg(g: &mut monarch_cim::util::prop::Gen) -> ModelConfig {
+    let mut cfg = ModelConfig::tiny();
+    cfg.d_model = g.choose(&[16usize, 64]);
+    cfg.n_heads = g.choose(&[2usize, 4]);
+    cfg.d_ff = cfg.d_model * g.usize(1, 4);
+    cfg.dec_layers = g.usize(1, 2);
+    cfg.vocab = g.choose(&[64usize, 128]);
+    cfg.seq = 16;
+    cfg
+}
+
+#[test]
+fn prop_batched_generate_equals_independent_engines() {
+    forall("batched decode == B single-stream engines", 6, |g| {
+        let cfg = random_decoder_cfg(g);
+        let b = (cfg.d_model as f64).sqrt().round() as usize;
+        let mut params = CimParams::default();
+        params.array_dim = g.choose(&[16usize, 32]);
+        if b > params.array_dim {
+            return;
+        }
+        let seed = g.usize(0, 1 << 30) as u64;
+        let strategy = g.choose(&[Strategy::Linear, Strategy::SparseMap, Strategy::DenseMap]);
+        let capacity = g.usize(1, 8);
+        // more requests than slots exercises mid-run eviction+admission
+        let n_requests = capacity + g.usize(0, 3);
+        let n_tokens = g.usize(1, 4);
+        let prompts: Vec<Vec<i32>> = (0..n_requests)
+            .map(|r| {
+                let len = g.usize(1, 5); // ragged prompt lengths
+                (0..len)
+                    .map(|i| ((r * 31 + i * 7 + 3) % cfg.vocab) as i32)
+                    .collect()
+            })
+            .collect();
+        let mut batched = BatchDecodeEngine::on_chip(
+            DecodeModel::synth(cfg.clone(), seed),
+            params.clone(),
+            strategy,
+            capacity,
+        );
+        let results = batched.generate_batch(&prompts, n_tokens);
+        assert_eq!(results.len(), n_requests);
+        assert_eq!(batched.occupancy(), 0, "all slots evicted after the run");
+        // one single-stream engine, reset per request (reuse-hardened),
+        // must reproduce every stream token-for-token
+        let mut single = DecodeEngine::on_chip(
+            DecodeModel::synth(cfg.clone(), seed),
+            params.clone(),
+            strategy,
+        );
+        for (ri, (p, r)) in prompts.iter().zip(&results).enumerate() {
+            let want = single.generate(p, n_tokens);
+            assert_eq!(
+                r.tokens, want.tokens,
+                "{strategy:?} capacity {capacity} request {ri}: batched tokens \
+                 diverged from an independent engine"
+            );
+            assert_eq!(
+                r.per_token.len(),
+                want.per_token.len(),
+                "{strategy:?} request {ri}: per-position cost count"
+            );
+            // modeled costs are a pure function of (cfg, mapping, kv_len)
+            // so they must agree position by position too
+            for (i, (a, w)) in r.per_token.iter().zip(&want.per_token).enumerate() {
+                assert_eq!(
+                    a.latency.critical_ns(),
+                    w.latency.critical_ns(),
+                    "{strategy:?} request {ri} position {i}: cost drift"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_teacher_forced_logits_bit_identical() {
+    // Step-level check: ragged slots stepped together produce, at every
+    // position, logits bit-identical to single-stream forwards — even
+    // with a mid-run eviction + admission into the freed slot.
+    forall("teacher-forced batched logits == single-stream", 6, |g| {
+        let cfg = random_decoder_cfg(g);
+        let b = (cfg.d_model as f64).sqrt().round() as usize;
+        let mut params = CimParams::default();
+        params.array_dim = g.choose(&[16usize, 32]);
+        if b > params.array_dim {
+            return;
+        }
+        let seed = g.usize(0, 1 << 30) as u64;
+        let strategy = g.choose(&[Strategy::SparseMap, Strategy::DenseMap]);
+        let capacity = g.usize(2, 4);
+        let mut be = BatchDecodeEngine::on_chip(
+            DecodeModel::synth(cfg.clone(), seed),
+            params.clone(),
+            strategy,
+            capacity,
+        );
+        // admit `capacity` sequences of ragged lengths
+        let lens: Vec<usize> = (0..capacity).map(|_| g.usize(2, 6)).collect();
+        let seqs: Vec<Vec<i32>> = lens
+            .iter()
+            .enumerate()
+            .map(|(s, &len)| {
+                (0..len).map(|i| ((s * 17 + i * 5 + 1) % cfg.vocab) as i32).collect()
+            })
+            .collect();
+        let slots: Vec<usize> = (0..capacity).map(|_| be.try_admit().unwrap()).collect();
+        let mut singles: Vec<DecodeEngine> = (0..capacity)
+            .map(|_| {
+                DecodeEngine::on_chip(
+                    DecodeModel::synth(cfg.clone(), seed),
+                    params.clone(),
+                    strategy,
+                )
+            })
+            .collect();
+        let max_len = *lens.iter().max().unwrap();
+        let mut replacement: Option<(usize, Vec<i32>, DecodeEngine)> = None;
+        for t in 0..max_len {
+            // build this step's ragged input set (slots finish early)
+            let mut inputs = Vec::new();
+            for (i, seq) in seqs.iter().enumerate() {
+                if t < seq.len() {
+                    inputs.push((slots[i], seq[t]));
+                }
+            }
+            // once the shortest sequence finished, evict it and admit a
+            // fresh one mid-run into the freed slot
+            if let Some((rs, rseq, _)) = &replacement {
+                let pos = t - lens.iter().copied().min().unwrap();
+                if pos < rseq.len() {
+                    inputs.push((*rs, rseq[pos]));
+                }
+            } else if t == lens.iter().copied().min().unwrap() {
+                let victim = lens
+                    .iter()
+                    .enumerate()
+                    .min_by_key(|(_, &l)| l)
+                    .map(|(i, _)| i)
+                    .unwrap();
+                be.release(slots[victim]);
+                let fresh_slot = be.try_admit().unwrap();
+                assert_eq!(fresh_slot, slots[victim], "freed slot is reused");
+                let rseq: Vec<i32> =
+                    (0..3).map(|i| ((i * 11 + 2) % cfg.vocab) as i32).collect();
+                let fresh_engine = DecodeEngine::on_chip(
+                    DecodeModel::synth(cfg.clone(), seed),
+                    params.clone(),
+                    strategy,
+                );
+                inputs.push((fresh_slot, rseq[0]));
+                replacement = Some((fresh_slot, rseq, fresh_engine));
+            }
+            if inputs.is_empty() {
+                break;
+            }
+            be.step(&inputs);
+            // verify every stepped lane against its single-stream twin
+            for (i, seq) in seqs.iter().enumerate() {
+                if t < seq.len() && replacement.as_ref().map(|(rs, _, _)| *rs) != Some(slots[i])
+                {
+                    let want = singles[i].forward(seq[t]).to_vec();
+                    assert_eq!(
+                        be.logits(slots[i]),
+                        want.as_slice(),
+                        "{strategy:?} slot {i} pos {t}"
+                    );
+                }
+            }
+            if let Some((rs, rseq, eng)) = &mut replacement {
+                let min_len = lens.iter().copied().min().unwrap();
+                if t >= min_len {
+                    let pos = t - min_len;
+                    if pos < rseq.len() {
+                        let want = eng.forward(rseq[pos]).to_vec();
+                        assert_eq!(
+                            be.logits(*rs),
+                            want.as_slice(),
+                            "{strategy:?} replacement pos {pos}"
+                        );
+                    }
+                }
+            }
+        }
+    });
+}
