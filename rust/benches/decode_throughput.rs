@@ -7,14 +7,17 @@
 //! Reports host-wall-clock **tokens/sec** per strategy (the number the
 //! compiled-plan replay optimizes), plus a batched sweep (B ∈ {1,2,4,8}
 //! concurrent streams through one DenseMap chip via
-//! `BatchDecodeEngine::generate_batch` — the serving amortization), and
-//! writes a machine-readable `BENCH_decode.json` so the perf trajectory
-//! is trackable per commit.
+//! `BatchDecodeEngine::generate_batch` — the serving amortization) and a
+//! **chunked-prefill sweep** (prompt lengths × chunk sizes through
+//! `BatchDecodeEngine::step_chunks`, lanes = positions — the
+//! time-to-first-token amortization), and writes machine-readable
+//! `BENCH_decode.json` / `BENCH_prefill.json` so the perf trajectory is
+//! trackable per commit.
 //!
 //! ```text
-//! cargo bench --bench decode_throughput                      # writes BENCH_decode.json
-//! cargo bench --bench decode_throughput -- --bench-json out.json
-//! BENCH_JSON=out.json cargo bench --bench decode_throughput  # env override
+//! cargo bench --bench decode_throughput                      # writes BENCH_decode.json + BENCH_prefill.json
+//! cargo bench --bench decode_throughput -- --bench-json out.json --prefill-json pre.json
+//! BENCH_JSON=out.json BENCH_PREFILL_JSON=pre.json ...        # env override
 //! BENCH_QUICK=1 ...                                          # CI smoke mode
 //! ```
 
@@ -28,23 +31,35 @@ use monarch_cim::util::json::{num, obj, s, Json};
 const PROMPT: [i32; 4] = [11, 48, 85, 122];
 const TOKENS: usize = 16;
 
-/// Output path for the JSON artifact: `--bench-json <path>` (or
-/// `--bench-json=<path>`) > `BENCH_JSON` env var > `BENCH_decode.json`.
-fn bench_json_path() -> std::path::PathBuf {
+/// Output path resolution: `--<flag> <path>` (or `--<flag>=<path>`) >
+/// `<env>` env var > `<default>`.
+fn artifact_path(flag: &str, env: &str, default: &str) -> std::path::PathBuf {
+    let long = format!("--{flag}");
+    let long_eq = format!("--{flag}=");
     let mut args = std::env::args().skip(1);
     while let Some(a) = args.next() {
-        if a == "--bench-json" {
+        if a == long {
             if let Some(p) = args.next() {
                 return p.into();
             }
-        } else if let Some(p) = a.strip_prefix("--bench-json=") {
+        } else if let Some(p) = a.strip_prefix(&long_eq) {
             return p.into();
         }
     }
-    if let Some(p) = std::env::var_os("BENCH_JSON") {
+    if let Some(p) = std::env::var_os(env) {
         return p.into();
     }
-    "BENCH_decode.json".into()
+    default.into()
+}
+
+/// Output path for the decode JSON artifact.
+fn bench_json_path() -> std::path::PathBuf {
+    artifact_path("bench-json", "BENCH_JSON", "BENCH_decode.json")
+}
+
+/// Output path for the prefill-sweep JSON artifact.
+fn prefill_json_path() -> std::path::PathBuf {
+    artifact_path("prefill-json", "BENCH_PREFILL_JSON", "BENCH_prefill.json")
 }
 
 fn main() {
@@ -157,6 +172,102 @@ fn main() {
                 ("speedup_vs_b1", num(tps / b1_tps.max(1e-12))),
             ]),
         ));
+    }
+
+    section("chunked prefill sweep — C positions per replay, one DenseMap chip");
+    // Prompt ingestion at chunk C walks the compiled pass tables S/C
+    // times instead of S (lanes = positions); the sweep measures the
+    // host-wall prefill tokens/sec and the speedup over token-by-token.
+    let mut prefill_records: Vec<(String, Json)> = Vec::new();
+    let mut eng = BatchDecodeEngine::on_chip(
+        DecodeModel::synth(cfg.clone(), 2025),
+        params.clone(),
+        Strategy::DenseMap,
+        1,
+    );
+    let passes_per_position = eng
+        .mapping()
+        .map(|mm| monarch_cim::scheduler::compile_plan(mm).total_passes())
+        .unwrap_or(0);
+    for &plen in &[8usize, 16, 32] {
+        let prompt: Vec<i32> =
+            (0..plen).map(|i| ((i * 37 + 11) % cfg.vocab) as i32).collect();
+        let mut chunk1_tps = 0.0f64;
+        for &chunk in &[1usize, 2, 4, 8, 16] {
+            if chunk > plen {
+                continue;
+            }
+            // modeled pipelined chunk latency (trace::prefill_chunk_cost):
+            // row drives shared across the chunk's position lanes
+            let (modeled_chunk_ns, modeled_serial_ns) = eng
+                .mapping()
+                .map(|mm| {
+                    let pc = monarch_cim::sim::trace::prefill_chunk_cost(
+                        &cfg, mm, &params, 0, chunk,
+                    );
+                    let serial: f64 = pc
+                        .per_position
+                        .iter()
+                        .map(|c| c.latency.critical_ns())
+                        .sum();
+                    (pc.chunk_ns, serial)
+                })
+                .unwrap_or((0.0, 0.0));
+            let meas = b
+                .bench(&format!("prefill len={plen} chunk={chunk}"), || {
+                    let slot = eng.try_admit().expect("slot free");
+                    let mut fed = 0usize;
+                    while fed < plen {
+                        let c = chunk.min(plen - fed);
+                        eng.step_chunks(&[(slot, &prompt[fed..fed + c])]);
+                        fed += c;
+                    }
+                    eng.release(slot);
+                })
+                .clone();
+            let tps = plen as f64 / (meas.mean_ns * 1e-9);
+            if chunk == 1 {
+                chunk1_tps = tps;
+            }
+            let speedup = tps / chunk1_tps.max(1e-12);
+            println!(
+                "  -> len={plen} chunk={chunk}: {:.0} prefill tokens/s wall, {:.2}x vs chunk=1",
+                tps, speedup,
+            );
+            prefill_records.push((
+                format!("len_{plen}_chunk_{chunk}"),
+                obj(vec![
+                    ("prompt_len", num(plen as f64)),
+                    ("chunk", num(chunk as f64)),
+                    ("tokens_per_sec", num(tps)),
+                    ("ns_per_token", num(meas.mean_ns / plen as f64)),
+                    ("speedup_vs_chunk1", num(speedup)),
+                    ("modeled_chunk_ns", num(modeled_chunk_ns)),
+                    (
+                        "modeled_speedup",
+                        num(modeled_serial_ns / modeled_chunk_ns.max(1e-12)),
+                    ),
+                ]),
+            ));
+        }
+    }
+    let prefill_path = prefill_json_path();
+    let prefill_doc = obj(vec![
+        ("bench", s("prefill_throughput")),
+        ("model", s(cfg.name)),
+        ("strategy", s("dense")),
+        ("analog_passes_per_position", num(passes_per_position as f64)),
+        (
+            "sweep",
+            obj(prefill_records
+                .iter()
+                .map(|(k, v)| (k.as_str(), v.clone()))
+                .collect()),
+        ),
+    ]);
+    match std::fs::write(&prefill_path, format!("{prefill_doc}\n")) {
+        Ok(()) => println!("wrote {}", prefill_path.display()),
+        Err(e) => eprintln!("failed to write {}: {e}", prefill_path.display()),
     }
 
     section("chip programming cost (map + compile plan + write)");

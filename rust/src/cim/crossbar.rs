@@ -116,10 +116,14 @@ impl Crossbar {
     ///
     /// Once the weights are resident this is how serving amortizes the
     /// pass: the same driven-rows/conversion-cols schedule converts a
-    /// column-*block* of activations instead of one vector. Per lane the
-    /// accumulation order is identical to [`Crossbar::mvm_pass_cols`]
-    /// (rows in `active_rows` order, zero inputs skipped), so every lane
-    /// is bit-identical to a B=1 pass over that lane's vector.
+    /// column-*block* of activations instead of one vector. Lanes can be
+    /// concurrent *sequences* (batched decode, `B` slots) or concurrent
+    /// *positions* of one prompt (chunked prefill, `sim::prefill` —
+    /// prefill positions are mutually independent through every Para
+    /// matmul). Per lane the accumulation order is identical to
+    /// [`Crossbar::mvm_pass_cols`] (rows in `active_rows` order, zero
+    /// inputs skipped), so every lane is bit-identical to a B=1 pass
+    /// over that lane's vector.
     pub fn mvm_batch_cols(
         &self,
         input: &[f32],
@@ -295,6 +299,41 @@ mod tests {
                     x
                 })
                 .collect();
+            let mut xi = vec![0.0f32; 16 * batch];
+            for (l, x) in lanes.iter().enumerate() {
+                for (r, &v) in x.iter().enumerate() {
+                    xi[r * batch + l] = v;
+                }
+            }
+            let mut out = vec![f32::NAN; cols.len() * batch];
+            xb.mvm_batch_cols(&xi, batch, &active, &cols, &mut out);
+            for (l, x) in lanes.iter().enumerate() {
+                let mut want = vec![0.0f32; cols.len()];
+                xb.mvm_pass_cols(x, &active, &cols, &mut want);
+                for k in 0..cols.len() {
+                    assert_eq!(
+                        out[k * batch + l].to_bits(),
+                        want[k].to_bits(),
+                        "batch {batch} lane {l} col {k}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mvm_batch_cols_handles_prefill_width_lane_counts() {
+        // Chunked prefill drives lane counts well past the decode slot
+        // pool (lanes = prompt positions, e.g. 16 or 33 per pass); the
+        // per-lane bit-identity contract must hold at those widths too.
+        let mut rng = Pcg32::new(6);
+        let w = Matrix::randn(16, 16, &mut rng);
+        let mut xb = Crossbar::new(16);
+        xb.program_block(0, 0, &w);
+        let active: Vec<usize> = vec![0, 2, 5, 9, 14];
+        let cols: Vec<usize> = vec![1, 6, 13];
+        for batch in [16usize, 33] {
+            let lanes: Vec<Vec<f32>> = (0..batch).map(|_| rng.normal_vec(16)).collect();
             let mut xi = vec![0.0f32; 16 * batch];
             for (l, x) in lanes.iter().enumerate() {
                 for (r, &v) in x.iter().enumerate() {

@@ -49,6 +49,18 @@ pub fn pick_bucket(available: &[usize], n: usize) -> Option<usize> {
     available.iter().copied().filter(|&b| b >= n).min()
 }
 
+/// Lane budget of one chunked continuous-batching step (CIM-sim
+/// backend): the batched replay carries at most this many position
+/// lanes per step. Every in-flight request must keep a lane even at
+/// full occupancy (`capacity` decode lanes are never starved by a
+/// neighbour's prefill), and when slots are idle a prefilling request
+/// may widen up to its configured `chunk` — so the budget is the larger
+/// of the two, and prefill parallelism is automatically traded away
+/// exactly when the chip is busy serving decode lanes.
+pub fn prefill_lane_budget(capacity: usize, chunk: usize) -> usize {
+    capacity.max(chunk).max(1)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -97,5 +109,14 @@ mod tests {
         assert_eq!(pick_bucket(&[1, 4, 8], 3), Some(4));
         assert_eq!(pick_bucket(&[1, 4, 8], 8), Some(8));
         assert_eq!(pick_bucket(&[1, 4, 8], 9), None);
+    }
+
+    #[test]
+    fn prefill_budget_never_starves_decode_lanes() {
+        // at least one lane per slot, regardless of chunk configuration
+        assert_eq!(prefill_lane_budget(8, 4), 8);
+        // a wide chunk can use idle capacity
+        assert_eq!(prefill_lane_budget(2, 16), 16);
+        assert_eq!(prefill_lane_budget(0, 0), 1);
     }
 }

@@ -25,6 +25,17 @@ struct Inner {
     occ_peak: usize,
     /// Slot capacity of the batched engine (latest reported).
     occ_capacity: usize,
+    /// Time-to-first-token per request (µs): submission until the first
+    /// position's logits exist — the prefill phase, what chunked prompt
+    /// ingestion optimizes.
+    ttft_us: Histogram,
+    /// Inter-token latency per request (µs): mean wall time per position
+    /// *after* the first chunk — the steady decode cadence.
+    inter_token_us: Histogram,
+    /// Chunked prefill: replays that carried more than one position.
+    prefill_chunks: u64,
+    /// Positions ingested through those multi-position replays.
+    prefill_positions: u64,
 }
 
 /// Thread-safe metrics sink.
@@ -65,6 +76,17 @@ pub struct Snapshot {
     pub occupancy_peak: usize,
     /// Continuous batching: slot capacity of the batched engine.
     pub slot_capacity: usize,
+    /// Time-to-first-token percentiles (µs; 0.0 until a request with
+    /// recorded phase timing completes).
+    pub ttft_p50_us: f64,
+    pub ttft_p99_us: f64,
+    /// Inter-token (post-first-chunk) latency percentiles (µs).
+    pub inter_token_p50_us: f64,
+    pub inter_token_p99_us: f64,
+    /// Chunked prefill: multi-position replays executed, and the
+    /// positions they carried (mean chunk = positions / chunks).
+    pub prefill_chunks: u64,
+    pub prefill_positions: u64,
 }
 
 impl Metrics {
@@ -115,6 +137,31 @@ impl Metrics {
         g.sim_tokens += tokens as u64;
         g.sim_latency_ns += latency_ns;
         g.sim_energy_nj += energy_nj;
+    }
+
+    /// Record one request's phase split: `ttft_us` is submission →
+    /// first logits (queue wait + prefill — the latency chunked prefill
+    /// attacks); `inter_token_us`, when the request spanned more than
+    /// its first chunk, is the mean wall time per subsequent position
+    /// (the decode cadence). Keeping the two apart is what makes a
+    /// serving report honest: a chunked server can cut TTFT by an order
+    /// of magnitude while the inter-token cadence is unchanged, and a
+    /// single blended latency number would show neither.
+    pub fn record_request_timing(&self, ttft_us: f64, inter_token_us: Option<f64>) {
+        let mut g = self.inner.lock().unwrap();
+        g.ttft_us.record(ttft_us);
+        if let Some(us) = inter_token_us {
+            g.inter_token_us.record(us);
+        }
+    }
+
+    /// Account one multi-position prefill replay of `positions` prompt
+    /// positions (single-position steps are ordinary decode lanes and
+    /// are not counted here).
+    pub fn record_prefill_chunk(&self, positions: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.prefill_chunks += 1;
+        g.prefill_positions += positions as u64;
     }
 
     /// Sample the continuous-batching occupancy after one token step:
@@ -169,6 +216,20 @@ impl Metrics {
             },
             occupancy_peak: g.occ_peak,
             slot_capacity: g.occ_capacity,
+            ttft_p50_us: if g.ttft_us.is_empty() { 0.0 } else { g.ttft_us.p50() },
+            ttft_p99_us: if g.ttft_us.is_empty() { 0.0 } else { g.ttft_us.p99() },
+            inter_token_p50_us: if g.inter_token_us.is_empty() {
+                0.0
+            } else {
+                g.inter_token_us.p50()
+            },
+            inter_token_p99_us: if g.inter_token_us.is_empty() {
+                0.0
+            } else {
+                g.inter_token_us.p99()
+            },
+            prefill_chunks: g.prefill_chunks,
+            prefill_positions: g.prefill_positions,
         }
     }
 }
@@ -229,6 +290,26 @@ mod tests {
         assert!((s.occupancy_mean - 3.0).abs() < 1e-9);
         assert_eq!(s.occupancy_peak, 5);
         assert_eq!(s.slot_capacity, 8);
+    }
+
+    #[test]
+    fn request_phase_split_and_prefill_accounting() {
+        let m = Metrics::new();
+        let s = m.snapshot();
+        assert_eq!(s.ttft_p50_us, 0.0);
+        assert_eq!(s.inter_token_p50_us, 0.0);
+        assert_eq!(s.prefill_chunks, 0);
+        // a fast-prefill request and a slow one; one had no decode phase
+        m.record_request_timing(120.0, Some(40.0));
+        m.record_request_timing(9_000.0, None);
+        m.record_prefill_chunk(8);
+        m.record_prefill_chunk(4);
+        let s = m.snapshot();
+        assert!(s.ttft_p50_us >= 120.0 && s.ttft_p50_us <= 9_000.0);
+        assert!(s.ttft_p99_us >= 8_000.0, "tail hidden: {}", s.ttft_p99_us);
+        assert!(s.inter_token_p50_us >= 40.0);
+        assert_eq!(s.prefill_chunks, 2);
+        assert_eq!(s.prefill_positions, 12);
     }
 
     #[test]

@@ -11,16 +11,20 @@
 //!   batch bucket. Requires `make artifacts` and a PJRT-enabled build.
 //! * [`Backend::CimSim`] — the emulated-crossbar batched decode engine
 //!   (`sim::decode::BatchDecodeEngine`) behind a **continuous batching**
-//!   loop: `policy.max_batch` sequence slots share one programmed chip,
-//!   requests (ragged windows of 1..=seq tokens) are admitted into free
-//!   slots *between token steps*, every step advances all in-flight
-//!   sequences by one position through a single batched plan replay, and
-//!   finished slots are evicted and refilled without stalling their
-//!   neighbours. Per-lane bit-identicality of the batched replay means
-//!   a request's logits never depend on who it shared the chip with.
-//!   Needs no artifacts — this is the self-contained serving path of
-//!   the offline image. [`Metrics`] additionally reports per-step slot
-//!   occupancy and wall-clock tokens/sec.
+//!   loop with **chunked prefill**: `policy.max_batch` sequence slots
+//!   share one programmed chip, requests (ragged windows of 1..=seq
+//!   tokens) are admitted into free slots *between steps*, every step
+//!   advances all in-flight windows through a single batched plan
+//!   replay — a freshly admitted request ingesting up to
+//!   `prefill_chunk` prompt positions per replay (lanes = positions,
+//!   `sim::prefill`) while neighbours keep their lanes — and finished
+//!   slots are evicted and refilled without stalling anyone. Per-lane
+//!   bit-identicality of the batched replay means a request's logits
+//!   never depend on who it shared the chip with, or on how its prompt
+//!   was chunked. Needs no artifacts — this is the self-contained
+//!   serving path of the offline image. [`Metrics`] additionally
+//!   reports per-step slot occupancy, wall-clock tokens/sec, and the
+//!   per-request time-to-first-token / inter-token latency split.
 
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::Arc;
@@ -36,6 +40,7 @@ use crate::mapping::Strategy;
 use crate::model::ModelConfig;
 use crate::runtime::{literal_i32, Runtime};
 use crate::sim::decode::{BatchDecodeEngine, DecodeModel};
+use crate::sim::prefill::allocate_chunks;
 use crate::sim::trace::sum_costs;
 use crate::util::json::Json;
 
@@ -58,6 +63,13 @@ pub struct CimSimConfig {
     pub cim: CimParams,
     /// Weight-synthesis seed (deterministic across servers).
     pub seed: u64,
+    /// Chunked-prefill width: how many prompt positions one admitted
+    /// request may ingest per batched replay (`sim::prefill`). `0`
+    /// (default) derives the chunk from the batch lane budget — the slot
+    /// capacity — so an idle chip prefills as wide as a full decode
+    /// step. Whatever the setting, in-flight neighbours always keep
+    /// their decode lane (`batching::prefill_lane_budget`).
+    pub prefill_chunk: usize,
 }
 
 impl Default for CimSimConfig {
@@ -67,6 +79,7 @@ impl Default for CimSimConfig {
             strategy: Strategy::DenseMap,
             cim: CimParams::default(),
             seed: 2025,
+            prefill_chunk: 0,
         }
     }
 }
@@ -247,13 +260,19 @@ fn run_pjrt_worker(
 
 /// One in-flight CIM-sim request: the token window being scored, how
 /// many positions have been fed, the per-position logits accumulated so
-/// far, and the reply channel.
+/// far, the reply channel, and the phase-timing marks the TTFT /
+/// inter-token latency split is computed from.
 struct InFlight {
     tokens: Vec<i32>,
     fed: usize,
     out: Vec<f32>,
     resp: Sender<Result<Vec<f32>>>,
     t0: Instant,
+    /// Wall time (µs since submission) at which the request's first
+    /// logits existed — set after its first stepped chunk.
+    ttft_us: Option<f64>,
+    /// Positions covered by that first chunk (the TTFT phase).
+    first_chunk: usize,
 }
 
 /// Worker loop for the CIM-sim backend: a continuous-batching scheduler
@@ -263,16 +282,27 @@ struct InFlight {
 /// Each iteration: (1) **admit** — free slots are filled from the
 /// request queue (blocking only when the chip is idle, so admission
 /// never stalls in-flight sequences); (2) **step** — every occupied
-/// slot advances one position through a single batched plan replay;
-/// (3) **evict** — slots whose window is fully scored reply with their
-/// per-position logits and free the slot for the next waiting request.
-/// The worker drains naturally on shutdown: queued requests are still
-/// admitted after the channel closes, and in-flight ones run to
-/// completion.
+/// slot advances through a single batched plan replay, by a *chunk* of
+/// up to `prefill_chunk` positions of its window
+/// (`BatchDecodeEngine::step_chunks`, lanes = positions): a freshly
+/// admitted prompt ingests position-parallel while its neighbours keep
+/// stepping, with per-step lanes bounded by
+/// `batching::prefill_lane_budget` + `sim::prefill::allocate_chunks`
+/// so no in-flight request is ever starved of its lane; (3) **evict**
+/// — slots whose window is fully scored reply with their per-position
+/// logits and free the slot for the next waiting request. The worker
+/// drains naturally on shutdown: queued requests are still admitted
+/// after the channel closes, and in-flight ones run to completion.
+///
+/// [`Metrics`] records, besides occupancy and modeled chip cost, the
+/// per-request **TTFT / inter-token split** (`record_request_timing`)
+/// and the prefill chunk counters — the honest view of what chunked
+/// ingestion buys (time-to-first-token) and what it leaves unchanged
+/// (the decode cadence).
 ///
 /// Because the engine is constructed once and reused, its compiled
-/// execution plan, chip pass scratch and per-slot activation buffers
-/// are shared across every request this worker ever serves — the
+/// execution plan, chip pass scratch and the shared chunk workspace
+/// are reused across every request this worker ever serves — the
 /// steady-state serving path performs no per-pass allocation.
 fn run_cimsim_worker(
     cfg: CimSimConfig,
@@ -286,9 +316,13 @@ fn run_cimsim_worker(
         strategy,
         cim,
         seed,
+        prefill_chunk,
     } = cfg;
     let (seq, vocab) = (model_cfg.seq, model_cfg.vocab);
     let slots = policy.max_batch.max(1);
+    // chunk 0 = auto: prefill as wide as the batch lane budget allows
+    let chunk = if prefill_chunk == 0 { slots } else { prefill_chunk }.max(1);
+    let lane_budget = super::batching::prefill_lane_budget(slots, chunk);
     let setup = (move || -> Result<BatchDecodeEngine> {
         if model_cfg.enc_layers != 0 || model_cfg.dec_layers == 0 {
             bail!(
@@ -320,7 +354,9 @@ fn run_cimsim_worker(
     let capacity = engine.capacity();
     let mut active: Vec<Option<InFlight>> = (0..capacity).map(|_| None).collect();
     let mut open = true; // request channel still connected
-    let mut inputs: Vec<(usize, i32)> = Vec::with_capacity(capacity);
+    // per-step (slot, chunk length) plan + chunk wants, reused buffers
+    let mut step_plan: Vec<(usize, usize)> = Vec::with_capacity(capacity);
+    let mut wants: Vec<usize> = Vec::with_capacity(capacity);
     loop {
         // --- admit: fill free slots between token steps ---
         while open && engine.occupancy() < capacity {
@@ -358,6 +394,8 @@ fn run_cimsim_worker(
                 out: Vec::with_capacity(window * vocab),
                 resp: req.resp,
                 t0: req.t0, // submission time, so queue wait is counted
+                ttft_us: None,
+                first_chunk: 0,
             });
         }
         if engine.occupancy() == 0 {
@@ -366,21 +404,53 @@ fn run_cimsim_worker(
             }
             break; // drained and disconnected
         }
-        // --- step: advance every in-flight sequence by one position ---
-        inputs.clear();
+        // --- step: advance every in-flight window by one chunk ---
+        // Every occupied slot wants up to `chunk` of its remaining
+        // positions; the allocator floors each at one lane (no
+        // starvation) and bounds the step's total lane count.
+        step_plan.clear();
+        wants.clear();
         for (slot, a) in active.iter().enumerate() {
             if let Some(a) = a {
-                inputs.push((slot, a.tokens[a.fed]));
+                step_plan.push((slot, 0));
+                wants.push((a.tokens.len() - a.fed).min(chunk));
             }
         }
-        engine.step(&inputs);
-        metrics.record_occupancy(inputs.len(), capacity);
+        let alloc = allocate_chunks(&wants, lane_budget);
+        for (p, &c) in step_plan.iter_mut().zip(&alloc) {
+            p.1 = c;
+        }
+        {
+            let groups: Vec<(usize, &[i32])> = step_plan
+                .iter()
+                .map(|&(slot, c)| {
+                    let a = active[slot].as_ref().expect("planned slot is active");
+                    (slot, &a.tokens[a.fed..a.fed + c])
+                })
+                .collect();
+            engine.step_chunks(&groups);
+        }
+        metrics.record_occupancy(step_plan.len(), capacity);
         // --- evict: finished windows reply and free their slot ---
         let mut finished: Vec<InFlight> = Vec::new();
-        for &(slot, _) in &inputs {
+        let mut lane = 0usize;
+        for &(slot, c) in &step_plan {
             let a = active[slot].as_mut().expect("stepped slot is active");
-            a.out.extend_from_slice(engine.logits(slot));
-            a.fed += 1;
+            // stream this chunk's per-position logits (flattened lane
+            // order matches the step_plan group order)
+            for i in 0..c {
+                a.out.extend_from_slice(engine.lane_logits(lane + i));
+            }
+            lane += c;
+            if a.fed == 0 {
+                // first logits of this request now exist: TTFT
+                a.ttft_us = Some(a.t0.elapsed().as_micros() as f64);
+                a.first_chunk = c;
+            }
+            if c > 1 {
+                metrics.record_prefill_chunk(c);
+            }
+            a.fed += c;
             if a.fed == a.tokens.len() {
                 let costs = engine.take_trace(slot);
                 let total = sum_costs(&costs);
@@ -389,6 +459,15 @@ fn run_cimsim_worker(
                     total.latency.critical_ns(),
                     total.energy.total_nj(),
                 );
+                let total_us = a.t0.elapsed().as_micros() as f64;
+                let ttft = a.ttft_us.unwrap_or(total_us);
+                let tail = a.tokens.len().saturating_sub(a.first_chunk);
+                let inter = if tail > 0 {
+                    Some((total_us - ttft).max(0.0) / tail as f64)
+                } else {
+                    None
+                };
+                metrics.record_request_timing(ttft, inter);
                 engine.release(slot);
                 finished.push(active[slot].take().expect("finished slot"));
             }

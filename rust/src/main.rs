@@ -34,10 +34,12 @@ fn usage() -> ! {
            map      [--model bert|bart|gpt2] [--strategy linear|sparse|dense]\n\
            simulate [--model ...] [--strategy ...] [--adcs N]\n\
            decode   [--model tiny] [--strategy all|linear|sparse|dense]\n\
-                    [--tokens 32] [--prompt 4] [--seed 2025] [--adcs N]\n\
+                    [--tokens N] [--prompt 4] [--seed 2025] [--adcs N]\n\
                     [--batch N]  (N>1: N concurrent streams, one chip)\n\
+                    [--prefill-chunk C]  (chunked prompt ingestion, C\n\
+                    positions per replay, cross-checked vs token-by-token)\n\
            serve    [--requests 64] [--artifacts DIR] [--backend pjrt|cim-sim]\n\
-                    [--strategy dense]\n\
+                    [--strategy dense] [--prefill-chunk C]\n\
            dse      [--model ...] [--adcs 1,4,8,16,32] [--budget N]\n\
            e2e      [--artifacts DIR]"
     );
@@ -207,9 +209,29 @@ fn cmd_simulate(args: &Args) {
 fn cmd_decode(args: &Args) {
     use monarch_cim::sim::decode::{BatchDecodeEngine, DecodeEngine, DecodeModel};
     let cfg = model_of_decoder(args);
-    let n_tokens = args.usize_or("tokens", 32);
     let prompt_len = args.usize_or("prompt", 4).max(1);
+    if prompt_len >= cfg.seq {
+        eprintln!(
+            "error: --prompt {prompt_len} leaves no room to generate within the \
+             context window (seq={})",
+            cfg.seq
+        );
+        std::process::exit(2);
+    }
+    // default generation length fills the window; an explicit request
+    // beyond it is rejected at admission (no silent position clamping)
+    let n_tokens = args.usize_or("tokens", 32.min(cfg.seq - prompt_len));
+    if prompt_len + n_tokens > cfg.seq {
+        eprintln!(
+            "error: prompt {prompt_len} + {n_tokens} generated tokens exceed the \
+             context window (seq={}); pass --tokens <= {}",
+            cfg.seq,
+            cfg.seq - prompt_len
+        );
+        std::process::exit(2);
+    }
     let batch = args.usize_or("batch", 1).max(1);
+    let prefill_chunk = args.usize_or("prefill-chunk", 1).max(1);
     let seed = args.usize_or("seed", 2025) as u64;
     let mut cim = CimParams::default();
     if args.has("adcs") {
@@ -230,15 +252,6 @@ fn cmd_decode(args: &Args) {
         "autoregressive decode: {} ({} layers, d={}, vocab={}), prompt {:?}, {} tokens",
         cfg.name, cfg.dec_layers, cfg.d_model, cfg.vocab, prompt, n_tokens
     );
-    if prompt_len + n_tokens > cfg.seq {
-        println!(
-            "note: {} positions exceed the model's context window (seq={}); \
-             positional embeddings clamp at position {} beyond it",
-            prompt_len + n_tokens,
-            cfg.seq,
-            cfg.seq - 1
-        );
-    }
     let mut reference = DecodeEngine::reference(DecodeModel::synth(cfg.clone(), seed));
     let golden = reference.generate(&prompt, n_tokens);
     println!("reference (factored Monarch matvec): {:?}", golden.tokens);
@@ -351,6 +364,64 @@ fn cmd_decode(args: &Args) {
             }
         }
     }
+
+    if prefill_chunk > 1 {
+        // Chunked prefill cross-check mode: ingest the prompt C
+        // positions per replay (sim::prefill), then verify the chunked
+        // run against the token-by-token reference engine — tokens must
+        // be identical for every strategy and chunk size.
+        println!(
+            "\nchunked prefill ({prefill_chunk} positions per replay, {batch} stream{}):",
+            if batch == 1 { "" } else { "s" }
+        );
+        let prompts: Vec<Vec<i32>> = (0..batch)
+            .map(|s| {
+                (0..prompt_len)
+                    .map(|i| ((i * 37 + 11 + s * 101) % cfg.vocab) as i32)
+                    .collect()
+            })
+            .collect();
+        for &strategy in &strategies {
+            let mut be = BatchDecodeEngine::on_chip(
+                DecodeModel::synth(cfg.clone(), seed),
+                cim.clone(),
+                strategy,
+                batch,
+            );
+            let t0 = std::time::Instant::now();
+            let chunked = be.generate_batch_chunked(&prompts, n_tokens, prefill_chunk);
+            let wall = t0.elapsed();
+            let t1 = std::time::Instant::now();
+            let token_by_token = be.generate_batch_chunked(&prompts, n_tokens, 1);
+            let wall1 = t1.elapsed();
+            // cross-check: the token-by-token single-stream engine is
+            // the reference chunking must reproduce bit for bit
+            let mut single = DecodeEngine::on_chip(
+                DecodeModel::synth(cfg.clone(), seed),
+                cim.clone(),
+                strategy,
+            );
+            let mut identical = true;
+            for (p, r) in prompts.iter().zip(&chunked) {
+                if single.generate(p, n_tokens).tokens != r.tokens {
+                    identical = false;
+                }
+            }
+            for (a, b) in chunked.iter().zip(&token_by_token) {
+                if a.tokens != b.tokens {
+                    identical = false;
+                }
+            }
+            println!(
+                "  {:<7} chunk={prefill_chunk}: {:.2?} wall vs chunk=1: {:.2?} ({:.2}x) | vs reference: {}",
+                strategy.name(),
+                wall,
+                wall1,
+                wall1.as_secs_f64() / wall.as_secs_f64().max(1e-12),
+                if identical { "IDENTICAL" } else { "MISMATCH" },
+            );
+        }
+    }
 }
 
 fn model_of_decoder(args: &Args) -> ModelConfig {
@@ -382,6 +453,11 @@ fn cmd_serve(args: &Args) {
                 std::process::exit(2);
             });
             cfg = ServerConfig::cim_sim(strategy);
+            // chunked prompt ingestion width (0 = auto from the batch
+            // lane budget — the slot capacity)
+            if let monarch_cim::coordinator::Backend::CimSim(sim) = &mut cfg.backend {
+                sim.prefill_chunk = args.usize_or("prefill-chunk", 0);
+            }
         }
         other => {
             eprintln!("unknown backend '{other}' (pjrt|cim-sim)");
@@ -428,6 +504,18 @@ fn cmd_serve(args: &Args) {
             "continuous batching: {:.1} tokens/s wall, occupancy mean {:.2} / peak {} of {} slots",
             s.sim_tokens_per_sec, s.occupancy_mean, s.occupancy_peak, s.slot_capacity
         );
+        println!(
+            "request phases: TTFT p50 {:.1} µs / p99 {:.1} µs, inter-token p50 {:.1} µs / p99 {:.1} µs",
+            s.ttft_p50_us, s.ttft_p99_us, s.inter_token_p50_us, s.inter_token_p99_us
+        );
+        if s.prefill_chunks > 0 {
+            println!(
+                "chunked prefill: {} positions over {} multi-position replays (mean chunk {:.1})",
+                s.prefill_positions,
+                s.prefill_chunks,
+                s.prefill_positions as f64 / s.prefill_chunks as f64
+            );
+        }
     }
     server.shutdown();
 }

@@ -90,6 +90,16 @@ impl ModelPlan {
             .max()
             .unwrap_or(0)
     }
+
+    /// Total analog passes one full-model replay walks (every op, every
+    /// tile, both factors). This is the per-position command overhead
+    /// that batched decode and chunked prefill amortize: a replay with
+    /// `lanes` lanes walks these tables once instead of `lanes` times —
+    /// reported by `benches/decode_throughput.rs` alongside the measured
+    /// tokens/sec so the amortization claim is inspectable.
+    pub fn total_passes(&self) -> usize {
+        self.ops.iter().map(|o| o.passes.len()).sum()
+    }
 }
 
 /// Geometry of one Linear placement's m x m tile: `(rp, cp, rows_here,
@@ -280,6 +290,19 @@ mod tests {
             let total_passes: usize = plan.ops.iter().map(|o| o.passes.len()).sum();
             assert!(total_passes >= mm.placements.len(), "{strategy:?}");
             assert!(plan.max_cols() <= mm.m, "{strategy:?}");
+        }
+    }
+
+    #[test]
+    fn total_passes_counts_every_compiled_pass() {
+        let cfg = ModelConfig::tiny();
+        let params = CimParams::default();
+        for strategy in Strategy::all() {
+            let mm = map_model(&cfg, &params, strategy);
+            let plan = compile_plan(&mm);
+            let by_hand: usize = plan.ops.iter().map(|o| o.passes.len()).sum();
+            assert_eq!(plan.total_passes(), by_hand);
+            assert!(plan.total_passes() >= mm.placements.len(), "{strategy:?}");
         }
     }
 

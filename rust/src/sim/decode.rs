@@ -36,6 +36,15 @@
 //! and slots admit/evict between steps (continuous batching). Each lane
 //! is bit-identical to the single-stream path, so batched logits never
 //! depend on batchmates (`tests/prop_batch_decode.rs`).
+//!
+//! Since PR 4 the batched engine steps *chunks*, not single tokens:
+//! [`BatchDecodeEngine::step_chunks`] advances each slot by a
+//! variable-length token chunk through one batched replay with **lanes =
+//! positions** (`sim::prefill`, DESIGN.md §6c) — decode lanes are chunks
+//! of 1, prompt ingestion rides C positions per replay, bit-identical to
+//! token-by-token feeding (`tests/prop_prefill.rs`). Requests whose
+//! prompt + generation exceed the context window are rejected with a
+//! clear error at admission instead of silently clamping the position.
 
 use std::collections::HashMap;
 
@@ -44,19 +53,20 @@ use crate::mapping::Strategy;
 use crate::model::{para_ops, MatmulOp, ModelConfig};
 use crate::monarch::{MonarchMatrix, RectMonarch};
 use crate::sim::exec::FunctionalChip;
+use crate::sim::prefill::{self, allocate_chunks, ChunkWorkspace, KvCache};
 use crate::sim::trace::{decode_token_cost, DecodeTrace};
 use crate::tensor::Matrix;
 use crate::util::rng::Pcg32;
 
 /// Parameterized-op indices of one decoder layer (into the para-op list).
 #[derive(Clone, Copy, Debug)]
-struct LayerOps {
-    wq: usize,
-    wk: usize,
-    wv: usize,
-    wo: usize,
-    ffn1: usize,
-    ffn2: usize,
+pub(crate) struct LayerOps {
+    pub(crate) wq: usize,
+    pub(crate) wk: usize,
+    pub(crate) wv: usize,
+    pub(crate) wo: usize,
+    pub(crate) ffn1: usize,
+    pub(crate) ffn2: usize,
 }
 
 /// A synthetic Monarch decoder-only transformer: every Para weight is a
@@ -75,7 +85,7 @@ pub struct DecodeModel {
     pub positional: Matrix,
     /// Untied LM head (vocab x d).
     pub lm_head: Matrix,
-    layers: Vec<LayerOps>,
+    pub(crate) layers: Vec<LayerOps>,
 }
 
 /// Variance-preserving random Monarch tile (factors scaled by 1/sqrt(b)).
@@ -189,8 +199,9 @@ impl ParaBackend {
     /// The chip path amortizes every analog pass over the batch; the
     /// reference path runs the golden matvec lane by lane. Either way,
     /// lane `l` is bit-identical to a `run_into` call over lane `l`'s
-    /// vector — the invariant batched decode rests on.
-    fn run_batch_into(
+    /// vector — the invariant batched decode *and* chunked prefill
+    /// (lanes = positions) rest on.
+    pub(crate) fn run_batch_into(
         &mut self,
         model: &DecodeModel,
         op_idx: usize,
@@ -271,8 +282,7 @@ pub struct DecodeEngine {
     backend: ParaBackend,
     params: CimParams,
     /// Per-layer key/value cache (one d-vector per cached position).
-    keys: Vec<Vec<Vec<f32>>>,
-    values: Vec<Vec<Vec<f32>>>,
+    kv: KvCache,
     pub trace: DecodeTrace,
     bufs: EngineBufs,
 }
@@ -296,7 +306,7 @@ impl DecodeResult {
     }
 }
 
-fn layer_norm_into(x: &[f32], out: &mut [f32]) {
+pub(crate) fn layer_norm_into(x: &[f32], out: &mut [f32]) {
     let n = x.len() as f32;
     let mean = x.iter().sum::<f32>() / n;
     let var = x.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / n;
@@ -306,7 +316,7 @@ fn layer_norm_into(x: &[f32], out: &mut [f32]) {
     }
 }
 
-fn gelu(x: &mut [f32]) {
+pub(crate) fn gelu(x: &mut [f32]) {
     // tanh approximation (identical across backends; DPU op)
     const C: f32 = 0.797_884_6; // sqrt(2/pi)
     for v in x.iter_mut() {
@@ -327,17 +337,30 @@ fn argmax(xs: &[f32]) -> usize {
     best
 }
 
+/// Context-window admission check shared by every ingestion path: a
+/// request of `prompt` positions that will generate `n_tokens` more must
+/// fit the model's `seq` positional embeddings. Violations are caller
+/// bugs (or unvalidated client input) and fail loudly — the engine never
+/// silently reuses the last position (ISSUE 4 regression).
+fn assert_fits_context(cfg: &ModelConfig, prompt: usize, n_tokens: usize) {
+    assert!(
+        prompt + n_tokens <= cfg.seq,
+        "request exceeds the context window: prompt {prompt} + {n_tokens} generated \
+         tokens > seq {} — reject at admission/validation time",
+        cfg.seq
+    );
+}
+
 impl DecodeEngine {
     /// Engine with the golden (non-CIM) Para backend.
     pub fn reference(model: DecodeModel) -> DecodeEngine {
         let layers = model.cfg.dec_layers;
         let bufs = EngineBufs::new(&model.cfg);
         DecodeEngine {
+            kv: KvCache::new(layers),
             model,
             backend: ParaBackend::Reference,
             params: CimParams::default(),
-            keys: vec![Vec::new(); layers],
-            values: vec![Vec::new(); layers],
             trace: DecodeTrace::new(),
             bufs,
         }
@@ -361,11 +384,10 @@ impl DecodeEngine {
         let layers = model.cfg.dec_layers;
         let bufs = EngineBufs::new(&model.cfg);
         DecodeEngine {
+            kv: KvCache::new(layers),
             model,
             backend: ParaBackend::Chip(Box::new(chip)),
             params,
-            keys: vec![Vec::new(); layers],
-            values: vec![Vec::new(); layers],
             trace: DecodeTrace::new(),
             bufs,
         }
@@ -387,30 +409,40 @@ impl DecodeEngine {
     /// request can never see the old request's distribution.
     pub fn reset(&mut self) {
         clear_request_state(
-            &mut self.keys,
-            &mut self.values,
+            &mut self.kv,
             &mut self.trace,
-            &mut self.bufs,
+            &mut self.bufs.scores,
+            &mut self.bufs.logits,
         );
     }
 
     /// Cached positions so far.
     pub fn kv_len(&self) -> usize {
-        self.keys.first().map(|k| k.len()).unwrap_or(0)
+        self.kv.len()
+    }
+
+    /// The engine's key/value cache (read-only — for cross-checking
+    /// chunked prefill against token-by-token ingestion).
+    pub fn kv_cache(&self) -> &KvCache {
+        &self.kv
     }
 
     /// Process one token at the next position; returns the LM-head
     /// logits (borrowed from the engine's reusable logit buffer — copy
     /// them out if they must outlive the next forward). Appends K/V to
     /// the cache and records the position's cost.
+    ///
+    /// Panics if the cache already spans the whole context window —
+    /// callers must validate request length at admission
+    /// ([`DecodeEngine::generate`] and the serving layer do).
     pub fn forward(&mut self, token: i32) -> &[f32] {
-        let pos = self.kv_len().min(self.model.cfg.seq - 1);
+        let pos = self.kv_len();
+        assert_fits_context(&self.model.cfg, pos, 1);
         let DecodeEngine {
             model,
             backend,
             params,
-            keys,
-            values,
+            kv,
             trace,
             bufs,
         } = self;
@@ -437,12 +469,11 @@ impl DecodeEngine {
             backend.run_into(model, ops.wq, &bufs.x, &mut bufs.q);
             backend.run_into(model, ops.wk, &bufs.x, &mut bufs.k);
             backend.run_into(model, ops.wv, &bufs.x, &mut bufs.v);
-            keys[l].push(bufs.k.clone());
-            values[l].push(bufs.v.clone());
+            kv.push(l, bufs.k.clone(), bufs.v.clone());
             attend_into(
                 &bufs.q,
-                &keys[l],
-                &values[l],
+                &kv.keys[l],
+                &kv.values[l],
                 heads,
                 dh,
                 &mut bufs.scores,
@@ -475,7 +506,7 @@ impl DecodeEngine {
         }
 
         // cost accounting: the mapped Para path + cache-sized MHA work
-        let kv_len = keys.first().map(|k| k.len()).unwrap_or(0);
+        let kv_len = kv.len();
         let cost = match backend {
             ParaBackend::Chip(chip) => {
                 decode_token_cost(&model.cfg, &chip.mapping, params, kv_len)
@@ -488,8 +519,12 @@ impl DecodeEngine {
 
     /// Greedy autoregressive generation: feed `prompt`, then emit
     /// `n_tokens` argmax continuations. The engine is reset first.
+    /// Requests that cannot fit the context window (`prompt.len() +
+    /// n_tokens > seq`) are rejected with a clear panic — validate at
+    /// admission.
     pub fn generate(&mut self, prompt: &[i32], n_tokens: usize) -> DecodeResult {
         assert!(!prompt.is_empty(), "need at least one prompt token");
+        assert_fits_context(&self.model.cfg, prompt.len(), n_tokens);
         self.reset();
         for &t in prompt {
             self.forward(t);
@@ -510,6 +545,7 @@ impl DecodeEngine {
     /// full token window, plus the summed modeled cost — the CIM-sim
     /// serving contract (`coordinator::server::Backend::CimSim`).
     pub fn score(&mut self, tokens: &[i32]) -> (Vec<f32>, Cost) {
+        assert_fits_context(&self.model.cfg, tokens.len(), 0);
         self.reset();
         let vocab = self.model.cfg.vocab;
         let mut out = Vec::with_capacity(tokens.len() * vocab);
@@ -521,157 +557,93 @@ impl DecodeEngine {
     }
 }
 
-/// Wipe one request's state — KV cache, cost trace, attention score
-/// window and logits. Single definition of "request state", shared by
-/// [`DecodeEngine::reset`] and [`BatchSlot::clear`] so the two reuse
-/// paths can never drift apart on what gets cleared.
-fn clear_request_state(
-    keys: &mut [Vec<Vec<f32>>],
-    values: &mut [Vec<Vec<f32>>],
-    trace: &mut DecodeTrace,
-    bufs: &mut EngineBufs,
-) {
-    for k in keys.iter_mut() {
-        k.clear();
-    }
-    for v in values.iter_mut() {
-        v.clear();
-    }
-    trace.clear();
-    bufs.scores.clear();
-    bufs.logits.fill(0.0);
-}
-
-/// One sequence slot of the batched engine: its own KV cache, activation
-/// buffers and per-position cost trace — everything request-private, so
-/// slots at different positions (ragged lengths) coexist in one batch.
-struct BatchSlot {
+/// One sequence slot of the batched engine: its own KV cache, logits,
+/// attention-score scratch and per-position cost trace — everything
+/// request-private, so slots at different positions (ragged lengths)
+/// coexist in one batch. Activation scratch is *not* per-slot: the
+/// chunked step stages all lanes through the engine's shared
+/// [`ChunkWorkspace`].
+pub(crate) struct BatchSlot {
     /// Occupied by an in-flight sequence.
-    active: bool,
-    keys: Vec<Vec<Vec<f32>>>,
-    values: Vec<Vec<Vec<f32>>>,
-    bufs: EngineBufs,
-    trace: DecodeTrace,
+    pub(crate) active: bool,
+    pub(crate) kv: KvCache,
+    pub(crate) trace: DecodeTrace,
+    /// LM-head logits of the slot's latest stepped position.
+    pub(crate) logits: Vec<f32>,
+    /// Attention score scratch (grows to the KV length).
+    pub(crate) scores: Vec<f32>,
 }
 
 impl BatchSlot {
     fn new(cfg: &ModelConfig) -> Self {
         Self {
             active: false,
-            keys: vec![Vec::new(); cfg.dec_layers],
-            values: vec![Vec::new(); cfg.dec_layers],
-            bufs: EngineBufs::new(cfg),
+            kv: KvCache::new(cfg.dec_layers),
             trace: DecodeTrace::new(),
+            logits: vec![0.0; cfg.vocab],
+            scores: Vec::with_capacity(cfg.seq),
         }
     }
 
     fn kv_len(&self) -> usize {
-        self.keys.first().map(|k| k.len()).unwrap_or(0)
+        self.kv.len()
     }
 
-    /// Wipe all request state (KV cache, trace, score window, logits) so
-    /// the next occupant starts from a provably clean slot.
+    /// Wipe all request state so the next occupant starts from a
+    /// provably clean slot — the same wipe [`DecodeEngine::reset`]
+    /// performs, through the same helper.
     fn clear(&mut self) {
         clear_request_state(
-            &mut self.keys,
-            &mut self.values,
+            &mut self.kv,
             &mut self.trace,
-            &mut self.bufs,
+            &mut self.scores,
+            &mut self.logits,
         );
     }
 }
 
-// Stride-B staging accessors, named `fn`s so the function pointers get
-// the usual elided-lifetime signatures.
-fn buf_x(b: &EngineBufs) -> &[f32] {
-    &b.x
-}
-fn buf_ctx(b: &EngineBufs) -> &[f32] {
-    &b.ctx
-}
-fn buf_f(b: &EngineBufs) -> &[f32] {
-    &b.f
-}
-fn buf_q_mut(b: &mut EngineBufs) -> &mut [f32] {
-    &mut b.q
-}
-fn buf_k_mut(b: &mut EngineBufs) -> &mut [f32] {
-    &mut b.k
-}
-fn buf_v_mut(b: &mut EngineBufs) -> &mut [f32] {
-    &mut b.v
-}
-fn buf_o_mut(b: &mut EngineBufs) -> &mut [f32] {
-    &mut b.o
-}
-fn buf_f_mut(b: &mut EngineBufs) -> &mut [f32] {
-    &mut b.f
-}
-fn buf_g_mut(b: &mut EngineBufs) -> &mut [f32] {
-    &mut b.g
-}
-
-/// Gather each lane's slot buffer into the stride-B interleaved staging
-/// buffer: `xb[k * batch + l]` = element `k` of lane `l`'s vector.
-fn pack_lanes(
-    xb: &mut [f32],
-    width: usize,
-    slots: &[BatchSlot],
-    lanes: &[usize],
-    get: fn(&EngineBufs) -> &[f32],
+/// Wipe one request's state — KV cache, cost trace, attention score
+/// window and logits. Single definition of "request state", shared by
+/// [`DecodeEngine::reset`] and `BatchSlot::clear` so the two reuse paths
+/// can never drift apart on what gets cleared.
+fn clear_request_state(
+    kv: &mut KvCache,
+    trace: &mut DecodeTrace,
+    scores: &mut Vec<f32>,
+    logits: &mut [f32],
 ) {
-    let batch = lanes.len();
-    for (l, &si) in lanes.iter().enumerate() {
-        let src = get(&slots[si].bufs);
-        for k in 0..width {
-            xb[k * batch + l] = src[k];
-        }
-    }
-}
-
-/// Scatter the stride-B interleaved landing buffer back into each
-/// lane's slot buffer (inverse of [`pack_lanes`]).
-fn unpack_lanes(
-    yb: &[f32],
-    width: usize,
-    slots: &mut [BatchSlot],
-    lanes: &[usize],
-    get: fn(&mut EngineBufs) -> &mut [f32],
-) {
-    let batch = lanes.len();
-    for (l, &si) in lanes.iter().enumerate() {
-        let dst = get(&mut slots[si].bufs);
-        for k in 0..width {
-            dst[k] = yb[k * batch + l];
-        }
-    }
+    kv.clear();
+    trace.clear();
+    scores.clear();
+    logits.fill(0.0);
 }
 
 /// Batched decode engine: a fixed set of sequence slots sharing ONE
-/// programmed chip. Each [`BatchDecodeEngine::step`] advances any subset
-/// of the slots by one token, replaying every Para op's compiled pass
-/// tables once for the whole batch (`FunctionalChip::run_op_batch_into`)
-/// — the weight-stationary amortization that turns the memory-bound
-/// decode stage into a throughput-oriented serving core. Slots are
-/// request-private (own KV cache, own [`EngineBufs`]), may sit at
+/// programmed chip. Each [`BatchDecodeEngine::step_chunks`] advances any
+/// subset of the slots by a token *chunk* (decode continuations are
+/// chunks of 1; prompt ingestion brings C positions — chunked prefill),
+/// replaying every Para op's compiled pass tables once for all lanes
+/// (`FunctionalChip::run_op_batch_into`, lanes = Σ chunk lengths) — the
+/// weight-stationary amortization that turns the memory-bound decode
+/// stage into a throughput-oriented serving core. Slots are
+/// request-private (own KV cache, logits and trace), may sit at
 /// different positions (ragged lengths), and can be admitted/evicted
 /// between steps without touching in-flight neighbours (continuous
 /// batching, `coordinator::server`).
 ///
 /// Because every lane of the batched replay is bit-identical to the
-/// single-stream path, a slot's logits never depend on its batchmates:
-/// any interleaving of admissions/evictions produces exactly the tokens
-/// of independent [`DecodeEngine`]s (`tests/prop_batch_decode.rs`).
+/// single-stream path, a slot's logits never depend on its batchmates or
+/// its chunking: any interleaving of admissions/evictions/chunk sizes
+/// produces exactly the tokens of independent [`DecodeEngine`]s
+/// (`tests/prop_batch_decode.rs`, `tests/prop_prefill.rs`).
 pub struct BatchDecodeEngine {
     pub model: DecodeModel,
     backend: ParaBackend,
     params: CimParams,
     slots: Vec<BatchSlot>,
-    /// Stride-B interleaved staging (op input) buffer, `max(d, d_ff) *
-    /// capacity` wide — allocated once, reused every step.
-    xb: Vec<f32>,
-    /// Stride-B interleaved landing (op output) buffer.
-    yb: Vec<f32>,
+    /// Shared lane-major activation workspace of the chunked step —
+    /// allocated once, grown to the widest step, reused forever.
+    ws: ChunkWorkspace,
 }
 
 impl BatchDecodeEngine {
@@ -701,17 +673,21 @@ impl BatchDecodeEngine {
 
     fn with_backend(
         model: DecodeModel,
-        backend: ParaBackend,
+        mut backend: ParaBackend,
         params: CimParams,
         capacity: usize,
     ) -> BatchDecodeEngine {
         assert!(capacity >= 1, "need at least one sequence slot");
         let slots: Vec<BatchSlot> =
             (0..capacity).map(|_| BatchSlot::new(&model.cfg)).collect();
-        let wide = model.cfg.d_model.max(model.cfg.d_ff);
+        // pre-grow the chip's batched scratch so the first step at the
+        // slot-pool width allocates nothing
+        if let ParaBackend::Chip(chip) = &mut backend {
+            chip.warm_batch(capacity);
+        }
+        let ws = ChunkWorkspace::new(&model.cfg, capacity);
         BatchDecodeEngine {
-            xb: vec![0.0; wide * capacity],
-            yb: vec![0.0; wide * capacity],
+            ws,
             model,
             backend,
             params,
@@ -757,10 +733,26 @@ impl BatchDecodeEngine {
         self.slots[slot].kv_len()
     }
 
+    /// One slot's key/value cache (read-only — for cross-checking
+    /// chunked prefill against token-by-token ingestion).
+    pub fn kv(&self, slot: usize) -> &KvCache {
+        &self.slots[slot].kv
+    }
+
     /// LM-head logits of the slot's latest stepped position (borrowed
     /// from the slot's buffer — valid until its next step).
     pub fn logits(&self, slot: usize) -> &[f32] {
-        &self.slots[slot].bufs.logits
+        &self.slots[slot].logits
+    }
+
+    /// Per-position logits of the latest [`BatchDecodeEngine::step_chunks`]
+    /// call, by flattened lane index: groups in call order, chunk
+    /// positions in order within each group (a step of
+    /// `[(s0, &[a, b]), (s1, &[c])]` exposes lanes `0 -> a, 1 -> b,
+    /// 2 -> c`). Valid until the next step. This is how the serving
+    /// layer streams every prompt position's logits out of a chunk.
+    pub fn lane_logits(&self, lane: usize) -> &[f32] {
+        self.ws.lane_logits(lane)
     }
 
     /// Move the slot's accumulated per-position costs out (one entry
@@ -778,162 +770,89 @@ impl BatchDecodeEngine {
     }
 
     /// Advance the listed slots by one token each (`(slot, token)`
-    /// pairs; slots must be active and distinct, any subset and order).
-    /// Every Para matmul runs once, batched over the lanes; everything
-    /// per-sequence (LayerNorm, attention against the slot's own KV
-    /// cache, residuals, LM head) runs lane by lane on the slot's
-    /// private buffers. Appends K/V to each slot's cache and records a
-    /// per-slot cost at the slot's own KV length.
+    /// pairs; slots must be active and distinct, any subset and order) —
+    /// the pure-decode special case of [`BatchDecodeEngine::step_chunks`]
+    /// with every chunk of length 1.
     pub fn step(&mut self, inputs: &[(usize, i32)]) {
-        let batch = inputs.len();
-        assert!(batch > 0, "step needs at least one active slot");
+        let toks: Vec<[i32; 1]> = inputs.iter().map(|&(_, t)| [t]).collect();
+        let groups: Vec<(usize, &[i32])> = inputs
+            .iter()
+            .zip(&toks)
+            .map(|(&(s, _), t)| (s, &t[..]))
+            .collect();
+        self.step_chunks(&groups);
+    }
+
+    /// Advance each listed slot by its token chunk (`(slot, tokens)`
+    /// pairs; slots must be active and distinct, chunks non-empty, and
+    /// each slot's cache + chunk must fit the context window). Every
+    /// Para matmul runs once, batched over **lanes = Σ chunk lengths**;
+    /// everything order-dependent (LayerNorm, causal attention against
+    /// the slot's own cache prefix, residuals, LM head) runs lane by
+    /// lane — see `sim::prefill::chunk_step`. Appends K/V per position
+    /// and records a per-position cost at the position's own KV length.
+    pub fn step_chunks(&mut self, inputs: &[(usize, &[i32])]) {
+        assert!(!inputs.is_empty(), "step needs at least one active slot");
+        for (i, &(si, toks)) in inputs.iter().enumerate() {
+            assert!(si < self.slots.len(), "slot {si} out of range");
+            assert!(self.slots[si].active, "step on inactive slot {si}");
+            assert!(!toks.is_empty(), "empty token chunk for slot {si}");
+            assert!(
+                !inputs[..i].iter().any(|&(sj, _)| sj == si),
+                "duplicate slot {si} in one step"
+            );
+            let base = self.slots[si].kv_len();
+            assert!(
+                base + toks.len() <= self.model.cfg.seq,
+                "slot {si}: request exceeds the context window (cached {base} + \
+                 chunk {} > seq {}) — reject at admission/validation time",
+                toks.len(),
+                self.model.cfg.seq
+            );
+        }
         let BatchDecodeEngine {
             model,
             backend,
             params,
             slots,
-            xb,
-            yb,
+            ws,
         } = self;
-        let d = model.cfg.d_model;
-        let d_ff = model.cfg.d_ff;
-        let heads = model.cfg.n_heads;
-        let dh = model.cfg.d_head();
-        let vocab = model.cfg.vocab;
-        let n_layers = model.cfg.dec_layers;
-        let lane_slots: Vec<usize> = inputs.iter().map(|&(s, _)| s).collect();
-        for (i, &si) in lane_slots.iter().enumerate() {
-            assert!(si < slots.len(), "slot {si} out of range");
-            assert!(slots[si].active, "step on inactive slot {si}");
-            assert!(
-                !lane_slots[..i].contains(&si),
-                "duplicate slot {si} in one step"
-            );
-        }
-
-        // token + positional embedding, per lane at the lane's position
-        for &(si, token) in inputs {
-            let slot = &mut slots[si];
-            let pos = slot.kv_len().min(model.cfg.seq - 1);
-            let tok = (token.max(0) as usize).min(vocab - 1);
-            for ((hv, e), p) in slot
-                .bufs
-                .h
-                .iter_mut()
-                .zip(model.embedding.row(tok))
-                .zip(model.positional.row(pos))
-            {
-                *hv = e + p;
-            }
-        }
-
-        for l in 0..n_layers {
-            let ops = model.layers[l];
-            // --- self-attention sub-block (pre-LN) ---
-            for &si in &lane_slots {
-                let b = &mut slots[si].bufs;
-                layer_norm_into(&b.h, &mut b.x);
-            }
-            pack_lanes(&mut xb[..d * batch], d, &slots[..], &lane_slots, buf_x);
-            backend.run_batch_into(model, ops.wq, batch, &xb[..d * batch], &mut yb[..d * batch]);
-            unpack_lanes(&yb[..d * batch], d, &mut slots[..], &lane_slots, buf_q_mut);
-            backend.run_batch_into(model, ops.wk, batch, &xb[..d * batch], &mut yb[..d * batch]);
-            unpack_lanes(&yb[..d * batch], d, &mut slots[..], &lane_slots, buf_k_mut);
-            backend.run_batch_into(model, ops.wv, batch, &xb[..d * batch], &mut yb[..d * batch]);
-            unpack_lanes(&yb[..d * batch], d, &mut slots[..], &lane_slots, buf_v_mut);
-            for &si in &lane_slots {
-                let slot = &mut slots[si];
-                slot.keys[l].push(slot.bufs.k.clone());
-                slot.values[l].push(slot.bufs.v.clone());
-                attend_into(
-                    &slot.bufs.q,
-                    &slot.keys[l],
-                    &slot.values[l],
-                    heads,
-                    dh,
-                    &mut slot.bufs.scores,
-                    &mut slot.bufs.ctx,
-                );
-            }
-            pack_lanes(&mut xb[..d * batch], d, &slots[..], &lane_slots, buf_ctx);
-            backend.run_batch_into(model, ops.wo, batch, &xb[..d * batch], &mut yb[..d * batch]);
-            unpack_lanes(&yb[..d * batch], d, &mut slots[..], &lane_slots, buf_o_mut);
-            // --- feed-forward sub-block (pre-LN) ---
-            for &si in &lane_slots {
-                let b = &mut slots[si].bufs;
-                for (hv, ov) in b.h.iter_mut().zip(&b.o) {
-                    *hv += ov;
-                }
-                layer_norm_into(&b.h, &mut b.x);
-            }
-            pack_lanes(&mut xb[..d * batch], d, &slots[..], &lane_slots, buf_x);
-            backend.run_batch_into(
-                model,
-                ops.ffn1,
-                batch,
-                &xb[..d * batch],
-                &mut yb[..d_ff * batch],
-            );
-            unpack_lanes(&yb[..d_ff * batch], d_ff, &mut slots[..], &lane_slots, buf_f_mut);
-            for &si in &lane_slots {
-                gelu(&mut slots[si].bufs.f);
-            }
-            pack_lanes(&mut xb[..d_ff * batch], d_ff, &slots[..], &lane_slots, buf_f);
-            backend.run_batch_into(
-                model,
-                ops.ffn2,
-                batch,
-                &xb[..d_ff * batch],
-                &mut yb[..d * batch],
-            );
-            unpack_lanes(&yb[..d * batch], d, &mut slots[..], &lane_slots, buf_g_mut);
-            for &si in &lane_slots {
-                let b = &mut slots[si].bufs;
-                for (hv, gv) in b.h.iter_mut().zip(&b.g) {
-                    *hv += gv;
-                }
-            }
-        }
-
-        // untied LM head over the final LayerNorm + per-slot cost record
-        let inv_sqrt_d = 1.0 / (d as f32).sqrt();
-        for &si in &lane_slots {
-            let slot = &mut slots[si];
-            layer_norm_into(&slot.bufs.h, &mut slot.bufs.hn);
-            for (t, lv) in slot.bufs.logits.iter_mut().enumerate() {
-                let row = model.lm_head.row(t);
-                let mut acc = 0.0f32;
-                for (r, x) in row.iter().zip(&slot.bufs.hn) {
-                    acc += r * x;
-                }
-                *lv = acc * inv_sqrt_d;
-            }
-            let kv_len = slot.kv_len();
-            let cost = match backend {
-                ParaBackend::Chip(chip) => {
-                    decode_token_cost(&model.cfg, &chip.mapping, params, kv_len)
-                }
-                ParaBackend::Reference => Cost::default(),
-            };
-            slot.trace.record(cost);
-        }
+        prefill::chunk_step(model, backend, params, slots, ws, inputs);
     }
 
     /// Greedy generation of a whole request list through the slot pool
-    /// with continuous batching: requests are admitted into free slots
-    /// as they open up (more requests than slots exercises mid-run
-    /// admission), each slot feeds its prompt then argmax-extends for
-    /// `n_tokens`, and finished slots are evicted — and refilled —
-    /// without stalling in-flight neighbours. Per request the semantics
-    /// (and, bit for bit, the tokens) equal
-    /// [`DecodeEngine::generate`] on a fresh single-stream engine.
+    /// with continuous batching and token-by-token prompt feeding —
+    /// [`BatchDecodeEngine::generate_batch_chunked`] with chunk 1.
     pub fn generate_batch(
         &mut self,
         prompts: &[Vec<i32>],
         n_tokens: usize,
     ) -> Vec<DecodeResult> {
-        for p in prompts {
-            assert!(!p.is_empty(), "need at least one prompt token");
+        self.generate_batch_chunked(prompts, n_tokens, 1)
+    }
+
+    /// Greedy generation of a whole request list through the slot pool
+    /// with continuous batching **and chunked prefill**: requests are
+    /// admitted into free slots as they open up (more requests than
+    /// slots exercises mid-run admission), each admitted request ingests
+    /// its prompt `chunk` positions per step — sharing every batched
+    /// replay with its neighbours' decode lanes, which always keep their
+    /// lane (`sim::prefill::allocate_chunks` bounds prefill so decode is
+    /// never starved) — then argmax-extends for `n_tokens`; finished
+    /// slots are evicted and refilled without stalling in-flight
+    /// neighbours. Per request the semantics (and, bit for bit, the
+    /// tokens) equal [`DecodeEngine::generate`] on a fresh single-stream
+    /// engine, for every chunk size.
+    pub fn generate_batch_chunked(
+        &mut self,
+        prompts: &[Vec<i32>],
+        n_tokens: usize,
+        chunk: usize,
+    ) -> Vec<DecodeResult> {
+        let chunk = chunk.max(1);
+        for (ri, p) in prompts.iter().enumerate() {
+            assert!(!p.is_empty(), "request {ri}: need at least one prompt token");
+            assert_fits_context(&self.model.cfg, p.len(), n_tokens);
         }
         let cap = self.slots.len();
         // start clean: evict anything left over from a previous run
@@ -949,10 +868,18 @@ impl BatchDecodeEngine {
                 per_token: Vec::new(),
             })
             .collect();
-        // per-slot (request index, forwards done so far)
+        // per-slot (request index, positions fed so far)
         let mut running: Vec<Option<(usize, usize)>> = vec![None; cap];
         let mut next_req = 0usize;
-        let mut inputs: Vec<(usize, i32)> = Vec::with_capacity(cap);
+        // every decode lane always fits the budget; prefill shares the rest
+        let lane_budget = cap.max(chunk);
+        let mut decode_tok: Vec<[i32; 1]> = vec![[0]; cap];
+        // per-step plan buffers, hoisted and reused (the `groups` slice
+        // vector itself is per-iteration: it borrows `decode_tok`, which
+        // the next iteration rewrites)
+        let mut plan: Vec<(usize, usize)> = Vec::with_capacity(cap); // (slot, lanes)
+        let mut wants: Vec<usize> = Vec::with_capacity(cap);
+        let mut decode_count: usize;
         loop {
             while next_req < prompts.len() {
                 match self.try_admit() {
@@ -963,28 +890,62 @@ impl BatchDecodeEngine {
                     None => break,
                 }
             }
-            inputs.clear();
+            // classify in-flight slots: decode lanes (1 token, argmax)
+            // first, then prefilling slots (want up to `chunk` prompt
+            // positions); `plan` holds (slot, chunk length) in step order
+            plan.clear();
+            wants.clear();
+            decode_count = 0;
             for (s, run) in running.iter().enumerate() {
                 if let Some((req, fed)) = *run {
-                    let tok = if fed < prompts[req].len() {
-                        prompts[req][fed]
-                    } else {
-                        // argmax over the slot's last logits — exactly
-                        // DecodeEngine::generate's continuation rule
-                        let t = argmax(self.logits(s)) as i32;
-                        results[req].tokens.push(t);
-                        t
-                    };
-                    inputs.push((s, tok));
+                    if fed >= prompts[req].len() {
+                        plan.push((s, 1));
+                        decode_count += 1;
+                    }
                 }
             }
-            if inputs.is_empty() {
+            for (s, run) in running.iter().enumerate() {
+                if let Some((req, fed)) = *run {
+                    let plen = prompts[req].len();
+                    if fed < plen {
+                        plan.push((s, 0));
+                        wants.push((plen - fed).min(chunk));
+                    }
+                }
+            }
+            if plan.is_empty() {
                 break;
             }
-            self.step(&inputs);
-            for &(s, _) in inputs.iter() {
+            let budget_left = lane_budget.saturating_sub(decode_count);
+            let alloc = allocate_chunks(&wants, budget_left);
+            for (p, &c) in plan[decode_count..].iter_mut().zip(&alloc) {
+                p.1 = c;
+            }
+            // argmax continuations — exactly DecodeEngine::generate's rule
+            for &(s, _) in &plan[..decode_count] {
+                let (req, _) = running[s].expect("decode slot is running");
+                let t = argmax(self.logits(s)) as i32;
+                results[req].tokens.push(t);
+                decode_tok[s] = [t];
+            }
+            {
+                let groups: Vec<(usize, &[i32])> = plan
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &(s, c))| {
+                        if i < decode_count {
+                            (s, &decode_tok[s][..])
+                        } else {
+                            let (req, fed) = running[s].expect("prefill slot is running");
+                            (s, &prompts[req][fed..fed + c])
+                        }
+                    })
+                    .collect();
+                self.step_chunks(&groups);
+            }
+            for &(s, c) in &plan {
                 let (req, fed) = running[s].expect("stepped slot is running");
-                let done = fed + 1;
+                let done = fed + c;
                 if done == prompts[req].len() + n_tokens {
                     results[req].per_token = self.take_trace(s);
                     self.release(s);
@@ -999,8 +960,10 @@ impl BatchDecodeEngine {
 }
 
 /// Digital multi-head attention of one query against the KV cache, into
-/// caller-owned context/score scratch (every entry overwritten).
-fn attend_into(
+/// caller-owned context/score scratch (every entry overwritten). Causal
+/// masking is the caller's prefix bound: pass `keys[..pos + 1]` /
+/// `values[..pos + 1]` and later positions simply do not exist here.
+pub(crate) fn attend_into(
     q: &[f32],
     keys: &[Vec<f32>],
     values: &[Vec<f32>],
@@ -1210,6 +1173,99 @@ mod tests {
             let mut single = DecodeEngine::reference(DecodeModel::synth(tiny(), 9));
             assert_eq!(r.tokens, single.generate(p, 4).tokens, "prompt {p:?}");
         }
+    }
+
+    #[test]
+    fn chunked_prefill_equals_token_by_token_generate() {
+        // The PR-4 acceptance property at unit granularity: one request
+        // prefilled 4 positions per replay generates exactly the tokens
+        // (and per-position costs) of token-by-token ingestion.
+        let params = CimParams::default();
+        for strategy in [Strategy::SparseMap, Strategy::DenseMap] {
+            let mut be = BatchDecodeEngine::on_chip(
+                DecodeModel::synth(tiny(), 31),
+                params.clone(),
+                strategy,
+                1,
+            );
+            let prompt: Vec<i32> = (0..10).map(|i| (i * 11 + 3) as i32).collect();
+            let chunked = be.generate_batch_chunked(&[prompt.clone()], 6, 4);
+            let mut single = DecodeEngine::on_chip(
+                DecodeModel::synth(tiny(), 31),
+                params.clone(),
+                strategy,
+            );
+            let want = single.generate(&prompt, 6);
+            assert_eq!(chunked[0].tokens, want.tokens, "{strategy:?}");
+            assert_eq!(chunked[0].per_token.len(), want.per_token.len());
+            for (a, w) in chunked[0].per_token.iter().zip(&want.per_token) {
+                assert_eq!(a.latency.critical_ns(), w.latency.critical_ns());
+                assert_eq!(a.energy.total_nj(), w.energy.total_nj());
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_decode_and_prefill_step_is_per_lane_identical() {
+        // One slot mid-stream decodes a single token while a freshly
+        // admitted neighbour prefills 3 positions in the same step; both
+        // must be bit-identical to their single-stream twins.
+        let mut be = BatchDecodeEngine::reference(DecodeModel::synth(tiny(), 13), 2);
+        let s0 = be.try_admit().unwrap();
+        be.step_chunks(&[(s0, &[4i32, 9][..])]); // slot 0 now has 2 cached positions
+        let s1 = be.try_admit().unwrap();
+        be.step_chunks(&[(s0, &[17i32][..]), (s1, &[7i32, 21, 2][..])]);
+        let mut e0 = DecodeEngine::reference(DecodeModel::synth(tiny(), 13));
+        e0.forward(4);
+        e0.forward(9);
+        let want0 = e0.forward(17).to_vec();
+        assert_eq!(be.logits(s0), want0.as_slice(), "decode lane drifted");
+        let mut e1 = DecodeEngine::reference(DecodeModel::synth(tiny(), 13));
+        e1.forward(7);
+        e1.forward(21);
+        let want1 = e1.forward(2).to_vec();
+        assert_eq!(be.logits(s1), want1.as_slice(), "prefill lane drifted");
+        // per-position lane logits follow flattened input order
+        assert_eq!(be.lane_logits(0), want0.as_slice());
+        assert_eq!(be.lane_logits(3), want1.as_slice());
+        // KV caches match position by position
+        for l in 0..tiny().dec_layers {
+            for pos in 0..3 {
+                assert_eq!(be.kv(s1).key(l, pos), e1.kv_cache().key(l, pos));
+                assert_eq!(be.kv(s1).value(l, pos), e1.kv_cache().value(l, pos));
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds the context window")]
+    fn generate_rejects_overlong_requests() {
+        // ISSUE-4 satellite regression: prompt + generation beyond seq
+        // must be rejected loudly, not silently clamped to the last
+        // position.
+        let mut eng = DecodeEngine::reference(DecodeModel::synth(tiny(), 3));
+        let prompt: Vec<i32> = (0..4).collect();
+        let _ = eng.generate(&prompt, tiny().seq); // 4 + seq > seq
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds the context window")]
+    fn step_chunks_rejects_overflowing_chunk() {
+        let mut be = BatchDecodeEngine::reference(DecodeModel::synth(tiny(), 3), 1);
+        let s = be.try_admit().unwrap();
+        let toks: Vec<i32> = vec![1; tiny().seq + 1];
+        be.step_chunks(&[(s, &toks[..])]);
+    }
+
+    #[test]
+    fn context_window_boundary_is_accepted() {
+        // Exactly seq positions must work (the rejection is strict >).
+        let cfg = tiny();
+        let mut eng = DecodeEngine::reference(DecodeModel::synth(cfg.clone(), 3));
+        let prompt: Vec<i32> = (0..4).collect();
+        let r = eng.generate(&prompt, cfg.seq - 4);
+        assert_eq!(r.tokens.len(), cfg.seq - 4);
+        assert_eq!(eng.kv_len(), cfg.seq);
     }
 
     #[test]

@@ -487,6 +487,15 @@ impl FunctionalChip {
         ys
     }
 
+    /// Pre-grow the batched replay scratch to `batch` lanes, so a caller
+    /// with a known lane budget (slot pool width, prefill chunk size)
+    /// reaches the zero-allocation steady state before its first step
+    /// instead of after its widest one. Idempotent; lanes only grow.
+    pub fn warm_batch(&mut self, batch: usize) {
+        self.scratch
+            .ensure_batch(self.m, self.b * self.b, self.plan.max_cols(), batch);
+    }
+
     fn replay_op_linear_batch(&mut self, op_idx: usize, batch: usize, xs: &[f32], ys: &mut [f32]) {
         let op = &self.mapping.ops[op_idx];
         assert_eq!(xs.len(), op.cols * batch, "linear batch input length");

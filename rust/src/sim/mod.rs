@@ -2,12 +2,16 @@
 //! execution of mapped operators on emulated crossbars, used to validate
 //! that mapping + scheduling compute correct results; [`decode`] runs a
 //! full decoder-only transformer on that chip autoregressively (KV
-//! cache, greedy sampling, per-token cost accounting); the analytical
+//! cache, greedy sampling, per-token cost accounting); [`prefill`]
+//! ingests prompts position-parallel (chunked prefill — lanes =
+//! positions through the same batched replay); the analytical
 //! latency/energy side lives in `scheduler::timing` and [`trace`].
 
 pub mod decode;
 pub mod exec;
+pub mod prefill;
 pub mod trace;
 
 pub use decode::{BatchDecodeEngine, DecodeEngine, DecodeModel, DecodeResult};
 pub use exec::FunctionalChip;
+pub use prefill::KvCache;

@@ -1,0 +1,521 @@
+//! Chunked prefill: position-parallel prompt ingestion (DESIGN.md §6c).
+//!
+//! Decode advances one position per replay because each token depends on
+//! the previous one — but *prompt* positions are known up front, and for
+//! the six Para matmuls of every layer they are mutually independent.
+//! Since the paper's mapping keeps all weights resident in the CIM
+//! arrays, a chunk of C prompt positions can ride the same batched pass
+//! tables PR 3 built for multi-sequence decode, with **lanes =
+//! positions**: one `Crossbar::mvm_batch_cols` pass reads each
+//! programmed cell once and updates C accumulators (stride-C interleaved
+//! staging), so an S-token prompt costs S/C replay walks instead of S.
+//! Everything order-dependent — LayerNorm, causal attention (a position
+//! attends to the KV entries of all *earlier* positions in its own chunk
+//! plus the cache), residuals and the LM head — still runs per position,
+//! which is exactly what keeps chunked ingestion **bit-identical** to
+//! token-by-token [`super::decode::DecodeEngine::generate`]
+//! (`tests/prop_prefill.rs`).
+//!
+//! The module provides:
+//! * [`KvCache`] — the per-request key/value state both engines share.
+//! * [`ChunkWorkspace`] — lane-major activation buffers plus the
+//!   stride-interleaved staging the batched replay consumes; allocated
+//!   once, grown on demand, reused every step.
+//! * [`chunk_step`] — one mixed step: any set of slots, each advancing
+//!   by a variable-length token chunk (decode lanes are chunks of 1),
+//!   through ONE batched replay of every Para op.
+//! * [`allocate_chunks`] — the anti-starvation lane allocator the
+//!   continuous-batching scheduler uses to bound prefill chunks so
+//!   decode lanes of in-flight requests always step.
+
+use crate::cim::{CimParams, Cost};
+use crate::model::ModelConfig;
+use crate::sim::decode::{
+    attend_into, gelu, layer_norm_into, BatchSlot, DecodeModel, ParaBackend,
+};
+use crate::sim::trace::decode_token_cost;
+
+/// Per-request key/value cache: one d-vector per cached position per
+/// layer. This is the only *state* a request carries between steps —
+/// everything else the engines touch is reusable scratch.
+#[derive(Clone, Debug)]
+pub struct KvCache {
+    /// `keys[layer][pos]` is the cached key vector (length d).
+    pub(crate) keys: Vec<Vec<Vec<f32>>>,
+    pub(crate) values: Vec<Vec<Vec<f32>>>,
+}
+
+impl KvCache {
+    pub fn new(layers: usize) -> Self {
+        Self {
+            keys: vec![Vec::new(); layers],
+            values: vec![Vec::new(); layers],
+        }
+    }
+
+    /// Number of decoder layers the cache spans.
+    pub fn layers(&self) -> usize {
+        self.keys.len()
+    }
+
+    /// Cached positions so far (identical across layers).
+    pub fn len(&self) -> usize {
+        self.keys.first().map(|k| k.len()).unwrap_or(0)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Cached key vector of `pos` in `layer`.
+    pub fn key(&self, layer: usize, pos: usize) -> &[f32] {
+        &self.keys[layer][pos]
+    }
+
+    /// Cached value vector of `pos` in `layer`.
+    pub fn value(&self, layer: usize, pos: usize) -> &[f32] {
+        &self.values[layer][pos]
+    }
+
+    /// Append one position's K/V to `layer`.
+    pub(crate) fn push(&mut self, layer: usize, k: Vec<f32>, v: Vec<f32>) {
+        self.keys[layer].push(k);
+        self.values[layer].push(v);
+    }
+
+    /// Drop every cached position (request teardown).
+    pub(crate) fn clear(&mut self) {
+        for k in self.keys.iter_mut() {
+            k.clear();
+        }
+        for v in self.values.iter_mut() {
+            v.clear();
+        }
+    }
+}
+
+/// Lane-major activation workspace of one chunked step: lane `l`'s
+/// d-vector for buffer `h` lives at `h[l*d..(l+1)*d]`. One workspace per
+/// [`super::decode::BatchDecodeEngine`], sized to the largest lane count
+/// seen so far (`ensure`), so the steady-state step loop allocates
+/// nothing.
+#[derive(Clone, Debug)]
+pub(crate) struct ChunkWorkspace {
+    d: usize,
+    d_ff: usize,
+    vocab: usize,
+    /// Lane capacity the buffers are currently sized for.
+    lanes: usize,
+    /// Residual stream per lane (lanes x d).
+    pub(crate) h: Vec<f32>,
+    /// LayerNorm output feeding the current sub-block (lanes x d).
+    pub(crate) x: Vec<f32>,
+    pub(crate) q: Vec<f32>,
+    pub(crate) k: Vec<f32>,
+    pub(crate) v: Vec<f32>,
+    /// Attention context per lane (lanes x d).
+    pub(crate) ctx: Vec<f32>,
+    pub(crate) o: Vec<f32>,
+    /// FFN hidden per lane (lanes x d_ff).
+    pub(crate) f: Vec<f32>,
+    pub(crate) g: Vec<f32>,
+    /// Final LayerNorm output per lane (lanes x d).
+    pub(crate) hn: Vec<f32>,
+    /// LM-head logits per lane (lanes x vocab) — the per-position
+    /// logits of the latest step, in flattened input order.
+    pub(crate) logits: Vec<f32>,
+    /// Stride-L interleaved staging (op input) buffer, lanes x
+    /// max(d, d_ff) wide.
+    xb: Vec<f32>,
+    /// Stride-L interleaved landing (op output) buffer.
+    yb: Vec<f32>,
+}
+
+impl ChunkWorkspace {
+    pub(crate) fn new(cfg: &ModelConfig, lanes: usize) -> Self {
+        let mut ws = Self {
+            d: cfg.d_model,
+            d_ff: cfg.d_ff,
+            vocab: cfg.vocab,
+            lanes: 0,
+            h: Vec::new(),
+            x: Vec::new(),
+            q: Vec::new(),
+            k: Vec::new(),
+            v: Vec::new(),
+            ctx: Vec::new(),
+            o: Vec::new(),
+            f: Vec::new(),
+            g: Vec::new(),
+            hn: Vec::new(),
+            logits: Vec::new(),
+            xb: Vec::new(),
+            yb: Vec::new(),
+        };
+        ws.ensure(lanes.max(1));
+        ws
+    }
+
+    /// Grow every buffer to hold `lanes` lanes (never shrinks, so a
+    /// fixed serving configuration reaches a zero-allocation steady
+    /// state after its widest step).
+    pub(crate) fn ensure(&mut self, lanes: usize) {
+        if lanes <= self.lanes {
+            return;
+        }
+        let d = self.d;
+        for buf in [
+            &mut self.h,
+            &mut self.x,
+            &mut self.q,
+            &mut self.k,
+            &mut self.v,
+            &mut self.ctx,
+            &mut self.o,
+            &mut self.g,
+            &mut self.hn,
+        ] {
+            buf.resize(d * lanes, 0.0);
+        }
+        self.f.resize(self.d_ff * lanes, 0.0);
+        self.logits.resize(self.vocab * lanes, 0.0);
+        let wide = self.d.max(self.d_ff);
+        self.xb.resize(wide * lanes, 0.0);
+        self.yb.resize(wide * lanes, 0.0);
+        self.lanes = lanes;
+    }
+
+    /// Logits of lane `lane` from the latest step (flattened input
+    /// order: groups in call order, positions in chunk order).
+    pub(crate) fn lane_logits(&self, lane: usize) -> &[f32] {
+        &self.logits[lane * self.vocab..(lane + 1) * self.vocab]
+    }
+}
+
+/// Gather lane-major rows into the stride-L interleaved staging buffer:
+/// `out[c * lanes + l] = rows[l * width + c]` — the layout
+/// `FunctionalChip::run_op_batch_into` consumes.
+fn pack_rows(rows: &[f32], width: usize, lanes: usize, out: &mut [f32]) {
+    for l in 0..lanes {
+        let src = &rows[l * width..(l + 1) * width];
+        for (c, &v) in src.iter().enumerate() {
+            out[c * lanes + l] = v;
+        }
+    }
+}
+
+/// Scatter the stride-L interleaved landing buffer back into lane-major
+/// rows (inverse of [`pack_rows`]).
+fn unpack_rows(interleaved: &[f32], width: usize, lanes: usize, rows: &mut [f32]) {
+    for l in 0..lanes {
+        let dst = &mut rows[l * width..(l + 1) * width];
+        for (c, dv) in dst.iter_mut().enumerate() {
+            *dv = interleaved[c * lanes + l];
+        }
+    }
+}
+
+/// Anti-starvation lane allocator for one chunked step: every requester
+/// gets at least one lane (an in-flight request always advances — a
+/// large prefill can never stall its neighbours' decode lanes), then the
+/// remaining budget is dealt round-robin up to each requester's want.
+/// With `budget < wants.len()` the floor still holds: progress trumps
+/// the budget.
+pub fn allocate_chunks(wants: &[usize], budget: usize) -> Vec<usize> {
+    let mut alloc: Vec<usize> = wants.iter().map(|&w| w.min(1)).collect();
+    let mut total: usize = alloc.iter().sum();
+    loop {
+        let mut progressed = false;
+        for (a, &w) in alloc.iter_mut().zip(wants) {
+            if total >= budget {
+                return alloc;
+            }
+            if *a < w {
+                *a += 1;
+                total += 1;
+                progressed = true;
+            }
+        }
+        if !progressed {
+            return alloc;
+        }
+    }
+}
+
+/// Advance each listed slot by its token chunk — decode lanes are chunks
+/// of length 1, prefill lanes bring C prompt positions — through ONE
+/// batched replay of every Para op (lanes = Σ chunk lengths, stride-L
+/// interleaved). Per slot, per position the f32 operations are exactly
+/// the token-by-token path's, in the same order:
+///
+/// 1. embedding + positional per lane at the lane's own position;
+/// 2. per layer: LayerNorm per lane → batched wq/wk/wv → K/V appended to
+///    the slot's cache *in position order* → causal attention per lane
+///    against the cache prefix `[..pos+1]` (earlier chunk positions are
+///    visible, later ones are not) → batched wo → residual → LayerNorm →
+///    batched ffn1 → GeLU per lane → batched ffn2 → residual;
+/// 3. final LayerNorm + untied LM head per lane (per-position logits
+///    land in the workspace, the chunk's last logits in the slot).
+///
+/// Costs are recorded per position via `trace::decode_token_cost` at
+/// the position's KV length — identical to token-by-token records (the
+/// physical per-position analog/ADC work is unchanged; what chunking
+/// amortizes is the per-replay command overhead). The chunk-level
+/// pipelined-latency model lives in `trace::prefill_chunk_cost` and is
+/// consumed by the reporting layer (bench sweep), not this hot loop.
+///
+/// The caller (`BatchDecodeEngine::step_chunks`) validates slots and
+/// context-window bounds before delegating here.
+pub(crate) fn chunk_step(
+    model: &DecodeModel,
+    backend: &mut ParaBackend,
+    params: &CimParams,
+    slots: &mut [BatchSlot],
+    ws: &mut ChunkWorkspace,
+    inputs: &[(usize, &[i32])],
+) {
+    let cfg = &model.cfg;
+    let d = cfg.d_model;
+    let d_ff = cfg.d_ff;
+    let heads = cfg.n_heads;
+    let dh = cfg.d_head();
+    let vocab = cfg.vocab;
+    let n_layers = cfg.dec_layers;
+    let lanes: usize = inputs.iter().map(|&(_, toks)| toks.len()).sum();
+    ws.ensure(lanes);
+    // cache length of every group BEFORE any K/V append this step
+    let bases: Vec<usize> = inputs.iter().map(|&(si, _)| slots[si].kv.len()).collect();
+    let ChunkWorkspace {
+        h,
+        x,
+        q,
+        k,
+        v,
+        ctx,
+        o,
+        f,
+        g,
+        hn,
+        logits,
+        xb,
+        yb,
+        ..
+    } = ws;
+
+    // token + positional embedding, per lane at the lane's own position
+    {
+        let mut lane = 0usize;
+        for (gi, &(_, toks)) in inputs.iter().enumerate() {
+            for (off, &token) in toks.iter().enumerate() {
+                let pos = bases[gi] + off;
+                let tok = (token.max(0) as usize).min(vocab - 1);
+                let hrow = &mut h[lane * d..(lane + 1) * d];
+                for ((hv, e), p) in hrow
+                    .iter_mut()
+                    .zip(model.embedding.row(tok))
+                    .zip(model.positional.row(pos))
+                {
+                    *hv = e + p;
+                }
+                lane += 1;
+            }
+        }
+    }
+
+    for l in 0..n_layers {
+        let ops = model.layers[l];
+        // --- self-attention sub-block (pre-LN) ---
+        for lane in 0..lanes {
+            layer_norm_into(&h[lane * d..(lane + 1) * d], &mut x[lane * d..(lane + 1) * d]);
+        }
+        pack_rows(x, d, lanes, xb);
+        backend.run_batch_into(model, ops.wq, lanes, &xb[..d * lanes], &mut yb[..d * lanes]);
+        unpack_rows(yb, d, lanes, q);
+        backend.run_batch_into(model, ops.wk, lanes, &xb[..d * lanes], &mut yb[..d * lanes]);
+        unpack_rows(yb, d, lanes, k);
+        backend.run_batch_into(model, ops.wv, lanes, &xb[..d * lanes], &mut yb[..d * lanes]);
+        unpack_rows(yb, d, lanes, v);
+        // K/V append in position order, then causal attention per lane:
+        // position `base + off` sees the cache prefix `[..base + off + 1]`
+        // — exactly the token-by-token view (earlier chunkmates included,
+        // later ones masked by the prefix bound).
+        {
+            let mut lane = 0usize;
+            for (gi, &(si, toks)) in inputs.iter().enumerate() {
+                let slot = &mut slots[si];
+                for off in 0..toks.len() {
+                    let kr = &k[(lane + off) * d..(lane + off + 1) * d];
+                    let vr = &v[(lane + off) * d..(lane + off + 1) * d];
+                    slot.kv.push(l, kr.to_vec(), vr.to_vec());
+                }
+                let base = bases[gi];
+                for off in 0..toks.len() {
+                    let qrow = &q[(lane + off) * d..(lane + off + 1) * d];
+                    let crow = &mut ctx[(lane + off) * d..(lane + off + 1) * d];
+                    attend_into(
+                        qrow,
+                        &slot.kv.keys[l][..base + off + 1],
+                        &slot.kv.values[l][..base + off + 1],
+                        heads,
+                        dh,
+                        &mut slot.scores,
+                        crow,
+                    );
+                }
+                lane += toks.len();
+            }
+        }
+        pack_rows(ctx, d, lanes, xb);
+        backend.run_batch_into(model, ops.wo, lanes, &xb[..d * lanes], &mut yb[..d * lanes]);
+        unpack_rows(yb, d, lanes, o);
+        // --- feed-forward sub-block (pre-LN) ---
+        for lane in 0..lanes {
+            {
+                let hrow = &mut h[lane * d..(lane + 1) * d];
+                let orow = &o[lane * d..(lane + 1) * d];
+                for (hv, ov) in hrow.iter_mut().zip(orow) {
+                    *hv += ov;
+                }
+            }
+            layer_norm_into(&h[lane * d..(lane + 1) * d], &mut x[lane * d..(lane + 1) * d]);
+        }
+        pack_rows(x, d, lanes, xb);
+        backend.run_batch_into(
+            model,
+            ops.ffn1,
+            lanes,
+            &xb[..d * lanes],
+            &mut yb[..d_ff * lanes],
+        );
+        unpack_rows(yb, d_ff, lanes, f);
+        for lane in 0..lanes {
+            gelu(&mut f[lane * d_ff..(lane + 1) * d_ff]);
+        }
+        pack_rows(f, d_ff, lanes, xb);
+        backend.run_batch_into(
+            model,
+            ops.ffn2,
+            lanes,
+            &xb[..d_ff * lanes],
+            &mut yb[..d * lanes],
+        );
+        unpack_rows(yb, d, lanes, g);
+        for lane in 0..lanes {
+            let hrow = &mut h[lane * d..(lane + 1) * d];
+            let grow = &g[lane * d..(lane + 1) * d];
+            for (hv, gv) in hrow.iter_mut().zip(grow) {
+                *hv += gv;
+            }
+        }
+    }
+
+    // untied LM head over the final LayerNorm, per lane (every position's
+    // logits are observable: teacher-forced serving streams them all)
+    let inv_sqrt_d = 1.0 / (d as f32).sqrt();
+    for lane in 0..lanes {
+        layer_norm_into(&h[lane * d..(lane + 1) * d], &mut hn[lane * d..(lane + 1) * d]);
+        let hrow = &hn[lane * d..(lane + 1) * d];
+        let lrow = &mut logits[lane * vocab..(lane + 1) * vocab];
+        for (t, lv) in lrow.iter_mut().enumerate() {
+            let row = model.lm_head.row(t);
+            let mut acc = 0.0f32;
+            for (r, xv) in row.iter().zip(hrow) {
+                acc += r * xv;
+            }
+            *lv = acc * inv_sqrt_d;
+        }
+    }
+
+    // per-slot: persist the chunk's last logits (the argmax source for a
+    // continuation step) and record per-position costs
+    {
+        let mut lane = 0usize;
+        for (gi, &(si, toks)) in inputs.iter().enumerate() {
+            let c = toks.len();
+            let slot = &mut slots[si];
+            let last = lane + c - 1;
+            slot.logits
+                .copy_from_slice(&logits[last * vocab..(last + 1) * vocab]);
+            match backend {
+                ParaBackend::Chip(chip) => {
+                    for i in 0..c {
+                        slot.trace.record(decode_token_cost(
+                            cfg,
+                            &chip.mapping,
+                            params,
+                            bases[gi] + i + 1,
+                        ));
+                    }
+                }
+                ParaBackend::Reference => {
+                    for _ in 0..c {
+                        slot.trace.record(Cost::default());
+                    }
+                }
+            }
+            lane += c;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kv_cache_tracks_positions_per_layer() {
+        let mut kv = KvCache::new(2);
+        assert_eq!(kv.layers(), 2);
+        assert!(kv.is_empty());
+        kv.push(0, vec![1.0], vec![2.0]);
+        kv.push(1, vec![3.0], vec![4.0]);
+        assert_eq!(kv.len(), 1);
+        assert_eq!(kv.key(1, 0), &[3.0]);
+        assert_eq!(kv.value(0, 0), &[2.0]);
+        kv.clear();
+        assert_eq!(kv.len(), 0);
+    }
+
+    #[test]
+    fn pack_unpack_round_trip() {
+        let lanes = 3;
+        let width = 4;
+        let rows: Vec<f32> = (0..lanes * width).map(|i| i as f32).collect();
+        let mut inter = vec![0.0f32; lanes * width];
+        pack_rows(&rows, width, lanes, &mut inter);
+        // spot-check the stride layout: element c of lane l at c*lanes+l
+        assert_eq!(inter[0 * lanes + 1], rows[1 * width + 0]);
+        assert_eq!(inter[3 * lanes + 2], rows[2 * width + 3]);
+        let mut back = vec![0.0f32; lanes * width];
+        unpack_rows(&inter, width, lanes, &mut back);
+        assert_eq!(rows, back);
+    }
+
+    #[test]
+    fn allocate_chunks_floors_and_budgets() {
+        // everyone gets >= 1 even when the budget is too small
+        assert_eq!(allocate_chunks(&[4, 4, 4], 2), vec![1, 1, 1]);
+        // round-robin the surplus
+        assert_eq!(allocate_chunks(&[4, 4], 6), vec![3, 3]);
+        assert_eq!(allocate_chunks(&[4, 1], 6), vec![4, 1]);
+        // never over-allocate past the want
+        assert_eq!(allocate_chunks(&[2, 3], 100), vec![2, 3]);
+        // uneven split favours earlier requesters by at most one lane
+        assert_eq!(allocate_chunks(&[8, 8], 5), vec![3, 2]);
+        assert_eq!(allocate_chunks(&[], 8), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn workspace_grows_and_reuses() {
+        let cfg = ModelConfig::tiny();
+        let mut ws = ChunkWorkspace::new(&cfg, 2);
+        assert_eq!(ws.h.len(), 2 * cfg.d_model);
+        ws.ensure(5);
+        assert_eq!(ws.f.len(), 5 * cfg.d_ff);
+        assert_eq!(ws.logits.len(), 5 * cfg.vocab);
+        let ptr = ws.h.as_ptr();
+        ws.ensure(3); // never shrinks, no realloc
+        assert_eq!(ws.h.as_ptr(), ptr);
+        assert_eq!(ws.h.len(), 5 * cfg.d_model);
+    }
+}

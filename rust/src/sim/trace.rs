@@ -170,6 +170,58 @@ pub fn decode_token_cost(
     c
 }
 
+/// Cost of one chunked-prefill replay: `chunk` prompt positions entering
+/// the cache at length `base_kv`, sharing each analog pass with lanes =
+/// positions (`sim::prefill`).
+///
+/// Two views, both honest:
+/// * `per_position` — identical, entry for entry, to
+///   [`decode_token_cost`] at each position's KV length. The *physical*
+///   per-position work is unchanged by chunking: every position's
+///   activations are driven and every scheduled column converted
+///   regardless of how positions are grouped, so energy and per-position
+///   accounting must not (and do not) change — `tests/prop_prefill.rs`
+///   pins this bit-for-bit against token-by-token ingestion.
+/// * `chunk_ns` — the chunk's modeled wall latency when its positions
+///   stream back-to-back through the same pass schedule: the row-drive
+///   setup of each analog pass is paid once per chunk (positions pipeline
+///   behind the sample-and-hold/ADC stream), so the serial per-position
+///   drive time of positions 2..C collapses. Conversions, MHA and DPU
+///   work still serialize per position. At `chunk == 1` this equals
+///   `decode_token_cost(..).latency.critical_ns()` exactly.
+#[derive(Clone, Debug)]
+pub struct PrefillChunkCost {
+    /// Per-position cost records (position order), exactly the
+    /// token-by-token costs.
+    pub per_position: Vec<Cost>,
+    /// Modeled pipelined latency of the whole chunk (ns).
+    pub chunk_ns: f64,
+}
+
+/// Chunk-aware extension of [`decode_token_cost`]: see
+/// [`PrefillChunkCost`] for the model.
+pub fn prefill_chunk_cost(
+    cfg: &ModelConfig,
+    mapping: &ModelMapping,
+    params: &CimParams,
+    base_kv: usize,
+    chunk: usize,
+) -> PrefillChunkCost {
+    let per_position: Vec<Cost> = (0..chunk)
+        .map(|i| decode_token_cost(cfg, mapping, params, base_kv + i + 1))
+        .collect();
+    let serial: f64 = per_position
+        .iter()
+        .map(|c| c.latency.critical_ns())
+        .sum();
+    let para = crate::scheduler::timing::per_token_cost(cfg, mapping, params);
+    let chunk_ns = serial - chunk.saturating_sub(1) as f64 * para.latency.analog_ns;
+    PrefillChunkCost {
+        per_position,
+        chunk_ns,
+    }
+}
+
 /// Sum a slice of per-token costs (shared by [`DecodeTrace::total`] and
 /// `DecodeResult::total` so the aggregation can't drift between them).
 pub fn sum_costs(costs: &[Cost]) -> Cost {
@@ -298,6 +350,47 @@ mod tests {
         assert!(c32.energy.mha_nj > c1.energy.mha_nj);
         // the para path is position-independent
         assert!((c32.latency.adc_ns - c1.latency.adc_ns).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prefill_chunk_cost_matches_token_costs_per_position() {
+        // per-position records must equal decode_token_cost exactly (the
+        // bit-identical accounting chunked prefill is tested against),
+        // and the pipelined chunk latency must collapse the repeated
+        // row-drive time without ever beating a single position.
+        let cfg = ModelConfig::tiny();
+        let params = CimParams::default();
+        for strategy in Strategy::all() {
+            let mm = map_model(&cfg, &params, strategy);
+            let base = 3usize;
+            let chunk = 5usize;
+            let pc = prefill_chunk_cost(&cfg, &mm, &params, base, chunk);
+            assert_eq!(pc.per_position.len(), chunk);
+            for (i, c) in pc.per_position.iter().enumerate() {
+                let want = decode_token_cost(&cfg, &mm, &params, base + i + 1);
+                assert_eq!(c.latency, want.latency, "{strategy:?} pos {i}");
+                assert_eq!(c.energy, want.energy, "{strategy:?} pos {i}");
+            }
+            let serial: f64 = pc
+                .per_position
+                .iter()
+                .map(|c| c.latency.critical_ns())
+                .sum();
+            assert!(
+                pc.chunk_ns < serial,
+                "{strategy:?}: chunking must amortize drive time \
+                 ({} !< {serial})",
+                pc.chunk_ns
+            );
+            assert!(
+                pc.chunk_ns >= pc.per_position[0].latency.critical_ns(),
+                "{strategy:?}: a chunk can't beat one position"
+            );
+            // chunk of one IS the token cost
+            let one = prefill_chunk_cost(&cfg, &mm, &params, base, 1);
+            let want = decode_token_cost(&cfg, &mm, &params, base + 1);
+            assert_eq!(one.chunk_ns, want.latency.critical_ns());
+        }
     }
 
     #[test]

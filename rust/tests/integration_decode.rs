@@ -20,7 +20,10 @@ use monarch_cim::util::rng::Pcg32;
 
 const SEED: u64 = 2025;
 const PROMPT: [i32; 4] = [11, 48, 85, 122];
-const TOKENS: usize = 32;
+// Fill the tiny model's context window exactly: prompt + generation must
+// fit `seq` (32) — requests beyond it are now rejected at admission
+// instead of silently clamping the position (ISSUE 4).
+const TOKENS: usize = 28;
 
 fn tiny() -> ModelConfig {
     ModelConfig::tiny()

@@ -128,6 +128,68 @@ fn concurrent_ragged_clients_match_reference_engine() {
 }
 
 #[test]
+fn chunked_prefill_server_matches_reference_and_reports_phases() {
+    // ISSUE-4 serving contract: a server ingesting prompts 4 positions
+    // per replay must return logits identical to the single-stream
+    // reference, count prefill chunks, and report TTFT separately from
+    // the inter-token decode cadence.
+    let server = InferenceServer::start(ServerConfig {
+        backend: Backend::CimSim(CimSimConfig {
+            prefill_chunk: 4,
+            ..Default::default()
+        }),
+        policy: BatchPolicy {
+            max_batch: 4,
+            max_delay: std::time::Duration::from_millis(10),
+        },
+        ..Default::default()
+    })
+    .expect("server start");
+    let seq = server.seq;
+    let vocab = server.vocab;
+    let windows: Vec<Vec<i32>> = (0..6u64)
+        .map(|i| {
+            let mut rng = Pcg32::new(7000 + i);
+            let len = 6 + (i as usize * 5) % (seq - 6);
+            (0..len).map(|_| rng.below(vocab as u32) as i32).collect()
+        })
+        .collect();
+    let mut golden = DecodeEngine::reference(DecodeModel::synth(
+        monarch_cim::model::ModelConfig::tiny(),
+        2025,
+    ));
+    let expected: Vec<Vec<f32>> = windows.iter().map(|w| golden.score(w).0).collect();
+    std::thread::scope(|scope| {
+        for (w, want) in windows.iter().zip(&expected) {
+            let srv = &server;
+            scope.spawn(move || {
+                let got = srv.infer(w.clone()).expect("inference");
+                assert_eq!(&got, want, "chunked ingestion changed the logits");
+            });
+        }
+    });
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap.requests, 6);
+    assert_eq!(snap.errors, 0);
+    let tokens: usize = windows.iter().map(|w| w.len()).sum();
+    assert_eq!(snap.sim_tokens, tokens as u64);
+    assert!(
+        snap.prefill_chunks > 0,
+        "no multi-position replays recorded despite prefill_chunk=4"
+    );
+    assert!(snap.prefill_positions >= 2 * snap.prefill_chunks);
+    assert!(snap.ttft_p50_us > 0.0, "TTFT not recorded");
+    assert!(
+        snap.inter_token_p50_us > 0.0,
+        "inter-token latency not recorded (windows span several chunks)"
+    );
+    // TTFT covers at most the first chunk; a full window takes several
+    // steps more, so the blended p50 latency must sit above TTFT's share
+    assert!(snap.latency_p50_us >= snap.ttft_p50_us);
+    server.shutdown();
+}
+
+#[test]
 fn server_output_is_deterministic() {
     // The same window must produce identical logits on repeat requests
     // and across separately started servers (seeded weight synthesis).

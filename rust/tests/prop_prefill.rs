@@ -1,0 +1,282 @@
+//! Property tests for chunked prefill (`sim::prefill`, DESIGN.md §6c):
+//! over random model geometries, mapping strategies, chunk sizes 1..=S
+//! and chunk *partitions*, position-parallel prompt ingestion is
+//! **bit-identical** to token-by-token feeding — per-position logits,
+//! KV-cache contents, greedy token sequences and per-position cost
+//! records — including mid-chunk admission into a busy
+//! [`BatchDecodeEngine`] whose neighbours keep decoding.
+//!
+//! This is the ISSUE-4 acceptance property: chunking changes only *how
+//! many positions share one batched replay* (lanes = positions), never
+//! what any position computes, because each lane replays exactly the
+//! single-stream f32 operations and causal attention is a cache-prefix
+//! bound.
+
+use monarch_cim::cim::CimParams;
+use monarch_cim::mapping::Strategy;
+use monarch_cim::model::ModelConfig;
+use monarch_cim::sim::decode::{BatchDecodeEngine, DecodeEngine, DecodeModel};
+use monarch_cim::util::prop::forall;
+
+/// Random decoder-only config with a perfect-square d_model and heads
+/// dividing it (the decode engine's contract).
+fn random_decoder_cfg(g: &mut monarch_cim::util::prop::Gen) -> ModelConfig {
+    let mut cfg = ModelConfig::tiny();
+    cfg.d_model = g.choose(&[16usize, 64]);
+    cfg.n_heads = g.choose(&[2usize, 4]);
+    cfg.d_ff = cfg.d_model * g.usize(1, 4);
+    cfg.dec_layers = g.usize(1, 2);
+    cfg.vocab = g.choose(&[64usize, 128]);
+    cfg.seq = 16;
+    cfg
+}
+
+#[test]
+fn prop_chunked_prefill_bit_identical_to_token_by_token() {
+    // Step-level: feed one prompt through random-size chunks and compare
+    // every observable — per-position logits (lane order), the slot's
+    // last logits, and the full KV cache — bitwise against forward().
+    forall("chunked prefill == token-by-token forward", 6, |g| {
+        let cfg = random_decoder_cfg(g);
+        let b = (cfg.d_model as f64).sqrt().round() as usize;
+        let mut params = CimParams::default();
+        params.array_dim = g.choose(&[16usize, 32]);
+        if b > params.array_dim {
+            return;
+        }
+        let seed = g.usize(0, 1 << 30) as u64;
+        let strategy = g.choose(&[Strategy::Linear, Strategy::SparseMap, Strategy::DenseMap]);
+        let plen = g.usize(1, 12);
+        let prompt: Vec<i32> = (0..plen)
+            .map(|i| ((i * 13 + 5) % cfg.vocab) as i32)
+            .collect();
+        let mut be = BatchDecodeEngine::on_chip(
+            DecodeModel::synth(cfg.clone(), seed),
+            params.clone(),
+            strategy,
+            1,
+        );
+        let mut single = DecodeEngine::on_chip(
+            DecodeModel::synth(cfg.clone(), seed),
+            params.clone(),
+            strategy,
+        );
+        let slot = be.try_admit().unwrap();
+        let mut fed = 0usize;
+        while fed < plen {
+            let c = g.usize(1, (plen - fed).min(8)); // random chunk partition
+            be.step_chunks(&[(slot, &prompt[fed..fed + c])]);
+            // every position of the chunk must match forward() bitwise
+            for i in 0..c {
+                let want = single.forward(prompt[fed + i]).to_vec();
+                assert_eq!(
+                    be.lane_logits(i),
+                    want.as_slice(),
+                    "{strategy:?} chunk at {fed} size {c}: lane {i} logits drifted"
+                );
+            }
+            // the slot's persisted logits are the chunk's last position
+            assert_eq!(
+                be.logits(slot),
+                be.lane_logits(c - 1),
+                "slot logits must be the chunk's last lane"
+            );
+            fed += c;
+        }
+        // KV caches identical, bit for bit, at every layer and position
+        assert_eq!(be.kv_len(slot), single.kv_len());
+        for l in 0..cfg.dec_layers {
+            for pos in 0..plen {
+                assert_eq!(
+                    be.kv(slot).key(l, pos),
+                    single.kv_cache().key(l, pos),
+                    "{strategy:?} layer {l} pos {pos}: key drifted"
+                );
+                assert_eq!(
+                    be.kv(slot).value(l, pos),
+                    single.kv_cache().value(l, pos),
+                    "{strategy:?} layer {l} pos {pos}: value drifted"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_chunked_generate_equals_independent_engines() {
+    // End-to-end: generate_batch_chunked over random chunk sizes,
+    // capacities and ragged prompts (more requests than slots → mid-run
+    // eviction + admission, so fresh prompts prefill while in-flight
+    // neighbours decode in the SAME steps) must reproduce independent
+    // single-stream engines token-for-token and cost-for-cost.
+    forall("chunked generate_batch == single-stream engines", 6, |g| {
+        let cfg = random_decoder_cfg(g);
+        let b = (cfg.d_model as f64).sqrt().round() as usize;
+        let mut params = CimParams::default();
+        params.array_dim = g.choose(&[16usize, 32]);
+        if b > params.array_dim {
+            return;
+        }
+        let seed = g.usize(0, 1 << 30) as u64;
+        let strategy = g.choose(&[Strategy::Linear, Strategy::SparseMap, Strategy::DenseMap]);
+        let capacity = g.usize(1, 4);
+        let n_requests = capacity + g.usize(0, 3);
+        let n_tokens = g.usize(1, 4);
+        let chunk = g.usize(1, cfg.seq); // 1..=S
+        let prompts: Vec<Vec<i32>> = (0..n_requests)
+            .map(|r| {
+                let len = g.usize(1, 8); // ragged prompt lengths
+                (0..len)
+                    .map(|i| ((r * 31 + i * 7 + 3) % cfg.vocab) as i32)
+                    .collect()
+            })
+            .collect();
+        let mut batched = BatchDecodeEngine::on_chip(
+            DecodeModel::synth(cfg.clone(), seed),
+            params.clone(),
+            strategy,
+            capacity,
+        );
+        let results = batched.generate_batch_chunked(&prompts, n_tokens, chunk);
+        assert_eq!(results.len(), n_requests);
+        assert_eq!(batched.occupancy(), 0, "all slots evicted after the run");
+        let mut single = DecodeEngine::on_chip(
+            DecodeModel::synth(cfg.clone(), seed),
+            params.clone(),
+            strategy,
+        );
+        for (ri, (p, r)) in prompts.iter().zip(&results).enumerate() {
+            let want = single.generate(p, n_tokens);
+            assert_eq!(
+                r.tokens, want.tokens,
+                "{strategy:?} capacity {capacity} chunk {chunk} request {ri}: \
+                 chunked tokens diverged from an independent engine"
+            );
+            assert_eq!(
+                r.per_token.len(),
+                want.per_token.len(),
+                "{strategy:?} request {ri}: per-position cost count"
+            );
+            // chunking must not change per-position accounting — the
+            // physical per-position work is the same (trace.rs model)
+            for (i, (a, w)) in r.per_token.iter().zip(&want.per_token).enumerate() {
+                assert_eq!(
+                    a.latency.critical_ns(),
+                    w.latency.critical_ns(),
+                    "{strategy:?} request {ri} position {i}: latency drift"
+                );
+                assert_eq!(
+                    a.energy.total_nj(),
+                    w.energy.total_nj(),
+                    "{strategy:?} request {ri} position {i}: energy drift"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_mid_chunk_admission_leaves_neighbours_untouched() {
+    // A slot mid-decode steps together with a freshly admitted slot
+    // prefilling a whole chunk; both must stay bit-identical to their
+    // single-stream twins — the continuous-batching integration point.
+    forall("mid-chunk admission is interference-free", 6, |g| {
+        let cfg = random_decoder_cfg(g);
+        let b = (cfg.d_model as f64).sqrt().round() as usize;
+        let mut params = CimParams::default();
+        params.array_dim = g.choose(&[16usize, 32]);
+        if b > params.array_dim {
+            return;
+        }
+        let seed = g.usize(0, 1 << 30) as u64;
+        let strategy = g.choose(&[Strategy::SparseMap, Strategy::DenseMap]);
+        let mut be = BatchDecodeEngine::on_chip(
+            DecodeModel::synth(cfg.clone(), seed),
+            params.clone(),
+            strategy,
+            2,
+        );
+        let mk_engine = || {
+            DecodeEngine::on_chip(
+                DecodeModel::synth(cfg.clone(), seed),
+                params.clone(),
+                strategy,
+            )
+        };
+        // slot 0: established request with a few cached positions
+        let warm: Vec<i32> = (0..g.usize(1, 4))
+            .map(|i| ((i * 19 + 2) % cfg.vocab) as i32)
+            .collect();
+        let s0 = be.try_admit().unwrap();
+        be.step_chunks(&[(s0, &warm[..])]);
+        let mut e0 = mk_engine();
+        for &t in &warm {
+            e0.forward(t);
+        }
+        // slot 1 admitted mid-run; its whole prompt arrives as ONE chunk
+        // in the same step that advances slot 0 by one decode token
+        let s1 = be.try_admit().unwrap();
+        let fresh: Vec<i32> = (0..g.usize(1, 6))
+            .map(|i| ((i * 23 + 7) % cfg.vocab) as i32)
+            .collect();
+        let next0 = ((warm.len() * 3 + 1) % cfg.vocab) as i32;
+        be.step_chunks(&[(s0, &[next0][..]), (s1, &fresh[..])]);
+        let want0 = e0.forward(next0).to_vec();
+        assert_eq!(
+            be.logits(s0),
+            want0.as_slice(),
+            "{strategy:?}: decode lane disturbed by a neighbour's prefill"
+        );
+        let mut e1 = mk_engine();
+        let mut want1 = Vec::new();
+        for &t in &fresh {
+            want1 = e1.forward(t).to_vec();
+        }
+        assert_eq!(
+            be.logits(s1),
+            want1.as_slice(),
+            "{strategy:?}: prefill chunk disturbed by a decode lane"
+        );
+        // flattened lane order: slot 0's single token, then the chunk
+        assert_eq!(be.lane_logits(0), want0.as_slice());
+        assert_eq!(be.lane_logits(fresh.len()), want1.as_slice());
+    });
+}
+
+#[test]
+fn overlong_requests_are_rejected_at_admission() {
+    // ISSUE-4 satellite regression: prompt + generation beyond the
+    // context window must fail loudly (no silent last-position reuse) on
+    // every ingestion path, while exactly-full windows stay valid.
+    let cfg = ModelConfig::tiny();
+    let seq = cfg.seq;
+    let overlong: Vec<i32> = vec![1; seq + 1];
+    let fits: Vec<i32> = vec![1; seq];
+
+    let r = std::panic::catch_unwind(|| {
+        let mut eng = DecodeEngine::reference(DecodeModel::synth(ModelConfig::tiny(), 1));
+        eng.score(&overlong)
+    });
+    assert!(r.is_err(), "score must reject seq+1 tokens");
+
+    let r = std::panic::catch_unwind(|| {
+        let mut eng = DecodeEngine::reference(DecodeModel::synth(ModelConfig::tiny(), 1));
+        eng.generate(&fits[..4], seq) // 4 + seq > seq
+    });
+    assert!(r.is_err(), "generate must reject prompt+gen > seq");
+
+    let r = std::panic::catch_unwind(|| {
+        let mut be =
+            BatchDecodeEngine::reference(DecodeModel::synth(ModelConfig::tiny(), 1), 1);
+        be.generate_batch_chunked(&[overlong.clone()], 0, 4)
+    });
+    assert!(r.is_err(), "chunked admission must reject overlong prompts");
+
+    // the boundary case is servable end to end, chunked or not
+    let mut be = BatchDecodeEngine::reference(DecodeModel::synth(ModelConfig::tiny(), 1), 1);
+    let out = be.generate_batch_chunked(&[fits.clone()], 0, 5);
+    assert_eq!(out[0].per_token.len(), seq);
+    let mut eng = DecodeEngine::reference(DecodeModel::synth(ModelConfig::tiny(), 1));
+    let (logits, _) = eng.score(&fits);
+    assert_eq!(logits.len(), seq * cfg.vocab);
+}
