@@ -10,14 +10,17 @@
 //! `BatchDecodeEngine::generate_batch` — the serving amortization) and a
 //! **chunked-prefill sweep** (prompt lengths × chunk sizes through
 //! `BatchDecodeEngine::step_chunks`, lanes = positions — the
-//! time-to-first-token amortization), and writes machine-readable
-//! `BENCH_decode.json` / `BENCH_prefill.json` so the perf trajectory is
-//! trackable per commit.
+//! time-to-first-token amortization) and a **speculative-decode sweep**
+//! (K ∈ {1,2,4,8} × self-draft depths through `SpeculativeEngine`,
+//! verify-as-chunk — accepted-tokens/round and modeled speedup vs plain
+//! decode, cross-checked bit-identical), and writes machine-readable
+//! `BENCH_decode.json` / `BENCH_prefill.json` / `BENCH_spec.json` so
+//! the perf trajectory is trackable per commit.
 //!
 //! ```text
-//! cargo bench --bench decode_throughput                      # writes BENCH_decode.json + BENCH_prefill.json
-//! cargo bench --bench decode_throughput -- --bench-json out.json --prefill-json pre.json
-//! BENCH_JSON=out.json BENCH_PREFILL_JSON=pre.json ...        # env override
+//! cargo bench --bench decode_throughput                      # writes all three JSON artifacts
+//! cargo bench --bench decode_throughput -- --bench-json out.json --prefill-json pre.json --spec-json spec.json
+//! BENCH_JSON=out.json BENCH_PREFILL_JSON=pre.json BENCH_SPEC_JSON=spec.json ...  # env override
 //! BENCH_QUICK=1 ...                                          # CI smoke mode
 //! ```
 
@@ -25,6 +28,7 @@ use monarch_cim::cim::CimParams;
 use monarch_cim::mapping::Strategy;
 use monarch_cim::model::ModelConfig;
 use monarch_cim::sim::decode::{BatchDecodeEngine, DecodeEngine, DecodeModel};
+use monarch_cim::sim::speculate::{self_draft_model, SpeculativeEngine};
 use monarch_cim::util::bench::{section, Bencher};
 use monarch_cim::util::json::{num, obj, s, Json};
 
@@ -60,6 +64,11 @@ fn bench_json_path() -> std::path::PathBuf {
 /// Output path for the prefill-sweep JSON artifact.
 fn prefill_json_path() -> std::path::PathBuf {
     artifact_path("prefill-json", "BENCH_PREFILL_JSON", "BENCH_prefill.json")
+}
+
+/// Output path for the speculative-sweep JSON artifact.
+fn spec_json_path() -> std::path::PathBuf {
+    artifact_path("spec-json", "BENCH_SPEC_JSON", "BENCH_spec.json")
 }
 
 fn main() {
@@ -268,6 +277,102 @@ fn main() {
     match std::fs::write(&prefill_path, format!("{prefill_doc}\n")) {
         Ok(()) => println!("wrote {}", prefill_path.display()),
         Err(e) => eprintln!("failed to write {}: {e}", prefill_path.display()),
+    }
+
+    section("speculative decode sweep — K draft proposals, one batched verify (DenseMap)");
+    // Each round verifies K+1 positions through ONE chunked replay
+    // (sim::speculate): the modeled win is the pipelined verify pass vs
+    // K+1 serial decode steps, discounted by the draft's own forwards
+    // and by rejected lanes. The sweep crosses K with self-draft depth;
+    // full depth (tiny: 2 layers) is a perfect draft and pins the best
+    // case — accepted-tokens/round must exceed 1 there.
+    let mut spec_records: Vec<(String, Json)> = Vec::new();
+    let mut best_tokens_per_round = 0.0f64;
+    {
+        // plain greedy baseline: modeled serial latency of the generated
+        // positions (the phase speculation accelerates)
+        let mut plain = DecodeEngine::on_chip(
+            DecodeModel::synth(cfg.clone(), 2025),
+            params.clone(),
+            Strategy::DenseMap,
+        );
+        let plain_r = plain.generate(&PROMPT, TOKENS);
+        let plain_gen_ns: f64 = plain_r.per_token[PROMPT.len()..]
+            .iter()
+            .map(|c| c.latency.critical_ns())
+            .sum();
+        for &layers in &[1usize, 2] {
+            for &k in &[1usize, 2, 4, 8] {
+                let mut spec = SpeculativeEngine::on_chip(
+                    DecodeModel::synth(cfg.clone(), 2025),
+                    self_draft_model(&cfg, 2025, layers),
+                    params.clone(),
+                    Strategy::DenseMap,
+                    k,
+                );
+                let meas = b
+                    .bench(&format!("speculative decode d{layers} K={k}"), || {
+                        std::hint::black_box(spec.generate(&PROMPT, TOKENS))
+                    })
+                    .clone();
+                let tps = (PROMPT.len() + TOKENS) as f64 / (meas.mean_ns * 1e-9);
+                // one un-timed run for acceptance stats + cross-check
+                let r = spec.generate(&PROMPT, TOKENS);
+                assert_eq!(
+                    r.tokens, plain_r.tokens,
+                    "speculative decode diverged from plain greedy (d{layers} K={k})"
+                );
+                let tpr = r.tokens_per_round();
+                best_tokens_per_round = best_tokens_per_round.max(tpr);
+                let spec_ns = r.modeled_generation_ns();
+                let speedup = plain_gen_ns / spec_ns.max(1e-12);
+                println!(
+                    "  -> d{layers} K={k}: acceptance {:.2}, {:.2} tokens/round, modeled speedup {:.2}x, {:.0} tokens/s wall",
+                    r.acceptance_rate(),
+                    tpr,
+                    speedup,
+                    tps,
+                );
+                spec_records.push((
+                    format!("draft_{layers}_k_{k}"),
+                    obj(vec![
+                        ("draft_layers", num(layers as f64)),
+                        ("k", num(k as f64)),
+                        ("rounds", num(r.rounds.len() as f64)),
+                        ("acceptance_rate", num(r.acceptance_rate())),
+                        ("accepted_tokens_per_round", num(tpr)),
+                        ("modeled_speedup_vs_plain", num(speedup)),
+                        ("modeled_spec_ns", num(spec_ns)),
+                        ("modeled_plain_ns", num(plain_gen_ns)),
+                        ("tokens_per_sec", num(tps)),
+                    ]),
+                ));
+            }
+        }
+        assert!(
+            best_tokens_per_round > 1.0,
+            "no self-draft configuration beat one token per round \
+             (best {best_tokens_per_round})"
+        );
+    }
+    let spec_path = spec_json_path();
+    let spec_doc = obj(vec![
+        ("bench", s("speculative_decode")),
+        ("model", s(cfg.name)),
+        ("strategy", s("dense")),
+        ("prompt_len", num(PROMPT.len() as f64)),
+        ("generated_tokens", num(TOKENS as f64)),
+        (
+            "sweep",
+            obj(spec_records
+                .iter()
+                .map(|(key, v)| (key.as_str(), v.clone()))
+                .collect()),
+        ),
+    ]);
+    match std::fs::write(&spec_path, format!("{spec_doc}\n")) {
+        Ok(()) => println!("wrote {}", spec_path.display()),
+        Err(e) => eprintln!("failed to write {}: {e}", spec_path.display()),
     }
 
     section("chip programming cost (map + compile plan + write)");

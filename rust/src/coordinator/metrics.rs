@@ -36,6 +36,13 @@ struct Inner {
     prefill_chunks: u64,
     /// Positions ingested through those multi-position replays.
     prefill_positions: u64,
+    /// Speculative decoding: verify rounds in which the draft proposed.
+    spec_rounds: u64,
+    /// Draft tokens proposed across those rounds.
+    spec_proposed: u64,
+    /// Draft tokens accepted (each equal to the served window's actual
+    /// next token).
+    spec_accepted: u64,
 }
 
 /// Thread-safe metrics sink.
@@ -87,6 +94,16 @@ pub struct Snapshot {
     /// positions they carried (mean chunk = positions / chunks).
     pub prefill_chunks: u64,
     pub prefill_positions: u64,
+    /// Speculative decoding: verify rounds with at least one proposal.
+    pub spec_rounds: u64,
+    /// Accepted / proposed draft tokens over all rounds (0.0 until a
+    /// round with proposals completes). This is the draft-quality dial:
+    /// chunk width per verify round is `accepted + 1`.
+    pub spec_acceptance_rate: f64,
+    /// Mean positions advanced per verify round (`accepted + 1` per
+    /// round; plain decode is 1.0, anything above is the speculative
+    /// win). 0.0 until a round completes.
+    pub spec_tokens_per_round: f64,
 }
 
 impl Metrics {
@@ -164,6 +181,20 @@ impl Metrics {
         g.prefill_positions += positions as u64;
     }
 
+    /// Record one speculative verify round: the draft `proposed` tokens
+    /// for a served window and `accepted` of them matched the window's
+    /// actual continuation (so the round's verify chunk advanced
+    /// `accepted + 1` positions). Rounds without proposals (K clipped
+    /// to 0 at a window tail) are not recorded — they are ordinary
+    /// decode steps.
+    pub fn record_speculation(&self, proposed: usize, accepted: usize) {
+        debug_assert!(accepted <= proposed);
+        let mut g = self.inner.lock().unwrap();
+        g.spec_rounds += 1;
+        g.spec_proposed += proposed as u64;
+        g.spec_accepted += accepted as u64;
+    }
+
     /// Sample the continuous-batching occupancy after one token step:
     /// `active` slots held in-flight sequences out of `capacity`.
     pub fn record_occupancy(&self, active: usize, capacity: usize) {
@@ -230,6 +261,17 @@ impl Metrics {
             },
             prefill_chunks: g.prefill_chunks,
             prefill_positions: g.prefill_positions,
+            spec_rounds: g.spec_rounds,
+            spec_acceptance_rate: if g.spec_proposed == 0 {
+                0.0
+            } else {
+                g.spec_accepted as f64 / g.spec_proposed as f64
+            },
+            spec_tokens_per_round: if g.spec_rounds == 0 {
+                0.0
+            } else {
+                (g.spec_accepted + g.spec_rounds) as f64 / g.spec_rounds as f64
+            },
         }
     }
 }
@@ -310,6 +352,57 @@ mod tests {
         assert!(s.inter_token_p50_us >= 40.0);
         assert_eq!(s.prefill_chunks, 2);
         assert_eq!(s.prefill_positions, 12);
+    }
+
+    #[test]
+    fn speculation_accounting() {
+        let m = Metrics::new();
+        let s = m.snapshot();
+        assert_eq!(s.spec_rounds, 0);
+        assert_eq!(s.spec_acceptance_rate, 0.0);
+        assert_eq!(s.spec_tokens_per_round, 0.0);
+        // round 1: 4 proposed, 3 accepted (advanced 4 positions);
+        // round 2: 4 proposed, 0 accepted (advanced 1 — pure decode pace)
+        m.record_speculation(4, 3);
+        m.record_speculation(4, 0);
+        let s = m.snapshot();
+        assert_eq!(s.spec_rounds, 2);
+        assert!((s.spec_acceptance_rate - 3.0 / 8.0).abs() < 1e-12);
+        assert!((s.spec_tokens_per_round - 2.5).abs() < 1e-12);
+        // a round whose every proposal landed
+        m.record_speculation(2, 2);
+        let s = m.snapshot();
+        assert_eq!(s.spec_rounds, 3);
+        assert!((s.spec_acceptance_rate - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles_with_no_samples_and_one_sample() {
+        // the untested edge cases: every percentile must be 0.0 with no
+        // samples (not panic — `util::stats::percentile` asserts
+        // non-empty, so the is_empty guards are load-bearing), and a
+        // single sample must be both its own p50 and p99
+        let m = Metrics::new();
+        let s = m.snapshot();
+        assert_eq!(s.latency_p50_us, 0.0);
+        assert_eq!(s.latency_p99_us, 0.0);
+        assert_eq!(s.ttft_p50_us, 0.0);
+        assert_eq!(s.ttft_p99_us, 0.0);
+        assert_eq!(s.inter_token_p50_us, 0.0);
+        assert_eq!(s.inter_token_p99_us, 0.0);
+        m.record_request_timing(250.0, None);
+        m.record_completions(&[500.0]);
+        let s = m.snapshot();
+        assert_eq!(s.ttft_p50_us, 250.0);
+        assert_eq!(s.ttft_p99_us, 250.0);
+        assert_eq!(s.latency_p50_us, 500.0);
+        assert_eq!(s.latency_p99_us, 500.0);
+        // inter-token still has no samples
+        assert_eq!(s.inter_token_p50_us, 0.0);
+        m.record_request_timing(100.0, Some(40.0));
+        let s = m.snapshot();
+        assert_eq!(s.inter_token_p50_us, 40.0);
+        assert_eq!(s.inter_token_p99_us, 40.0);
     }
 
     #[test]

@@ -39,8 +39,9 @@ use crate::cim::CimParams;
 use crate::mapping::Strategy;
 use crate::model::ModelConfig;
 use crate::runtime::{literal_i32, Runtime};
-use crate::sim::decode::{BatchDecodeEngine, DecodeModel};
+use crate::sim::decode::{argmax, BatchDecodeEngine, DecodeModel};
 use crate::sim::prefill::allocate_chunks;
+use crate::sim::speculate::self_draft_model;
 use crate::sim::trace::sum_costs;
 use crate::util::json::Json;
 
@@ -70,6 +71,20 @@ pub struct CimSimConfig {
     /// step. Whatever the setting, in-flight neighbours always keep
     /// their decode lane (`batching::prefill_lane_budget`).
     pub prefill_chunk: usize,
+    /// Speculative decoding (`sim::speculate`, DESIGN.md §6d): when
+    /// `> 0`, a draft model races ahead of each in-flight window and
+    /// every verify replay spans the agreed run plus one correction
+    /// position (up to K proposals per round). `0` (default) disables
+    /// speculation entirely — the worker is byte-identical to the plain
+    /// chunked-prefill path. Scores are bit-identical either way;
+    /// speculation only changes how positions group into replays, and
+    /// [`Metrics`] gains acceptance-rate / tokens-per-round counters.
+    pub speculate_k: usize,
+    /// Draft depth for speculation: the self-draft keeps this many of
+    /// the target's decoder layers (`sim::speculate::self_draft_model`).
+    /// `0` (default) means full depth — a perfect draft. Ignored when
+    /// `speculate_k == 0`.
+    pub draft_layers: usize,
 }
 
 impl Default for CimSimConfig {
@@ -80,6 +95,8 @@ impl Default for CimSimConfig {
             cim: CimParams::default(),
             seed: 2025,
             prefill_chunk: 0,
+            speculate_k: 0,
+            draft_layers: 0,
         }
     }
 }
@@ -275,6 +292,57 @@ struct InFlight {
     first_chunk: usize,
 }
 
+/// Speculative chunk sizing for one in-flight window (ISSUE 5,
+/// `sim::speculate` adapted to teacher-forced scoring): the draft races
+/// ahead of the slot's scored prefix, and the next verify chunk spans
+/// the agreed run plus one correction position — `accepted + 1` window
+/// positions, the exact generation-side round shape. The served window
+/// is the ground truth here, so a mismatched proposal is simply never
+/// fed and **no rollback is needed**; what the counters measure is how
+/// far the draft would have carried a real decode. Scores are
+/// unaffected either way: chunking never changes what a position
+/// computes (`tests/prop_prefill.rs`).
+fn speculative_want(
+    draft: &mut BatchDecodeEngine,
+    slot: usize,
+    window: &[i32],
+    fed: usize,
+    speculate_k: usize,
+    metrics: &Metrics,
+) -> usize {
+    let remaining = window.len() - fed;
+    let kprop = speculate_k.min(remaining - 1);
+    if kprop == 0 {
+        // window tail: an ordinary decode-pace step — the draft has
+        // nothing to buy here, so it does no work (this is always the
+        // slot's last step; nothing later depends on its draft state)
+        return 1;
+    }
+    // resync the draft to the scored prefix: it can sit ahead if a
+    // previous verify chunk was cut by the lane allocator — roll it
+    // back one short and re-step so its logits predict position `fed`
+    if draft.kv_len(slot) > fed {
+        draft.truncate_kv(slot, fed - 1);
+    }
+    if draft.kv_len(slot) < fed {
+        let from = draft.kv_len(slot);
+        draft.step_chunks(&[(slot, &window[from..fed])]);
+    }
+    let mut acc = 0usize;
+    while acc < kprop {
+        let d = argmax(draft.logits(slot)) as i32;
+        if d != window[fed + acc] {
+            break;
+        }
+        // the proposal matched: advance the draft over the confirmed
+        // ground-truth token and keep racing
+        acc += 1;
+        draft.step_chunks(&[(slot, &window[fed + acc - 1..fed + acc])]);
+    }
+    metrics.record_speculation(kprop, acc);
+    acc + 1
+}
+
 /// Worker loop for the CIM-sim backend: a continuous-batching scheduler
 /// over ONE [`BatchDecodeEngine`] owned by the worker thread. The chip
 /// is programmed once; `policy.max_batch` sequence slots share it.
@@ -300,6 +368,14 @@ struct InFlight {
 /// ingestion buys (time-to-first-token) and what it leaves unchanged
 /// (the decode cadence).
 ///
+/// With `speculate_k > 0` a layer-truncated self-draft (its own chip,
+/// one draft slot per target slot) sizes each window's chunks
+/// speculatively ([`speculative_want`]): the verify replay spans the
+/// draft-agreed run plus one correction position, and the
+/// acceptance-rate / tokens-per-round counters land in [`Metrics`].
+/// `speculate_k == 0` leaves this worker byte-identical to the plain
+/// chunked-prefill path.
+///
 /// Because the engine is constructed once and reused, its compiled
 /// execution plan, chip pass scratch and the shared chunk workspace
 /// are reused across every request this worker ever serves — the
@@ -317,13 +393,19 @@ fn run_cimsim_worker(
         cim,
         seed,
         prefill_chunk,
+        speculate_k,
+        draft_layers,
     } = cfg;
     let (seq, vocab) = (model_cfg.seq, model_cfg.vocab);
     let slots = policy.max_batch.max(1);
     // chunk 0 = auto: prefill as wide as the batch lane budget allows
     let chunk = if prefill_chunk == 0 { slots } else { prefill_chunk }.max(1);
-    let lane_budget = super::batching::prefill_lane_budget(slots, chunk);
-    let setup = (move || -> Result<BatchDecodeEngine> {
+    // with speculation, a verify chunk spans at most K + 1 lanes per
+    // slot — widen the budget so agreed runs are not cut mid-race (the
+    // draft resync path below tolerates cuts regardless)
+    let lane_budget = super::batching::prefill_lane_budget(slots, chunk)
+        .max(if speculate_k > 0 { slots * (speculate_k + 1) } else { 0 });
+    let setup = (move || -> Result<(BatchDecodeEngine, Option<BatchDecodeEngine>)> {
         if model_cfg.enc_layers != 0 || model_cfg.dec_layers == 0 {
             bail!(
                 "CIM-sim backend needs a decoder-only model, got {}",
@@ -338,13 +420,23 @@ fn run_cimsim_worker(
                 cim.array_dim
             );
         }
+        // speculation: a layer-truncated self-draft on its own chip,
+        // with one draft slot mirroring each target slot (per-request
+        // draft KV for concurrent ragged windows)
+        let draft = if speculate_k > 0 {
+            // draft_layers 0 = full depth (self_draft_model's contract)
+            let dmodel = self_draft_model(&model_cfg, seed, draft_layers);
+            Some(BatchDecodeEngine::on_chip(dmodel, cim.clone(), strategy, slots))
+        } else {
+            None
+        };
         let model = DecodeModel::synth(model_cfg, seed);
-        Ok(BatchDecodeEngine::on_chip(model, cim, strategy, slots))
+        Ok((BatchDecodeEngine::on_chip(model, cim, strategy, slots), draft))
     })();
-    let mut engine = match setup {
-        Ok(e) => {
+    let (mut engine, mut draft) = match setup {
+        Ok(p) => {
             let _ = ready_tx.send(Ok((seq, vocab)));
-            e
+            p
         }
         Err(e) => {
             let _ = ready_tx.send(Err(e));
@@ -387,6 +479,12 @@ fn run_cimsim_worker(
                 continue;
             }
             let slot = engine.try_admit().expect("occupancy < capacity");
+            if let Some(d) = draft.as_mut() {
+                // admissions and releases are paired, so both pools have
+                // identical free sets and hand out the same slot index
+                let ds = d.try_admit().expect("draft pool mirrors the target pool");
+                debug_assert_eq!(ds, slot, "draft slot diverged from target slot");
+            }
             let window = req.tokens.len();
             active[slot] = Some(InFlight {
                 tokens: req.tokens,
@@ -413,7 +511,21 @@ fn run_cimsim_worker(
         for (slot, a) in active.iter().enumerate() {
             if let Some(a) = a {
                 step_plan.push((slot, 0));
-                wants.push((a.tokens.len() - a.fed).min(chunk));
+                let want = match draft.as_mut() {
+                    // speculative chunking needs a scored prefix for the
+                    // draft to continue from; the first chunk of a window
+                    // prefills normally
+                    Some(d) if a.fed > 0 => speculative_want(
+                        d,
+                        slot,
+                        &a.tokens,
+                        a.fed,
+                        speculate_k,
+                        &metrics,
+                    ),
+                    _ => (a.tokens.len() - a.fed).min(chunk),
+                };
+                wants.push(want);
             }
         }
         let alloc = allocate_chunks(&wants, lane_budget);
@@ -447,7 +559,10 @@ fn run_cimsim_worker(
                 a.ttft_us = Some(a.t0.elapsed().as_micros() as f64);
                 a.first_chunk = c;
             }
-            if c > 1 {
+            // prefill counters mean *prompt-ingestion* chunks; verify
+            // chunks sized by the draft (every post-first chunk when
+            // speculation is on) are counted by record_speculation
+            if c > 1 && (draft.is_none() || a.fed == 0) {
                 metrics.record_prefill_chunk(c);
             }
             a.fed += c;
@@ -469,6 +584,9 @@ fn run_cimsim_worker(
                 };
                 metrics.record_request_timing(ttft, inter);
                 engine.release(slot);
+                if let Some(d) = draft.as_mut() {
+                    d.release(slot);
+                }
                 finished.push(active[slot].take().expect("finished slot"));
             }
         }

@@ -38,8 +38,12 @@ fn usage() -> ! {
                     [--batch N]  (N>1: N concurrent streams, one chip)\n\
                     [--prefill-chunk C]  (chunked prompt ingestion, C\n\
                     positions per replay, cross-checked vs token-by-token)\n\
+                    [--speculate-k K] [--draft-layers D]  (speculative\n\
+                    decode: D-layer self-draft proposes K tokens/round,\n\
+                    cross-checked bit-for-bit vs plain greedy)\n\
            serve    [--requests 64] [--artifacts DIR] [--backend pjrt|cim-sim]\n\
                     [--strategy dense] [--prefill-chunk C]\n\
+                    [--speculate-k K] [--draft-layers D]\n\
            dse      [--model ...] [--adcs 1,4,8,16,32] [--budget N]\n\
            e2e      [--artifacts DIR]"
     );
@@ -208,6 +212,9 @@ fn cmd_simulate(args: &Args) {
 
 fn cmd_decode(args: &Args) {
     use monarch_cim::sim::decode::{BatchDecodeEngine, DecodeEngine, DecodeModel};
+    use monarch_cim::sim::speculate::{
+        self_draft_layers, self_draft_model, SpeculativeEngine,
+    };
     let cfg = model_of_decoder(args);
     let prompt_len = args.usize_or("prompt", 4).max(1);
     if prompt_len >= cfg.seq {
@@ -232,6 +239,8 @@ fn cmd_decode(args: &Args) {
     }
     let batch = args.usize_or("batch", 1).max(1);
     let prefill_chunk = args.usize_or("prefill-chunk", 1).max(1);
+    let speculate_k = args.usize_or("speculate-k", 0);
+    let draft_layers = args.usize_or("draft-layers", 0);
     let seed = args.usize_or("seed", 2025) as u64;
     let mut cim = CimParams::default();
     if args.has("adcs") {
@@ -422,6 +431,55 @@ fn cmd_decode(args: &Args) {
             );
         }
     }
+
+    if speculate_k > 0 {
+        // Speculative decode cross-check mode: a layer-truncated
+        // self-draft proposes K tokens per round, the target verifies
+        // all K+1 positions in one batched replay (sim::speculate), and
+        // the emitted sequence is checked bit-for-bit against plain
+        // greedy decode — the ISSUE-5 guarantee, live on the CLI.
+        println!(
+            "\nspeculative decode (K={speculate_k} proposals/round, {}-layer self-draft):",
+            self_draft_layers(&cfg, draft_layers)
+        );
+        for &strategy in &strategies {
+            let mut spec = SpeculativeEngine::on_chip(
+                DecodeModel::synth(cfg.clone(), seed),
+                self_draft_model(&cfg, seed, draft_layers),
+                cim.clone(),
+                strategy,
+                speculate_k,
+            );
+            let t0 = std::time::Instant::now();
+            let r = spec.generate(&prompt, n_tokens);
+            let wall = t0.elapsed();
+            let mut single = DecodeEngine::on_chip(
+                DecodeModel::synth(cfg.clone(), seed),
+                cim.clone(),
+                strategy,
+            );
+            let want = single.generate(&prompt, n_tokens);
+            let identical = r.tokens == want.tokens;
+            // modeled generation-phase latency: plain serial decode vs
+            // pipelined verify rounds + serial draft forwards
+            let plain_ns: f64 = want.per_token[prompt_len..]
+                .iter()
+                .map(|c| c.latency.critical_ns())
+                .sum();
+            let spec_ns = r.modeled_generation_ns();
+            println!(
+                "  {:<7} {} rounds, acceptance {:.2}, {:.2} tokens/round | modeled speedup {:.2}x | {:.2?} wall | vs plain greedy: {}",
+                strategy.name(),
+                r.rounds.len(),
+                r.acceptance_rate(),
+                r.tokens_per_round(),
+                plain_ns / spec_ns.max(1e-12),
+                wall,
+                if identical { "IDENTICAL" } else { "MISMATCH" },
+            );
+            println!("    tokens: {:?}", r.tokens);
+        }
+    }
 }
 
 fn model_of_decoder(args: &Args) -> ModelConfig {
@@ -454,9 +512,12 @@ fn cmd_serve(args: &Args) {
             });
             cfg = ServerConfig::cim_sim(strategy);
             // chunked prompt ingestion width (0 = auto from the batch
-            // lane budget — the slot capacity)
+            // lane budget — the slot capacity) and speculation knobs
+            // (0 = off; draft-layers 0 = full-depth self-draft)
             if let monarch_cim::coordinator::Backend::CimSim(sim) = &mut cfg.backend {
                 sim.prefill_chunk = args.usize_or("prefill-chunk", 0);
+                sim.speculate_k = args.usize_or("speculate-k", 0);
+                sim.draft_layers = args.usize_or("draft-layers", 0);
             }
         }
         other => {
@@ -514,6 +575,12 @@ fn cmd_serve(args: &Args) {
                 s.prefill_positions,
                 s.prefill_chunks,
                 s.prefill_positions as f64 / s.prefill_chunks as f64
+            );
+        }
+        if s.spec_rounds > 0 {
+            println!(
+                "speculation: {} verify rounds, acceptance {:.2}, {:.2} tokens/round",
+                s.spec_rounds, s.spec_acceptance_rate, s.spec_tokens_per_round
             );
         }
     }

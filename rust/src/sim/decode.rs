@@ -325,7 +325,7 @@ pub(crate) fn gelu(x: &mut [f32]) {
     }
 }
 
-fn argmax(xs: &[f32]) -> usize {
+pub(crate) fn argmax(xs: &[f32]) -> usize {
     let mut best = 0usize;
     let mut bv = f32::NEG_INFINITY;
     for (i, &v) in xs.iter().enumerate() {
@@ -342,7 +342,7 @@ fn argmax(xs: &[f32]) -> usize {
 /// fit the model's `seq` positional embeddings. Violations are caller
 /// bugs (or unvalidated client input) and fail loudly — the engine never
 /// silently reuses the last position (ISSUE 4 regression).
-fn assert_fits_context(cfg: &ModelConfig, prompt: usize, n_tokens: usize) {
+pub(crate) fn assert_fits_context(cfg: &ModelConfig, prompt: usize, n_tokens: usize) {
     assert!(
         prompt + n_tokens <= cfg.seq,
         "request exceeds the context window: prompt {prompt} + {n_tokens} generated \
@@ -425,6 +425,23 @@ impl DecodeEngine {
     /// chunked prefill against token-by-token ingestion).
     pub fn kv_cache(&self) -> &KvCache {
         &self.kv
+    }
+
+    /// LM-head logits of the latest forwarded position (borrowed from
+    /// the engine's reusable logit buffer, like
+    /// [`DecodeEngine::forward`]'s return — all zeros before the first
+    /// forward of a request).
+    pub fn logits(&self) -> &[f32] {
+        &self.bufs.logits
+    }
+
+    /// Roll the KV cache back to `len` positions (speculative-decoding
+    /// rejection, `sim::speculate`). Only *state* is rolled back: the
+    /// cost trace keeps its records, because the dropped positions
+    /// already drove rows and converted columns — rejected work stays
+    /// on the bill (DESIGN.md §6d).
+    pub fn truncate_kv(&mut self, len: usize) {
+        self.kv.truncate(len);
     }
 
     /// Process one token at the next position; returns the LM-head
@@ -737,6 +754,16 @@ impl BatchDecodeEngine {
     /// chunked prefill against token-by-token ingestion).
     pub fn kv(&self, slot: usize) -> &KvCache {
         &self.slots[slot].kv
+    }
+
+    /// Roll one slot's KV cache back to `len` positions — the
+    /// speculative-decoding rejection path (`sim::speculate`): a verify
+    /// chunk's rejected tail is dropped so the next chunk re-enters at
+    /// the first wrong position. The slot's cost trace is deliberately
+    /// *not* rolled back — rejected lanes paid their analog/ADC work
+    /// and stay on the bill (DESIGN.md §6d).
+    pub fn truncate_kv(&mut self, slot: usize, len: usize) {
+        self.slots[slot].kv.truncate(len);
     }
 
     /// LM-head logits of the slot's latest stepped position (borrowed
@@ -1233,6 +1260,30 @@ mod tests {
             for pos in 0..3 {
                 assert_eq!(be.kv(s1).key(l, pos), e1.kv_cache().key(l, pos));
                 assert_eq!(be.kv(s1).value(l, pos), e1.kv_cache().value(l, pos));
+            }
+        }
+    }
+
+    #[test]
+    fn slot_truncate_rolls_back_to_a_clean_prefix() {
+        // the speculative rollback primitive at the batch-engine level:
+        // feed a chunk, roll back past a "rejected" tail, re-feed — the
+        // cache and logits must be bitwise the straight-through run's
+        let mut be = BatchDecodeEngine::reference(DecodeModel::synth(tiny(), 13), 1);
+        let s = be.try_admit().unwrap();
+        be.step_chunks(&[(s, &[4i32, 9, 17, 21][..])]);
+        be.truncate_kv(s, 2); // drop the speculative tail [17, 21]
+        assert_eq!(be.kv_len(s), 2);
+        be.step_chunks(&[(s, &[30i32][..])]);
+        let mut single = DecodeEngine::reference(DecodeModel::synth(tiny(), 13));
+        single.forward(4);
+        single.forward(9);
+        let want = single.forward(30).to_vec();
+        assert_eq!(be.logits(s), want.as_slice(), "rollback left residue");
+        for l in 0..tiny().dec_layers {
+            for pos in 0..3 {
+                assert_eq!(be.kv(s).key(l, pos), single.kv_cache().key(l, pos));
+                assert_eq!(be.kv(s).value(l, pos), single.kv_cache().value(l, pos));
             }
         }
     }

@@ -4,14 +4,19 @@
 //! full decoder-only transformer on that chip autoregressively (KV
 //! cache, greedy sampling, per-token cost accounting); [`prefill`]
 //! ingests prompts position-parallel (chunked prefill — lanes =
-//! positions through the same batched replay); the analytical
-//! latency/energy side lives in `scheduler::timing` and [`trace`].
+//! positions through the same batched replay); [`speculate`] layers
+//! draft-propose / batched-verify speculative decoding on top of the
+//! chunk engine (K+1 positions per verify replay, bit-identical to
+//! greedy); the analytical latency/energy side lives in
+//! `scheduler::timing` and [`trace`].
 
 pub mod decode;
 pub mod exec;
 pub mod prefill;
+pub mod speculate;
 pub mod trace;
 
 pub use decode::{BatchDecodeEngine, DecodeEngine, DecodeModel, DecodeResult};
 pub use exec::FunctionalChip;
 pub use prefill::KvCache;
+pub use speculate::{self_draft_model, SpeculativeEngine, SpeculativeResult};

@@ -83,6 +83,29 @@ impl KvCache {
         self.values[layer].push(v);
     }
 
+    /// Roll the cache back to `len` positions, dropping every later
+    /// entry in every layer — the speculative-decoding rejection path
+    /// (`sim::speculate`, DESIGN.md §6d). A position's K/V depend only
+    /// on the tokens up to that position, so a truncated cache is
+    /// bitwise indistinguishable from one that never saw the dropped
+    /// tokens (`tests/prop_speculative.rs` pins this). `truncate(0)`
+    /// empties the cache exactly like [`KvCache::clear`]; truncating to
+    /// the current length is a no-op. Rollback never invents state:
+    /// `len` beyond the cached length is a caller bug and panics.
+    pub fn truncate(&mut self, len: usize) {
+        assert!(
+            len <= self.len(),
+            "KV rollback cannot extend the cache: truncate({len}) > cached {}",
+            self.len()
+        );
+        for k in self.keys.iter_mut() {
+            k.truncate(len);
+        }
+        for v in self.values.iter_mut() {
+            v.truncate(len);
+        }
+    }
+
     /// Drop every cached position (request teardown).
     pub(crate) fn clear(&mut self) {
         for k in self.keys.iter_mut() {
@@ -474,6 +497,45 @@ mod tests {
         assert_eq!(kv.value(0, 0), &[2.0]);
         kv.clear();
         assert_eq!(kv.len(), 0);
+    }
+
+    #[test]
+    fn kv_truncate_drops_positions_and_agrees_with_clear() {
+        let mut kv = KvCache::new(2);
+        for pos in 0..4 {
+            kv.push(0, vec![pos as f32], vec![10.0 + pos as f32]);
+            kv.push(1, vec![20.0 + pos as f32], vec![30.0 + pos as f32]);
+        }
+        // truncate == current length is a no-op
+        kv.truncate(4);
+        assert_eq!(kv.len(), 4);
+        assert_eq!(kv.key(0, 3), &[3.0]);
+        // mid rollback drops exactly the tail, in every layer
+        kv.truncate(2);
+        assert_eq!(kv.len(), 2);
+        assert_eq!(kv.key(0, 1), &[1.0]);
+        assert_eq!(kv.value(1, 1), &[31.0]);
+        // truncate-then-extend == never-having-extended (bitwise)
+        kv.push(0, vec![9.0], vec![9.5]);
+        kv.push(1, vec![9.1], vec![9.6]);
+        assert_eq!(kv.len(), 3);
+        assert_eq!(kv.key(0, 2), &[9.0]);
+        // truncate(0) and clear agree (ISSUE-5 regression): both leave
+        // an empty cache with the layer structure intact
+        let mut cleared = kv.clone();
+        cleared.clear();
+        kv.truncate(0);
+        assert_eq!(kv.len(), cleared.len());
+        assert_eq!(kv.layers(), cleared.layers());
+        assert!(kv.is_empty() && cleared.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot extend")]
+    fn kv_truncate_rejects_lengthening() {
+        let mut kv = KvCache::new(1);
+        kv.push(0, vec![1.0], vec![2.0]);
+        kv.truncate(2);
     }
 
     #[test]

@@ -1,0 +1,482 @@
+//! Speculative decoding on the chunk engine (DESIGN.md §6d): a cheap
+//! draft model proposes K tokens per round, and the target chip
+//! verifies all K+1 positions — the pending token plus every proposal —
+//! through ONE `step_chunks`-style batched replay with **lanes =
+//! positions** (`sim::prefill`).
+//!
+//! Why this works on CIM: decode is memory-bound because every token
+//! drives one activation vector through arrays holding the whole model
+//! (PAPER.md §I, §III-C). The weights are resident, so a verify chunk
+//! rides the same pass tables chunked prefill built — each programmed
+//! cell is read once per pass and updates K+1 accumulators — turning K
+//! sequential decode steps into a single pipelined replay. What
+//! speculation buys is *latency* (one pass instead of K+1); what it
+//! risks is *energy* (rejected lanes drove rows and converted columns
+//! for nothing). Both sides are accounted honestly
+//! (`trace::speculative_round_cost`).
+//!
+//! The acceptance rule is **greedy**: a proposal survives only if it
+//! equals the target's own argmax at that position. Combined with the
+//! per-lane bit-identicality of the batched replay
+//! (`tests/prop_prefill.rs`) and exact KV rollback past the first
+//! rejection ([`KvCache::truncate`]), the emitted token sequence is
+//! **guaranteed bit-identical** to [`DecodeEngine::generate`] for every
+//! model, mapping strategy, K and draft — a bad draft can only cost
+//! rounds, never change the output (`tests/prop_speculative.rs`).
+//!
+//! Round protocol (the `pending` token is the newest emitted token, not
+//! yet in the target cache):
+//!
+//! 1. the draft catches up to the emitted stream, then greedily
+//!    proposes `d_1..d_K` (feeding its own proposals);
+//! 2. the target verifies the chunk `[pending, d_1, .., d_K]` in one
+//!    batched replay — lane `j`'s argmax is the target's true token
+//!    after `chunk[..=j]`;
+//! 3. lane 0's argmax is always emitted (it only depends on `pending`);
+//!    each further lane counts only while the proposals keep matching
+//!    the emitted tokens — `a` accepted proposals emit `a + 1` tokens;
+//! 4. rollback: the target cache keeps `pending` and the `a` accepted
+//!    proposals and truncates the rejected tail; the draft truncates to
+//!    its longest prefix of the emitted stream.
+//!
+//! A layer-truncated **self-draft** ([`self_draft_model`]) reuses the
+//! target's own weight stream: `DecodeModel::synth` seeds weights per
+//! op index and the op list is layer-major, so a config with fewer
+//! decoder layers synthesizes bitwise the target's first layers (and
+//! the same embeddings/LM head). Full depth makes a perfect draft —
+//! every round accepts all K proposals — which pins the best case in
+//! the bench sweep (`BENCH_spec.json`).
+
+use crate::cim::{CimParams, Cost};
+use crate::mapping::Strategy;
+use crate::model::ModelConfig;
+use crate::sim::decode::{
+    argmax, assert_fits_context, BatchDecodeEngine, DecodeEngine, DecodeModel,
+};
+use crate::sim::prefill::KvCache;
+use crate::sim::trace::{speculative_round_cost, sum_costs, SpeculativeRoundCost};
+
+/// Layer-truncated self-draft of a target config: the first `layers`
+/// decoder layers of the target's own weight stream. Synthesis is
+/// seeded per op index over a layer-major op list, so with the same
+/// `seed` the truncated model's weights (and embeddings, positional
+/// table and LM head) are bitwise the target's. `layers == 0` (the
+/// CLI/server default) means full depth — a *perfect* draft; smaller
+/// `layers` trade acceptance for draft cost (deeper requests are
+/// capped at the target's depth).
+pub fn self_draft_model(cfg: &ModelConfig, seed: u64, layers: usize) -> DecodeModel {
+    let mut dcfg = cfg.clone();
+    dcfg.dec_layers = self_draft_layers(cfg, layers);
+    DecodeModel::synth(dcfg, seed)
+}
+
+/// Effective depth of a self-draft request against a target config:
+/// `0` means full depth, deeper requests cap at the target's layer
+/// count — the single source of the CLI/server `--draft-layers`
+/// convention (no caller re-derives it).
+pub fn self_draft_layers(cfg: &ModelConfig, layers: usize) -> usize {
+    if layers == 0 {
+        cfg.dec_layers
+    } else {
+        layers.min(cfg.dec_layers)
+    }
+}
+
+/// One speculative round's outcome and bill.
+#[derive(Clone, Debug)]
+pub struct SpecRound {
+    /// Target KV length when the verify chunk entered.
+    pub base_kv: usize,
+    /// Positions fed through the verify replay (1 pending + proposals).
+    pub lanes: usize,
+    /// Draft tokens proposed this round (`lanes - 1`).
+    pub proposed: usize,
+    /// Proposals accepted (each equal to the target's own argmax); the
+    /// round emitted `accepted + 1` tokens.
+    pub accepted: usize,
+    /// Modeled cost of the verify replay — every lane pays, rejected or
+    /// not; latency is the single pipelined pass.
+    pub verify: SpeculativeRoundCost,
+    /// Summed modeled cost of the draft forwards this round (catch-up +
+    /// proposal feeding; zero for a reference-backend draft).
+    pub draft_cost: Cost,
+}
+
+/// Result of one speculative generation run.
+#[derive(Clone, Debug)]
+pub struct SpeculativeResult {
+    /// The generated token ids (prompt excluded) — bit-identical to
+    /// [`DecodeEngine::generate`] on the same model.
+    pub tokens: Vec<i32>,
+    /// Per-round records, in round order.
+    pub rounds: Vec<SpecRound>,
+    /// Cost of every position fed through the target chip, in fed
+    /// order: prompt prefill first, then every verify lane of every
+    /// round — **rejected lanes included** (they drove rows and
+    /// converted columns like any accepted lane).
+    pub per_position: Vec<Cost>,
+    /// Modeled cost of the draft's prompt ingestion (each round carries
+    /// its own draft share in [`SpecRound::draft_cost`]).
+    pub draft_prefill: Cost,
+}
+
+impl SpeculativeResult {
+    /// Draft tokens proposed across all rounds.
+    pub fn total_proposed(&self) -> usize {
+        self.rounds.iter().map(|r| r.proposed).sum()
+    }
+
+    /// Draft tokens accepted across all rounds.
+    pub fn total_accepted(&self) -> usize {
+        self.rounds.iter().map(|r| r.accepted).sum()
+    }
+
+    /// Accepted / proposed over the whole run (0 when nothing was
+    /// proposed — e.g. K effectively 0 near the tail).
+    pub fn acceptance_rate(&self) -> f64 {
+        let p = self.total_proposed();
+        if p == 0 {
+            0.0
+        } else {
+            self.total_accepted() as f64 / p as f64
+        }
+    }
+
+    /// Mean tokens emitted per verify round (the first generated token
+    /// comes from the prefill logits, not a round, so it is excluded;
+    /// 0 when no round ran). Plain decode is 1.0 by construction;
+    /// anything above 1.0 is the speculative win.
+    pub fn tokens_per_round(&self) -> f64 {
+        if self.rounds.is_empty() {
+            0.0
+        } else {
+            (self.tokens.len().saturating_sub(1)) as f64 / self.rounds.len() as f64
+        }
+    }
+
+    /// Modeled generation-phase latency (ns): each round's pipelined
+    /// verify pass plus its serial draft forwards. Compare against the
+    /// summed per-token critical path of plain decode for the modeled
+    /// speedup (`benches/decode_throughput.rs`).
+    pub fn modeled_generation_ns(&self) -> f64 {
+        self.rounds
+            .iter()
+            .map(|r| r.verify.round_ns + r.draft_cost.latency.critical_ns())
+            .sum()
+    }
+}
+
+fn check_compat(target: &ModelConfig, draft: &ModelConfig) {
+    assert_eq!(
+        target.vocab, draft.vocab,
+        "draft and target must share a vocabulary"
+    );
+    assert!(
+        draft.seq >= target.seq,
+        "draft context window ({}) shorter than the target's ({})",
+        draft.seq,
+        target.seq
+    );
+}
+
+/// Speculative decode engine: a target [`BatchDecodeEngine`] (one slot
+/// — the chunk lanes are *positions*, not sequences) plus a draft
+/// [`DecodeEngine`] proposing K tokens per round. See the module docs
+/// for the protocol and guarantees.
+pub struct SpeculativeEngine {
+    target: BatchDecodeEngine,
+    draft: DecodeEngine,
+    params: CimParams,
+    k: usize,
+}
+
+impl SpeculativeEngine {
+    /// Both models on emulated chips under one mapping strategy (the
+    /// draft programs its own, smaller chip).
+    pub fn on_chip(
+        target: DecodeModel,
+        draft: DecodeModel,
+        params: CimParams,
+        strategy: Strategy,
+        k: usize,
+    ) -> SpeculativeEngine {
+        assert!(k >= 1, "speculation needs K >= 1 (0 means: use DecodeEngine)");
+        check_compat(&target.cfg, &draft.cfg);
+        let target = BatchDecodeEngine::on_chip(target, params.clone(), strategy, 1);
+        let draft = DecodeEngine::on_chip(draft, params.clone(), strategy);
+        SpeculativeEngine {
+            target,
+            draft,
+            params,
+            k,
+        }
+    }
+
+    /// Both models on the golden (non-CIM) backend — the functional
+    /// reference; costs are zero.
+    pub fn reference(target: DecodeModel, draft: DecodeModel, k: usize) -> SpeculativeEngine {
+        assert!(k >= 1, "speculation needs K >= 1 (0 means: use DecodeEngine)");
+        check_compat(&target.cfg, &draft.cfg);
+        SpeculativeEngine {
+            target: BatchDecodeEngine::reference(target, 1),
+            draft: DecodeEngine::reference(draft),
+            params: CimParams::default(),
+            k,
+        }
+    }
+
+    /// The target model.
+    pub fn model(&self) -> &DecodeModel {
+        &self.target.model
+    }
+
+    /// The draft model.
+    pub fn draft_model(&self) -> &DecodeModel {
+        &self.draft.model
+    }
+
+    /// The target chip's mapping (None for the reference backend).
+    pub fn mapping(&self) -> Option<&crate::mapping::ModelMapping> {
+        self.target.mapping()
+    }
+
+    /// The target's key/value cache after the latest run — for
+    /// cross-checking rollback against a plain engine. Holds
+    /// `prompt + n_tokens - 1` positions after `generate` (the final
+    /// emitted token is never fed).
+    pub fn kv_cache(&self) -> &KvCache {
+        self.target.kv(0)
+    }
+
+    /// Greedy speculative generation: feed `prompt`, then emit
+    /// `n_tokens` argmax continuations — bit-identical to
+    /// [`DecodeEngine::generate`] on the target model, for every draft
+    /// and K. Admission rule matches the plain engine: `prompt.len() +
+    /// n_tokens` must fit the context window.
+    pub fn generate(&mut self, prompt: &[i32], n_tokens: usize) -> SpeculativeResult {
+        assert!(!prompt.is_empty(), "need at least one prompt token");
+        assert_fits_context(&self.target.model.cfg, prompt.len(), n_tokens);
+        // reset both request states (fresh sequence)
+        if self.target.is_active(0) {
+            self.target.release(0);
+        }
+        let slot = self.target.try_admit().expect("capacity-1 pool has a free slot");
+        debug_assert_eq!(slot, 0);
+        self.draft.reset();
+
+        let mut per_position: Vec<Cost> = Vec::new();
+        let mut rounds: Vec<SpecRound> = Vec::new();
+        let mut tokens: Vec<i32> = Vec::with_capacity(n_tokens);
+
+        // prefill the target with the whole prompt in one chunked
+        // replay; the draft ingests it on its own cache
+        self.target.step_chunks(&[(slot, prompt)]);
+        per_position.extend(self.target.take_trace(slot));
+        for &t in prompt {
+            self.draft.forward(t);
+        }
+        let draft_prefill = sum_costs(&std::mem::take(&mut self.draft.trace.per_token));
+
+        if n_tokens > 0 {
+            // the newest emitted token is always "pending": emitted, not
+            // yet in the target cache (the invariant every round keeps)
+            tokens.push(argmax(self.target.logits(slot)) as i32);
+
+            while tokens.len() < n_tokens {
+                let remaining = n_tokens - tokens.len();
+                // each round emits at most k_round + 1 tokens; cap so the
+                // run never overshoots the request
+                let k_round = self.k.min(remaining - 1);
+                let pending = *tokens.last().expect("one token is always emitted");
+
+                // --- draft: catch up to the emitted stream, propose ---
+                // a zero-proposal round (the request tail) is a plain
+                // single-lane verify: the draft has nothing to buy, so
+                // it does no work and bills nothing
+                let full_len = prompt.len() + tokens.len();
+                let mut drafts: Vec<i32> = Vec::with_capacity(k_round);
+                if k_round > 0 {
+                    while self.draft.kv_len() < full_len {
+                        let i = self.draft.kv_len();
+                        let t = if i < prompt.len() {
+                            prompt[i]
+                        } else {
+                            tokens[i - prompt.len()]
+                        };
+                        self.draft.forward(t);
+                    }
+                    for j in 0..k_round {
+                        let d = argmax(self.draft.logits()) as i32;
+                        drafts.push(d);
+                        if j + 1 < k_round {
+                            self.draft.forward(d);
+                        }
+                    }
+                }
+                let draft_cost =
+                    sum_costs(&std::mem::take(&mut self.draft.trace.per_token));
+
+                // --- target: verify pending + proposals in ONE replay ---
+                let base = self.target.kv_len(slot);
+                let mut chunk: Vec<i32> = Vec::with_capacity(1 + k_round);
+                chunk.push(pending);
+                chunk.extend_from_slice(&drafts);
+                self.target.step_chunks(&[(slot, chunk.as_slice())]);
+
+                // --- greedy acceptance over the lane argmaxes ---
+                // lane j's argmax is the target's true token after
+                // chunk[..=j]; lane 0 depends only on `pending`, so its
+                // token is always emitted, and each further lane counts
+                // only while the proposals keep matching what was emitted
+                let mut acc = 0usize;
+                let mut last = argmax(self.target.lane_logits(0)) as i32;
+                tokens.push(last);
+                while acc < k_round && drafts[acc] == last {
+                    acc += 1;
+                    last = argmax(self.target.lane_logits(acc)) as i32;
+                    tokens.push(last);
+                }
+
+                // --- rollback: keep pending + accepted, drop the rest ---
+                self.target.truncate_kv(slot, base + 1 + acc);
+                // honest trace: every lane's record survives the rollback
+                per_position.extend(self.target.take_trace(slot));
+                // the draft keeps its longest prefix of the emitted stream
+                let valid = (full_len + acc).min(self.draft.kv_len());
+                self.draft.truncate_kv(valid);
+
+                let verify = match self.target.mapping() {
+                    Some(mm) => speculative_round_cost(
+                        &self.target.model.cfg,
+                        mm,
+                        &self.params,
+                        base,
+                        chunk.len(),
+                    ),
+                    None => SpeculativeRoundCost {
+                        per_lane: vec![Cost::default(); chunk.len()],
+                        round_ns: 0.0,
+                    },
+                };
+                rounds.push(SpecRound {
+                    base_kv: base,
+                    lanes: chunk.len(),
+                    proposed: k_round,
+                    accepted: acc,
+                    verify,
+                    draft_cost,
+                });
+            }
+        }
+
+        SpeculativeResult {
+            tokens,
+            rounds,
+            per_position,
+            draft_prefill,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> ModelConfig {
+        ModelConfig::tiny()
+    }
+
+    #[test]
+    fn self_draft_shares_the_target_weight_prefix() {
+        let cfg = tiny();
+        let target = DecodeModel::synth(cfg.clone(), 7);
+        let draft = self_draft_model(&cfg, 7, 1);
+        assert_eq!(draft.cfg.dec_layers, 1);
+        // layer-major op list: the draft's 6 ops are the target's first 6
+        assert_eq!(draft.ops.len(), 6);
+        for (i, (dw, tw)) in draft.weights.iter().zip(&target.weights).enumerate() {
+            for (dt, tt) in dw.tiles.iter().zip(&tw.tiles) {
+                assert_eq!(dt.l.data, tt.l.data, "op {i}: L factor drifted");
+                assert_eq!(dt.r.data, tt.r.data, "op {i}: R factor drifted");
+            }
+        }
+        assert_eq!(draft.embedding.data, target.embedding.data);
+        assert_eq!(draft.lm_head.data, target.lm_head.data);
+        // full depth is capped, not extended; 0 means full depth
+        let full = self_draft_model(&cfg, 7, 99);
+        assert_eq!(full.cfg.dec_layers, cfg.dec_layers);
+        let default_full = self_draft_model(&cfg, 7, 0);
+        assert_eq!(default_full.cfg.dec_layers, cfg.dec_layers);
+    }
+
+    #[test]
+    fn perfect_self_draft_accepts_everything() {
+        // a full-depth self-draft IS the target, so every proposal is
+        // the target's own argmax: acceptance rate 1, rounds emit K+1
+        let cfg = tiny();
+        let target = DecodeModel::synth(cfg.clone(), 11);
+        let draft = self_draft_model(&cfg, 11, cfg.dec_layers);
+        let mut spec = SpeculativeEngine::reference(target, draft, 4);
+        let prompt = [3i32, 9, 27];
+        let r = spec.generate(&prompt, 11);
+        assert_eq!(r.tokens.len(), 11);
+        assert!(r.total_proposed() > 0);
+        assert_eq!(r.total_accepted(), r.total_proposed(), "perfect draft rejected");
+        assert_eq!(r.acceptance_rate(), 1.0);
+        assert!(r.tokens_per_round() > 1.0, "no speculative win");
+        // bit-identical to plain greedy decode
+        let mut plain = DecodeEngine::reference(DecodeModel::synth(cfg, 11));
+        assert_eq!(r.tokens, plain.generate(&prompt, 11).tokens);
+    }
+
+    #[test]
+    fn mismatched_draft_still_decodes_exactly() {
+        // a draft from a different seed disagrees almost everywhere:
+        // rounds reject, the KV rolls back, and the output must still be
+        // bit-identical to plain greedy decode
+        let cfg = tiny();
+        let target = DecodeModel::synth(cfg.clone(), 5);
+        let draft = DecodeModel::synth(cfg.clone(), 500);
+        let mut spec = SpeculativeEngine::reference(target, draft, 4);
+        let prompt = [1i32, 2];
+        let r = spec.generate(&prompt, 10);
+        let mut plain = DecodeEngine::reference(DecodeModel::synth(cfg, 5));
+        let want = plain.generate(&prompt, 10);
+        assert_eq!(r.tokens, want.tokens, "rollback corrupted the sequence");
+        assert!(
+            r.rounds.iter().any(|rd| rd.accepted < rd.proposed),
+            "expected at least one rejection from an unrelated draft"
+        );
+        // the rejected lanes stay on the bill
+        let fed: usize = r.rounds.iter().map(|rd| rd.lanes).sum();
+        assert_eq!(r.per_position.len(), prompt.len() + fed);
+    }
+
+    #[test]
+    fn engine_reuse_is_reset_safe() {
+        let cfg = tiny();
+        let mut spec = SpeculativeEngine::reference(
+            DecodeModel::synth(cfg.clone(), 21),
+            self_draft_model(&cfg, 21, 1),
+            2,
+        );
+        let _ = spec.generate(&[9, 1, 7], 6); // dirty both caches
+        let reused = spec.generate(&[3, 4], 6);
+        let mut plain = DecodeEngine::reference(DecodeModel::synth(cfg, 21));
+        assert_eq!(reused.tokens, plain.generate(&[3, 4], 6).tokens);
+        // final cache: prompt + n - 1 (the last emitted token is never fed)
+        assert_eq!(spec.kv_cache().len(), 2 + 6 - 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds the context window")]
+    fn speculative_generate_rejects_overlong_requests() {
+        let cfg = tiny();
+        let mut spec = SpeculativeEngine::reference(
+            DecodeModel::synth(cfg.clone(), 3),
+            self_draft_model(&cfg, 3, 1),
+            2,
+        );
+        let _ = spec.generate(&[1, 2, 3, 4], cfg.seq);
+    }
+}

@@ -222,6 +222,56 @@ pub fn prefill_chunk_cost(
     }
 }
 
+/// Modeled cost of one speculative verify round (`sim::speculate`,
+/// DESIGN.md §6d): `lanes` positions — the pending token plus the
+/// draft's proposals — entering the cache at length `base_kv` through
+/// ONE chunked replay (lanes = positions, exactly a prefill chunk).
+///
+/// Honest accounting, both ways:
+/// * `per_lane` — one [`decode_token_cost`] record per fed position,
+///   **rejected lanes included**: a lane that loses the acceptance race
+///   still drove its rows and converted its columns, so its analog/ADC
+///   energy is real and stays on the bill. Entry-for-entry these match
+///   what `chunk_step` records into the slot trace
+///   (`tests/prop_speculative.rs` pins the equality bitwise).
+/// * `round_ns` — the round's modeled wall latency: the verify replay
+///   is a single pipelined pass over the chunk (row-drive setup paid
+///   once, conversions/MHA serial per lane — the
+///   [`prefill_chunk_cost`] latency model), NOT `lanes` sequential
+///   decode steps. This is the whole speculative win: K+1 positions
+///   for one pass's latency, paid for in (possibly wasted) lane energy.
+#[derive(Clone, Debug)]
+pub struct SpeculativeRoundCost {
+    /// Per-lane cost records in fed order (rejected lanes included).
+    pub per_lane: Vec<Cost>,
+    /// Modeled pipelined latency of the whole verify replay (ns).
+    pub round_ns: f64,
+}
+
+impl SpeculativeRoundCost {
+    /// Summed energy of every lane (nJ) — accepted or not.
+    pub fn energy_nj(&self) -> f64 {
+        self.per_lane.iter().map(|c| c.energy.total_nj()).sum()
+    }
+}
+
+/// Cost of one speculative verify round: see [`SpeculativeRoundCost`].
+/// The verify replay *is* a prefill chunk physically, so this delegates
+/// to [`prefill_chunk_cost`] — one latency model, no drift.
+pub fn speculative_round_cost(
+    cfg: &ModelConfig,
+    mapping: &ModelMapping,
+    params: &CimParams,
+    base_kv: usize,
+    lanes: usize,
+) -> SpeculativeRoundCost {
+    let pc = prefill_chunk_cost(cfg, mapping, params, base_kv, lanes);
+    SpeculativeRoundCost {
+        per_lane: pc.per_position,
+        round_ns: pc.chunk_ns,
+    }
+}
+
 /// Sum a slice of per-token costs (shared by [`DecodeTrace::total`] and
 /// `DecodeResult::total` so the aggregation can't drift between them).
 pub fn sum_costs(costs: &[Cost]) -> Cost {
@@ -390,6 +440,39 @@ mod tests {
             let one = prefill_chunk_cost(&cfg, &mm, &params, base, 1);
             let want = decode_token_cost(&cfg, &mm, &params, base + 1);
             assert_eq!(one.chunk_ns, want.latency.critical_ns());
+        }
+    }
+
+    #[test]
+    fn speculative_round_cost_is_honest() {
+        // per-lane records equal decode_token_cost exactly (rejected
+        // lanes pay like accepted ones), and the round latency is the
+        // single pipelined pass — strictly cheaper than serial decode
+        // for any multi-lane round, never cheaper than one position.
+        let cfg = ModelConfig::tiny();
+        let params = CimParams::default();
+        for strategy in Strategy::all() {
+            let mm = map_model(&cfg, &params, strategy);
+            let base = 5usize;
+            let lanes = 4usize;
+            let rc = speculative_round_cost(&cfg, &mm, &params, base, lanes);
+            assert_eq!(rc.per_lane.len(), lanes);
+            for (i, c) in rc.per_lane.iter().enumerate() {
+                let want = decode_token_cost(&cfg, &mm, &params, base + i + 1);
+                assert_eq!(c.latency, want.latency, "{strategy:?} lane {i}");
+                assert_eq!(c.energy, want.energy, "{strategy:?} lane {i}");
+            }
+            let serial: f64 = rc
+                .per_lane
+                .iter()
+                .map(|c| c.latency.critical_ns())
+                .sum();
+            assert!(rc.round_ns < serial, "{strategy:?}: no pipeline win");
+            assert!(rc.round_ns >= rc.per_lane[0].latency.critical_ns());
+            assert!(rc.energy_nj() > 0.0);
+            // the verify replay is physically a prefill chunk — one model
+            let pc = prefill_chunk_cost(&cfg, &mm, &params, base, lanes);
+            assert_eq!(rc.round_ns, pc.chunk_ns, "{strategy:?}: model drift");
         }
     }
 

@@ -1,0 +1,117 @@
+//! Shared generators for the property-test suites (ISSUE-5 satellite):
+//! the random decoder-config / chip-parameter / strategy / geometry
+//! pickers that were previously duplicated across `prop_prefill.rs`,
+//! `prop_batch_decode.rs` and `prop_exec_plan.rs`, with one seeded
+//! entry point ([`seed`]). Every suite draws the same distributions, so
+//! a geometry that breaks one engine path is automatically in reach of
+//! the others.
+//!
+//! Each test binary compiles this module independently (`mod common;`)
+//! and uses its own subset, hence the file-wide `dead_code` allowance.
+#![allow(dead_code)]
+
+use monarch_cim::cim::CimParams;
+use monarch_cim::mapping::Strategy;
+use monarch_cim::model::{MatmulOp, ModelConfig, OpKind, Stage};
+use monarch_cim::monarch::{MonarchMatrix, RectMonarch};
+use monarch_cim::util::prop::Gen;
+use monarch_cim::util::rng::Pcg32;
+
+/// The single seeded entry point: a weight-synthesis / data seed drawn
+/// from the property generator, so every suite derives its models the
+/// same way and failures replay from the `forall` seed report.
+pub fn seed(g: &mut Gen) -> u64 {
+    g.usize(0, 1 << 30) as u64
+}
+
+/// Random decoder-only config with a perfect-square d_model and heads
+/// dividing it (the decode engine's contract).
+pub fn random_decoder_cfg(g: &mut Gen) -> ModelConfig {
+    let mut cfg = ModelConfig::tiny();
+    cfg.d_model = g.choose(&[16usize, 64]);
+    cfg.n_heads = g.choose(&[2usize, 4]);
+    cfg.d_ff = cfg.d_model * g.usize(1, 4);
+    cfg.dec_layers = g.usize(1, 2);
+    cfg.vocab = g.choose(&[64usize, 128]);
+    cfg.seq = 16;
+    cfg
+}
+
+/// Random CIM parameters with the array dimension drawn from `dims`.
+pub fn chip_params(g: &mut Gen, dims: &[usize]) -> CimParams {
+    let mut params = CimParams::default();
+    params.array_dim = g.choose(dims);
+    params
+}
+
+/// Whether `cfg`'s Monarch block fits the array (engine suites skip the
+/// case otherwise — the mapping engines reject b > m by contract).
+pub fn fits_array(cfg: &ModelConfig, params: &CimParams) -> bool {
+    let b = (cfg.d_model as f64).sqrt().round() as usize;
+    b <= params.array_dim
+}
+
+/// One of the three mapping strategies.
+pub fn any_strategy(g: &mut Gen) -> Strategy {
+    g.choose(&[Strategy::Linear, Strategy::SparseMap, Strategy::DenseMap])
+}
+
+/// One of the two Monarch strategies (bit-identical to the factored
+/// reference — the suites that compare bitwise across engines use these).
+pub fn monarch_strategy(g: &mut Gen) -> Strategy {
+    g.choose(&[Strategy::SparseMap, Strategy::DenseMap])
+}
+
+/// Random transformer-shaped Para op list over d x d tiles (the plan /
+/// scheduler suites' geometry source).
+pub fn random_model_ops(g: &mut Gen, d: usize) -> (ModelConfig, Vec<MatmulOp>) {
+    let mut cfg = ModelConfig::tiny();
+    cfg.d_model = d;
+    let layers = g.usize(1, 2);
+    let ff_mult = g.usize(1, 4);
+    let mut ops = Vec::new();
+    for l in 0..layers {
+        for w in ["wq", "wk", "wv", "wo"] {
+            ops.push(MatmulOp {
+                name: format!("dec{l}.{w}"),
+                stage: Stage::Decoder,
+                layer: l,
+                kind: OpKind::Para,
+                rows: d,
+                cols: d,
+                batch: 1,
+            });
+        }
+        ops.push(MatmulOp {
+            name: format!("dec{l}.ffn1"),
+            stage: Stage::Decoder,
+            layer: l,
+            kind: OpKind::Para,
+            rows: ff_mult * d,
+            cols: d,
+            batch: 1,
+        });
+        ops.push(MatmulOp {
+            name: format!("dec{l}.ffn2"),
+            stage: Stage::Decoder,
+            layer: l,
+            kind: OpKind::Para,
+            rows: d,
+            cols: ff_mult * d,
+            batch: 1,
+        });
+    }
+    (cfg, ops)
+}
+
+/// Random tile grid for a rows x cols weight (d = tile dim).
+pub fn rect_randn(rows: usize, cols: usize, d: usize, rng: &mut Pcg32) -> RectMonarch {
+    let b = (d as f64).sqrt().round() as usize;
+    let tiles = rows.div_ceil(d) * cols.div_ceil(d);
+    RectMonarch {
+        rows,
+        cols,
+        n: d,
+        tiles: (0..tiles).map(|_| MonarchMatrix::randn(b, rng)).collect(),
+    }
+}

@@ -190,6 +190,109 @@ fn chunked_prefill_server_matches_reference_and_reports_phases() {
 }
 
 #[test]
+fn speculative_server_matches_reference_and_records_acceptance() {
+    // ISSUE-5 serving contract: with speculate_k > 0 a self-draft races
+    // ahead of every window and verify chunks span the agreed run —
+    // scores must stay bit-identical to the single-stream reference,
+    // and the acceptance counters must move. Windows are built as
+    // greedy continuations of the target model, so the full-depth
+    // self-draft provably agrees in the generated region
+    // (acceptance > 0 is deterministic, not luck).
+    let server = InferenceServer::start(ServerConfig {
+        backend: Backend::CimSim(CimSimConfig {
+            speculate_k: 4,
+            ..Default::default()
+        }),
+        policy: BatchPolicy {
+            max_batch: 4,
+            max_delay: std::time::Duration::from_millis(10),
+        },
+        ..Default::default()
+    })
+    .expect("server start");
+    let mut golden = DecodeEngine::reference(DecodeModel::synth(
+        monarch_cim::model::ModelConfig::tiny(),
+        2025,
+    ));
+    // half target-greedy windows (draft agrees), half random (draft
+    // mostly disagrees — the correction path)
+    let mut windows: Vec<Vec<i32>> = Vec::new();
+    for i in 0..3u64 {
+        let prompt: Vec<i32> = (0..3).map(|j| ((i * 31 + j * 7 + 1) % 256) as i32).collect();
+        let gen = golden.generate(&prompt, 8);
+        let mut w = prompt;
+        w.extend_from_slice(&gen.tokens);
+        windows.push(w);
+    }
+    for i in 0..3u64 {
+        let mut rng = Pcg32::new(9000 + i);
+        windows.push((0..11).map(|_| rng.below(server.vocab as u32) as i32).collect());
+    }
+    let expected: Vec<Vec<f32>> = windows.iter().map(|w| golden.score(w).0).collect();
+    std::thread::scope(|scope| {
+        for (w, want) in windows.iter().zip(&expected) {
+            let srv = &server;
+            scope.spawn(move || {
+                let got = srv.infer(w.clone()).expect("inference");
+                assert_eq!(&got, want, "speculative chunking changed the logits");
+            });
+        }
+    });
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap.requests, 6);
+    assert_eq!(snap.errors, 0);
+    assert!(snap.spec_rounds > 0, "no speculative rounds recorded");
+    assert!(
+        snap.spec_acceptance_rate > 0.0,
+        "greedy-continuation windows must yield accepted proposals"
+    );
+    assert!(
+        snap.spec_tokens_per_round >= 1.0,
+        "a verify round always advances at least one position"
+    );
+    server.shutdown();
+}
+
+#[test]
+fn speculate_zero_is_byte_identical_to_plain_serving() {
+    // the knob's off position IS the PR-4 path: same windows through a
+    // speculate_k=0 server and a speculative one must produce
+    // byte-identical logits, and the k=0 server must record no rounds
+    let mk = |k: usize| {
+        InferenceServer::start(ServerConfig {
+            backend: Backend::CimSim(CimSimConfig {
+                speculate_k: k,
+                ..Default::default()
+            }),
+            policy: BatchPolicy {
+                max_batch: 2,
+                max_delay: std::time::Duration::from_millis(5),
+            },
+            ..Default::default()
+        })
+        .expect("server start")
+    };
+    let plain = mk(0);
+    let spec = mk(4);
+    let mut rng = Pcg32::new(321);
+    for len in [1usize, 5, 12, plain.seq] {
+        let toks: Vec<i32> = (0..len)
+            .map(|_| rng.below(plain.vocab as u32) as i32)
+            .collect();
+        let a = plain.infer(toks.clone()).expect("plain inference");
+        let b = spec.infer(toks).expect("speculative inference");
+        assert_eq!(a, b, "len {len}: speculation changed the scores");
+    }
+    let snap = plain.metrics.snapshot();
+    assert_eq!(snap.spec_rounds, 0, "k=0 must never speculate");
+    assert_eq!(snap.spec_acceptance_rate, 0.0);
+    let snap = spec.metrics.snapshot();
+    assert!(snap.spec_rounds > 0, "k=4 server never speculated");
+    plain.shutdown();
+    spec.shutdown();
+}
+
+#[test]
 fn server_output_is_deterministic() {
     // The same window must produce identical logits on repeat requests
     // and across separately started servers (seeded weight synthesis).

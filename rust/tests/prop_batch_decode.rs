@@ -9,37 +9,21 @@
 //! batchmates, because every lane of `run_op_batch_into` replays exactly
 //! the f32 operations of the single-stream compiled plan.
 
-use monarch_cim::cim::CimParams;
-use monarch_cim::mapping::Strategy;
-use monarch_cim::model::ModelConfig;
 use monarch_cim::sim::decode::{BatchDecodeEngine, DecodeEngine, DecodeModel};
 use monarch_cim::util::prop::forall;
 
-/// Random decoder-only config with a perfect-square d_model and heads
-/// dividing it (the decode engine's contract).
-fn random_decoder_cfg(g: &mut monarch_cim::util::prop::Gen) -> ModelConfig {
-    let mut cfg = ModelConfig::tiny();
-    cfg.d_model = g.choose(&[16usize, 64]);
-    cfg.n_heads = g.choose(&[2usize, 4]);
-    cfg.d_ff = cfg.d_model * g.usize(1, 4);
-    cfg.dec_layers = g.usize(1, 2);
-    cfg.vocab = g.choose(&[64usize, 128]);
-    cfg.seq = 16;
-    cfg
-}
+mod common;
 
 #[test]
 fn prop_batched_generate_equals_independent_engines() {
     forall("batched decode == B single-stream engines", 6, |g| {
-        let cfg = random_decoder_cfg(g);
-        let b = (cfg.d_model as f64).sqrt().round() as usize;
-        let mut params = CimParams::default();
-        params.array_dim = g.choose(&[16usize, 32]);
-        if b > params.array_dim {
+        let cfg = common::random_decoder_cfg(g);
+        let params = common::chip_params(g, &[16, 32]);
+        if !common::fits_array(&cfg, &params) {
             return;
         }
-        let seed = g.usize(0, 1 << 30) as u64;
-        let strategy = g.choose(&[Strategy::Linear, Strategy::SparseMap, Strategy::DenseMap]);
+        let seed = common::seed(g);
+        let strategy = common::any_strategy(g);
         let capacity = g.usize(1, 8);
         // more requests than slots exercises mid-run eviction+admission
         let n_requests = capacity + g.usize(0, 3);
@@ -99,15 +83,13 @@ fn prop_teacher_forced_logits_bit_identical() {
     // position, logits bit-identical to single-stream forwards — even
     // with a mid-run eviction + admission into the freed slot.
     forall("teacher-forced batched logits == single-stream", 6, |g| {
-        let cfg = random_decoder_cfg(g);
-        let b = (cfg.d_model as f64).sqrt().round() as usize;
-        let mut params = CimParams::default();
-        params.array_dim = g.choose(&[16usize, 32]);
-        if b > params.array_dim {
+        let cfg = common::random_decoder_cfg(g);
+        let params = common::chip_params(g, &[16, 32]);
+        if !common::fits_array(&cfg, &params) {
             return;
         }
-        let seed = g.usize(0, 1 << 30) as u64;
-        let strategy = g.choose(&[Strategy::SparseMap, Strategy::DenseMap]);
+        let seed = common::seed(g);
+        let strategy = common::monarch_strategy(g);
         let capacity = g.usize(2, 4);
         let mut be = BatchDecodeEngine::on_chip(
             DecodeModel::synth(cfg.clone(), seed),

@@ -12,68 +12,14 @@
 
 use monarch_cim::cim::CimParams;
 use monarch_cim::mapping::{map_ops, Strategy};
-use monarch_cim::model::{MatmulOp, ModelConfig, OpKind, Stage};
-use monarch_cim::monarch::{MonarchMatrix, RectMonarch};
+use monarch_cim::monarch::RectMonarch;
 use monarch_cim::scheduler::{compile_plan, token_commands, CimCommand};
 use monarch_cim::sim::exec::FunctionalChip;
 use monarch_cim::util::prop::forall;
 use monarch_cim::util::rng::Pcg32;
 
-/// Random transformer-shaped Para op list over d x d tiles.
-fn random_model_ops(
-    g: &mut monarch_cim::util::prop::Gen,
-    d: usize,
-) -> (ModelConfig, Vec<MatmulOp>) {
-    let mut cfg = ModelConfig::tiny();
-    cfg.d_model = d;
-    let layers = g.usize(1, 2);
-    let ff_mult = g.usize(1, 4);
-    let mut ops = Vec::new();
-    for l in 0..layers {
-        for w in ["wq", "wk", "wv", "wo"] {
-            ops.push(MatmulOp {
-                name: format!("dec{l}.{w}"),
-                stage: Stage::Decoder,
-                layer: l,
-                kind: OpKind::Para,
-                rows: d,
-                cols: d,
-                batch: 1,
-            });
-        }
-        ops.push(MatmulOp {
-            name: format!("dec{l}.ffn1"),
-            stage: Stage::Decoder,
-            layer: l,
-            kind: OpKind::Para,
-            rows: ff_mult * d,
-            cols: d,
-            batch: 1,
-        });
-        ops.push(MatmulOp {
-            name: format!("dec{l}.ffn2"),
-            stage: Stage::Decoder,
-            layer: l,
-            kind: OpKind::Para,
-            rows: d,
-            cols: ff_mult * d,
-            batch: 1,
-        });
-    }
-    (cfg, ops)
-}
-
-/// Random tile grid for a rows x cols weight (d = tile dim).
-fn rect_randn(rows: usize, cols: usize, d: usize, rng: &mut Pcg32) -> RectMonarch {
-    let b = (d as f64).sqrt().round() as usize;
-    let tiles = rows.div_ceil(d) * cols.div_ceil(d);
-    RectMonarch {
-        rows,
-        cols,
-        n: d,
-        tiles: (0..tiles).map(|_| MonarchMatrix::randn(b, rng)).collect(),
-    }
-}
+mod common;
+use common::{random_model_ops, rect_randn};
 
 #[test]
 fn prop_compiled_replay_bit_identical_to_recompute() {
@@ -87,7 +33,7 @@ fn prop_compiled_replay_bit_identical_to_recompute() {
         let (cfg, ops) = random_model_ops(g, d);
         let mut params = CimParams::default();
         params.array_dim = m;
-        let mut rng = Pcg32::new(g.usize(0, 1 << 30) as u64);
+        let mut rng = Pcg32::new(common::seed(g));
         let weights: Vec<RectMonarch> = ops
             .iter()
             .map(|op| rect_randn(op.rows, op.cols, d, &mut rng))
@@ -134,7 +80,7 @@ fn prop_batched_replay_bit_identical_to_recompute() {
         let (cfg, ops) = random_model_ops(g, d);
         let mut params = CimParams::default();
         params.array_dim = m;
-        let mut rng = Pcg32::new(g.usize(0, 1 << 30) as u64);
+        let mut rng = Pcg32::new(common::seed(g));
         let weights: Vec<RectMonarch> = ops
             .iter()
             .map(|op| rect_randn(op.rows, op.cols, d, &mut rng))

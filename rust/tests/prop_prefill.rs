@@ -12,24 +12,11 @@
 //! single-stream f32 operations and causal attention is a cache-prefix
 //! bound.
 
-use monarch_cim::cim::CimParams;
-use monarch_cim::mapping::Strategy;
 use monarch_cim::model::ModelConfig;
 use monarch_cim::sim::decode::{BatchDecodeEngine, DecodeEngine, DecodeModel};
 use monarch_cim::util::prop::forall;
 
-/// Random decoder-only config with a perfect-square d_model and heads
-/// dividing it (the decode engine's contract).
-fn random_decoder_cfg(g: &mut monarch_cim::util::prop::Gen) -> ModelConfig {
-    let mut cfg = ModelConfig::tiny();
-    cfg.d_model = g.choose(&[16usize, 64]);
-    cfg.n_heads = g.choose(&[2usize, 4]);
-    cfg.d_ff = cfg.d_model * g.usize(1, 4);
-    cfg.dec_layers = g.usize(1, 2);
-    cfg.vocab = g.choose(&[64usize, 128]);
-    cfg.seq = 16;
-    cfg
-}
+mod common;
 
 #[test]
 fn prop_chunked_prefill_bit_identical_to_token_by_token() {
@@ -37,15 +24,13 @@ fn prop_chunked_prefill_bit_identical_to_token_by_token() {
     // every observable — per-position logits (lane order), the slot's
     // last logits, and the full KV cache — bitwise against forward().
     forall("chunked prefill == token-by-token forward", 6, |g| {
-        let cfg = random_decoder_cfg(g);
-        let b = (cfg.d_model as f64).sqrt().round() as usize;
-        let mut params = CimParams::default();
-        params.array_dim = g.choose(&[16usize, 32]);
-        if b > params.array_dim {
+        let cfg = common::random_decoder_cfg(g);
+        let params = common::chip_params(g, &[16, 32]);
+        if !common::fits_array(&cfg, &params) {
             return;
         }
-        let seed = g.usize(0, 1 << 30) as u64;
-        let strategy = g.choose(&[Strategy::Linear, Strategy::SparseMap, Strategy::DenseMap]);
+        let seed = common::seed(g);
+        let strategy = common::any_strategy(g);
         let plen = g.usize(1, 12);
         let prompt: Vec<i32> = (0..plen)
             .map(|i| ((i * 13 + 5) % cfg.vocab) as i32)
@@ -110,15 +95,13 @@ fn prop_chunked_generate_equals_independent_engines() {
     // neighbours decode in the SAME steps) must reproduce independent
     // single-stream engines token-for-token and cost-for-cost.
     forall("chunked generate_batch == single-stream engines", 6, |g| {
-        let cfg = random_decoder_cfg(g);
-        let b = (cfg.d_model as f64).sqrt().round() as usize;
-        let mut params = CimParams::default();
-        params.array_dim = g.choose(&[16usize, 32]);
-        if b > params.array_dim {
+        let cfg = common::random_decoder_cfg(g);
+        let params = common::chip_params(g, &[16, 32]);
+        if !common::fits_array(&cfg, &params) {
             return;
         }
-        let seed = g.usize(0, 1 << 30) as u64;
-        let strategy = g.choose(&[Strategy::Linear, Strategy::SparseMap, Strategy::DenseMap]);
+        let seed = common::seed(g);
+        let strategy = common::any_strategy(g);
         let capacity = g.usize(1, 4);
         let n_requests = capacity + g.usize(0, 3);
         let n_tokens = g.usize(1, 4);
@@ -181,15 +164,13 @@ fn prop_mid_chunk_admission_leaves_neighbours_untouched() {
     // prefilling a whole chunk; both must stay bit-identical to their
     // single-stream twins — the continuous-batching integration point.
     forall("mid-chunk admission is interference-free", 6, |g| {
-        let cfg = random_decoder_cfg(g);
-        let b = (cfg.d_model as f64).sqrt().round() as usize;
-        let mut params = CimParams::default();
-        params.array_dim = g.choose(&[16usize, 32]);
-        if b > params.array_dim {
+        let cfg = common::random_decoder_cfg(g);
+        let params = common::chip_params(g, &[16, 32]);
+        if !common::fits_array(&cfg, &params) {
             return;
         }
-        let seed = g.usize(0, 1 << 30) as u64;
-        let strategy = g.choose(&[Strategy::SparseMap, Strategy::DenseMap]);
+        let seed = common::seed(g);
+        let strategy = common::monarch_strategy(g);
         let mut be = BatchDecodeEngine::on_chip(
             DecodeModel::synth(cfg.clone(), seed),
             params.clone(),

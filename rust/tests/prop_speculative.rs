@@ -1,0 +1,269 @@
+//! Property tests for speculative decoding (`sim::speculate`,
+//! DESIGN.md §6d): over random model geometries, mapping strategies,
+//! K ∈ 1..=8 and draft configurations (layer-truncated self-drafts,
+//! unrelated-seed drafts, smaller-dimension drafts) —
+//!
+//! * emitted token sequences are **bitwise equal** to
+//!   [`DecodeEngine::generate`] on the target model (the ISSUE-5
+//!   acceptance property: a draft can cost rounds, never change output);
+//! * the target KV cache after rollback is bitwise equal to the plain
+//!   engine's at the same length (rejected lanes leave no residue);
+//! * per-round cost records sum to the honest lane count — rejected
+//!   lanes included — and each lane's record equals
+//!   [`decode_token_cost`] at its own KV length;
+//! * [`KvCache::truncate`]-then-extend is bitwise indistinguishable
+//!   from never having extended (the rollback primitive itself).
+
+use monarch_cim::sim::decode::{DecodeEngine, DecodeModel};
+use monarch_cim::sim::speculate::{self_draft_model, SpeculativeEngine};
+use monarch_cim::sim::trace::decode_token_cost;
+use monarch_cim::util::prop::forall;
+
+mod common;
+
+#[test]
+fn prop_speculative_tokens_bit_identical_to_greedy() {
+    forall("speculative decode == plain greedy (bitwise)", 8, |g| {
+        let cfg = common::random_decoder_cfg(g);
+        let params = common::chip_params(g, &[16, 32]);
+        if !common::fits_array(&cfg, &params) {
+            return;
+        }
+        let seed = common::seed(g);
+        let strategy = common::any_strategy(g);
+        let k = g.usize(1, 8);
+        // three draft families: layer-truncated self-draft (partial
+        // agreement), unrelated seed (mostly rejections — rollback
+        // exercised), smaller-dimension draft (different geometry)
+        let draft_kind = g.usize(0, 2);
+        let draft = match draft_kind {
+            0 => self_draft_model(&cfg, seed, g.usize(1, cfg.dec_layers)),
+            1 => DecodeModel::synth(cfg.clone(), seed.wrapping_add(1)),
+            _ => {
+                let mut dcfg = cfg.clone();
+                dcfg.d_model = 16;
+                dcfg.n_heads = 2;
+                dcfg.d_ff = 32;
+                DecodeModel::synth(dcfg, seed.wrapping_add(2))
+            }
+        };
+        let plen = g.usize(1, 6);
+        let n_tokens = g.usize(1, 6);
+        let prompt: Vec<i32> = (0..plen)
+            .map(|i| ((i * 13 + 5) % cfg.vocab) as i32)
+            .collect();
+        let mut spec = SpeculativeEngine::on_chip(
+            DecodeModel::synth(cfg.clone(), seed),
+            draft,
+            params.clone(),
+            strategy,
+            k,
+        );
+        let r = spec.generate(&prompt, n_tokens);
+        let mut plain = DecodeEngine::on_chip(
+            DecodeModel::synth(cfg.clone(), seed),
+            params.clone(),
+            strategy,
+        );
+        let want = plain.generate(&prompt, n_tokens);
+        assert_eq!(
+            r.tokens, want.tokens,
+            "{strategy:?} K={k} draft_kind={draft_kind}: speculative tokens \
+             diverged from plain greedy decode"
+        );
+
+        // KV after rollback == plain engine at the same length (the
+        // spec engine never feeds the final emitted token, so its cache
+        // is exactly one position shorter)
+        let spec_kv = spec.kv_cache();
+        assert_eq!(spec_kv.len(), plen + n_tokens - 1, "unexpected cache length");
+        let plain_kv = plain.kv_cache();
+        for l in 0..cfg.dec_layers {
+            for pos in 0..spec_kv.len() {
+                assert_eq!(
+                    spec_kv.key(l, pos),
+                    plain_kv.key(l, pos),
+                    "{strategy:?} K={k} layer {l} pos {pos}: rollback left key residue"
+                );
+                assert_eq!(
+                    spec_kv.value(l, pos),
+                    plain_kv.value(l, pos),
+                    "{strategy:?} K={k} layer {l} pos {pos}: rollback left value residue"
+                );
+            }
+        }
+
+        // honest lane accounting: every verify lane — accepted or
+        // rejected — has exactly one per-position record, and each round
+        // record matches decode_token_cost at the lane's own KV length
+        let fed: usize = r.rounds.iter().map(|rd| rd.lanes).sum();
+        assert_eq!(
+            r.per_position.len(),
+            plen + fed,
+            "{strategy:?} K={k}: per-position records != prompt + verify lanes"
+        );
+        let mm = spec.mapping().expect("on-chip engine has a mapping");
+        let mut flat = r.per_position[plen..].iter();
+        for (ri, rd) in r.rounds.iter().enumerate() {
+            assert_eq!(rd.lanes, rd.proposed + 1, "round {ri}: lane count");
+            assert!(rd.accepted <= rd.proposed, "round {ri}: accepted > proposed");
+            assert!(rd.proposed <= k, "round {ri}: proposed > K");
+            assert_eq!(rd.verify.per_lane.len(), rd.lanes, "round {ri}: bill size");
+            for (i, c) in rd.verify.per_lane.iter().enumerate() {
+                let want_cost =
+                    decode_token_cost(&cfg, mm, &params, rd.base_kv + i + 1);
+                assert_eq!(
+                    c.latency, want_cost.latency,
+                    "round {ri} lane {i}: latency record drifted"
+                );
+                assert_eq!(
+                    c.energy, want_cost.energy,
+                    "round {ri} lane {i}: energy record drifted"
+                );
+                // the slot-trace record (flattened) is the same bill
+                let traced = flat.next().expect("trace shorter than lanes");
+                assert_eq!(traced.latency, want_cost.latency, "trace latency");
+                assert_eq!(traced.energy, want_cost.energy, "trace energy");
+            }
+        }
+        assert!(flat.next().is_none(), "trace longer than the rounds' lanes");
+    });
+}
+
+#[test]
+fn prop_perfect_self_draft_never_rejects() {
+    // a full-depth self-draft is the target bit for bit, so greedy
+    // acceptance takes every proposal: acceptance rate 1.0 and > 1
+    // token per round whenever K and the request allow it
+    forall("full self-draft accepts everything", 6, |g| {
+        let cfg = common::random_decoder_cfg(g);
+        let params = common::chip_params(g, &[16, 32]);
+        if !common::fits_array(&cfg, &params) {
+            return;
+        }
+        let seed = common::seed(g);
+        let strategy = common::monarch_strategy(g);
+        let k = g.usize(1, 4);
+        let prompt: Vec<i32> = (0..g.usize(1, 4))
+            .map(|i| ((i * 29 + 3) % cfg.vocab) as i32)
+            .collect();
+        // n >= 3 so the first round always has room for >= 1 proposal
+        let n_tokens = g.usize(3, 8);
+        let mut spec = SpeculativeEngine::on_chip(
+            DecodeModel::synth(cfg.clone(), seed),
+            self_draft_model(&cfg, seed, cfg.dec_layers),
+            params.clone(),
+            strategy,
+            k,
+        );
+        let r = spec.generate(&prompt, n_tokens);
+        assert!(r.total_proposed() > 0, "no proposals despite n_tokens >= 2");
+        assert_eq!(
+            r.total_accepted(),
+            r.total_proposed(),
+            "{strategy:?} K={k}: a perfect draft was rejected"
+        );
+        assert_eq!(r.acceptance_rate(), 1.0);
+        assert!(r.tokens_per_round() > 1.0, "no speculative win");
+        let mut plain = DecodeEngine::on_chip(
+            DecodeModel::synth(cfg.clone(), seed),
+            params.clone(),
+            strategy,
+        );
+        assert_eq!(r.tokens, plain.generate(&prompt, n_tokens).tokens);
+    });
+}
+
+#[test]
+fn mismatched_draft_forces_midwindow_rejections() {
+    // deterministic rollback exercise: an unrelated-seed draft disagrees
+    // with the target almost everywhere, so verify rounds reject
+    // mid-window (accepted < proposed) — and the output must still be
+    // bitwise the plain greedy sequence (the rollback left no trace)
+    let cfg = monarch_cim::model::ModelConfig::tiny();
+    let params = monarch_cim::cim::CimParams::default();
+    let strategy = monarch_cim::mapping::Strategy::DenseMap;
+    let mut spec = SpeculativeEngine::on_chip(
+        DecodeModel::synth(cfg.clone(), 2025),
+        DecodeModel::synth(cfg.clone(), 77_777),
+        params.clone(),
+        strategy,
+        4,
+    );
+    let prompt = [11i32, 48, 85];
+    let r = spec.generate(&prompt, 12);
+    assert!(
+        r.rounds.iter().any(|rd| rd.accepted < rd.proposed),
+        "an unrelated draft should reject at least once"
+    );
+    let mut plain = DecodeEngine::on_chip(DecodeModel::synth(cfg, 2025), params, strategy);
+    let want = plain.generate(&prompt, 12);
+    assert_eq!(r.tokens, want.tokens, "rejection rollback corrupted the output");
+}
+
+#[test]
+fn prop_kv_truncate_then_extend_is_bitwise_invisible() {
+    // the rollback primitive: feed a prefix, detour through junk
+    // positions, truncate back, resume — the cache and logits must be
+    // bitwise what a straight-through engine produces (truncate to 0 is
+    // included via cut == 0)
+    forall("kv truncate+extend == straight-through", 6, |g| {
+        let cfg = common::random_decoder_cfg(g);
+        let params = common::chip_params(g, &[16, 32]);
+        if !common::fits_array(&cfg, &params) {
+            return;
+        }
+        let seed = common::seed(g);
+        let strategy = common::any_strategy(g);
+        let toks: Vec<i32> = (0..8)
+            .map(|i| ((i * 13 + 5) % cfg.vocab) as i32)
+            .collect();
+        let cut = g.usize(0, toks.len() - 1);
+        let junk_n = g.usize(1, 4);
+        let mut straight = DecodeEngine::on_chip(
+            DecodeModel::synth(cfg.clone(), seed),
+            params.clone(),
+            strategy,
+        );
+        let mut want_last = Vec::new();
+        for &t in &toks {
+            want_last = straight.forward(t).to_vec();
+        }
+        let mut detour = DecodeEngine::on_chip(
+            DecodeModel::synth(cfg.clone(), seed),
+            params.clone(),
+            strategy,
+        );
+        for &t in &toks[..cut] {
+            detour.forward(t);
+        }
+        for j in 0..junk_n {
+            detour.forward(((j * 7 + 1) % cfg.vocab) as i32);
+        }
+        detour.truncate_kv(cut);
+        assert_eq!(detour.kv_len(), cut);
+        let mut got_last = Vec::new();
+        for &t in &toks[cut..] {
+            got_last = detour.forward(t).to_vec();
+        }
+        assert_eq!(
+            want_last, got_last,
+            "{strategy:?} cut {cut}: resumed logits drifted"
+        );
+        assert_eq!(straight.kv_len(), detour.kv_len());
+        for l in 0..cfg.dec_layers {
+            for pos in 0..toks.len() {
+                assert_eq!(
+                    straight.kv_cache().key(l, pos),
+                    detour.kv_cache().key(l, pos),
+                    "{strategy:?} layer {l} pos {pos}: key residue after rollback"
+                );
+                assert_eq!(
+                    straight.kv_cache().value(l, pos),
+                    detour.kv_cache().value(l, pos),
+                    "{strategy:?} layer {l} pos {pos}: value residue after rollback"
+                );
+            }
+        }
+    });
+}
