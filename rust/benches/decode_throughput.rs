@@ -5,9 +5,12 @@
 //! with a growing KV cache, instead of per-op matvecs).
 //!
 //! Reports host-wall-clock **tokens/sec** per strategy (the number the
-//! compiled-plan replay optimizes), plus a batched sweep (B ∈ {1,2,4,8}
-//! concurrent streams through one DenseMap chip via
-//! `BatchDecodeEngine::generate_batch` — the serving amortization) and a
+//! compiled-plan replay optimizes) with a **bit-block vs index-replay**
+//! comparison (the two pass-table encodings, DESIGN.md §6e — both are
+//! bit-identical, so the delta is pure replay-loop speed), plus a
+//! batched sweep (B ∈ {1..8} concurrent streams through one DenseMap
+//! chip via `BatchDecodeEngine::generate_batch` — the serving
+//! amortization, both encodings measured per B) and a
 //! **chunked-prefill sweep** (prompt lengths × chunk sizes through
 //! `BatchDecodeEngine::step_chunks`, lanes = positions — the
 //! time-to-first-token amortization) and a **speculative-decode sweep**
@@ -28,6 +31,7 @@ use monarch_cim::cim::CimParams;
 use monarch_cim::mapping::Strategy;
 use monarch_cim::model::ModelConfig;
 use monarch_cim::sim::decode::{BatchDecodeEngine, DecodeEngine, DecodeModel};
+use monarch_cim::sim::exec::ReplayMode;
 use monarch_cim::sim::speculate::{self_draft_model, SpeculativeEngine};
 use monarch_cim::util::bench::{section, Bencher};
 use monarch_cim::util::json::{num, obj, s, Json};
@@ -108,6 +112,17 @@ fn main() {
             })
             .clone();
         let tps = passes / (meas.mean_ns * 1e-9);
+        // same decode through the index-list pass encoding — outputs
+        // are bit-identical, so the delta is pure replay-loop speed
+        eng.set_replay_mode(ReplayMode::IndexList);
+        let meas_idx = b
+            .bench(
+                &format!("{} decode 16 tokens (index replay)", strategy.name()),
+                || std::hint::black_box(eng.generate(&PROMPT, TOKENS)),
+            )
+            .clone();
+        eng.set_replay_mode(ReplayMode::BitBlock);
+        let idx_tps = passes / (meas_idx.mean_ns * 1e-9);
         let arrays = eng.mapping().map(|mm| mm.arrays).unwrap_or(0);
         // one un-timed run for the modeled per-token cost breakdown
         let r = eng.generate(&PROMPT, TOKENS);
@@ -130,12 +145,20 @@ fn main() {
                 .unwrap_or(0.0),
             PROMPT.len() + TOKENS,
         );
+        println!(
+            "  -> replay encoding: bit-block {:.0} vs index {:.0} tokens/s ({:.2}x)",
+            tps,
+            idx_tps,
+            tps / idx_tps.max(1e-12),
+        );
         records.push((
             strategy.name().to_string(),
             obj(vec![
                 ("tokens_per_sec", num(tps)),
                 ("ns_per_token", num(meas.mean_ns / passes)),
                 ("speedup_vs_reference", num(tps / ref_tps)),
+                ("tokens_per_sec_index_replay", num(idx_tps)),
+                ("bitblock_speedup_vs_index", num(tps / idx_tps.max(1e-12))),
                 ("modeled_ns_per_token", num(total.latency.critical_ns() / n_tok)),
                 ("modeled_nj_per_token", num(total.energy.total_nj() / n_tok)),
                 ("arrays", num(arrays as f64)),
@@ -146,7 +169,7 @@ fn main() {
     section("batched decode sweep — B concurrent streams, one DenseMap chip");
     let mut batched_records: Vec<(String, Json)> = Vec::new();
     let mut b1_tps = 0.0f64;
-    for batch in [1usize, 2, 4, 8] {
+    for batch in 1usize..=8 {
         let mut eng = BatchDecodeEngine::on_chip(
             DecodeModel::synth(cfg.clone(), 2025),
             params.clone(),
@@ -163,6 +186,16 @@ fn main() {
             .clone();
         // every stream advances prompt+TOKENS positions per iteration
         let tps = batch as f64 * passes / (meas.mean_ns * 1e-9);
+        // index-list pass encoding, same chip + prompts (bit-identical
+        // logits; the delta is pure replay-loop speed)
+        eng.set_replay_mode(ReplayMode::IndexList);
+        let meas_idx = b
+            .bench(&format!("dense batched decode B={batch} (index replay)"), || {
+                std::hint::black_box(eng.generate_batch(&prompts, TOKENS))
+            })
+            .clone();
+        eng.set_replay_mode(ReplayMode::BitBlock);
+        let idx_tps = batch as f64 * passes / (meas_idx.mean_ns * 1e-9);
         if batch == 1 {
             b1_tps = tps;
         }
@@ -172,6 +205,12 @@ fn main() {
             meas.mean_ns / passes / 1e3,
             tps / b1_tps.max(1e-12),
         );
+        println!(
+            "  -> B={batch}: bit-block {:.0} vs index {:.0} tokens/s ({:.2}x)",
+            tps,
+            idx_tps,
+            tps / idx_tps.max(1e-12),
+        );
         batched_records.push((
             format!("batch_{batch}"),
             obj(vec![
@@ -179,6 +218,8 @@ fn main() {
                 ("tokens_per_sec", num(tps)),
                 ("ns_per_token", num(meas.mean_ns / (batch as f64 * passes))),
                 ("speedup_vs_b1", num(tps / b1_tps.max(1e-12))),
+                ("tokens_per_sec_index_replay", num(idx_tps)),
+                ("bitblock_speedup_vs_index", num(tps / idx_tps.max(1e-12))),
             ]),
         ));
     }

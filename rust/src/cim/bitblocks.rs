@@ -1,0 +1,347 @@
+//! Bit-block encoding of the compiled pass tables' index sets (ISSUE 6
+//! tentpole; DESIGN.md §6e).
+//!
+//! A compiled pass names its driven rows and scheduled columns. PR 2
+//! stored those as `Vec<usize>` index lists — the naive sparse encoding
+//! whose per-index loads and bounds checks dominate the replay inner
+//! loop. [`BitBlocks`] re-encodes a sorted index set as u64 words (one
+//! word per 64 array rows/columns) plus a per-word **dense-offset
+//! prefix sum**, giving two O(1) primitives the replay builds on:
+//!
+//! * **popcnt sparse→dense indexing** ([`BitBlocks::rank`]): the dense
+//!   position of sparse index `i` is
+//!   `offsets[i/64] + (words[i/64] & !(u64::MAX << i%64)).count_ones()`
+//!   — the count of set bits strictly before `i`. A fully-set block
+//!   degenerates to the identity (`rank(i) == i` when the set is
+//!   `0..len`), which [`BitBlocks::is_identity`] exposes so consumers
+//!   can skip translation entirely.
+//! * **run iteration** ([`BitBlocks::runs`]): maximal runs of
+//!   consecutive set bits, merged across word boundaries, yielded as
+//!   `(sparse_start, dense_start, len)` triples. Every run maps a
+//!   contiguous dense range onto a contiguous sparse range, so the
+//!   replay stages inputs with `copy_from_slice` and accumulates
+//!   columns with contiguous slice zips — no per-index bounds checks
+//!   ([`crate::cim::crossbar::Crossbar::mvm_pass_bits`]).
+//!
+//! The encoding is exact for every pass the planner emits (all three
+//! strategies produce strictly ascending row/column lists —
+//! `scheduler::plan`), and the word-boundary cases (sets ending at bit
+//! 63/64/65, runs spanning words) are pinned by the unit tests below
+//! and by `tests/prop_exec_plan.rs` at array dims 63/64/65.
+
+/// A sorted set of indices over a fixed universe `0..bits`, stored as
+/// u64 bit-block words with per-word dense-offset prefix sums.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BitBlocks {
+    /// `words[w]` holds membership of indices `64w..64w+64` (bit `i%64`
+    /// of word `i/64` is set iff `i` is in the set).
+    words: Vec<u64>,
+    /// `offsets[w]` = number of set bits in `words[..w]` — the dense
+    /// offset at which word `w`'s members start.
+    offsets: Vec<u32>,
+    /// Number of set bits (dense length).
+    len: usize,
+    /// Universe size the words span.
+    bits: usize,
+    /// The set is exactly `0..len` — rank is the identity.
+    identity: bool,
+}
+
+impl BitBlocks {
+    /// Encode a strictly ascending index list over universe `0..bits`.
+    pub fn from_sorted(indices: &[usize], bits: usize) -> BitBlocks {
+        for w in indices.windows(2) {
+            assert!(w[0] < w[1], "indices must be strictly ascending");
+        }
+        if let Some(&last) = indices.last() {
+            assert!(last < bits, "index {last} outside universe 0..{bits}");
+        }
+        let mut words = vec![0u64; bits.div_ceil(64)];
+        for &i in indices {
+            words[i / 64] |= 1u64 << (i % 64);
+        }
+        let mut offsets = Vec::with_capacity(words.len());
+        let mut acc = 0u32;
+        for &w in &words {
+            offsets.push(acc);
+            acc += w.count_ones();
+        }
+        let identity = match indices.last() {
+            Some(&last) => last + 1 == indices.len(),
+            None => true,
+        };
+        BitBlocks {
+            words,
+            offsets,
+            len: indices.len(),
+            bits,
+            identity,
+        }
+    }
+
+    /// Number of set bits (the dense length).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Universe size.
+    pub fn bits(&self) -> usize {
+        self.bits
+    }
+
+    /// Raw bit-block words.
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// The set is exactly `0..len()`: every rank equals its index and
+    /// consumers may bypass sparse→dense translation (the fully-set
+    /// block fast path — all words below the boundary are `u64::MAX`).
+    pub fn is_identity(&self) -> bool {
+        self.identity
+    }
+
+    pub fn contains(&self, i: usize) -> bool {
+        i < self.bits && (self.words[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    /// Dense index of sparse index `i` (which must be a member): the
+    /// popcount of members strictly before `i`, via the per-word prefix
+    /// sum plus an in-word masked popcnt. `i % 64 < 64` always, so the
+    /// mask shift never overflows; a fully-set word degenerates to
+    /// `offsets[w] + i % 64` (identity within the word).
+    #[inline]
+    pub fn rank(&self, i: usize) -> usize {
+        debug_assert!(self.contains(i), "rank of non-member {i}");
+        let (w, b) = (i / 64, i % 64);
+        self.offsets[w] as usize
+            + (self.words[w] & !(u64::MAX << b)).count_ones() as usize
+    }
+
+    /// Iterate members in ascending order.
+    pub fn iter(&self) -> impl Iterator<Item = usize> + '_ {
+        self.words.iter().enumerate().flat_map(|(wi, &w)| {
+            let mut cur = w;
+            std::iter::from_fn(move || {
+                if cur == 0 {
+                    return None;
+                }
+                let tz = cur.trailing_zeros() as usize;
+                cur &= cur - 1; // clear lowest set bit
+                Some(wi * 64 + tz)
+            })
+        })
+    }
+
+    /// Reconstruct the sorted index list (tests / diagnostics).
+    pub fn indices(&self) -> Vec<usize> {
+        self.iter().collect()
+    }
+
+    /// Iterate maximal runs of consecutive members — merged across word
+    /// boundaries — as `(sparse_start, dense_start, len)`. Allocation
+    /// free; the replay hot loop's unit of work.
+    pub fn runs(&self) -> Runs<'_> {
+        Runs {
+            words: &self.words,
+            word: 0,
+            cur: self.words.first().copied().unwrap_or(0),
+            dense: 0,
+        }
+    }
+}
+
+/// Iterator state of [`BitBlocks::runs`].
+pub struct Runs<'a> {
+    words: &'a [u64],
+    /// Current word index.
+    word: usize,
+    /// Unconsumed bits of the current word.
+    cur: u64,
+    /// Dense index of the next yielded member.
+    dense: usize,
+}
+
+impl Iterator for Runs<'_> {
+    type Item = (usize, usize, usize);
+
+    fn next(&mut self) -> Option<(usize, usize, usize)> {
+        while self.cur == 0 {
+            self.word += 1;
+            if self.word >= self.words.len() {
+                return None;
+            }
+            self.cur = self.words[self.word];
+        }
+        let tz = self.cur.trailing_zeros() as usize;
+        let start = self.word * 64 + tz;
+        let run = (self.cur >> tz).trailing_ones() as usize;
+        let mut len = run;
+        if tz + run == 64 {
+            // the run reaches the top of the word: it may continue into
+            // following words (which must then be set from bit 0 up)
+            self.cur = 0;
+            while self.word + 1 < self.words.len() {
+                let nxt = self.words[self.word + 1];
+                let t1 = nxt.trailing_ones() as usize;
+                if t1 == 0 {
+                    break;
+                }
+                self.word += 1;
+                len += t1;
+                if t1 == 64 {
+                    self.cur = 0;
+                } else {
+                    // consume the continuation bits, keep the rest
+                    self.cur = nxt & (u64::MAX << t1);
+                    break;
+                }
+            }
+        } else {
+            // consume the run's bits (shift < 64 here)
+            self.cur &= u64::MAX << (tz + run);
+        }
+        let dense = self.dense;
+        self.dense += len;
+        Some((start, dense, len))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Reference rank: position in the sorted list.
+    fn rank_by_scan(indices: &[usize], i: usize) -> usize {
+        indices.iter().position(|&x| x == i).unwrap()
+    }
+
+    /// Expand runs back into the index list they cover.
+    fn expand_runs(bb: &BitBlocks) -> Vec<usize> {
+        let mut out = Vec::new();
+        let mut expect_dense = 0usize;
+        for (s, d, l) in bb.runs() {
+            assert_eq!(d, expect_dense, "dense offsets must be cumulative");
+            expect_dense += l;
+            out.extend(s..s + l);
+        }
+        out
+    }
+
+    #[test]
+    fn rank_matches_linear_scan() {
+        let cases: Vec<(Vec<usize>, usize)> = vec![
+            (vec![0, 1, 2, 3], 8),
+            (vec![3, 7, 8, 9, 63, 64, 65, 127], 130),
+            ((0..64).collect(), 64),
+            ((0..65).collect(), 65),
+            (vec![62, 63], 64),
+            (vec![], 10),
+        ];
+        for (indices, bits) in cases {
+            let bb = BitBlocks::from_sorted(&indices, bits);
+            assert_eq!(bb.len(), indices.len());
+            assert_eq!(bb.bits(), bits);
+            for &i in &indices {
+                assert!(bb.contains(i));
+                assert_eq!(bb.rank(i), rank_by_scan(&indices, i), "rank({i})");
+            }
+        }
+    }
+
+    #[test]
+    fn rank_formula_is_the_documented_popcnt_expression() {
+        // the SNIPPETS bit-block mapping: dense index of bit `i` within
+        // one word is (block & !(u64::MAX << i)).count_ones()
+        let indices: Vec<usize> = vec![1, 4, 5, 30, 63];
+        let bb = BitBlocks::from_sorted(&indices, 64);
+        let block = bb.words()[0];
+        for &i in &indices {
+            let dense = (block & !(u64::MAX << i)).count_ones() as usize;
+            assert_eq!(bb.rank(i), dense);
+        }
+    }
+
+    #[test]
+    fn word_boundary_sets_63_64_65() {
+        // the geometries ISSUE 6 calls out: sets ending exactly below,
+        // at, and above the first u64 boundary
+        for n in [63usize, 64, 65] {
+            let indices: Vec<usize> = (0..n).collect();
+            let bb = BitBlocks::from_sorted(&indices, n);
+            assert!(bb.is_identity(), "0..{n} is the identity");
+            assert_eq!(bb.indices(), indices);
+            assert_eq!(expand_runs(&bb), indices, "runs must merge at n={n}");
+            assert_eq!(bb.runs().count(), 1, "one merged run at n={n}");
+            for &i in &indices {
+                assert_eq!(bb.rank(i), i);
+            }
+        }
+    }
+
+    #[test]
+    fn runs_merge_across_word_boundaries() {
+        // a run straddling bit 63/64, with separate runs on both sides
+        let indices: Vec<usize> = vec![5, 6, 62, 63, 64, 65, 100];
+        let bb = BitBlocks::from_sorted(&indices, 128);
+        let runs: Vec<(usize, usize, usize)> = bb.runs().collect();
+        assert_eq!(runs, vec![(5, 0, 2), (62, 2, 4), (100, 6, 1)]);
+        assert_eq!(expand_runs(&bb), indices);
+        assert!(!bb.is_identity());
+    }
+
+    #[test]
+    fn runs_span_multiple_full_words() {
+        // 130 consecutive members crossing two word boundaries collapse
+        // into ONE run (full middle word)
+        let indices: Vec<usize> = (10..140).collect();
+        let bb = BitBlocks::from_sorted(&indices, 160);
+        assert_eq!(bb.runs().collect::<Vec<_>>(), vec![(10, 0, 130)]);
+        for &i in &indices {
+            assert_eq!(bb.rank(i), i - 10);
+        }
+    }
+
+    #[test]
+    fn identity_detection() {
+        assert!(BitBlocks::from_sorted(&[], 0).is_identity());
+        assert!(BitBlocks::from_sorted(&[0], 7).is_identity());
+        assert!(BitBlocks::from_sorted(&(0..32).collect::<Vec<_>>(), 64).is_identity());
+        // offset or gapped sets are not the identity
+        assert!(!BitBlocks::from_sorted(&[1], 7).is_identity());
+        assert!(!BitBlocks::from_sorted(&[0, 2], 7).is_identity());
+    }
+
+    #[test]
+    fn empty_set_has_no_runs() {
+        let bb = BitBlocks::from_sorted(&[], 100);
+        assert!(bb.is_empty());
+        assert_eq!(bb.runs().count(), 0);
+        assert_eq!(bb.iter().count(), 0);
+        assert!(!bb.contains(3));
+    }
+
+    #[test]
+    fn iter_matches_indices_on_scattered_sets() {
+        let indices: Vec<usize> = vec![0, 2, 3, 64, 66, 127, 128, 191];
+        let bb = BitBlocks::from_sorted(&indices, 192);
+        assert_eq!(bb.iter().collect::<Vec<_>>(), indices);
+        assert_eq!(expand_runs(&bb), indices);
+    }
+
+    #[test]
+    #[should_panic(expected = "strictly ascending")]
+    fn unsorted_input_rejected() {
+        BitBlocks::from_sorted(&[3, 2], 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "outside universe")]
+    fn out_of_universe_rejected() {
+        BitBlocks::from_sorted(&[8], 8);
+    }
+}

@@ -9,6 +9,7 @@
 //! all rows would produce incorrect results" failure mode is an explicit
 //! negative test.
 
+use crate::cim::bitblocks::BitBlocks;
 use crate::tensor::Matrix;
 
 /// One m x m analog crossbar with programmed conductances.
@@ -144,6 +145,85 @@ impl Crossbar {
                 for (acc, &xv) in out[k * batch..(k + 1) * batch].iter_mut().zip(lanes) {
                     if xv != 0.0 {
                         *acc += xv * w;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Bit-block form of [`Crossbar::mvm_pass_cols`] (ISSUE 6 tentpole):
+    /// the driven rows and scheduled columns arrive as [`BitBlocks`] and
+    /// the kernel walks their set-bit **runs** — each run's columns are
+    /// a contiguous cell span zipped against a contiguous output span,
+    /// so the inner loop has no per-index gather and no bounds checks. A
+    /// fully-set column block degenerates to one whole-width zip (the
+    /// identity fast path).
+    ///
+    /// Rows are visited in ascending order with the same zero-input
+    /// skip, and f32 accumulation per column is unchanged — so for the
+    /// ascending index lists the planner emits this is **bit-identical**
+    /// to `mvm_pass_cols` (property-tested in `tests/prop_exec_plan.rs`).
+    pub fn mvm_pass_bits(
+        &self,
+        input: &[f32],
+        rows: &BitBlocks,
+        cols: &BitBlocks,
+        out: &mut [f32],
+    ) {
+        assert_eq!(input.len(), self.dim, "input must span all rows");
+        assert_eq!(out.len(), cols.len(), "one output per converted column");
+        out.fill(0.0);
+        for (r0, _, rlen) in rows.runs() {
+            for r in r0..r0 + rlen {
+                let xv = input[r];
+                if xv == 0.0 {
+                    continue;
+                }
+                let row = &self.cells[r * self.dim..(r + 1) * self.dim];
+                for (c0, k0, clen) in cols.runs() {
+                    for (acc, w) in
+                        out[k0..k0 + clen].iter_mut().zip(&row[c0..c0 + clen])
+                    {
+                        *acc += xv * w;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Bit-block form of [`Crossbar::mvm_batch_cols`]: stride-`batch`
+    /// interleaved lanes accumulated over column *runs* — each cell read
+    /// updates `batch` adjacent accumulators, and consecutive columns of
+    /// a run land in consecutive lane groups of `out`, so the kernel
+    /// touches memory strictly forward with no per-index bounds checks.
+    /// Per lane, row order and the zero-input skip match
+    /// [`Crossbar::mvm_batch_cols`] exactly (bit-identical outputs).
+    pub fn mvm_batch_bits(
+        &self,
+        input: &[f32],
+        batch: usize,
+        rows: &BitBlocks,
+        cols: &BitBlocks,
+        out: &mut [f32],
+    ) {
+        assert!(batch > 0, "batch must be positive");
+        assert_eq!(input.len(), self.dim * batch, "input must span rows x batch");
+        assert_eq!(out.len(), cols.len() * batch, "one output per column per lane");
+        out.fill(0.0);
+        for (r0, _, rlen) in rows.runs() {
+            for r in r0..r0 + rlen {
+                let lanes = &input[r * batch..(r + 1) * batch];
+                let row = &self.cells[r * self.dim..(r + 1) * self.dim];
+                for (c0, k0, clen) in cols.runs() {
+                    let seg = &mut out[k0 * batch..(k0 + clen) * batch];
+                    for (k, &w) in row[c0..c0 + clen].iter().enumerate() {
+                        for (acc, &xv) in
+                            seg[k * batch..(k + 1) * batch].iter_mut().zip(lanes)
+                        {
+                            if xv != 0.0 {
+                                *acc += xv * w;
+                            }
+                        }
                     }
                 }
             }
@@ -352,6 +432,70 @@ mod tests {
                         "batch {batch} lane {l} col {k}"
                     );
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn mvm_pass_bits_bit_identical_to_index_lists() {
+        // the bit-block kernel must reproduce the index-list kernel
+        // exactly on the ascending row/col sets the planner emits,
+        // including gapped runs and the fully-dense identity set
+        let mut rng = Pcg32::new(5);
+        let w = Matrix::randn(16, 16, &mut rng);
+        let mut xb = Crossbar::new(16);
+        xb.program_block(0, 0, &w);
+        let mut x = rng.normal_vec(16);
+        x[5] = 0.0; // exercise the zero-input skip on both paths
+        let row_sets: Vec<Vec<usize>> =
+            vec![vec![0, 1, 2, 5, 6, 7, 15], (0..16).collect(), vec![8]];
+        let col_sets: Vec<Vec<usize>> =
+            vec![vec![0, 1, 2, 3], vec![4, 5, 10, 11, 12], (0..16).collect()];
+        for active in &row_sets {
+            for cols in &col_sets {
+                let rb = BitBlocks::from_sorted(active, 16);
+                let cb = BitBlocks::from_sorted(cols, 16);
+                let mut want = vec![0.0f32; cols.len()];
+                xb.mvm_pass_cols(&x, active, cols, &mut want);
+                let mut got = vec![f32::NAN; cols.len()];
+                xb.mvm_pass_bits(&x, &rb, &cb, &mut got);
+                for (k, (g, w)) in got.iter().zip(&want).enumerate() {
+                    assert_eq!(g.to_bits(), w.to_bits(), "col slot {k}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mvm_batch_bits_bit_identical_per_lane() {
+        let mut rng = Pcg32::new(8);
+        let w = Matrix::randn(16, 16, &mut rng);
+        let mut xb = Crossbar::new(16);
+        xb.program_block(0, 0, &w);
+        let active: Vec<usize> = vec![0, 1, 4, 5, 6, 12, 13];
+        let cols: Vec<usize> = vec![2, 3, 4, 9, 15];
+        let rb = BitBlocks::from_sorted(&active, 16);
+        let cb = BitBlocks::from_sorted(&cols, 16);
+        for batch in [1usize, 2, 3, 8, 17] {
+            let lanes: Vec<Vec<f32>> = (0..batch)
+                .map(|l| {
+                    let mut x = rng.normal_vec(16);
+                    x[4] = if l % 2 == 0 { 0.0 } else { x[4] }; // zero-skip
+                    x
+                })
+                .collect();
+            let mut xi = vec![0.0f32; 16 * batch];
+            for (l, x) in lanes.iter().enumerate() {
+                for (r, &v) in x.iter().enumerate() {
+                    xi[r * batch + l] = v;
+                }
+            }
+            let mut want = vec![0.0f32; cols.len() * batch];
+            xb.mvm_batch_cols(&xi, batch, &active, &cols, &mut want);
+            let mut got = vec![f32::NAN; cols.len() * batch];
+            xb.mvm_batch_bits(&xi, batch, &rb, &cb, &mut got);
+            for (k, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(g.to_bits(), w.to_bits(), "batch {batch} slot {k}");
             }
         }
     }

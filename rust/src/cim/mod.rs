@@ -6,11 +6,13 @@
 //! for the timing-model interpretation.
 
 pub mod adc;
+pub mod bitblocks;
 pub mod crossbar;
 pub mod noise;
 pub mod energy;
 pub mod params;
 
+pub use bitblocks::BitBlocks;
 pub use crossbar::Crossbar;
 pub use energy::{Cost, Energy, Latency};
 pub use params::CimParams;

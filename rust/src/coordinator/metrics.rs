@@ -207,11 +207,17 @@ impl Metrics {
 
     pub fn snapshot(&self) -> Snapshot {
         let g = self.inner.lock().unwrap();
-        let elapsed = self
-            .started
-            .map(|t| t.elapsed().as_secs_f64())
-            .unwrap_or(1.0)
-            .max(1e-9);
+        // Rates need a start time AND at least one counted event AND
+        // measurable elapsed time; anything else reports 0.0 — the same
+        // "no samples yet" convention as the percentile guards below. A
+        // default-constructed Metrics (`started: None`) must not invent
+        // a phantom rate, and a snapshot taken nanoseconds after start
+        // must not divide by ~0 into an absurd one.
+        let elapsed = self.started.map(|t| t.elapsed().as_secs_f64());
+        let rate = |count: u64| match elapsed {
+            Some(e) if count > 0 && e > 0.0 => count as f64 / e.max(1e-9),
+            _ => 0.0,
+        };
         Snapshot {
             requests: g.requests,
             batches: g.batches,
@@ -231,7 +237,7 @@ impl Metrics {
             } else {
                 g.latency_us.p99()
             },
-            throughput_rps: g.requests as f64 / elapsed,
+            throughput_rps: rate(g.requests),
             sim_tokens: g.sim_tokens,
             sim_token_latency_ns: if g.sim_tokens == 0 {
                 0.0
@@ -239,7 +245,7 @@ impl Metrics {
                 g.sim_latency_ns / g.sim_tokens as f64
             },
             sim_energy_nj: g.sim_energy_nj,
-            sim_tokens_per_sec: g.sim_tokens as f64 / elapsed,
+            sim_tokens_per_sec: rate(g.sim_tokens),
             occupancy_mean: if g.occ_steps == 0 {
                 0.0
             } else {
@@ -414,5 +420,42 @@ mod tests {
         assert_eq!(s.sim_tokens, 64);
         assert!((s.sim_token_latency_ns - 150.0).abs() < 1e-9);
         assert!((s.sim_energy_nj - 1280.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rates_are_zero_without_samples() {
+        // zero counted events must read as rate 0.0, not NaN/inf or a
+        // phantom rate derived from elapsed time alone — same "no
+        // samples" convention as the percentile guards
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.throughput_rps, 0.0);
+        assert_eq!(s.sim_tokens_per_sec, 0.0);
+    }
+
+    #[test]
+    fn rates_are_zero_without_a_start_time() {
+        // a default-constructed Metrics has no start instant; recording
+        // events must still never invent a rate from the unwrap_or
+        // placeholder elapsed the old code divided by
+        let m = Metrics::default();
+        m.record_batch(4, 100.0);
+        m.record_sim_tokens(64, 6400.0, 640.0);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 4);
+        assert_eq!(s.sim_tokens, 64);
+        assert_eq!(s.throughput_rps, 0.0);
+        assert_eq!(s.sim_tokens_per_sec, 0.0);
+    }
+
+    #[test]
+    fn rates_are_finite_and_positive_with_samples() {
+        // the instant-after-start snapshot: elapsed can be arbitrarily
+        // small but the clamp keeps the rate finite
+        let m = Metrics::new();
+        m.record_batch(2, 50.0);
+        m.record_sim_tokens(16, 1600.0, 320.0);
+        let s = m.snapshot();
+        assert!(s.throughput_rps.is_finite() && s.throughput_rps > 0.0);
+        assert!(s.sim_tokens_per_sec.is_finite() && s.sim_tokens_per_sec > 0.0);
     }
 }

@@ -45,6 +45,10 @@ use crate::sim::speculate::self_draft_model;
 use crate::sim::trace::sum_costs;
 use crate::util::json::Json;
 
+/// One discovered `tiny_lm` artifact bucket:
+/// `(batch, artifact name, seq, vocab)`.
+type Bucket = (usize, String, usize, usize);
+
 /// One inference request: a token window answered with per-position
 /// logits.
 struct Request {
@@ -174,6 +178,38 @@ fn validate_window(tokens: &[i32], seq: usize, vocab: usize) -> Result<()> {
     Ok(())
 }
 
+/// Pick the artifact for an `n`-request chunk: the smallest compiled
+/// batch bucket that fits, else the largest available (the chunk is
+/// then split across executions). Returns a structured error instead of
+/// panicking when the bucket table is empty or inconsistent — a
+/// malformed manifest must fail the requests, not kill the worker
+/// thread.
+fn select_artifact(buckets: &[Bucket], n: usize) -> Result<(usize, &str)> {
+    let sizes: Vec<usize> = buckets.iter().map(|b| b.0).collect();
+    let bucket = match pick_bucket(&sizes, n) {
+        Some(b) => b,
+        None => *sizes
+            .last()
+            .ok_or_else(|| anyhow!("no compiled batch buckets available"))?,
+    };
+    let artifact = buckets
+        .iter()
+        .find(|b| b.0 == bucket)
+        .map(|b| b.1.as_str())
+        .ok_or_else(|| anyhow!("no artifact compiled for batch bucket {bucket}"))?;
+    Ok((bucket, artifact))
+}
+
+/// Fail every request of a chunk with a structured error reply: the
+/// worker stays alive and each caller's `recv` resolves to an `Err`
+/// instead of hanging on a dropped channel.
+fn fail_chunk(reqs: &[Request], err: &anyhow::Error, metrics: &Metrics) {
+    metrics.record_error();
+    for r in reqs {
+        let _ = r.resp.send(Err(anyhow!("batch scheduling failed: {err}")));
+    }
+}
+
 /// Worker loop for the PJRT backend.
 fn run_pjrt_worker(
     dir: std::path::PathBuf,
@@ -183,9 +219,9 @@ fn run_pjrt_worker(
     ready_tx: Sender<Result<(usize, usize)>>,
 ) {
     // --- startup: build runtime + discover tiny_lm buckets ---
-    let setup = (|| -> Result<(Runtime, Vec<(usize, String, usize, usize)>)> {
+    let setup = (|| -> Result<(Runtime, Vec<Bucket>)> {
         let mut runtime = Runtime::new(&dir)?;
-        let mut buckets: Vec<(usize, String, usize, usize)> = Vec::new();
+        let mut buckets: Vec<Bucket> = Vec::new();
         for a in &runtime.manifest().artifacts {
             if a.meta.get("kind").and_then(Json::as_str) == Some("tiny_lm") {
                 let batch = a
@@ -220,7 +256,6 @@ fn run_pjrt_worker(
     };
     let seq = buckets[0].2;
     let vocab = buckets[0].3;
-    let sizes: Vec<usize> = buckets.iter().map(|b| b.0).collect();
     while let Some(batch) = next_batch(&rx, &policy) {
         // process in bucket-sized chunks (a linger window can collect
         // more than the largest compiled batch size)
@@ -228,11 +263,18 @@ fn run_pjrt_worker(
         while !remaining.is_empty() {
             let t0 = Instant::now();
             let n = remaining.len();
-            let bucket = pick_bucket(&sizes, n).unwrap_or(*sizes.last().unwrap());
+            let (bucket, artifact) = match select_artifact(&buckets, n) {
+                Ok(sel) => sel,
+                Err(e) => {
+                    // structured reply instead of a worker-killing panic
+                    fail_chunk(remaining, &e, &metrics);
+                    remaining = &[];
+                    continue;
+                }
+            };
             let take = n.min(bucket);
             let (now, rest) = remaining.split_at(take);
             remaining = rest;
-            let artifact = &buckets.iter().find(|b| b.0 == bucket).unwrap().1;
             // assemble padded token matrix; O(1) membership mask instead
             // of a per-reply linear scan over a bad-index list
             let mut toks = vec![0i32; bucket * seq];
@@ -674,5 +716,81 @@ impl Drop for InferenceServer {
         if let Some(w) = self.worker.take() {
             let _ = w.join();
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bucket_table() -> Vec<Bucket> {
+        [1usize, 2, 4, 8]
+            .iter()
+            .map(|&b| (b, format!("tiny_lm_b{b}"), 8, 16))
+            .collect()
+    }
+
+    #[test]
+    fn select_artifact_picks_smallest_fitting_bucket() {
+        let buckets = bucket_table();
+        let (bucket, artifact) = select_artifact(&buckets, 3).unwrap();
+        assert_eq!(bucket, 4);
+        assert_eq!(artifact, "tiny_lm_b4");
+        let (bucket, artifact) = select_artifact(&buckets, 1).unwrap();
+        assert_eq!(bucket, 1);
+        assert_eq!(artifact, "tiny_lm_b1");
+    }
+
+    #[test]
+    fn select_artifact_falls_back_to_largest_bucket() {
+        // an oversize chunk takes the largest compiled batch; the
+        // worker then splits the chunk and loops
+        let buckets = bucket_table();
+        let (bucket, artifact) = select_artifact(&buckets, 100).unwrap();
+        assert_eq!(bucket, 8);
+        assert_eq!(artifact, "tiny_lm_b8");
+    }
+
+    #[test]
+    fn select_artifact_on_empty_table_is_an_error_not_a_panic() {
+        // regression: this path used to `unwrap` a `sizes.last()` of an
+        // empty table, killing the worker thread with every caller's
+        // reply channel still open
+        let err = select_artifact(&[], 5).unwrap_err();
+        assert!(
+            err.to_string().contains("no compiled batch buckets"),
+            "unexpected error: {err}"
+        );
+    }
+
+    #[test]
+    fn failed_chunk_round_trips_error_replies_and_keeps_channels_alive() {
+        // every request of a failed chunk must receive a structured
+        // error reply (no hung `recv`, no panic), and the failure must
+        // land in the error counter exactly once per chunk
+        let metrics = Metrics::new();
+        let mut reqs = Vec::new();
+        let mut rxs = Vec::new();
+        for _ in 0..3 {
+            let (rtx, rrx) = channel();
+            reqs.push(Request {
+                tokens: vec![0, 1, 2],
+                resp: rtx,
+                t0: Instant::now(),
+            });
+            rxs.push(rrx);
+        }
+        let err = select_artifact(&[], reqs.len()).unwrap_err();
+        fail_chunk(&reqs, &err, &metrics);
+        for rrx in rxs {
+            let reply = rrx.recv().expect("reply channel must stay alive");
+            let msg = reply.expect_err("chunk failed, reply must be Err").to_string();
+            assert!(
+                msg.contains("batch scheduling failed"),
+                "unexpected reply: {msg}"
+            );
+            assert!(msg.contains("no compiled batch buckets"), "cause lost: {msg}");
+        }
+        assert_eq!(metrics.snapshot().errors, 1);
     }
 }

@@ -39,11 +39,16 @@ impl StridePerm {
     /// Allocation-free form of [`StridePerm::apply`]: permute `x` into a
     /// caller-owned buffer (every element of `out` is overwritten). This
     /// is the hot-path entry point of the per-token replay loop.
+    ///
+    /// Gather form — `out` is walked in order (`out[j] = x[map(j)]`),
+    /// so the writes are sequential and only the reads stride. Because
+    /// `P` is an involution this computes the same permutation as the
+    /// scatter form `out[map(i)] = x[i]`.
     pub fn apply_into(&self, x: &[f32], out: &mut [f32]) {
         assert_eq!(x.len(), self.n(), "perm length mismatch");
         assert_eq!(out.len(), self.n(), "perm output length mismatch");
-        for (i, &v) in x.iter().enumerate() {
-            out[self.map(i)] = v;
+        for (j, o) in out.iter_mut().enumerate() {
+            *o = x[self.map(j)];
         }
     }
 
@@ -51,14 +56,15 @@ impl StridePerm {
     /// lanes stored stride-`batch` (`x[i * batch + l]` is lane `l`'s
     /// element `i`); each lane-block moves as one contiguous chunk, so
     /// the permutation is applied per lane-block with no per-lane loop.
+    /// Gather-ordered like [`StridePerm::apply_into`]: destination
+    /// lane-blocks are written sequentially.
     pub fn apply_batch_into(&self, x: &[f32], batch: usize, out: &mut [f32]) {
         assert!(batch > 0, "batch must be positive");
         assert_eq!(x.len(), self.n() * batch, "perm length mismatch");
         assert_eq!(out.len(), self.n() * batch, "perm output length mismatch");
-        for i in 0..self.n() {
-            let j = self.map(i);
-            out[j * batch..(j + 1) * batch]
-                .copy_from_slice(&x[i * batch..(i + 1) * batch]);
+        for (j, dst) in out.chunks_exact_mut(batch).enumerate() {
+            let i = self.map(j);
+            dst.copy_from_slice(&x[i * batch..(i + 1) * batch]);
         }
     }
 

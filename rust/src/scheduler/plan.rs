@@ -19,6 +19,16 @@
 //!   ([`crate::cim::crossbar::Crossbar::mvm_pass_cols`]).
 //! * `src`/`dst` — offsets into the stage input/output vectors, so the
 //!   executor's token loop is pure index-driven replay.
+//! * `row_bits`/`col_bits` — the same sets re-encoded as u64 bit-block
+//!   words with per-word dense-offset prefix sums
+//!   ([`crate::cim::BitBlocks`], ISSUE 6): the default replay iterates
+//!   set-bit *runs* of these (contiguous sparse↔dense spans) instead of
+//!   the index lists, staging inputs with block copies and accumulating
+//!   columns with contiguous slice zips
+//!   ([`crate::cim::crossbar::Crossbar::mvm_pass_bits`]). The index
+//!   lists are kept as the auditable baseline encoding
+//!   (`sim::exec::ReplayMode::IndexList`) and for schedule
+//!   cross-checks.
 //!
 //! The replay is bit-identical to a freshly recomputed
 //! `placement_schedule` execution (property-tested in
@@ -28,6 +38,7 @@
 use std::ops::Range;
 
 use super::placement_schedule;
+use crate::cim::bitblocks::BitBlocks;
 use crate::mapping::{Factor, MappedOp, ModelMapping, Strategy};
 
 /// One fully resolved analog pass of the per-token command stream.
@@ -47,6 +58,43 @@ pub struct CompiledPass {
     pub cols: Vec<usize>,
     /// Offset of this pass's output segment in the stage output vector.
     pub dst: usize,
+    /// Bit-block encoding of `rows` over universe `0..m` (one u64 word
+    /// per 64 array rows + per-word dense-offset prefix sums) — what
+    /// the default replay iterates.
+    pub row_bits: BitBlocks,
+    /// Bit-block encoding of `cols` (same layout).
+    pub col_bits: BitBlocks,
+}
+
+impl CompiledPass {
+    /// Resolve one pass from the scheduler's index lists, deriving the
+    /// bit-block encodings over the array's `0..m` universe. Every
+    /// schedule the planner walks produces strictly ascending row and
+    /// column lists (SparseMap places on the main diagonal, the
+    /// DenseMap walk is block-granular, Linear converts an identity
+    /// prefix), so the encoding is exact — `from_sorted` asserts it.
+    fn new(
+        array: usize,
+        rows: Vec<usize>,
+        n_in: usize,
+        src: usize,
+        cols: Vec<usize>,
+        dst: usize,
+        m: usize,
+    ) -> CompiledPass {
+        let row_bits = BitBlocks::from_sorted(&rows, m);
+        let col_bits = BitBlocks::from_sorted(&cols, m);
+        CompiledPass {
+            array,
+            rows,
+            n_in,
+            src,
+            cols,
+            dst,
+            row_bits,
+            col_bits,
+        }
+    }
 }
 
 /// Pass ranges of one d x d tile: the Right-factor passes run first,
@@ -151,16 +199,17 @@ fn compile_linear_op(
         let (rp, cp, rows_here, cols_here) = linear_tile_geometry(op, p.tile, m);
         let sched = placement_schedule(p, m, false);
         let pass = sched.passes.into_iter().next().expect("schedule has a pass");
-        passes.push(CompiledPass {
-            array: p.array,
-            n_in: cols_here,
-            src: cp * m,
+        passes.push(CompiledPass::new(
+            p.array,
+            pass.rows,
+            cols_here,
+            cp * m,
             // The executor consumes only the columns that land in the
             // output tile; the command stream still converts all m.
-            cols: pass.cols[..rows_here].to_vec(),
-            rows: pass.rows,
-            dst: rp * m,
-        });
+            pass.cols[..rows_here].to_vec(),
+            rp * m,
+            m,
+        ));
     }
     CompiledOpPlan {
         tiles: Vec::new(),
@@ -242,14 +291,9 @@ fn push_factor_passes(
             for (j, pass) in sched.passes.into_iter().enumerate() {
                 let off = (base + j) * b;
                 let n_in = pass.rows.len();
-                passes.push(CompiledPass {
-                    array: p.array,
-                    rows: pass.rows,
-                    n_in,
-                    src: off,
-                    cols: pass.cols,
-                    dst: off,
-                });
+                passes.push(CompiledPass::new(
+                    p.array, pass.rows, n_in, off, pass.cols, off, m,
+                ));
             }
         } else {
             // Whole-lane pass: the schedule's column list already walks
@@ -259,14 +303,9 @@ fn push_factor_passes(
             let pass = sched.passes.into_iter().next().expect("schedule has a pass");
             let off = base * b;
             let n_in = pass.rows.len();
-            passes.push(CompiledPass {
-                array: p.array,
-                rows: pass.rows,
-                n_in,
-                src: off,
-                cols: pass.cols,
-                dst: off,
-            });
+            passes.push(CompiledPass::new(
+                p.array, pass.rows, n_in, off, pass.cols, off, m,
+            ));
         }
     }
 }
@@ -341,6 +380,32 @@ mod tests {
                 assert_eq!(pass.cols.len(), mm.b, "walk converts one block");
                 assert_eq!(pass.n_in, mm.b);
                 assert_eq!(pass.src, pass.dst, "walk outputs pre-aligned");
+            }
+        }
+    }
+
+    #[test]
+    fn pass_bit_blocks_mirror_index_lists() {
+        // the two encodings of every compiled pass must describe the
+        // same sets, with rank() recovering each index's dense position
+        let cfg = ModelConfig::tiny();
+        let params = CimParams::default();
+        for strategy in Strategy::all() {
+            let mm = map_model(&cfg, &params, strategy);
+            let plan = compile_plan(&mm);
+            for op in &plan.ops {
+                for pass in &op.passes {
+                    assert_eq!(pass.row_bits.indices(), pass.rows, "{strategy:?}");
+                    assert_eq!(pass.col_bits.indices(), pass.cols, "{strategy:?}");
+                    assert_eq!(pass.row_bits.bits(), mm.m, "{strategy:?}");
+                    assert_eq!(pass.col_bits.bits(), mm.m, "{strategy:?}");
+                    for (k, &r) in pass.rows.iter().enumerate() {
+                        assert_eq!(pass.row_bits.rank(r), k, "{strategy:?} row");
+                    }
+                    for (k, &c) in pass.cols.iter().enumerate() {
+                        assert_eq!(pass.col_bits.rank(c), k, "{strategy:?} col");
+                    }
+                }
             }
         }
     }

@@ -401,6 +401,15 @@ impl DecodeEngine {
         }
     }
 
+    /// Select the chip's pass-table replay encoding (no-op on the
+    /// reference backend). Bit-identical either way; used by the bench
+    /// to compare bit-block replay against the index-list baseline.
+    pub fn set_replay_mode(&mut self, mode: crate::sim::exec::ReplayMode) {
+        if let ParaBackend::Chip(chip) = &mut self.backend {
+            chip.set_replay_mode(mode);
+        }
+    }
+
     /// Clear the KV cache, the trace and the stale per-request scratch
     /// (new sequence). After `reset` the engine is observationally
     /// indistinguishable from a freshly constructed one: the attention
@@ -793,6 +802,15 @@ impl BatchDecodeEngine {
         match &self.backend {
             ParaBackend::Chip(c) => Some(&c.mapping),
             ParaBackend::Reference => None,
+        }
+    }
+
+    /// Select the chip's pass-table replay encoding (no-op on the
+    /// reference backend). Bit-identical either way; used by the bench
+    /// to compare bit-block replay against the index-list baseline.
+    pub fn set_replay_mode(&mut self, mode: crate::sim::exec::ReplayMode) {
+        if let ParaBackend::Chip(chip) = &mut self.backend {
+            chip.set_replay_mode(mode);
         }
     }
 

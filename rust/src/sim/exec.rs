@@ -17,11 +17,19 @@
 //!   resolved once at [`FunctionalChip::program_rect`] time into a
 //!   [`ModelPlan`] ([`crate::scheduler::compile_plan`]) — flat pass
 //!   tables with pre-rotated column indices — and each token replays the
-//!   tables through reusable scratch ([`ExecScratch`]) and the
-//!   column-restricted [`Crossbar::mvm_pass_cols`]. The steady-state
+//!   tables through reusable scratch ([`ExecScratch`]). The steady-state
 //!   token loop performs **no per-pass heap allocation** and converts
 //!   only the columns the schedule names (O(rows × b) instead of
-//!   O(rows × m) per DenseMap pass).
+//!   O(rows × m) per DenseMap pass). Two encodings of each pass exist
+//!   ([`ReplayMode`], ISSUE 6): the default **bit-block** path walks
+//!   u64 set-bit runs of `row_bits`/`col_bits` — staging inputs with
+//!   contiguous block copies and accumulating through
+//!   [`Crossbar::mvm_pass_bits`]'s run-zipped inner loop — while the
+//!   **index-list** path replays the PR-2 `Vec<usize>` tables through
+//!   [`Crossbar::mvm_pass_cols`] as the benchmark baseline and second
+//!   audit encoding. Both are bit-identical per lane
+//!   (`tests/prop_exec_plan.rs`, including array dims 63/64/65 at the
+//!   u64 word boundaries).
 //! * **Schedule recompute** (the audit path,
 //!   [`FunctionalChip::run_op_recompute`], [`FunctionalChip::run_stage`],
 //!   [`FunctionalChip::run_stage_all_rows`]): re-derives
@@ -118,6 +126,24 @@ impl ExecScratch {
     }
 }
 
+/// Which encoding of the compiled pass tables the replay walks.
+///
+/// Outputs are bit-identical either way (`tests/prop_exec_plan.rs`);
+/// the modes exist so the bench layer can report the bit-block win over
+/// the index baseline and so audits have two independent encodings of
+/// the same schedule.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ReplayMode {
+    /// u64 bit-block words with popcnt dense indexing and run-merged
+    /// staging/accumulation (`CompiledPass::row_bits`/`col_bits`) — the
+    /// hot path.
+    #[default]
+    BitBlock,
+    /// The `Vec<usize>` index lists (`CompiledPass::rows`/`cols`) — the
+    /// PR-2 baseline encoding.
+    IndexList,
+}
+
 /// A programmed chip: one crossbar per allocated array, plus the
 /// compiled per-token plan and the scratch the replay runs through.
 pub struct FunctionalChip {
@@ -131,6 +157,8 @@ pub struct FunctionalChip {
     /// the audit/recompute path's index.
     op_placements: Vec<Vec<usize>>,
     scratch: ExecScratch,
+    /// Pass-table encoding the replay iterates (bit-block by default).
+    replay_mode: ReplayMode,
 }
 
 /// Build a single-op model config/op-list for a d x d Monarch weight.
@@ -160,23 +188,56 @@ fn rect_of(mon: &MonarchMatrix) -> RectMonarch {
 }
 
 /// Stage one pass's input rows into the shared staging buffer and run
-/// the column-restricted conversion. Only `pass.rows` entries of
-/// `input` are written (zeros for the padded tail) and only those are
-/// read, so no inter-pass clearing is needed.
+/// the column-restricted conversion. Only the pass's rows of `input`
+/// are written (zeros for the padded tail) and only those are read, so
+/// no inter-pass clearing is needed.
+///
+/// Bit-block mode stages by set-bit *run*: a run's rows `r0..r0+len`
+/// carry dense elements `k0..k0+len`, so the `n_in`-covered prefix is
+/// one `copy_from_slice` from `x[src + k0..]` and the zero-driven tail
+/// one `fill` — no per-row index arithmetic. Index-list mode is the
+/// PR-2 per-index loop, kept verbatim as the baseline.
 #[inline]
 fn replay_pass(
     crossbars: &[Crossbar],
     pass: &CompiledPass,
+    mode: ReplayMode,
     x: &[f32],
     input: &mut [f32],
     colbuf: &mut [f32],
 ) -> usize {
-    for (k, &r) in pass.rows.iter().enumerate() {
-        input[r] = if k < pass.n_in { x[pass.src + k] } else { 0.0 };
+    match mode {
+        ReplayMode::BitBlock => {
+            for (r0, k0, len) in pass.row_bits.runs() {
+                let seg = &mut input[r0..r0 + len];
+                let filled = pass.n_in.saturating_sub(k0).min(len);
+                let s = pass.src + k0;
+                seg[..filled].copy_from_slice(&x[s..s + filled]);
+                seg[filled..].fill(0.0);
+            }
+            let n = pass.col_bits.len();
+            crossbars[pass.array].mvm_pass_bits(
+                input,
+                &pass.row_bits,
+                &pass.col_bits,
+                &mut colbuf[..n],
+            );
+            n
+        }
+        ReplayMode::IndexList => {
+            for (k, &r) in pass.rows.iter().enumerate() {
+                input[r] = if k < pass.n_in { x[pass.src + k] } else { 0.0 };
+            }
+            let n = pass.cols.len();
+            crossbars[pass.array].mvm_pass_cols(
+                input,
+                &pass.rows,
+                &pass.cols,
+                &mut colbuf[..n],
+            );
+            n
+        }
     }
-    let n = pass.cols.len();
-    crossbars[pass.array].mvm_pass_cols(input, &pass.rows, &pass.cols, &mut colbuf[..n]);
-    n
 }
 
 /// Replay one Monarch factor stage: each pass assigns its converted
@@ -185,6 +246,7 @@ fn replay_pass(
 fn replay_stage(
     crossbars: &[Crossbar],
     passes: &[CompiledPass],
+    mode: ReplayMode,
     x: &[f32],
     out: &mut [f32],
     input: &mut [f32],
@@ -192,7 +254,7 @@ fn replay_stage(
 ) {
     out.fill(0.0);
     for pass in passes {
-        let n = replay_pass(crossbars, pass, x, input, colbuf);
+        let n = replay_pass(crossbars, pass, mode, x, input, colbuf);
         out[pass.dst..pass.dst + n].copy_from_slice(&colbuf[..n]);
     }
 }
@@ -201,39 +263,68 @@ fn replay_stage(
 /// lanes and convert the scheduled columns for all of them in one
 /// analog pass. `input` must be exactly `m * batch` long; lane `l` of
 /// element `src + k` comes from `x[(src + k) * batch + l]`.
+///
+/// In bit-block mode a whole row-run's stride-B lanes stage as ONE
+/// contiguous `len * batch` block copy (the interleaved layouts of
+/// consecutive dense elements and consecutive rows coincide), replacing
+/// the per-row copy loop of the index path.
 #[inline]
 fn replay_pass_batch(
     crossbars: &[Crossbar],
     pass: &CompiledPass,
+    mode: ReplayMode,
     batch: usize,
     x: &[f32],
     input: &mut [f32],
     colbuf: &mut [f32],
 ) -> usize {
-    for (k, &r) in pass.rows.iter().enumerate() {
-        let dst = &mut input[r * batch..(r + 1) * batch];
-        if k < pass.n_in {
-            let s = (pass.src + k) * batch;
-            dst.copy_from_slice(&x[s..s + batch]);
-        } else {
-            dst.fill(0.0);
+    match mode {
+        ReplayMode::BitBlock => {
+            for (r0, k0, len) in pass.row_bits.runs() {
+                let seg = &mut input[r0 * batch..(r0 + len) * batch];
+                let filled = pass.n_in.saturating_sub(k0).min(len);
+                let s = (pass.src + k0) * batch;
+                seg[..filled * batch].copy_from_slice(&x[s..s + filled * batch]);
+                seg[filled * batch..].fill(0.0);
+            }
+            let n = pass.col_bits.len();
+            crossbars[pass.array].mvm_batch_bits(
+                input,
+                batch,
+                &pass.row_bits,
+                &pass.col_bits,
+                &mut colbuf[..n * batch],
+            );
+            n
+        }
+        ReplayMode::IndexList => {
+            for (k, &r) in pass.rows.iter().enumerate() {
+                let dst = &mut input[r * batch..(r + 1) * batch];
+                if k < pass.n_in {
+                    let s = (pass.src + k) * batch;
+                    dst.copy_from_slice(&x[s..s + batch]);
+                } else {
+                    dst.fill(0.0);
+                }
+            }
+            let n = pass.cols.len();
+            crossbars[pass.array].mvm_batch_cols(
+                input,
+                batch,
+                &pass.rows,
+                &pass.cols,
+                &mut colbuf[..n * batch],
+            );
+            n
         }
     }
-    let n = pass.cols.len();
-    crossbars[pass.array].mvm_batch_cols(
-        input,
-        batch,
-        &pass.rows,
-        &pass.cols,
-        &mut colbuf[..n * batch],
-    );
-    n
 }
 
 /// Batched form of [`replay_stage`] over stride-B interleaved lanes.
 fn replay_stage_batch(
     crossbars: &[Crossbar],
     passes: &[CompiledPass],
+    mode: ReplayMode,
     batch: usize,
     x: &[f32],
     out: &mut [f32],
@@ -242,7 +333,7 @@ fn replay_stage_batch(
 ) {
     out.fill(0.0);
     for pass in passes {
-        let n = replay_pass_batch(crossbars, pass, batch, x, input, colbuf);
+        let n = replay_pass_batch(crossbars, pass, mode, batch, x, input, colbuf);
         out[pass.dst * batch..(pass.dst + n) * batch]
             .copy_from_slice(&colbuf[..n * batch]);
     }
@@ -340,7 +431,20 @@ impl FunctionalChip {
             plan,
             op_placements,
             scratch,
+            replay_mode: ReplayMode::default(),
         }
+    }
+
+    /// Select which pass-table encoding the compiled replay iterates.
+    /// Both modes are bit-identical (property-tested); `IndexList` is
+    /// kept for benchmark comparison and as a second audit encoding.
+    pub fn set_replay_mode(&mut self, mode: ReplayMode) {
+        self.replay_mode = mode;
+    }
+
+    /// The pass-table encoding currently driving the compiled replay.
+    pub fn replay_mode(&self) -> ReplayMode {
+        self.replay_mode
     }
 
     /// Execute one Monarch factor stage of one op by re-deriving the
@@ -502,6 +606,7 @@ impl FunctionalChip {
         assert_eq!(ys.len(), op.rows * batch, "linear batch output length");
         ys.fill(0.0);
         let m = self.m;
+        let mode = self.replay_mode;
         let FunctionalChip {
             crossbars,
             plan,
@@ -512,7 +617,7 @@ impl FunctionalChip {
         let input = &mut scratch.binput[..m * batch];
         let colbuf = &mut scratch.bcolbuf[..max_cols * batch];
         for pass in &plan.ops[op_idx].passes {
-            let n = replay_pass_batch(&crossbars[..], pass, batch, xs, input, colbuf);
+            let n = replay_pass_batch(&crossbars[..], pass, mode, batch, xs, input, colbuf);
             let seg = &mut ys[pass.dst * batch..(pass.dst + n) * batch];
             for (yo, pv) in seg.iter_mut().zip(&colbuf[..n * batch]) {
                 *yo += pv;
@@ -536,6 +641,7 @@ impl FunctionalChip {
         let (tr, tc) = (op_rows.div_ceil(d), op_cols.div_ceil(d));
         let perm = StridePerm::new(self.b);
         let m = self.m;
+        let mode = self.replay_mode;
         let FunctionalChip {
             crossbars,
             plan,
@@ -564,6 +670,7 @@ impl FunctionalChip {
                 replay_stage_batch(
                     &crossbars[..],
                     &oplan.passes[tile.right.clone()],
+                    mode,
                     batch,
                     u,
                     v,
@@ -574,6 +681,7 @@ impl FunctionalChip {
                 replay_stage_batch(
                     &crossbars[..],
                     &oplan.passes[tile.left.clone()],
+                    mode,
                     batch,
                     w,
                     z,
@@ -595,6 +703,7 @@ impl FunctionalChip {
         assert_eq!(x.len(), op.cols, "linear op input length");
         assert_eq!(y.len(), op.rows, "linear op output length");
         y.fill(0.0);
+        let mode = self.replay_mode;
         let FunctionalChip {
             crossbars,
             plan,
@@ -606,7 +715,7 @@ impl FunctionalChip {
         // ascending column partitions), fixing the partial-sum
         // accumulation order (shift-add tree determinism).
         for pass in &plan.ops[op_idx].passes {
-            let n = replay_pass(&crossbars[..], pass, x, &mut input[..], &mut colbuf[..]);
+            let n = replay_pass(&crossbars[..], pass, mode, x, &mut input[..], &mut colbuf[..]);
             for (yo, pv) in y[pass.dst..pass.dst + n].iter_mut().zip(&colbuf[..n]) {
                 *yo += pv;
             }
@@ -622,6 +731,7 @@ impl FunctionalChip {
         let (op_rows, op_cols) = (op.rows, op.cols);
         let (tr, tc) = (op_rows.div_ceil(d), op_cols.div_ceil(d));
         let perm = StridePerm::new(self.b);
+        let mode = self.replay_mode;
         let FunctionalChip {
             crossbars,
             plan,
@@ -638,6 +748,7 @@ impl FunctionalChip {
             w,
             z,
             part,
+            ..
         } = scratch;
         for j in 0..tc {
             // zero-padded input segment (same loop structure as
@@ -651,6 +762,7 @@ impl FunctionalChip {
                 replay_stage(
                     &crossbars[..],
                     &oplan.passes[tile.right.clone()],
+                    mode,
                     &u[..],
                     &mut v[..],
                     &mut input[..],
@@ -660,6 +772,7 @@ impl FunctionalChip {
                 replay_stage(
                     &crossbars[..],
                     &oplan.passes[tile.left.clone()],
+                    mode,
                     &w[..],
                     &mut z[..],
                     &mut input[..],
@@ -717,7 +830,7 @@ impl FunctionalChip {
         for j in 0..tc {
             let cw = d.min(op.cols - j * d);
             xseg[..cw].copy_from_slice(&x[j * d..j * d + cw]);
-            xseg[cw..].iter_mut().for_each(|v| *v = 0.0);
+            xseg[cw..].fill(0.0);
             let u = perm.apply(&xseg);
             for i in 0..tr {
                 let tile = i * tc + j;
@@ -1005,6 +1118,66 @@ mod tests {
                     }
                 }
             }
+        }
+    }
+
+    #[test]
+    fn replay_modes_bit_identical_single_and_batched() {
+        // Bit-block replay (the default) must match index-list replay
+        // AND the schedule-recompute audit path bitwise, single-stream
+        // and per interleaved lane, on rectangular grids under every
+        // strategy.
+        let (d, d_ff) = (64usize, 256usize);
+        let (cfg, ops) = ffn_ops(d, d_ff);
+        let mut rng = Pcg32::new(77);
+        let weights = vec![
+            rect_randn(d_ff, d, d, &mut rng),
+            rect_randn(d, d_ff, d, &mut rng),
+        ];
+        let mut params = CimParams::default();
+        params.array_dim = 32;
+        for strategy in Strategy::all() {
+            let mut chip =
+                FunctionalChip::program_rect(&cfg, &ops, &weights, &params, strategy);
+            assert_eq!(chip.replay_mode(), ReplayMode::BitBlock);
+            for (oi, wgt) in weights.iter().enumerate() {
+                let x = Pcg32::new(700 + oi as u64).normal_vec(wgt.cols);
+                chip.set_replay_mode(ReplayMode::BitBlock);
+                let bits = chip.run_op(oi, &x);
+                chip.set_replay_mode(ReplayMode::IndexList);
+                let idx = chip.run_op(oi, &x);
+                let audit = chip.run_op_recompute(oi, &x);
+                for i in 0..wgt.rows {
+                    assert_eq!(
+                        bits[i].to_bits(),
+                        idx[i].to_bits(),
+                        "{strategy:?} op {oi} row {i}: bit-block vs index"
+                    );
+                    assert_eq!(
+                        bits[i].to_bits(),
+                        audit[i].to_bits(),
+                        "{strategy:?} op {oi} row {i}: bit-block vs recompute"
+                    );
+                }
+                for batch in [2usize, 5] {
+                    let lanes: Vec<Vec<f32>> = (0..batch)
+                        .map(|l| Pcg32::new(800 + (oi * 10 + l) as u64).normal_vec(wgt.cols))
+                        .collect();
+                    let xs = interleave(&lanes);
+                    chip.set_replay_mode(ReplayMode::BitBlock);
+                    let yb = chip.run_op_batch(oi, batch, &xs);
+                    chip.set_replay_mode(ReplayMode::IndexList);
+                    let yi = chip.run_op_batch(oi, batch, &xs);
+                    for (k, (gb, gi)) in yb.iter().zip(&yi).enumerate() {
+                        assert_eq!(
+                            gb.to_bits(),
+                            gi.to_bits(),
+                            "{strategy:?} op {oi} batch {batch} slot {k}"
+                        );
+                    }
+                }
+            }
+            chip.set_replay_mode(ReplayMode::BitBlock);
         }
     }
 

@@ -9,12 +9,16 @@
 //!   one.
 //! * Pass tables respect array bounds and the §III-C DenseMap walk
 //!   granularity.
+//! * The bit-block pass encoding (u64 words + popcnt dense indexing,
+//!   DESIGN.md §6e) replays bit-identically to the index-list encoding
+//!   and the recompute audit path, including at array dims straddling
+//!   the word boundary (63/64/65) and on fully-dense words.
 
 use monarch_cim::cim::CimParams;
 use monarch_cim::mapping::{map_ops, Strategy};
 use monarch_cim::monarch::RectMonarch;
 use monarch_cim::scheduler::{compile_plan, token_commands, CimCommand};
-use monarch_cim::sim::exec::FunctionalChip;
+use monarch_cim::sim::exec::{FunctionalChip, ReplayMode};
 use monarch_cim::util::prop::forall;
 use monarch_cim::util::rng::Pcg32;
 
@@ -126,6 +130,80 @@ fn prop_batched_replay_bit_identical_to_recompute() {
                     chip.run_op(oi, x),
                     "{strategy:?} op {oi}: B=1 fast path"
                 );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_bitblock_replay_bit_identical_at_word_boundaries() {
+    // The tentpole safety net: bit-block replay (the default encoding)
+    // must match index-list replay AND the schedule-recompute audit
+    // path bitwise, across random geometries and every strategy —
+    // explicitly sampling array dims straddling the u64 word boundary
+    // (63, 64, 65) and dims where whole passes are fully-dense words
+    // (m = 32/64: Linear drives all m rows, degenerating the bit set to
+    // the identity prefix).
+    forall("bit-block replay == index replay == recompute", 8, |g| {
+        let d = g.choose(&[16usize, 64]);
+        let b = (d as f64).sqrt() as usize;
+        let m = g.choose(&[32usize, 63, 64, 65]);
+        if b > m {
+            return;
+        }
+        let (cfg, ops) = random_model_ops(g, d);
+        let mut params = CimParams::default();
+        params.array_dim = m;
+        let mut rng = Pcg32::new(common::seed(g));
+        let weights: Vec<RectMonarch> = ops
+            .iter()
+            .map(|op| rect_randn(op.rows, op.cols, d, &mut rng))
+            .collect();
+        let batch = g.usize(2, 5);
+        for strategy in Strategy::all() {
+            let mut chip =
+                FunctionalChip::program_rect(&cfg, &ops, &weights, &params, strategy);
+            for oi in 0..ops.len() {
+                let x = rng.normal_vec(ops[oi].cols);
+                chip.set_replay_mode(ReplayMode::BitBlock);
+                let bits = chip.run_op(oi, &x);
+                chip.set_replay_mode(ReplayMode::IndexList);
+                let idx = chip.run_op(oi, &x);
+                let audit = chip.run_op_recompute(oi, &x);
+                for r in 0..ops[oi].rows {
+                    assert_eq!(
+                        bits[r].to_bits(),
+                        idx[r].to_bits(),
+                        "{strategy:?} m={m} op {oi} row {r}: bit-block vs index replay"
+                    );
+                    assert_eq!(
+                        bits[r].to_bits(),
+                        audit[r].to_bits(),
+                        "{strategy:?} m={m} op {oi} row {r}: bit-block vs recompute"
+                    );
+                }
+                // batched path, both encodings, stride-B lanes
+                let lanes: Vec<Vec<f32>> =
+                    (0..batch).map(|_| rng.normal_vec(ops[oi].cols)).collect();
+                let mut xs = vec![0.0f32; ops[oi].cols * batch];
+                for (l, lx) in lanes.iter().enumerate() {
+                    for (c, &v) in lx.iter().enumerate() {
+                        xs[c * batch + l] = v;
+                    }
+                }
+                chip.set_replay_mode(ReplayMode::BitBlock);
+                let yb = chip.run_op_batch(oi, batch, &xs);
+                chip.set_replay_mode(ReplayMode::IndexList);
+                let yi = chip.run_op_batch(oi, batch, &xs);
+                for (k, (gb, gi)) in yb.iter().zip(&yi).enumerate() {
+                    assert_eq!(
+                        gb.to_bits(),
+                        gi.to_bits(),
+                        "{strategy:?} m={m} op {oi} batch {batch} slot {k}: \
+                         batched bit-block vs index replay"
+                    );
+                }
+                chip.set_replay_mode(ReplayMode::BitBlock);
             }
         }
     });
