@@ -1,6 +1,8 @@
 //! Hot-path microbenchmarks for the §Perf pass: the matmul kernels, the
-//! D2S projection, Monarch apply, the DenseMap packer, the cost model and
-//! the PJRT execution path (throughput of the end-to-end serving stack).
+//! D2S projection, Monarch apply, the DenseMap packer, the cost model,
+//! the batched pass-table replay (bit-block vs index-list encodings)
+//! and the PJRT execution path (throughput of the end-to-end serving
+//! stack).
 //!
 //! `cargo bench --bench hotpath`
 
@@ -10,9 +12,35 @@ use monarch_cim::model::ModelConfig;
 use monarch_cim::monarch::{monarch_project, MonarchMatrix};
 use monarch_cim::runtime::{literal_f32, literals_from_monarch, Runtime};
 use monarch_cim::scheduler::timing::cost_report;
+use monarch_cim::sim::decode::{BatchDecodeEngine, DecodeModel};
+use monarch_cim::sim::exec::ReplayMode;
 use monarch_cim::tensor::{matmul, Matrix};
 use monarch_cim::util::bench::{section, Bencher};
 use monarch_cim::util::rng::Pcg32;
+
+/// One admit→multi-lane `step_chunks`→release round through the batched
+/// engine; returns the concatenated slot logits so the two pass-table
+/// encodings can be cross-checked bitwise.
+fn batched_replay_round(eng: &mut BatchDecodeEngine, chunks: &[Vec<i32>]) -> Vec<f32> {
+    let slots: Vec<usize> = chunks
+        .iter()
+        .map(|_| eng.try_admit().expect("fresh engine has a free slot"))
+        .collect();
+    let groups: Vec<(usize, &[i32])> = slots
+        .iter()
+        .zip(chunks)
+        .map(|(&s, c)| (s, &c[..]))
+        .collect();
+    eng.step_chunks(&groups);
+    let logits: Vec<f32> = slots
+        .iter()
+        .flat_map(|&s| eng.logits(s).iter().copied())
+        .collect();
+    for s in slots {
+        eng.release(s);
+    }
+    logits
+}
 
 fn main() {
     let mut rng = Pcg32::new(40);
@@ -60,6 +88,52 @@ fn main() {
     b.bench("cost_report bert-large DenseMap", || {
         std::hint::black_box(cost_report(&bert, &params, Strategy::DenseMap))
     });
+
+    section("batched pass-table replay — bit-block vs index-list (DESIGN.md §6e)");
+    // The serving hot loop: one multi-lane `step_chunks` drives 8
+    // streams x 4 positions = 32 lanes through the compiled pass
+    // tables. Both encodings replay bit-identically, so the delta is
+    // pure loop speed over the table representation.
+    let tiny = ModelConfig::tiny();
+    let chunks: Vec<Vec<i32>> = (0..8usize)
+        .map(|s| {
+            (0..4)
+                .map(|p| ((s * 37 + p * 11 + 5) % tiny.vocab) as i32)
+                .collect()
+        })
+        .collect();
+    let positions: f64 = chunks.iter().map(|c| c.len() as f64).sum();
+    let mut eng = BatchDecodeEngine::on_chip(
+        DecodeModel::synth(tiny.clone(), 2025),
+        params.clone(),
+        Strategy::DenseMap,
+        chunks.len(),
+    );
+    let bb = b
+        .bench("step_chunks 8x4 lanes (bit-block)", || {
+            std::hint::black_box(batched_replay_round(&mut eng, &chunks))
+        })
+        .clone();
+    let bb_pps = positions / (bb.mean_ns * 1e-9);
+    eng.set_replay_mode(ReplayMode::IndexList);
+    let il = b
+        .bench("step_chunks 8x4 lanes (index list)", || {
+            std::hint::black_box(batched_replay_round(&mut eng, &chunks))
+        })
+        .clone();
+    let il_pps = positions / (il.mean_ns * 1e-9);
+    // one un-timed round per encoding: outputs must be bit-identical
+    let got_il = batched_replay_round(&mut eng, &chunks);
+    eng.set_replay_mode(ReplayMode::BitBlock);
+    let got_bb = batched_replay_round(&mut eng, &chunks);
+    assert_eq!(
+        got_bb, got_il,
+        "bit-block and index-list batched replay must agree bitwise"
+    );
+    println!(
+        "  -> bit-block {bb_pps:.0} vs index {il_pps:.0} positions/s ({:.2}x), outputs bit-identical",
+        bb_pps / il_pps.max(1e-12),
+    );
 
     section("PJRT runtime (requires `make artifacts`)");
     match Runtime::with_default_dir() {

@@ -25,6 +25,14 @@ impl Default for BatchPolicy {
 /// Collect the next batch from `rx`: blocks for the first item, then
 /// lingers up to `max_delay` (or until `max_batch`) for more. Returns
 /// `None` when the channel is closed and drained.
+///
+/// Liveness audit (ISSUE 7): this gather-then-execute loop is **live**
+/// — it drives the PJRT worker (`server::run_pjrt_worker`), whose AOT
+/// artifacts execute whole fixed-size batches and therefore want
+/// linger-batched admission. The CIM-sim worker intentionally does NOT
+/// use it: continuous batching admits each request into a slot the
+/// moment one frees up (no linger), so batching there is per-step lane
+/// grouping, not arrival grouping. Keep both paths.
 pub fn next_batch<T>(rx: &Receiver<T>, policy: &BatchPolicy) -> Option<Vec<T>> {
     let first = rx.recv().ok()?;
     let mut batch = vec![first];

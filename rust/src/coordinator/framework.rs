@@ -1,6 +1,12 @@
-//! End-to-end framework pipeline (paper Fig. 2a): pre-trained dense
+//! End-to-end framework driver (paper Fig. 2a): pre-trained dense
 //! model -> D2S transformation -> CIM mapping -> scheduling -> cost
 //! simulation, with the Fig. 2b/6/7 quantities collected along the way.
+//!
+//! Formerly `coordinator/pipeline.rs` — renamed so "pipeline" is free
+//! for the serving-side layer-sharded pipeline (`sim::shard`). The
+//! public names (`run_pipeline`, `PipelineConfig`, `PipelineResult`)
+//! keep their Fig. 2a meaning and are re-exported from
+//! [`crate::coordinator`] unchanged.
 
 use crate::cim::CimParams;
 use crate::mapping::stats::MappingStats;

@@ -43,6 +43,17 @@ struct Inner {
     /// Draft tokens accepted (each equal to the served window's actual
     /// next token).
     spec_accepted: u64,
+    /// Layer-sharded pipeline (`sim::shard`): sharded steps recorded.
+    pipe_steps: u64,
+    /// Modeled busy time per pipeline stage (ns), summed over steps —
+    /// the per-stage counters behind [`Snapshot::stage_occupancy`].
+    pipe_stage_busy_ns: Vec<f64>,
+    /// Summed modeled step makespans (ns).
+    pipe_span_ns: f64,
+    /// Summed modeled inter-chip activation-transfer latency (ns).
+    pipe_transfer_ns: f64,
+    /// Summed modeled 1-chip serial baseline of the same work (ns).
+    pipe_serial_ns: f64,
 }
 
 /// Thread-safe metrics sink.
@@ -104,6 +115,22 @@ pub struct Snapshot {
     /// round; plain decode is 1.0, anything above is the speculative
     /// win). 0.0 until a round completes.
     pub spec_tokens_per_round: f64,
+    /// Layer-sharded pipeline: stage count of the backing engine (0
+    /// when serving unsharded).
+    pub shard_stages: usize,
+    /// Sharded steps recorded.
+    pub pipeline_steps: u64,
+    /// Per-stage occupancy: fraction of the accumulated modeled span
+    /// each stage chip spent busy (empty when unsharded).
+    pub stage_occupancy: Vec<f64>,
+    /// Idle fraction of the stage-time grid — the pipeline-bubble share
+    /// (0.0 until a sharded step is recorded).
+    pub pipeline_bubble_fraction: f64,
+    /// Modeled throughput gain of the pipeline over one chip running
+    /// the same steps serially (0.0 until a sharded step is recorded).
+    pub pipeline_speedup: f64,
+    /// Summed modeled inter-chip transfer latency (ns).
+    pub pipeline_transfer_ns: f64,
 }
 
 impl Metrics {
@@ -205,6 +232,34 @@ impl Metrics {
         g.occ_capacity = capacity;
     }
 
+    /// Account one (or a window of) layer-sharded pipeline step(s):
+    /// modeled busy time per stage, total makespan, inter-chip transfer
+    /// latency and the 1-chip serial baseline — the aggregates a
+    /// [`PipelineStats`](crate::sim::PipelineStats) window carries.
+    pub fn record_pipeline(
+        &self,
+        steps: u64,
+        stage_busy_ns: &[f64],
+        span_ns: f64,
+        transfer_ns: f64,
+        serial_ns: f64,
+    ) {
+        if steps == 0 {
+            return;
+        }
+        let mut g = self.inner.lock().unwrap();
+        g.pipe_steps += steps;
+        if g.pipe_stage_busy_ns.len() < stage_busy_ns.len() {
+            g.pipe_stage_busy_ns.resize(stage_busy_ns.len(), 0.0);
+        }
+        for (acc, b) in g.pipe_stage_busy_ns.iter_mut().zip(stage_busy_ns) {
+            *acc += b;
+        }
+        g.pipe_span_ns += span_ns;
+        g.pipe_transfer_ns += transfer_ns;
+        g.pipe_serial_ns += serial_ns;
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         let g = self.inner.lock().unwrap();
         // Rates need a start time AND at least one counted event AND
@@ -278,6 +333,31 @@ impl Metrics {
             } else {
                 (g.spec_accepted + g.spec_rounds) as f64 / g.spec_rounds as f64
             },
+            shard_stages: g.pipe_stage_busy_ns.len(),
+            pipeline_steps: g.pipe_steps,
+            stage_occupancy: if g.pipe_span_ns > 0.0 {
+                g.pipe_stage_busy_ns
+                    .iter()
+                    .map(|b| (b / g.pipe_span_ns).min(1.0))
+                    .collect()
+            } else {
+                vec![0.0; g.pipe_stage_busy_ns.len()]
+            },
+            pipeline_bubble_fraction: {
+                let stages = g.pipe_stage_busy_ns.len();
+                if stages == 0 || g.pipe_span_ns <= 0.0 {
+                    0.0
+                } else {
+                    let busy: f64 = g.pipe_stage_busy_ns.iter().sum();
+                    (1.0 - busy / (stages as f64 * g.pipe_span_ns)).max(0.0)
+                }
+            },
+            pipeline_speedup: if g.pipe_span_ns > 0.0 {
+                g.pipe_serial_ns / g.pipe_span_ns
+            } else {
+                0.0
+            },
+            pipeline_transfer_ns: g.pipe_transfer_ns,
         }
     }
 }
@@ -338,6 +418,74 @@ mod tests {
         assert!((s.occupancy_mean - 3.0).abs() < 1e-9);
         assert_eq!(s.occupancy_peak, 5);
         assert_eq!(s.slot_capacity, 8);
+    }
+
+    #[test]
+    fn occupancy_capacity_zero_and_degenerate_samples() {
+        // ISSUE-7 satellite: record_occupancy edge cases. A capacity-0
+        // report (an engine with no slots cannot exist, but a scraper
+        // must survive a misconfigured reporter) keeps every derived
+        // value finite and sane; all-zero samples stay zero.
+        let m = Metrics::new();
+        m.record_occupancy(0, 0);
+        m.record_occupancy(0, 0);
+        let s = m.snapshot();
+        assert_eq!(s.occupancy_mean, 0.0);
+        assert_eq!(s.occupancy_peak, 0);
+        assert_eq!(s.slot_capacity, 0);
+        assert!(s.occupancy_mean.is_finite());
+        // capacity reported later wins (latest engine shape)
+        m.record_occupancy(1, 1);
+        let s = m.snapshot();
+        assert_eq!(s.slot_capacity, 1);
+        assert!((s.occupancy_mean - 1.0 / 3.0).abs() < 1e-9);
+        assert_eq!(s.occupancy_peak, 1);
+    }
+
+    #[test]
+    fn pipeline_accounting_per_stage() {
+        // per-stage counters: two recorded windows accumulate busy time
+        // by stage index, and the derived occupancy/bubble/speedup use
+        // the summed span
+        let m = Metrics::new();
+        let s = m.snapshot();
+        assert_eq!(s.shard_stages, 0);
+        assert_eq!(s.pipeline_steps, 0);
+        assert!(s.stage_occupancy.is_empty());
+        assert_eq!(s.pipeline_bubble_fraction, 0.0);
+        assert_eq!(s.pipeline_speedup, 0.0);
+        // window 1: 2 stages, span 100ns, busy [100, 50], serial 150
+        m.record_pipeline(1, &[100.0, 50.0], 100.0, 4.0, 150.0);
+        // window 2: same shape
+        m.record_pipeline(2, &[100.0, 50.0], 100.0, 4.0, 150.0);
+        let s = m.snapshot();
+        assert_eq!(s.shard_stages, 2);
+        assert_eq!(s.pipeline_steps, 3);
+        assert_eq!(s.stage_occupancy.len(), 2);
+        assert!((s.stage_occupancy[0] - 1.0).abs() < 1e-9);
+        assert!((s.stage_occupancy[1] - 0.5).abs() < 1e-9);
+        // busy 300 of 2*200 stage-time → bubble 0.25
+        assert!((s.pipeline_bubble_fraction - 0.25).abs() < 1e-9);
+        assert!((s.pipeline_speedup - 1.5).abs() < 1e-9);
+        assert!((s.pipeline_transfer_ns - 8.0).abs() < 1e-9);
+        // a zero-step report is a no-op, not a poisoned window
+        m.record_pipeline(0, &[9999.0], 9999.0, 9999.0, 9999.0);
+        let s2 = m.snapshot();
+        assert_eq!(s2.pipeline_steps, 3);
+        assert_eq!(s2.shard_stages, 2);
+    }
+
+    #[test]
+    fn pipeline_single_stage_has_no_bubbles() {
+        // a 1-stage "pipeline" (shards=1) is the serial engine: fully
+        // occupied, zero bubble, speedup 1.0
+        let m = Metrics::new();
+        m.record_pipeline(4, &[400.0], 400.0, 0.0, 400.0);
+        let s = m.snapshot();
+        assert_eq!(s.shard_stages, 1);
+        assert_eq!(s.stage_occupancy, vec![1.0]);
+        assert_eq!(s.pipeline_bubble_fraction, 0.0);
+        assert!((s.pipeline_speedup - 1.0).abs() < 1e-9);
     }
 
     #[test]

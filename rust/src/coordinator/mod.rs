@@ -5,9 +5,9 @@
 
 pub mod batching;
 pub mod dse;
+pub mod framework;
 pub mod metrics;
-pub mod pipeline;
 pub mod server;
 
-pub use pipeline::{run_pipeline, PipelineConfig, PipelineResult};
+pub use framework::{run_pipeline, PipelineConfig, PipelineResult};
 pub use server::{Backend, CimSimConfig, InferenceServer, ServerConfig};

@@ -89,6 +89,15 @@ pub struct CimSimConfig {
     /// `0` (default) means full depth — a perfect draft. Ignored when
     /// `speculate_k == 0`.
     pub draft_layers: usize,
+    /// Layer-sharded pipeline (`sim::shard`, DESIGN.md §6f): when
+    /// `> 1`, the decoder's layers are programmed across this many
+    /// stage chips (clamped to the layer count) driven as a pipeline
+    /// with in-flight microbatches, and [`Metrics`] gains per-stage
+    /// occupancy and pipeline-bubble counters. `0`/`1` (default)
+    /// serves on one chip. Scores are bit-identical either way —
+    /// sharding only changes which chip replays which layer
+    /// (`tests/prop_shard.rs`).
+    pub shards: usize,
 }
 
 impl Default for CimSimConfig {
@@ -101,6 +110,7 @@ impl Default for CimSimConfig {
             prefill_chunk: 0,
             speculate_k: 0,
             draft_layers: 0,
+            shards: 1,
         }
     }
 }
@@ -437,6 +447,7 @@ fn run_cimsim_worker(
         prefill_chunk,
         speculate_k,
         draft_layers,
+        shards,
     } = cfg;
     let (seq, vocab) = (model_cfg.seq, model_cfg.vocab);
     let slots = policy.max_batch.max(1);
@@ -473,7 +484,14 @@ fn run_cimsim_worker(
             None
         };
         let model = DecodeModel::synth(model_cfg, seed);
-        Ok((BatchDecodeEngine::on_chip(model, cim, strategy, slots), draft))
+        // shards > 1: layer-sharded pipeline engine (bit-identical
+        // scores; adds the per-stage timeline behind the new counters)
+        let engine = if shards > 1 {
+            BatchDecodeEngine::sharded(model, cim, strategy, slots, shards)
+        } else {
+            BatchDecodeEngine::on_chip(model, cim, strategy, slots)
+        };
+        Ok((engine, draft))
     })();
     let (mut engine, mut draft) = match setup {
         Ok(p) => {
@@ -585,6 +603,16 @@ fn run_cimsim_worker(
             engine.step_chunks(&groups);
         }
         metrics.record_occupancy(step_plan.len(), capacity);
+        // sharded engine: drain the step's pipeline window into the
+        // shared metrics (no-op on the mono path — zero steps recorded)
+        let ps = engine.take_pipeline_stats();
+        metrics.record_pipeline(
+            ps.steps,
+            &ps.stage_busy_ns,
+            ps.span_ns,
+            ps.transfer_ns,
+            ps.serial_ns,
+        );
         // --- evict: finished windows reply and free their slot ---
         let mut finished: Vec<InFlight> = Vec::new();
         let mut lane = 0usize;

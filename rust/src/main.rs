@@ -41,9 +41,11 @@ fn usage() -> ! {
                     [--speculate-k K] [--draft-layers D]  (speculative\n\
                     decode: D-layer self-draft proposes K tokens/round,\n\
                     cross-checked bit-for-bit vs plain greedy)\n\
+                    [--shards N]  (layer-sharded pipeline across N chips,\n\
+                    cross-checked bit-for-bit vs the single-chip engine)\n\
            serve    [--requests 64] [--artifacts DIR] [--backend pjrt|cim-sim]\n\
                     [--strategy dense] [--prefill-chunk C]\n\
-                    [--speculate-k K] [--draft-layers D]\n\
+                    [--speculate-k K] [--draft-layers D] [--shards N]\n\
            dse      [--model ...] [--adcs 1,4,8,16,32] [--budget N]\n\
            e2e      [--artifacts DIR]"
     );
@@ -241,6 +243,7 @@ fn cmd_decode(args: &Args) {
     let prefill_chunk = args.usize_or("prefill-chunk", 1).max(1);
     let speculate_k = args.usize_or("speculate-k", 0);
     let draft_layers = args.usize_or("draft-layers", 0);
+    let shards = args.usize_or("shards", 1).max(1);
     let seed = args.usize_or("seed", 2025) as u64;
     let mut cim = CimParams::default();
     if args.has("adcs") {
@@ -480,6 +483,73 @@ fn cmd_decode(args: &Args) {
             println!("    tokens: {:?}", r.tokens);
         }
     }
+
+    if shards > 1 {
+        // Layer-sharded pipeline cross-check mode (sim::shard): the
+        // decoder's layers run across N stage chips with in-flight
+        // microbatches; tokens must be bit-identical to the single-chip
+        // engine for every strategy, and the per-stage timeline reports
+        // the modeled pipeline win.
+        println!(
+            "\nlayer-sharded pipeline ({shards} chips, {batch} in-flight stream{}):",
+            if batch == 1 { "" } else { "s" }
+        );
+        let prompts: Vec<Vec<i32>> = (0..batch)
+            .map(|s| {
+                (0..prompt_len)
+                    .map(|i| ((i * 37 + 11 + s * 101) % cfg.vocab) as i32)
+                    .collect()
+            })
+            .collect();
+        for &strategy in &strategies {
+            let mut sharded = BatchDecodeEngine::sharded(
+                DecodeModel::synth(cfg.clone(), seed),
+                cim.clone(),
+                strategy,
+                batch,
+                shards,
+            );
+            let t0 = std::time::Instant::now();
+            let piped = sharded.generate_batch_chunked(&prompts, n_tokens, prefill_chunk);
+            let wall = t0.elapsed();
+            let mut mono = BatchDecodeEngine::on_chip(
+                DecodeModel::synth(cfg.clone(), seed),
+                cim.clone(),
+                strategy,
+                batch,
+            );
+            let want = mono.generate_batch_chunked(&prompts, n_tokens, prefill_chunk);
+            let identical = piped
+                .iter()
+                .zip(&want)
+                .all(|(a, b)| a.tokens == b.tokens);
+            let ps = sharded.pipeline_stats();
+            let ranges = sharded
+                .stage_ranges()
+                .iter()
+                .map(|&(lo, hi)| format!("[{lo}..{hi})"))
+                .collect::<Vec<_>>()
+                .join(" ");
+            println!(
+                "  {:<7} {} stages {} | modeled speedup {:.2}x, bubble {:.2}, occupancy {} | {:.2?} wall | vs single chip: {}",
+                strategy.name(),
+                sharded.stage_count(),
+                ranges,
+                ps.speedup_vs_1chip(),
+                ps.bubble_fraction(),
+                ps.stage_occupancy()
+                    .iter()
+                    .map(|o| format!("{o:.2}"))
+                    .collect::<Vec<_>>()
+                    .join("/"),
+                wall,
+                if identical { "IDENTICAL" } else { "MISMATCH" },
+            );
+            for (s, r) in piped.iter().enumerate() {
+                println!("    stream {s}: {:?}", r.tokens);
+            }
+        }
+    }
 }
 
 fn model_of_decoder(args: &Args) -> ModelConfig {
@@ -518,6 +588,7 @@ fn cmd_serve(args: &Args) {
                 sim.prefill_chunk = args.usize_or("prefill-chunk", 0);
                 sim.speculate_k = args.usize_or("speculate-k", 0);
                 sim.draft_layers = args.usize_or("draft-layers", 0);
+                sim.shards = args.usize_or("shards", 1);
             }
         }
         other => {
@@ -581,6 +652,20 @@ fn cmd_serve(args: &Args) {
             println!(
                 "speculation: {} verify rounds, acceptance {:.2}, {:.2} tokens/round",
                 s.spec_rounds, s.spec_acceptance_rate, s.spec_tokens_per_round
+            );
+        }
+        if s.pipeline_steps > 0 {
+            println!(
+                "pipeline: {} stages over {} steps, modeled speedup {:.2}x, bubble {:.2}, stage occupancy {}",
+                s.shard_stages,
+                s.pipeline_steps,
+                s.pipeline_speedup,
+                s.pipeline_bubble_fraction,
+                s.stage_occupancy
+                    .iter()
+                    .map(|o| format!("{o:.2}"))
+                    .collect::<Vec<_>>()
+                    .join("/")
             );
         }
     }

@@ -54,6 +54,7 @@ use crate::model::{para_ops, MatmulOp, ModelConfig};
 use crate::monarch::{MonarchMatrix, RectMonarch};
 use crate::sim::exec::FunctionalChip;
 use crate::sim::prefill::{self, allocate_chunks, ChunkWorkspace, KvCache};
+use crate::sim::shard::{sharded_chunk_step, PipelineStats, ShardedBackend};
 use crate::sim::trace::{decode_token_cost, DecodeTrace};
 use crate::tensor::Matrix;
 use crate::util::rng::Pcg32;
@@ -226,6 +227,14 @@ impl ParaBackend {
             ParaBackend::Chip(chip) => chip.run_op_batch_into(op_idx, batch, xs, ys),
         }
     }
+}
+
+/// How the batched engine executes a step: every layer on one backend
+/// (the mono path every PR so far used), or layer ranges sharded across
+/// N stage chips driven as a pipeline (`sim::shard`, DESIGN.md §6f).
+pub(crate) enum EngineBackend {
+    Mono(ParaBackend),
+    Sharded(ShardedBackend),
 }
 
 /// Per-token activation buffers, allocated once per engine and reused
@@ -664,12 +673,15 @@ fn clear_request_state(
 /// (`tests/prop_batch_decode.rs`, `tests/prop_prefill.rs`).
 pub struct BatchDecodeEngine {
     pub model: DecodeModel,
-    backend: ParaBackend,
+    backend: EngineBackend,
     params: CimParams,
     slots: Vec<BatchSlot>,
     /// Shared lane-major activation workspace of the chunked step —
     /// allocated once, grown to the widest step, reused forever.
     ws: ChunkWorkspace,
+    /// Pipeline observability, fed by sharded steps (stays default/empty
+    /// on the mono path).
+    pipeline: PipelineStats,
 }
 
 impl BatchDecodeEngine {
@@ -697,6 +709,35 @@ impl BatchDecodeEngine {
         Self::with_backend(model, ParaBackend::Chip(Box::new(chip)), params, capacity)
     }
 
+    /// Batched engine whose decoder layers are sharded across (up to)
+    /// `shards` pipeline-stage chips under one mapping strategy
+    /// (`sim::shard`, DESIGN.md §6f). Functionally bit-identical to
+    /// [`BatchDecodeEngine::on_chip`] — tokens, logits and KV contents
+    /// match lane for lane (`tests/prop_shard.rs`) — while every step
+    /// additionally records a per-stage pipeline timeline into
+    /// [`BatchDecodeEngine::pipeline_stats`].
+    pub fn sharded(
+        model: DecodeModel,
+        params: CimParams,
+        strategy: Strategy,
+        capacity: usize,
+        shards: usize,
+    ) -> BatchDecodeEngine {
+        assert!(capacity >= 1, "need at least one sequence slot");
+        let sharded = ShardedBackend::program(&model, &params, strategy, shards, capacity);
+        let slots: Vec<BatchSlot> =
+            (0..capacity).map(|_| BatchSlot::new(&model.cfg)).collect();
+        let ws = ChunkWorkspace::new(&model.cfg, capacity);
+        BatchDecodeEngine {
+            ws,
+            model,
+            backend: EngineBackend::Sharded(sharded),
+            params,
+            slots,
+            pipeline: PipelineStats::default(),
+        }
+    }
+
     fn with_backend(
         model: DecodeModel,
         mut backend: ParaBackend,
@@ -715,9 +756,10 @@ impl BatchDecodeEngine {
         BatchDecodeEngine {
             ws,
             model,
-            backend,
+            backend: EngineBackend::Mono(backend),
             params,
             slots,
+            pipeline: PipelineStats::default(),
         }
     }
 
@@ -797,21 +839,56 @@ impl BatchDecodeEngine {
         std::mem::take(&mut self.slots[slot].trace.per_token)
     }
 
-    /// The chip's mapping (None for the reference backend).
+    /// The chip's mapping (None for the reference backend). A sharded
+    /// engine reports its 1-chip *reference* mapping — the one its
+    /// per-position cost records are priced with.
     pub fn mapping(&self) -> Option<&crate::mapping::ModelMapping> {
         match &self.backend {
-            ParaBackend::Chip(c) => Some(&c.mapping),
-            ParaBackend::Reference => None,
+            EngineBackend::Mono(ParaBackend::Chip(c)) => Some(&c.mapping),
+            EngineBackend::Mono(ParaBackend::Reference) => None,
+            EngineBackend::Sharded(sb) => Some(sb.full_mapping()),
         }
     }
 
     /// Select the chip's pass-table replay encoding (no-op on the
-    /// reference backend). Bit-identical either way; used by the bench
-    /// to compare bit-block replay against the index-list baseline.
+    /// reference backend; applied to every stage chip when sharded).
+    /// Bit-identical either way; used by the bench to compare bit-block
+    /// replay against the index-list baseline.
     pub fn set_replay_mode(&mut self, mode: crate::sim::exec::ReplayMode) {
-        if let ParaBackend::Chip(chip) = &mut self.backend {
-            chip.set_replay_mode(mode);
+        match &mut self.backend {
+            EngineBackend::Mono(ParaBackend::Chip(chip)) => chip.set_replay_mode(mode),
+            EngineBackend::Mono(ParaBackend::Reference) => {}
+            EngineBackend::Sharded(sb) => sb.set_replay_mode(mode),
         }
+    }
+
+    /// Pipeline stages backing this engine (1 on the mono path).
+    pub fn stage_count(&self) -> usize {
+        match &self.backend {
+            EngineBackend::Mono(_) => 1,
+            EngineBackend::Sharded(sb) => sb.stage_count(),
+        }
+    }
+
+    /// Contiguous layer range `[lo, hi)` of each pipeline stage (the
+    /// whole model as one range on the mono path).
+    pub fn stage_ranges(&self) -> Vec<(usize, usize)> {
+        match &self.backend {
+            EngineBackend::Mono(_) => vec![(0, self.model.cfg.dec_layers)],
+            EngineBackend::Sharded(sb) => sb.ranges(),
+        }
+    }
+
+    /// Accumulated pipeline observability (empty/default on the mono
+    /// path — `steps` stays 0).
+    pub fn pipeline_stats(&self) -> &PipelineStats {
+        &self.pipeline
+    }
+
+    /// Move the accumulated pipeline stats out, resetting the window
+    /// (the serving layer snapshots per scrape).
+    pub fn take_pipeline_stats(&mut self) -> PipelineStats {
+        std::mem::take(&mut self.pipeline)
     }
 
     /// Advance the listed slots by one token each (`(slot, token)`
@@ -861,8 +938,17 @@ impl BatchDecodeEngine {
             params,
             slots,
             ws,
+            pipeline,
         } = self;
-        prefill::chunk_step(model, backend, params, slots, ws, inputs);
+        match backend {
+            EngineBackend::Mono(pb) => {
+                prefill::chunk_step(model, pb, params, slots, ws, inputs);
+            }
+            EngineBackend::Sharded(sb) => {
+                let timeline = sharded_chunk_step(model, sb, params, slots, ws, inputs);
+                pipeline.record(timeline);
+            }
+        }
     }
 
     /// Greedy generation of a whole request list through the slot pool

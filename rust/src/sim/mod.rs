@@ -7,16 +7,21 @@
 //! positions through the same batched replay); [`speculate`] layers
 //! draft-propose / batched-verify speculative decoding on top of the
 //! chunk engine (K+1 positions per verify replay, bit-identical to
-//! greedy); the analytical latency/energy side lives in
-//! `scheduler::timing` and [`trace`].
+//! greedy); [`shard`] programs the decoder's layers across N chips as
+//! contiguous pipeline stages and overlaps their analog windows over
+//! in-flight microbatches (bit-identical to the 1-chip path); the
+//! analytical latency/energy side lives in `scheduler::timing` and
+//! [`trace`].
 
 pub mod decode;
 pub mod exec;
 pub mod prefill;
+pub mod shard;
 pub mod speculate;
 pub mod trace;
 
 pub use decode::{BatchDecodeEngine, DecodeEngine, DecodeModel, DecodeResult};
 pub use exec::FunctionalChip;
 pub use prefill::KvCache;
+pub use shard::{stage_ranges, PipelineStats, ShardedBackend};
 pub use speculate::{self_draft_model, SpeculativeEngine, SpeculativeResult};

@@ -29,9 +29,10 @@
 //!   decode lanes of in-flight requests always step.
 
 use crate::cim::{CimParams, Cost};
+use crate::mapping::ModelMapping;
 use crate::model::ModelConfig;
 use crate::sim::decode::{
-    attend_into, gelu, layer_norm_into, BatchSlot, DecodeModel, ParaBackend,
+    attend_into, gelu, layer_norm_into, BatchSlot, DecodeModel, LayerOps, ParaBackend,
 };
 use crate::sim::trace::decode_token_cost;
 
@@ -297,17 +298,90 @@ pub(crate) fn chunk_step(
     ws: &mut ChunkWorkspace,
     inputs: &[(usize, &[i32])],
 ) {
+    let lanes: usize = inputs.iter().map(|&(_, toks)| toks.len()).sum();
+    ws.ensure(lanes);
+    // cache length of every group BEFORE any K/V append this step
+    let bases: Vec<usize> = inputs.iter().map(|&(si, _)| slots[si].kv.len()).collect();
+    embed_chunk(model, ws, inputs, &bases);
+    for l in 0..model.cfg.dec_layers {
+        layer_chunk(
+            model,
+            backend,
+            model.layers[l],
+            l,
+            slots,
+            ws,
+            inputs,
+            &bases,
+            lanes,
+        );
+    }
+    head_chunk(model, ws, lanes);
+    let mapping = match backend {
+        ParaBackend::Chip(chip) => Some(&chip.mapping),
+        ParaBackend::Reference => None,
+    };
+    finish_chunk(&model.cfg, mapping, params, slots, ws, inputs, &bases);
+}
+
+/// Token + positional embedding for every lane of one chunked step, at
+/// each lane's own cache position (`bases[g] + offset`), into the
+/// residual stream `ws.h`. The caller has already `ensure`d the
+/// workspace for the step's lane count.
+pub(crate) fn embed_chunk(
+    model: &DecodeModel,
+    ws: &mut ChunkWorkspace,
+    inputs: &[(usize, &[i32])],
+    bases: &[usize],
+) {
+    let d = model.cfg.d_model;
+    let vocab = model.cfg.vocab;
+    let mut lane = 0usize;
+    for (gi, &(_, toks)) in inputs.iter().enumerate() {
+        for (off, &token) in toks.iter().enumerate() {
+            let pos = bases[gi] + off;
+            let tok = (token.max(0) as usize).min(vocab - 1);
+            let hrow = &mut ws.h[lane * d..(lane + 1) * d];
+            for ((hv, e), p) in hrow
+                .iter_mut()
+                .zip(model.embedding.row(tok))
+                .zip(model.positional.row(pos))
+            {
+                *hv = e + p;
+            }
+            lane += 1;
+        }
+    }
+}
+
+/// One decoder layer of a chunked step, over all lanes: the pre-LN
+/// attention sub-block (batched wq/wk/wv, K/V appended in position
+/// order, causal attention against the cache prefix, batched wo) then
+/// the pre-LN feed-forward sub-block. `ops` must index the *given
+/// backend's* op space — the whole-model op list for the single-chip
+/// engine, the stage-local list for a sharded stage chip
+/// (`sim::shard`) — while `kv_layer` is always the **global** layer
+/// index into the slot caches, so a stage writes exactly its layer
+/// range of each slot's KV. Splitting the layer loop here is what lets
+/// the sharded engine run layers `[lo..hi)` per chip with the per-lane
+/// f32 order untouched (the bit-identity argument, DESIGN.md §6f).
+pub(crate) fn layer_chunk(
+    model: &DecodeModel,
+    backend: &mut ParaBackend,
+    ops: LayerOps,
+    kv_layer: usize,
+    slots: &mut [BatchSlot],
+    ws: &mut ChunkWorkspace,
+    inputs: &[(usize, &[i32])],
+    bases: &[usize],
+    lanes: usize,
+) {
     let cfg = &model.cfg;
     let d = cfg.d_model;
     let d_ff = cfg.d_ff;
     let heads = cfg.n_heads;
     let dh = cfg.d_head();
-    let vocab = cfg.vocab;
-    let n_layers = cfg.dec_layers;
-    let lanes: usize = inputs.iter().map(|&(_, toks)| toks.len()).sum();
-    ws.ensure(lanes);
-    // cache length of every group BEFORE any K/V append this step
-    let bases: Vec<usize> = inputs.iter().map(|&(si, _)| slots[si].kv.len()).collect();
+    let l = kv_layer;
     let ChunkWorkspace {
         h,
         x,
@@ -318,35 +392,11 @@ pub(crate) fn chunk_step(
         o,
         f,
         g,
-        hn,
-        logits,
         xb,
         yb,
         ..
     } = ws;
-
-    // token + positional embedding, per lane at the lane's own position
     {
-        let mut lane = 0usize;
-        for (gi, &(_, toks)) in inputs.iter().enumerate() {
-            for (off, &token) in toks.iter().enumerate() {
-                let pos = bases[gi] + off;
-                let tok = (token.max(0) as usize).min(vocab - 1);
-                let hrow = &mut h[lane * d..(lane + 1) * d];
-                for ((hv, e), p) in hrow
-                    .iter_mut()
-                    .zip(model.embedding.row(tok))
-                    .zip(model.positional.row(pos))
-                {
-                    *hv = e + p;
-                }
-                lane += 1;
-            }
-        }
-    }
-
-    for l in 0..n_layers {
-        let ops = model.layers[l];
         // --- self-attention sub-block (pre-LN) ---
         for lane in 0..lanes {
             layer_norm_into(&h[lane * d..(lane + 1) * d], &mut x[lane * d..(lane + 1) * d]);
@@ -431,9 +481,15 @@ pub(crate) fn chunk_step(
             }
         }
     }
+}
 
-    // untied LM head over the final LayerNorm, per lane (every position's
-    // logits are observable: teacher-forced serving streams them all)
+/// Final LayerNorm + untied LM head for every lane of one chunked step
+/// (per-position logits land in `ws.logits`; every position's logits
+/// are observable — teacher-forced serving streams them all).
+pub(crate) fn head_chunk(model: &DecodeModel, ws: &mut ChunkWorkspace, lanes: usize) {
+    let d = model.cfg.d_model;
+    let vocab = model.cfg.vocab;
+    let ChunkWorkspace { h, hn, logits, .. } = ws;
     let inv_sqrt_d = 1.0 / (d as f32).sqrt();
     for lane in 0..lanes {
         layer_norm_into(&h[lane * d..(lane + 1) * d], &mut hn[lane * d..(lane + 1) * d]);
@@ -448,36 +504,49 @@ pub(crate) fn chunk_step(
             *lv = acc * inv_sqrt_d;
         }
     }
+}
 
-    // per-slot: persist the chunk's last logits (the argmax source for a
-    // continuation step) and record per-position costs
-    {
-        let mut lane = 0usize;
-        for (gi, &(si, toks)) in inputs.iter().enumerate() {
-            let c = toks.len();
-            let slot = &mut slots[si];
-            let last = lane + c - 1;
-            slot.logits
-                .copy_from_slice(&logits[last * vocab..(last + 1) * vocab]);
-            match backend {
-                ParaBackend::Chip(chip) => {
-                    for i in 0..c {
-                        slot.trace.record(decode_token_cost(
-                            cfg,
-                            &chip.mapping,
-                            params,
-                            bases[gi] + i + 1,
-                        ));
-                    }
-                }
-                ParaBackend::Reference => {
-                    for _ in 0..c {
-                        slot.trace.record(Cost::default());
-                    }
+/// Per-slot epilogue of one chunked step: persist each chunk's last
+/// logits (the argmax source for a continuation step) and record one
+/// cost per position at the position's own KV length, priced against
+/// the given **whole-model** mapping (`None` = reference backend,
+/// zero-cost records). The sharded engine passes its 1-chip reference
+/// mapping here so per-position records stay bitwise identical to
+/// single-chip replay — sharding relocates work, the bill per position
+/// does not change; the pipeline win is modeled separately
+/// (`trace::pipeline_timeline`).
+pub(crate) fn finish_chunk(
+    cfg: &ModelConfig,
+    mapping: Option<&ModelMapping>,
+    params: &CimParams,
+    slots: &mut [BatchSlot],
+    ws: &ChunkWorkspace,
+    inputs: &[(usize, &[i32])],
+    bases: &[usize],
+) {
+    let vocab = cfg.vocab;
+    let logits = &ws.logits;
+    let mut lane = 0usize;
+    for (gi, &(si, toks)) in inputs.iter().enumerate() {
+        let c = toks.len();
+        let slot = &mut slots[si];
+        let last = lane + c - 1;
+        slot.logits
+            .copy_from_slice(&logits[last * vocab..(last + 1) * vocab]);
+        match mapping {
+            Some(mm) => {
+                for i in 0..c {
+                    slot.trace
+                        .record(decode_token_cost(cfg, mm, params, bases[gi] + i + 1));
                 }
             }
-            lane += c;
+            None => {
+                for _ in 0..c {
+                    slot.trace.record(Cost::default());
+                }
+            }
         }
+        lane += c;
     }
 }
 

@@ -1,0 +1,437 @@
+//! Multi-chip layer sharding with pipeline-parallel microbatch decode
+//! (DESIGN.md §6f).
+//!
+//! One programmed chip holds the whole model, so decode latency is the
+//! serial sum of every layer's analog passes and model size is capped
+//! by a single chip's array budget — the multi-macro scale-out problem
+//! the CIM survey in PAPERS.md (arxiv 2406.08413) calls open for
+//! LLM-scale CIM. This module shards a [`DecodeModel`]'s decoder
+//! layers across N [`FunctionalChip`]s as **contiguous layer ranges**
+//! (stage 0 additionally owns the embedding, the last stage the final
+//! LayerNorm + LM head, both digital) and drives them as a pipeline
+//! with in-flight microbatches: while chip `k` runs microbatch `m`'s
+//! layers, chip `k-1` runs microbatch `m+1`'s.
+//!
+//! **Functional execution vs latency model.** The functional simulator
+//! is host-serial: a sharded step runs every stage in layer order over
+//! the step's lanes, so each lane replays *exactly* the f32 operations
+//! of the single-chip path, in the same order — only the chip (and
+//! hence the pass-table subset) executing each layer changes. Monarch
+//! chips are bitwise equal to the `RectMonarch` reference per op
+//! regardless of which mapping subset holds the op, and every digital
+//! op (LayerNorm, attention, GeLU, residuals, LM head) runs per lane in
+//! `sim::prefill`'s fixed order — so sharded replay is **bit-identical
+//! to single-chip replay token-for-token** (`tests/prop_shard.rs`).
+//! The pipeline *overlap* lives in the latency model: per step, each
+//! (stage, microbatch) pair gets an analog window priced by the stage's
+//! own mapping, inter-chip activation hand-offs are charged per hop
+//! (`trace::shard_transfer_cost`), and the classic pipeline recurrence
+//! (`trace::pipeline_timeline`) overlaps the windows — near-N× steady
+//! state throughput once ≥ N microbatches are in flight.
+//!
+//! **KV partition.** Each slot's [`KvCache`](crate::sim::prefill::KvCache)
+//! rows are split by layer range: stage `s` reads and writes only
+//! layers `[lo..hi)` of every slot's cache (a physical multi-chip
+//! build would keep those rows in chip `s`'s local memory). The cache
+//! object itself stays whole so every existing KV API — truncation,
+//! speculative rollback, the differential props — works unchanged.
+
+use crate::cim::CimParams;
+use crate::mapping::{map_ops, ModelMapping, Strategy};
+use crate::model::MatmulOp;
+use crate::monarch::RectMonarch;
+use crate::sim::decode::{BatchSlot, DecodeModel, LayerOps, ParaBackend};
+use crate::sim::exec::{FunctionalChip, ReplayMode};
+use crate::sim::prefill::{self, ChunkWorkspace};
+use crate::sim::trace::{
+    self, pipeline_timeline, prefill_chunk_cost, PipelineTimeline,
+};
+
+/// Contiguous layer ranges `[lo, hi)` of an `n_layers`-deep model split
+/// across (up to) `shards` pipeline stages. The stage count clamps to
+/// `n_layers` (a stage always holds at least one layer) and to at least
+/// one; earlier stages take the extra layer when the split is uneven,
+/// so depths differ by at most one.
+pub fn stage_ranges(n_layers: usize, shards: usize) -> Vec<(usize, usize)> {
+    assert!(n_layers > 0, "cannot shard a zero-layer model");
+    let stages = shards.clamp(1, n_layers);
+    let base = n_layers / stages;
+    let extra = n_layers % stages;
+    let mut ranges = Vec::with_capacity(stages);
+    let mut lo = 0usize;
+    for s in 0..stages {
+        let len = base + usize::from(s < extra);
+        ranges.push((lo, lo + len));
+        lo += len;
+    }
+    debug_assert_eq!(lo, n_layers);
+    ranges
+}
+
+/// One pipeline stage: a chip programmed with a contiguous layer
+/// range's Para ops, plus the op-index remap that makes the shared
+/// layer loop (`sim::prefill::layer_chunk`) address it.
+pub(crate) struct ShardStage {
+    /// First global layer index on this chip.
+    pub(crate) lo: usize,
+    /// One past the last global layer index.
+    pub(crate) hi: usize,
+    /// The stage's programmed chip (always `ParaBackend::Chip`).
+    pub(crate) backend: ParaBackend,
+    /// Per layer in `[lo..hi)`, the six Para op indices in the *stage
+    /// chip's* op space (`program_rect` renumbers the subset 0-based).
+    pub(crate) layer_ops: Vec<LayerOps>,
+}
+
+impl ShardStage {
+    /// Layer count resident on this chip.
+    pub(crate) fn depth(&self) -> usize {
+        self.hi - self.lo
+    }
+
+    /// The stage chip's mapping (prices exactly this stage's Para+DPU
+    /// work — `per_token_cost` iterates only the layers present).
+    pub(crate) fn mapping(&self) -> &ModelMapping {
+        match &self.backend {
+            ParaBackend::Chip(chip) => &chip.mapping,
+            ParaBackend::Reference => unreachable!("stages are always chips"),
+        }
+    }
+}
+
+/// A [`DecodeModel`] programmed across N chips as a layer-sharded
+/// pipeline, plus the 1-chip reference mapping that keeps per-position
+/// cost records bitwise identical to single-chip replay.
+pub struct ShardedBackend {
+    pub(crate) stages: Vec<ShardStage>,
+    /// The whole model mapped onto ONE chip — the serial baseline the
+    /// pipeline is measured against, and the mapping per-position cost
+    /// records are priced with (identical to `BatchDecodeEngine::on_chip`).
+    full_mapping: ModelMapping,
+}
+
+impl ShardedBackend {
+    /// Program the model's layers across (up to) `shards` chips under
+    /// one mapping strategy, pre-growing each chip's batched scratch
+    /// for `lanes` concurrent lanes. Stage `s` gets the ops and weights
+    /// of layers `stage_ranges[s]` — `FunctionalChip::program_rect`
+    /// over the subset, so each op's placements, compiled pass tables
+    /// and replay are exactly what a dedicated chip would hold.
+    pub fn program(
+        model: &DecodeModel,
+        params: &CimParams,
+        strategy: Strategy,
+        shards: usize,
+        lanes: usize,
+    ) -> ShardedBackend {
+        let cfg = &model.cfg;
+        let full_mapping = map_ops(cfg, &model.ops, params, strategy);
+        let stages = stage_ranges(cfg.dec_layers, shards)
+            .into_iter()
+            .map(|(lo, hi)| {
+                // global op indices of this stage's layers, ascending
+                let mut globals: Vec<usize> = Vec::new();
+                for l in lo..hi {
+                    let o = model.layers[l];
+                    globals.extend_from_slice(&[o.wq, o.wk, o.wv, o.wo, o.ffn1, o.ffn2]);
+                }
+                globals.sort_unstable();
+                let local_of = |g: usize| -> usize {
+                    globals.binary_search(&g).expect("op belongs to this stage")
+                };
+                let ops: Vec<MatmulOp> =
+                    globals.iter().map(|&g| model.ops[g].clone()).collect();
+                let weights: Vec<RectMonarch> =
+                    globals.iter().map(|&g| model.weights[g].clone()).collect();
+                let mut chip =
+                    FunctionalChip::program_rect(cfg, &ops, &weights, params, strategy);
+                chip.warm_batch(lanes);
+                let layer_ops = (lo..hi)
+                    .map(|l| {
+                        let o = model.layers[l];
+                        LayerOps {
+                            wq: local_of(o.wq),
+                            wk: local_of(o.wk),
+                            wv: local_of(o.wv),
+                            wo: local_of(o.wo),
+                            ffn1: local_of(o.ffn1),
+                            ffn2: local_of(o.ffn2),
+                        }
+                    })
+                    .collect();
+                ShardStage {
+                    lo,
+                    hi,
+                    backend: ParaBackend::Chip(Box::new(chip)),
+                    layer_ops,
+                }
+            })
+            .collect();
+        ShardedBackend {
+            stages,
+            full_mapping,
+        }
+    }
+
+    /// Number of pipeline stages (chips).
+    pub fn stage_count(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// The contiguous layer range `[lo, hi)` of each stage.
+    pub fn ranges(&self) -> Vec<(usize, usize)> {
+        self.stages.iter().map(|s| (s.lo, s.hi)).collect()
+    }
+
+    /// The 1-chip reference mapping of the whole model.
+    pub fn full_mapping(&self) -> &ModelMapping {
+        &self.full_mapping
+    }
+
+    /// Select the pass-table replay encoding on every stage chip.
+    pub fn set_replay_mode(&mut self, mode: ReplayMode) {
+        for stage in &mut self.stages {
+            if let ParaBackend::Chip(chip) = &mut stage.backend {
+                chip.set_replay_mode(mode);
+            }
+        }
+    }
+}
+
+/// One pipelined sharded step: advance each listed slot by its token
+/// chunk through every stage in layer order (each microbatch's f32
+/// stream is exactly the single-chip `chunk_step`'s — see the module
+/// docs for why that makes sharded replay bit-identical), then build
+/// the step's per-stage timeline: stage `s`'s window for microbatch
+/// `m` is the stage mapping's pipelined chunk latency at the
+/// microbatch's cache position, inter-chip hops charge
+/// `trace::shard_transfer_cost` per microbatch, and the serial
+/// baseline is the 1-chip full-mapping chunk cost of the same work.
+pub(crate) fn sharded_chunk_step(
+    model: &DecodeModel,
+    sharded: &mut ShardedBackend,
+    params: &CimParams,
+    slots: &mut [BatchSlot],
+    ws: &mut ChunkWorkspace,
+    inputs: &[(usize, &[i32])],
+) -> PipelineTimeline {
+    let cfg = &model.cfg;
+    let lanes: usize = inputs.iter().map(|&(_, toks)| toks.len()).sum();
+    ws.ensure(lanes);
+    // cache length of every group BEFORE any K/V append this step
+    let bases: Vec<usize> = inputs.iter().map(|&(si, _)| slots[si].kv.len()).collect();
+    prefill::embed_chunk(model, ws, inputs, &bases);
+    for stage in sharded.stages.iter_mut() {
+        for li in 0..stage.layer_ops.len() {
+            let ops = stage.layer_ops[li];
+            prefill::layer_chunk(
+                model,
+                &mut stage.backend,
+                ops,
+                stage.lo + li,
+                slots,
+                ws,
+                inputs,
+                &bases,
+                lanes,
+            );
+        }
+    }
+    prefill::head_chunk(model, ws, lanes);
+    prefill::finish_chunk(
+        cfg,
+        Some(&sharded.full_mapping),
+        params,
+        slots,
+        ws,
+        inputs,
+        &bases,
+    );
+
+    // --- per-stage timeline of this step ---
+    let stage_ns: Vec<Vec<f64>> = sharded
+        .stages
+        .iter()
+        .map(|stage| {
+            let sm = stage.mapping();
+            inputs
+                .iter()
+                .enumerate()
+                .map(|(gi, &(_, toks))| {
+                    trace::stage_chunk_ns(
+                        cfg,
+                        sm,
+                        params,
+                        bases[gi],
+                        toks.len(),
+                        stage.depth(),
+                    )
+                })
+                .collect()
+        })
+        .collect();
+    let transfer_ns: Vec<f64> = inputs
+        .iter()
+        .map(|&(_, toks)| {
+            trace::shard_transfer_cost(params, toks.len())
+                .latency
+                .comm_ns
+        })
+        .collect();
+    let mut timeline = pipeline_timeline(&stage_ns, &transfer_ns);
+    // honest 1-chip baseline: the full mapping's pipelined chunk cost
+    // for the same microbatches, back to back, no transfers
+    timeline.serial_ns = inputs
+        .iter()
+        .enumerate()
+        .map(|(gi, &(_, toks))| {
+            prefill_chunk_cost(cfg, &sharded.full_mapping, params, bases[gi], toks.len())
+                .chunk_ns
+        })
+        .sum();
+    timeline
+}
+
+/// Accumulated pipeline observability of a sharded engine: per-stage
+/// busy time, total span, transfer bill and the 1-chip serial
+/// baseline, summed over every sharded step since construction (or the
+/// last [`take`](crate::sim::decode::BatchDecodeEngine::take_pipeline_stats)).
+#[derive(Clone, Debug, Default)]
+pub struct PipelineStats {
+    /// Sharded steps accumulated.
+    pub steps: u64,
+    /// Busy time per stage (ns), summed over steps.
+    pub stage_busy_ns: Vec<f64>,
+    /// Summed step makespans (ns).
+    pub span_ns: f64,
+    /// Summed inter-chip transfer latency charged (ns).
+    pub transfer_ns: f64,
+    /// Summed 1-chip serial baseline of the same work (ns).
+    pub serial_ns: f64,
+    /// The most recent step's full timeline.
+    pub last: Option<PipelineTimeline>,
+}
+
+impl PipelineStats {
+    pub(crate) fn record(&mut self, timeline: PipelineTimeline) {
+        self.steps += 1;
+        if self.stage_busy_ns.len() < timeline.stage_busy_ns.len() {
+            self.stage_busy_ns.resize(timeline.stage_busy_ns.len(), 0.0);
+        }
+        for (acc, b) in self.stage_busy_ns.iter_mut().zip(&timeline.stage_busy_ns) {
+            *acc += b;
+        }
+        self.span_ns += timeline.makespan_ns;
+        self.transfer_ns += timeline.transfer_ns;
+        self.serial_ns += timeline.serial_ns;
+        self.last = Some(timeline);
+    }
+
+    /// Per-stage occupancy: fraction of the accumulated span each
+    /// stage spent busy (1.0 = never idle).
+    pub fn stage_occupancy(&self) -> Vec<f64> {
+        if self.span_ns <= 0.0 {
+            return vec![0.0; self.stage_busy_ns.len()];
+        }
+        self.stage_busy_ns
+            .iter()
+            .map(|b| (b / self.span_ns).min(1.0))
+            .collect()
+    }
+
+    /// Idle fraction of the stage-time grid over the accumulated span.
+    pub fn bubble_fraction(&self) -> f64 {
+        let stages = self.stage_busy_ns.len();
+        if stages == 0 || self.span_ns <= 0.0 {
+            return 0.0;
+        }
+        let busy: f64 = self.stage_busy_ns.iter().sum();
+        (1.0 - busy / (stages as f64 * self.span_ns)).max(0.0)
+    }
+
+    /// Modeled throughput gain over one chip doing the same work
+    /// serially.
+    pub fn speedup_vs_1chip(&self) -> f64 {
+        if self.span_ns <= 0.0 {
+            return 1.0;
+        }
+        self.serial_ns / self.span_ns
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+
+    #[test]
+    fn stage_ranges_partition_contiguously() {
+        for n_layers in 1..=9usize {
+            for shards in 1..=6usize {
+                let ranges = stage_ranges(n_layers, shards);
+                assert_eq!(ranges.len(), shards.clamp(1, n_layers));
+                assert_eq!(ranges[0].0, 0);
+                assert_eq!(ranges.last().unwrap().1, n_layers);
+                for w in ranges.windows(2) {
+                    assert_eq!(w[0].1, w[1].0, "ranges must be contiguous");
+                }
+                let depths: Vec<usize> = ranges.iter().map(|&(a, b)| b - a).collect();
+                assert!(depths.iter().all(|&d| d >= 1));
+                let (min, max) = (
+                    *depths.iter().min().unwrap(),
+                    *depths.iter().max().unwrap(),
+                );
+                assert!(max - min <= 1, "depths differ by at most one");
+            }
+        }
+    }
+
+    #[test]
+    fn stage_ranges_clamp_oversharded_models() {
+        // more shards than layers: one layer per stage, no empty stages
+        assert_eq!(stage_ranges(2, 4), vec![(0, 1), (1, 2)]);
+        assert_eq!(stage_ranges(1, 8), vec![(0, 1)]);
+        assert_eq!(stage_ranges(4, 0), vec![(0, 4)]);
+    }
+
+    #[test]
+    fn sharded_backend_programs_every_layer_once() {
+        let cfg = ModelConfig::tiny();
+        let model = DecodeModel::synth(cfg, 7);
+        let params = CimParams::default();
+        let sb = ShardedBackend::program(&model, &params, Strategy::DenseMap, 2, 1);
+        assert_eq!(sb.stage_count(), 2);
+        assert_eq!(sb.ranges(), vec![(0, 1), (1, 2)]);
+        let mut total_ops = 0usize;
+        for stage in &sb.stages {
+            assert_eq!(stage.layer_ops.len(), stage.depth());
+            total_ops += stage.mapping().ops.len();
+            // every stage-local index addresses the stage chip's op list
+            for lo in &stage.layer_ops {
+                for idx in [lo.wq, lo.wk, lo.wv, lo.wo, lo.ffn1, lo.ffn2] {
+                    assert!(idx < stage.mapping().ops.len());
+                }
+            }
+        }
+        assert_eq!(total_ops, model.ops.len(), "layer partition covers all ops");
+    }
+
+    #[test]
+    fn pipeline_stats_accumulate_and_normalize() {
+        let mut stats = PipelineStats::default();
+        assert_eq!(stats.speedup_vs_1chip(), 1.0);
+        assert_eq!(stats.bubble_fraction(), 0.0);
+        let tl = pipeline_timeline(&[vec![100.0, 100.0], vec![100.0, 100.0]], &[0.0, 0.0]);
+        let serial = tl.serial_ns;
+        stats.record(tl);
+        assert_eq!(stats.steps, 1);
+        assert_eq!(stats.stage_busy_ns.len(), 2);
+        assert!((stats.span_ns - 300.0).abs() < 1e-9);
+        assert!((stats.serial_ns - serial).abs() < 1e-9);
+        assert!(stats.speedup_vs_1chip() > 1.0);
+        let occ = stats.stage_occupancy();
+        assert_eq!(occ.len(), 2);
+        assert!(occ.iter().all(|&o| o > 0.0 && o <= 1.0));
+        assert!(stats.bubble_fraction() > 0.0 && stats.bubble_fraction() < 1.0);
+    }
+}

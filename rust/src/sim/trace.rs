@@ -142,7 +142,15 @@ impl Trace {
 /// *grows* with the token position (the memory-bound decode regime the
 /// paper motivates); the parameterized-matmul cost stays constant.
 pub fn mha_token_cost(cfg: &ModelConfig, params: &CimParams, kv_len: usize) -> Cost {
-    let layers = cfg.total_layers().max(1) as f64;
+    mha_layers_cost(params, kv_len, cfg.total_layers())
+}
+
+/// [`mha_token_cost`] restricted to an explicit layer count — the
+/// per-stage share of the MHA bill when layers are sharded across chips
+/// (`sim::shard`). Summed over a partition of the model's layers this
+/// reproduces the whole-model cost exactly.
+pub fn mha_layers_cost(params: &CimParams, kv_len: usize, layers: usize) -> Cost {
+    let layers = layers.max(1) as f64;
     let events = 2.0 * kv_len as f64 * layers;
     Cost {
         latency: Latency {
@@ -342,6 +350,189 @@ impl DecodeTrace {
     }
 }
 
+/// Off-chip activation hand-off events per lane per pipeline hop
+/// (`sim::shard`): a lane's `d_model` activation vector leaving chip
+/// `k` and entering chip `k+1` is serialized out and deserialized in —
+/// two Table-I communication events, charged at the same operating
+/// point as the on-chip R→L / L→out gathers (`scheduler::timing`).
+pub const SHARD_HOP_COMM_EVENTS: f64 = 2.0;
+
+/// Modeled cost of moving one microbatch of `lanes` activation vectors
+/// across one inter-chip hop of the layer-sharded pipeline.
+pub fn shard_transfer_cost(params: &CimParams, lanes: usize) -> Cost {
+    let events = SHARD_HOP_COMM_EVENTS * lanes as f64;
+    Cost {
+        latency: Latency {
+            comm_ns: events * params.t_comm_ns,
+            ..Default::default()
+        },
+        energy: Energy {
+            comm_nj: events * params.e_comm_nj,
+            ..Default::default()
+        },
+    }
+}
+
+/// Cost of one token position through ONE pipeline stage: the stage
+/// mapping's parameterized-matmul path (`per_token_cost` iterates only
+/// the layers present in the stage's ops, so a per-stage mapping prices
+/// exactly that stage's Para + DPU work) plus the stage's share of the
+/// cache-proportional MHA bill (`stage_layers` of the model's layers
+/// live on this chip). Summed over a partition of the layers, the
+/// stage costs reproduce the single-chip [`decode_token_cost`] —
+/// sharding relocates work, it does not change it.
+pub fn stage_token_cost(
+    cfg: &ModelConfig,
+    stage_mapping: &ModelMapping,
+    params: &CimParams,
+    kv_len: usize,
+    stage_layers: usize,
+) -> Cost {
+    let mut c = crate::scheduler::timing::per_token_cost(cfg, stage_mapping, params);
+    c += mha_layers_cost(params, kv_len, stage_layers);
+    c
+}
+
+/// Modeled wall latency of one microbatch chunk (`chunk` positions
+/// entering at cache length `base_kv`) through ONE pipeline stage —
+/// the [`prefill_chunk_cost`] pipelined-latency idiom restricted to
+/// the stage's mapping: the stage's analog row-drive is paid once per
+/// chunk, conversions/MHA/DPU serialize per position.
+pub fn stage_chunk_ns(
+    cfg: &ModelConfig,
+    stage_mapping: &ModelMapping,
+    params: &CimParams,
+    base_kv: usize,
+    chunk: usize,
+    stage_layers: usize,
+) -> f64 {
+    let serial: f64 = (0..chunk)
+        .map(|i| {
+            stage_token_cost(cfg, stage_mapping, params, base_kv + i + 1, stage_layers)
+                .latency
+                .critical_ns()
+        })
+        .sum();
+    let para = crate::scheduler::timing::per_token_cost(cfg, stage_mapping, params);
+    serial - chunk.saturating_sub(1) as f64 * para.latency.analog_ns
+}
+
+/// One stage's analog window for one microbatch on the per-stage
+/// pipeline timeline.
+#[derive(Clone, Debug)]
+pub struct StageWindow {
+    pub stage: usize,
+    pub microbatch: usize,
+    pub start_ns: f64,
+    pub end_ns: f64,
+}
+
+/// The per-stage timeline of one pipelined step over a layer-sharded
+/// chip chain (`sim::shard`): stage `s` processes microbatch `m` only
+/// after stage `s-1` finished it (plus the inter-chip activation
+/// transfer) and after stage `s` finished microbatch `m-1` — the
+/// classic pipeline recurrence. Stages overlap their analog windows
+/// across *different* microbatches; within one microbatch the layer
+/// order (and hence the replayed f32 stream) is untouched.
+#[derive(Clone, Debug, Default)]
+pub struct PipelineTimeline {
+    /// Every (stage, microbatch) window, stage-major.
+    pub windows: Vec<StageWindow>,
+    /// End of the last stage's last window (ns).
+    pub makespan_ns: f64,
+    /// Busy time per stage (ns) — Σ of its window durations.
+    pub stage_busy_ns: Vec<f64>,
+    /// Total inter-chip transfer latency charged (ns).
+    pub transfer_ns: f64,
+    /// What a single chip would take for the same work, no transfers
+    /// (ns). [`pipeline_timeline`] seeds it with every stage window
+    /// back to back; `sim::shard` replaces that with the measured
+    /// full-mapping chunk cost (identical for Linear/SparseMap, whose
+    /// per-op geometry is list-independent; DenseMap packs a layer
+    /// subset differently than the whole model, so the honest baseline
+    /// is the 1-chip mapping, not the stage sum).
+    pub serial_ns: f64,
+}
+
+impl PipelineTimeline {
+    /// Fraction of stage-time slots idle within the makespan:
+    /// `1 - Σ busy / (stages · makespan)`. Zero for a single stage;
+    /// approaches zero as in-flight microbatch depth grows past the
+    /// stage count.
+    pub fn bubble_fraction(&self) -> f64 {
+        let stages = self.stage_busy_ns.len();
+        if stages == 0 || self.makespan_ns <= 0.0 {
+            return 0.0;
+        }
+        let busy: f64 = self.stage_busy_ns.iter().sum();
+        (1.0 - busy / (stages as f64 * self.makespan_ns)).max(0.0)
+    }
+
+    /// Modeled steady-state speedup over one chip doing the same work
+    /// serially: `serial_ns / makespan_ns`.
+    pub fn speedup_vs_1chip(&self) -> f64 {
+        if self.makespan_ns <= 0.0 {
+            return 1.0;
+        }
+        self.serial_ns / self.makespan_ns
+    }
+}
+
+/// Build the pipeline timeline from per-stage per-microbatch window
+/// durations (`stage_ns[s][m]`, every stage listing every microbatch)
+/// and the per-microbatch inter-chip transfer latency charged on each
+/// of the `stages - 1` hops (`transfer_ns[m]`).
+pub fn pipeline_timeline(stage_ns: &[Vec<f64>], transfer_ns: &[f64]) -> PipelineTimeline {
+    let stages = stage_ns.len();
+    if stages == 0 {
+        return PipelineTimeline::default();
+    }
+    let micro = stage_ns[0].len();
+    assert!(
+        stage_ns.iter().all(|s| s.len() == micro),
+        "every stage must list every microbatch"
+    );
+    assert_eq!(transfer_ns.len(), micro, "one transfer cost per microbatch");
+    let mut windows = Vec::with_capacity(stages * micro);
+    let mut stage_busy_ns = vec![0.0f64; stages];
+    // end[m] tracks, while sweeping stage s, when stage s-1 finished
+    // microbatch m; stage_free is when stage s finished its previous one
+    let mut prev_end = vec![0.0f64; micro];
+    let mut transfer_total = 0.0f64;
+    let mut serial_ns = 0.0f64;
+    for (s, durs) in stage_ns.iter().enumerate() {
+        let mut stage_free = 0.0f64;
+        for (m, &dur) in durs.iter().enumerate() {
+            let ready = if s == 0 {
+                0.0
+            } else {
+                transfer_total += transfer_ns[m];
+                prev_end[m] + transfer_ns[m]
+            };
+            let start = ready.max(stage_free);
+            let end = start + dur;
+            windows.push(StageWindow {
+                stage: s,
+                microbatch: m,
+                start_ns: start,
+                end_ns: end,
+            });
+            stage_busy_ns[s] += dur;
+            serial_ns += dur;
+            stage_free = end;
+            prev_end[m] = end;
+        }
+    }
+    let makespan_ns = prev_end.iter().cloned().fold(0.0f64, f64::max);
+    PipelineTimeline {
+        windows,
+        makespan_ns,
+        stage_busy_ns,
+        transfer_ns: transfer_total,
+        serial_ns,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -509,5 +700,104 @@ mod tests {
                 .fold(0.0f64, f64::max)
         };
         assert!(busiest(&de) > busiest(&sp));
+    }
+
+    #[test]
+    fn pipeline_timeline_classic_recurrence() {
+        // S stages x M equal microbatches, no transfer: makespan is the
+        // textbook (S + M - 1) * t, bubble = 1 - SM / (S(S+M-1))
+        let (s, m, t) = (4usize, 4usize, 100.0f64);
+        let stage_ns = vec![vec![t; m]; s];
+        let tl = pipeline_timeline(&stage_ns, &vec![0.0; m]);
+        assert_eq!(tl.windows.len(), s * m);
+        assert!((tl.makespan_ns - (s + m - 1) as f64 * t).abs() < 1e-9);
+        assert!((tl.serial_ns - (s * m) as f64 * t).abs() < 1e-9);
+        let want_bubble = 1.0 - (s * m) as f64 / (s * (s + m - 1)) as f64;
+        assert!((tl.bubble_fraction() - want_bubble).abs() < 1e-9);
+        let want_speedup = (s * m) as f64 / (s + m - 1) as f64;
+        assert!((tl.speedup_vs_1chip() - want_speedup).abs() < 1e-9);
+        // windows never overlap per stage, never run a microbatch
+        // before its previous stage finished it
+        for w in &tl.windows {
+            if w.stage > 0 {
+                let prev = tl
+                    .windows
+                    .iter()
+                    .find(|p| p.stage == w.stage - 1 && p.microbatch == w.microbatch)
+                    .unwrap();
+                assert!(w.start_ns >= prev.end_ns - 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn pipeline_timeline_single_stage_has_no_bubbles() {
+        let tl = pipeline_timeline(&[vec![50.0, 70.0, 30.0]], &[0.0, 0.0, 0.0]);
+        assert!((tl.makespan_ns - 150.0).abs() < 1e-9);
+        assert_eq!(tl.bubble_fraction(), 0.0);
+        assert!((tl.speedup_vs_1chip() - 1.0).abs() < 1e-9);
+        assert_eq!(tl.transfer_ns, 0.0);
+    }
+
+    #[test]
+    fn pipeline_timeline_charges_transfers_on_every_hop() {
+        // 2 stages, 2 microbatches, transfer 10 per microbatch per hop
+        let stage_ns = vec![vec![100.0, 100.0], vec![100.0, 100.0]];
+        let tl = pipeline_timeline(&stage_ns, &[10.0, 10.0]);
+        // hop count = (stages-1) * microbatches = 2
+        assert!((tl.transfer_ns - 20.0).abs() < 1e-9);
+        // m0: s0 [0,100], s1 [110,210]; m1: s0 [100,200], s1 [210,310]
+        assert!((tl.makespan_ns - 310.0).abs() < 1e-9);
+        // the serial baseline pays no transfers
+        assert!((tl.serial_ns - 400.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pipeline_timeline_empty_is_inert() {
+        let tl = pipeline_timeline(&[], &[]);
+        assert_eq!(tl.makespan_ns, 0.0);
+        assert_eq!(tl.bubble_fraction(), 0.0);
+        assert!((tl.speedup_vs_1chip() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stage_costs_partition_the_single_chip_bill() {
+        // per-stage Para+DPU+MHA costs over a layer partition sum back
+        // to the whole-model decode_token_cost: exactly for Linear and
+        // SparseMap (their per-op geometry is independent of the op
+        // list), approximately for DenseMap (capacity packing is a
+        // whole-list decision, so per-chip packing of a layer subset
+        // may legitimately co-locate blocks differently)
+        let cfg = ModelConfig::tiny();
+        let params = CimParams::default();
+        let ops = crate::model::para_ops(&cfg);
+        for strategy in Strategy::all() {
+            let full = crate::mapping::map_ops(&cfg, &ops, &params, strategy);
+            let kv = 7usize;
+            let want = decode_token_cost(&cfg, &full, &params, kv);
+            let mut got = Cost::default();
+            for l in 0..cfg.dec_layers {
+                let stage_ops: Vec<_> = ops
+                    .iter()
+                    .filter(|o| o.layer == l)
+                    .cloned()
+                    .collect();
+                let sm = crate::mapping::map_ops(&cfg, &stage_ops, &params, strategy);
+                got += stage_token_cost(&cfg, &sm, &params, kv, 1);
+            }
+            let rel = |a: f64, b: f64| (a - b).abs() / b.max(1e-12);
+            let tol = match strategy {
+                Strategy::DenseMap => 1.0, // within 2x of the 1-chip bill
+                _ => 1e-9,
+            };
+            assert!(
+                rel(got.latency.critical_ns(), want.latency.critical_ns()) <= tol,
+                "{strategy:?}: stage latency sum drifted from the single-chip bill"
+            );
+            assert!(
+                rel(got.energy.total_nj(), want.energy.total_nj()) <= tol,
+                "{strategy:?}: stage energy sum drifted"
+            );
+        }
     }
 }

@@ -1,0 +1,215 @@
+//! Property tests for the layer-sharded pipeline engine (`sim::shard`,
+//! ISSUE 7): over random model geometries, mapping strategies, shard
+//! counts 1..=4 and ragged batches, a sharded [`BatchDecodeEngine`] is
+//! **bitwise equal** to the single-chip engine — tokens, logits AND KV
+//! contents.
+//!
+//! Why this must hold: the functional sharded step runs every stage in
+//! layer order over the step's lanes, so each lane replays exactly the
+//! f32 operations of the single-chip path; the only thing sharding
+//! changes is *which chip's pass tables* execute a layer, and a chip's
+//! replay of an op is independent of what else is programmed beside it
+//! (the `prop_exec_plan` invariant). The pipeline overlap lives purely
+//! in the latency model (`trace::pipeline_timeline`).
+
+use monarch_cim::sim::decode::{BatchDecodeEngine, DecodeModel};
+use monarch_cim::sim::stage_ranges;
+use monarch_cim::util::prop::forall;
+
+mod common;
+
+#[test]
+fn prop_sharded_generate_equals_single_chip() {
+    forall("sharded generate == single-chip generate", 6, |g| {
+        let mut cfg = common::random_decoder_cfg(g);
+        // deeper models so shards 1..=4 exercises real multi-stage
+        // splits (stage_ranges clamps oversharded cases regardless)
+        cfg.dec_layers = g.usize(1, 5);
+        let params = common::chip_params(g, &[16, 32]);
+        if !common::fits_array(&cfg, &params) {
+            return;
+        }
+        let seed = common::seed(g);
+        let strategy = common::any_strategy(g);
+        let shards = g.usize(1, 4);
+        let capacity = g.usize(1, 4);
+        let n_requests = capacity + g.usize(0, 2);
+        let n_tokens = g.usize(1, 4);
+        let chunk = g.usize(1, 4); // chunked prefill rides the pipeline too
+        let prompts: Vec<Vec<i32>> = (0..n_requests)
+            .map(|r| {
+                let len = g.usize(1, 5); // ragged prompt lengths
+                (0..len)
+                    .map(|i| ((r * 31 + i * 7 + 3) % cfg.vocab) as i32)
+                    .collect()
+            })
+            .collect();
+        let mut sharded = BatchDecodeEngine::sharded(
+            DecodeModel::synth(cfg.clone(), seed),
+            params.clone(),
+            strategy,
+            capacity,
+            shards,
+        );
+        assert_eq!(sharded.stage_count(), shards.clamp(1, cfg.dec_layers));
+        let piped = sharded.generate_batch_chunked(&prompts, n_tokens, chunk);
+        let mut mono = BatchDecodeEngine::on_chip(
+            DecodeModel::synth(cfg.clone(), seed),
+            params.clone(),
+            strategy,
+            capacity,
+        );
+        let want = mono.generate_batch_chunked(&prompts, n_tokens, chunk);
+        for (ri, (a, w)) in piped.iter().zip(&want).enumerate() {
+            assert_eq!(
+                a.tokens, w.tokens,
+                "{strategy:?} shards {shards} request {ri}: sharded tokens \
+                 diverged from the single-chip engine"
+            );
+            // per-position costs are priced with the sharded engine's
+            // stored 1-chip reference mapping, so they must be exactly
+            // the mono engine's records
+            assert_eq!(a.per_token.len(), w.per_token.len());
+            for (i, (ac, wc)) in a.per_token.iter().zip(&w.per_token).enumerate() {
+                assert_eq!(
+                    ac.latency.critical_ns(),
+                    wc.latency.critical_ns(),
+                    "{strategy:?} shards {shards} request {ri} position {i}: cost drift"
+                );
+                assert_eq!(ac.energy.total_nj(), wc.energy.total_nj());
+            }
+        }
+        // the pipeline accumulator saw every step
+        let ps = sharded.pipeline_stats();
+        assert!(ps.steps > 0, "sharded steps must record timelines");
+        assert_eq!(ps.stage_busy_ns.len(), sharded.stage_count());
+        assert!(ps.span_ns.is_finite() && ps.span_ns > 0.0);
+        let bubble = ps.bubble_fraction();
+        assert!((0.0..=1.0).contains(&bubble), "bubble {bubble} out of range");
+        assert!(ps.speedup_vs_1chip().is_finite() && ps.speedup_vs_1chip() > 0.0);
+    });
+}
+
+#[test]
+fn prop_sharded_step_logits_and_kv_bitwise() {
+    // Step-level check with mixed decode/prefill lanes: after every
+    // shared step, each lane's logits and every slot's full KV cache
+    // are bitwise the single-chip engine's.
+    forall("sharded step logits+KV == single-chip", 6, |g| {
+        let mut cfg = common::random_decoder_cfg(g);
+        cfg.dec_layers = g.usize(1, 5);
+        let params = common::chip_params(g, &[16, 32]);
+        if !common::fits_array(&cfg, &params) {
+            return;
+        }
+        let seed = common::seed(g);
+        let strategy = common::any_strategy(g);
+        let shards = g.usize(1, 4);
+        let capacity = g.usize(1, 3);
+        let mut sharded = BatchDecodeEngine::sharded(
+            DecodeModel::synth(cfg.clone(), seed),
+            params.clone(),
+            strategy,
+            capacity,
+            shards,
+        );
+        let mut mono = BatchDecodeEngine::on_chip(
+            DecodeModel::synth(cfg.clone(), seed),
+            params.clone(),
+            strategy,
+            capacity,
+        );
+        let slots: Vec<usize> = (0..capacity)
+            .map(|_| {
+                let a = sharded.try_admit().unwrap();
+                let b = mono.try_admit().unwrap();
+                assert_eq!(a, b, "fresh pools hand out the same slots");
+                a
+            })
+            .collect();
+        let steps = g.usize(1, 3);
+        let mut fed = vec![0usize; capacity];
+        for step in 0..steps {
+            // ragged chunks: each slot advances 1..=3 positions (decode
+            // lanes are chunks of 1, prefill lanes wider), bounded by
+            // the context window
+            let mut chunks: Vec<Vec<i32>> = Vec::with_capacity(capacity);
+            for (s, f) in fed.iter_mut().enumerate() {
+                let room = cfg.seq - *f;
+                let c = g.usize(1, 3).min(room).max(1);
+                chunks.push(
+                    (0..c)
+                        .map(|i| ((s * 13 + (*f + i) * 5 + 2) % cfg.vocab) as i32)
+                        .collect(),
+                );
+                *f += c;
+            }
+            let groups: Vec<(usize, &[i32])> = slots
+                .iter()
+                .zip(&chunks)
+                .map(|(&s, c)| (s, &c[..]))
+                .collect();
+            sharded.step_chunks(&groups);
+            mono.step_chunks(&groups);
+            // lane-by-lane logits of this step
+            let lanes: usize = chunks.iter().map(|c| c.len()).sum();
+            for lane in 0..lanes {
+                assert_eq!(
+                    sharded.lane_logits(lane),
+                    mono.lane_logits(lane),
+                    "{strategy:?} shards {shards} step {step} lane {lane}: logits drift"
+                );
+            }
+            for &s in &slots {
+                assert_eq!(
+                    sharded.logits(s),
+                    mono.logits(s),
+                    "{strategy:?} shards {shards} step {step} slot {s}: logits drift"
+                );
+            }
+        }
+        // full KV contents, every layer, every position, bitwise
+        for &s in &slots {
+            assert_eq!(sharded.kv_len(s), mono.kv_len(s));
+            for l in 0..cfg.dec_layers {
+                for pos in 0..sharded.kv_len(s) {
+                    assert_eq!(
+                        sharded.kv(s).key(l, pos),
+                        mono.kv(s).key(l, pos),
+                        "{strategy:?} shards {shards} slot {s} layer {l} pos {pos}: key drift"
+                    );
+                    assert_eq!(
+                        sharded.kv(s).value(l, pos),
+                        mono.kv(s).value(l, pos),
+                        "{strategy:?} shards {shards} slot {s} layer {l} pos {pos}: value drift"
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_stage_ranges_partition() {
+    forall("stage_ranges covers contiguously", 12, |g| {
+        let n_layers = g.usize(1, 48);
+        let shards = g.usize(0, 12);
+        let ranges = stage_ranges(n_layers, shards);
+        assert_eq!(ranges.len(), shards.clamp(1, n_layers));
+        assert_eq!(ranges.first().unwrap().0, 0);
+        assert_eq!(ranges.last().unwrap().1, n_layers);
+        let mut depths = Vec::new();
+        for (i, w) in ranges.windows(2).enumerate() {
+            assert_eq!(w[0].1, w[1].0, "gap/overlap between stages {i} and {}", i + 1);
+        }
+        for &(lo, hi) in &ranges {
+            assert!(hi > lo, "empty stage [{lo}..{hi})");
+            depths.push(hi - lo);
+        }
+        let (min, max) = (
+            *depths.iter().min().unwrap(),
+            *depths.iter().max().unwrap(),
+        );
+        assert!(max - min <= 1, "near-even split violated: {depths:?}");
+    });
+}
