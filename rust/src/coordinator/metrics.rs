@@ -43,6 +43,18 @@ struct Inner {
     /// Draft tokens accepted (each equal to the served window's actual
     /// next token).
     spec_accepted: u64,
+    /// Shared-prefix KV cache (DESIGN.md §6g): admission-time lookups.
+    prefix_lookups: u64,
+    /// Lookups that spliced at least one cached position.
+    prefix_hits: u64,
+    /// Prompt positions answered from the cache instead of prefilled.
+    prefix_saved_positions: u64,
+    /// Requests abandoned by their client (dropped reply channel) —
+    /// slots released early instead of decoding for nobody.
+    cancellations: u64,
+    /// Multi-worker serving: per-worker occupancy accumulators,
+    /// `(steps, occupied-slot sum, peak, capacity)` indexed by worker.
+    worker_occ: Vec<(u64, u64, usize, usize)>,
     /// Layer-sharded pipeline (`sim::shard`): sharded steps recorded.
     pipe_steps: u64,
     /// Modeled busy time per pipeline stage (ns), summed over steps —
@@ -115,6 +127,23 @@ pub struct Snapshot {
     /// round; plain decode is 1.0, anything above is the speculative
     /// win). 0.0 until a round completes.
     pub spec_tokens_per_round: f64,
+    /// Shared-prefix KV cache: admission-time lookups, lookups that
+    /// spliced cached positions, and the hit ratio (0.0 until a lookup
+    /// happens).
+    pub prefix_lookups: u64,
+    pub prefix_hits: u64,
+    pub prefix_hit_rate: f64,
+    /// Prompt positions answered from the prefix cache — prefill work
+    /// the chip never had to replay.
+    pub prefix_positions_saved: u64,
+    /// Requests whose client vanished (dropped reply channel) before
+    /// the reply landed; their slots were released early.
+    pub cancellations: u64,
+    /// Multi-worker serving: worker threads that reported occupancy.
+    pub workers: usize,
+    /// Mean occupied slots per step, per worker (empty until a worker
+    /// reports) — the load-balance view the aggregate mean hides.
+    pub worker_occupancy: Vec<f64>,
     /// Layer-sharded pipeline: stage count of the backing engine (0
     /// when serving unsharded).
     pub shard_stages: usize,
@@ -232,6 +261,44 @@ impl Metrics {
         g.occ_capacity = capacity;
     }
 
+    /// Sample one worker's occupancy after one of its token steps —
+    /// feeds both the aggregate counters ([`Metrics::record_occupancy`]
+    /// semantics) and the per-worker means the dispatcher's load
+    /// balance is judged by.
+    pub fn record_worker_occupancy(&self, worker: usize, active: usize, capacity: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.occ_steps += 1;
+        g.occ_sum += active as u64;
+        g.occ_peak = g.occ_peak.max(active);
+        g.occ_capacity = capacity;
+        if g.worker_occ.len() <= worker {
+            g.worker_occ.resize(worker + 1, (0, 0, 0, 0));
+        }
+        let w = &mut g.worker_occ[worker];
+        w.0 += 1;
+        w.1 += active as u64;
+        w.2 = w.2.max(active);
+        w.3 = capacity;
+    }
+
+    /// Record one shared-prefix cache lookup at admission: `saved` is
+    /// the number of prompt positions spliced from the cache (0 = miss).
+    pub fn record_prefix_lookup(&self, saved: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.prefix_lookups += 1;
+        if saved > 0 {
+            g.prefix_hits += 1;
+            g.prefix_saved_positions += saved as u64;
+        }
+    }
+
+    /// Record one abandoned request: the client dropped its reply
+    /// channel, so the request's slot was released before (or its reply
+    /// discarded after) the window finished.
+    pub fn record_cancellation(&self) {
+        self.inner.lock().unwrap().cancellations += 1;
+    }
+
     /// Account one (or a window of) layer-sharded pipeline step(s):
     /// modeled busy time per stage, total makespan, inter-chip transfer
     /// latency and the 1-chip serial baseline — the aggregates a
@@ -333,6 +400,23 @@ impl Metrics {
             } else {
                 (g.spec_accepted + g.spec_rounds) as f64 / g.spec_rounds as f64
             },
+            prefix_lookups: g.prefix_lookups,
+            prefix_hits: g.prefix_hits,
+            prefix_hit_rate: if g.prefix_lookups == 0 {
+                0.0
+            } else {
+                g.prefix_hits as f64 / g.prefix_lookups as f64
+            },
+            prefix_positions_saved: g.prefix_saved_positions,
+            cancellations: g.cancellations,
+            workers: g.worker_occ.len(),
+            worker_occupancy: g
+                .worker_occ
+                .iter()
+                .map(|&(steps, sum, _, _)| {
+                    if steps == 0 { 0.0 } else { sum as f64 / steps as f64 }
+                })
+                .collect(),
             shard_stages: g.pipe_stage_busy_ns.len(),
             pipeline_steps: g.pipe_steps,
             stage_occupancy: if g.pipe_span_ns > 0.0 {
@@ -533,9 +617,10 @@ mod tests {
     #[test]
     fn percentiles_with_no_samples_and_one_sample() {
         // the untested edge cases: every percentile must be 0.0 with no
-        // samples (not panic — `util::stats::percentile` asserts
-        // non-empty, so the is_empty guards are load-bearing), and a
-        // single sample must be both its own p50 and p99
+        // samples (`util::stats::percentile` now reports 0.0 on empty
+        // input itself; the is_empty guards keep the convention local
+        // and explicit), and a single sample must be both its own p50
+        // and p99
         let m = Metrics::new();
         let s = m.snapshot();
         assert_eq!(s.latency_p50_us, 0.0);
@@ -557,6 +642,59 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.inter_token_p50_us, 40.0);
         assert_eq!(s.inter_token_p99_us, 40.0);
+    }
+
+    #[test]
+    fn prefix_cache_accounting() {
+        let m = Metrics::new();
+        let s = m.snapshot();
+        assert_eq!(s.prefix_lookups, 0);
+        assert_eq!(s.prefix_hit_rate, 0.0, "no lookups must not divide by zero");
+        assert_eq!(s.prefix_positions_saved, 0);
+        // two misses, two hits saving 12 + 4 positions
+        m.record_prefix_lookup(0);
+        m.record_prefix_lookup(12);
+        m.record_prefix_lookup(0);
+        m.record_prefix_lookup(4);
+        let s = m.snapshot();
+        assert_eq!(s.prefix_lookups, 4);
+        assert_eq!(s.prefix_hits, 2);
+        assert!((s.prefix_hit_rate - 0.5).abs() < 1e-12);
+        assert_eq!(s.prefix_positions_saved, 16);
+    }
+
+    #[test]
+    fn cancellation_accounting() {
+        let m = Metrics::new();
+        assert_eq!(m.snapshot().cancellations, 0);
+        m.record_cancellation();
+        m.record_cancellation();
+        assert_eq!(m.snapshot().cancellations, 2);
+    }
+
+    #[test]
+    fn per_worker_occupancy_feeds_both_views() {
+        let m = Metrics::new();
+        let s = m.snapshot();
+        assert_eq!(s.workers, 0);
+        assert!(s.worker_occupancy.is_empty());
+        // worker 1 reports before worker 0 ever steps (sparse indices
+        // must not panic); aggregates see every sample
+        m.record_worker_occupancy(1, 4, 8);
+        m.record_worker_occupancy(1, 2, 8);
+        m.record_worker_occupancy(0, 3, 8);
+        let s = m.snapshot();
+        assert_eq!(s.workers, 2);
+        assert!((s.worker_occupancy[0] - 3.0).abs() < 1e-12);
+        assert!((s.worker_occupancy[1] - 3.0).abs() < 1e-12);
+        assert!((s.occupancy_mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.occupancy_peak, 4);
+        assert_eq!(s.slot_capacity, 8);
+        // a worker that never stepped reads 0.0, not NaN
+        m.record_worker_occupancy(3, 1, 8);
+        let s = m.snapshot();
+        assert_eq!(s.workers, 4);
+        assert_eq!(s.worker_occupancy[2], 0.0);
     }
 
     #[test]

@@ -7,7 +7,8 @@ pub mod batching;
 pub mod dse;
 pub mod framework;
 pub mod metrics;
+mod prefix;
 pub mod server;
 
 pub use framework::{run_pipeline, PipelineConfig, PipelineResult};
-pub use server::{Backend, CimSimConfig, InferenceServer, ServerConfig};
+pub use server::{Backend, CimSimConfig, InferenceServer, PendingResponse, ServerConfig};

@@ -1,0 +1,241 @@
+//! Shared-prefix KV cache for the serving front end (DESIGN.md §6g).
+//!
+//! At millions-of-users scale most windows open with the same tokens —
+//! system prompts, few-shot templates — so the dominant prefill work is
+//! re-deriving K/V state the chip already computed for an earlier
+//! request. Each CIM-sim worker keeps a [`PrefixStore`]: completed
+//! windows donate their KV cache and per-position logits, and an
+//! incoming window is matched against the store by **longest common
+//! token prefix**. On a hit, the shared positions are spliced into the
+//! fresh slot (`BatchDecodeEngine::splice_kv`) and their logits are
+//! answered straight from the store — the chip never replays them.
+//!
+//! Keying is the token sequence itself (the only thing K/V depend on —
+//! same model, same weights, so same tokens ⇒ bitwise same state;
+//! `tests/prop_prefix_cache.rs` pins the splice against cold prefill).
+//! The store is per-worker and single-threaded — no locks on the
+//! serving path; matching is a linear scan over at most `cap` entries.
+//!
+//! A hit is always capped at `window.len() - 1`: the last position is
+//! re-stepped even on a full-window match, so every admission performs
+//! at least one replay (the engine's step contract) — the vLLM-style
+//! "recompute the last token" rule.
+
+use crate::sim::prefill::KvCache;
+
+/// One cached donor: the scored token window, its full KV cache and the
+/// per-position logits (`tokens.len() * vocab`) the server replied with.
+struct PrefixEntry {
+    tokens: Vec<i32>,
+    kv: KvCache,
+    logits: Vec<f32>,
+    /// Last-touched stamp (insert or hit) for LRU eviction.
+    stamp: u64,
+}
+
+/// A prefix-cache hit: cloned K/V and logits for `positions` leading
+/// tokens of the looked-up window.
+pub(crate) struct PrefixHit {
+    pub kv: KvCache,
+    pub logits: Vec<f32>,
+    pub positions: usize,
+}
+
+/// Per-worker shared-prefix store with an LRU entry cap.
+pub(crate) struct PrefixStore {
+    entries: Vec<PrefixEntry>,
+    cap: usize,
+    vocab: usize,
+    clock: u64,
+}
+
+/// Length of the common leading run of `a` and `b`.
+fn common_prefix(a: &[i32], b: &[i32]) -> usize {
+    a.iter().zip(b).take_while(|(x, y)| x == y).count()
+}
+
+impl PrefixStore {
+    pub fn new(cap: usize, vocab: usize) -> Self {
+        Self {
+            entries: Vec::with_capacity(cap),
+            cap,
+            vocab,
+            clock: 0,
+        }
+    }
+
+    fn tick(&mut self) -> u64 {
+        self.clock += 1;
+        self.clock
+    }
+
+    /// Longest-common-prefix lookup for an incoming window. Returns the
+    /// best hit (≥ 1 position, capped at `window.len() - 1` so at least
+    /// one position is always stepped), or `None` on a miss.
+    pub fn lookup(&mut self, window: &[i32]) -> Option<PrefixHit> {
+        let budget = window.len().saturating_sub(1);
+        let (idx, lcp) = self
+            .entries
+            .iter()
+            .enumerate()
+            .map(|(i, e)| (i, common_prefix(&e.tokens, window).min(budget)))
+            .max_by_key(|&(_, lcp)| lcp)?;
+        if lcp == 0 {
+            return None;
+        }
+        let stamp = self.tick();
+        let e = &mut self.entries[idx];
+        e.stamp = stamp;
+        Some(PrefixHit {
+            kv: e.kv.clone_prefix(lcp),
+            logits: e.logits[..lcp * self.vocab].to_vec(),
+            positions: lcp,
+        })
+    }
+
+    /// Donate one completed window: its tokens, final KV cache and the
+    /// full per-position logits. An entry already covering `tokens` (it
+    /// has them as a prefix) is only freshened; an entry `tokens`
+    /// covers is replaced by the longer donor; otherwise the window is
+    /// inserted, evicting the least-recently-touched entry at cap.
+    pub fn insert(&mut self, tokens: &[i32], kv: &KvCache, logits: &[f32]) {
+        if self.cap == 0 || tokens.is_empty() {
+            return;
+        }
+        debug_assert_eq!(kv.len(), tokens.len(), "donor KV spans the window");
+        debug_assert_eq!(logits.len(), tokens.len() * self.vocab);
+        let stamp = self.tick();
+        if let Some(e) = self
+            .entries
+            .iter_mut()
+            .find(|e| e.tokens.len() >= tokens.len() && e.tokens.starts_with(tokens))
+        {
+            e.stamp = stamp; // already covered by a longer (or equal) donor
+            return;
+        }
+        let entry = PrefixEntry {
+            tokens: tokens.to_vec(),
+            kv: kv.clone_prefix(kv.len()),
+            logits: logits.to_vec(),
+            stamp,
+        };
+        if let Some(e) = self
+            .entries
+            .iter_mut()
+            .find(|e| tokens.starts_with(&e.tokens))
+        {
+            *e = entry; // strictly longer donor supersedes its prefix
+            return;
+        }
+        if self.entries.len() == self.cap {
+            let lru = self
+                .entries
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, e)| e.stamp)
+                .map(|(i, _)| i)
+                .expect("cap > 0 so the store is non-empty here");
+            self.entries.swap_remove(lru);
+        }
+        self.entries.push(entry);
+    }
+
+    /// Entries currently held (test observability; the serving path
+    /// never needs the count).
+    #[cfg(test)]
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A donor cache with recognizable per-position values: position
+    /// `p` of layer `l` holds `[l*100 + p]` so splices are traceable.
+    fn kv_for(tokens: &[i32], layers: usize) -> KvCache {
+        let mut kv = KvCache::new(layers);
+        for l in 0..layers {
+            for (p, _) in tokens.iter().enumerate() {
+                kv.push(l, vec![(l * 100 + p) as f32], vec![-((l * 100 + p) as f32)]);
+            }
+        }
+        kv
+    }
+
+    fn logits_for(tokens: &[i32], vocab: usize) -> Vec<f32> {
+        (0..tokens.len() * vocab).map(|i| i as f32).collect()
+    }
+
+    #[test]
+    fn lookup_finds_longest_common_prefix() {
+        let mut store = PrefixStore::new(4, 2);
+        let a = [1, 2, 3, 4];
+        let b = [1, 2, 9, 9, 9];
+        store.insert(&a, &kv_for(&a, 1), &logits_for(&a, 2));
+        store.insert(&b, &kv_for(&b, 1), &logits_for(&b, 2));
+        // window shares 3 tokens with `a`, 2 with `b` → `a` wins
+        let hit = store.lookup(&[1, 2, 3, 7, 7]).expect("hit");
+        assert_eq!(hit.positions, 3);
+        assert_eq!(hit.kv.len(), 3);
+        assert_eq!(hit.logits.len(), 3 * 2);
+        assert_eq!(hit.kv.key(0, 2), &[2.0]);
+        // no shared opening token → miss
+        assert!(store.lookup(&[5, 1, 2]).is_none());
+    }
+
+    #[test]
+    fn full_window_match_recomputes_the_last_token() {
+        let mut store = PrefixStore::new(4, 1);
+        let w = [3, 1, 4, 1, 5];
+        store.insert(&w, &kv_for(&w, 1), &logits_for(&w, 1));
+        // an identical window must still step ≥ 1 position
+        let hit = store.lookup(&w).expect("hit");
+        assert_eq!(hit.positions, w.len() - 1);
+        // a 1-token window can never hit (nothing would be stepped)
+        assert!(store.lookup(&w[..1]).is_none());
+    }
+
+    #[test]
+    fn insert_dedups_covered_prefixes_both_ways() {
+        let mut store = PrefixStore::new(4, 1);
+        let long = [1, 2, 3, 4];
+        store.insert(&long, &kv_for(&long, 1), &logits_for(&long, 1));
+        // a prefix of an existing donor adds nothing
+        store.insert(&long[..2], &kv_for(&long[..2], 1), &logits_for(&long[..2], 1));
+        assert_eq!(store.len(), 1);
+        // a longer window supersedes the entry it extends
+        let longer = [1, 2, 3, 4, 5, 6];
+        store.insert(&longer, &kv_for(&longer, 1), &logits_for(&longer, 1));
+        assert_eq!(store.len(), 1);
+        let hit = store.lookup(&[1, 2, 3, 4, 5, 6, 7]).expect("hit");
+        assert_eq!(hit.positions, 6);
+    }
+
+    #[test]
+    fn cap_evicts_least_recently_touched() {
+        let mut store = PrefixStore::new(2, 1);
+        let a = [10, 11];
+        let b = [20, 21];
+        let c = [30, 31];
+        store.insert(&a, &kv_for(&a, 1), &logits_for(&a, 1));
+        store.insert(&b, &kv_for(&b, 1), &logits_for(&b, 1));
+        // touch `a` so `b` is the LRU victim
+        assert!(store.lookup(&[10, 11, 12]).is_some());
+        store.insert(&c, &kv_for(&c, 1), &logits_for(&c, 1));
+        assert_eq!(store.len(), 2);
+        assert!(store.lookup(&[10, 11, 12]).is_some(), "a survived");
+        assert!(store.lookup(&[20, 21, 22]).is_none(), "b evicted");
+        assert!(store.lookup(&[30, 31, 32]).is_some(), "c inserted");
+    }
+
+    #[test]
+    fn zero_cap_disables_the_store() {
+        let mut store = PrefixStore::new(0, 1);
+        let w = [1, 2, 3];
+        store.insert(&w, &kv_for(&w, 1), &logits_for(&w, 1));
+        assert_eq!(store.len(), 0);
+        assert!(store.lookup(&w).is_none());
+    }
+}

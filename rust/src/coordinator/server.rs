@@ -25,9 +25,26 @@
 //!   serving path of the offline image. [`Metrics`] additionally
 //!   reports per-step slot occupancy, wall-clock tokens/sec, and the
 //!   per-request time-to-first-token / inter-token latency split.
+//!
+//! The CIM-sim backend scales out (DESIGN.md §6g): `workers: W` spawns
+//! W independent continuous-batching workers — each its own programmed
+//! chip, identical weights from the shared synthesis seed, so any
+//! worker serves any request bit-identically — pulling from one shared
+//! [`RequestQueue`] (work-stealing dispatch; `std::sync::mpsc`
+//! receivers are neither cloneable nor `Sync`, hence the
+//! mutex-and-condvar queue). Each worker keeps a per-worker
+//! shared-prefix KV cache (`coordinator::prefix`): completed windows
+//! donate KV + logits, and an admission whose window opens with a
+//! cached prefix splices that state in (`BatchDecodeEngine::splice_kv`)
+//! instead of prefilling it. Clients that vanish are detected through a
+//! liveness token on each request ([`InferenceServer::submit`] returns
+//! a [`PendingResponse`] holding it): a dropped handle releases the
+//! slot at the next step boundary and counts a cancellation instead of
+//! decoding for nobody.
 
-use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
-use std::sync::Arc;
+use std::collections::VecDeque;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex, Weak};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
@@ -35,6 +52,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use super::batching::{next_batch, pick_bucket, BatchPolicy};
 use super::metrics::Metrics;
+use super::prefix::PrefixStore;
 use crate::cim::CimParams;
 use crate::mapping::Strategy;
 use crate::model::ModelConfig;
@@ -54,10 +72,89 @@ type Bucket = (usize, String, usize, usize);
 struct Request {
     tokens: Vec<i32>,
     resp: Sender<Result<Vec<f32>>>,
+    /// Client-liveness token: the submitting side holds the [`Arc`]
+    /// (inside [`PendingResponse`]); when the upgrade fails the client
+    /// is gone and the worker may drop the request or release its slot
+    /// early (`std::sync::mpsc` senders cannot observe a dropped
+    /// receiver, so liveness rides its own handle).
+    alive: Weak<()>,
     /// Submission time — queue wait counts toward the request's
     /// recorded latency (a request can sit in the channel while every
     /// slot is busy).
     t0: Instant,
+}
+
+/// Outcome of a non-blocking [`RequestQueue::try_pop`].
+enum TryPop {
+    Item(Request),
+    Empty,
+    Closed,
+}
+
+/// Shared dispatch queue for the multi-worker CIM-sim backend:
+/// `std::sync::mpsc` receivers are neither cloneable nor `Sync`, so W
+/// workers instead pull from this mutex-and-condvar queue. Dispatch is
+/// work-stealing by construction — an idle worker blocks in
+/// [`RequestQueue::recv`], a busy one polls [`RequestQueue::try_pop`]
+/// between steps — so load balances onto whichever chip has free slots
+/// without a central scheduler. Semantics mirror the mpsc channel the
+/// single-worker path used: pushes fail once closed, and queued
+/// requests are still drained after close (graceful shutdown).
+struct RequestQueue {
+    state: Mutex<(VecDeque<Request>, bool)>,
+    ready: Condvar,
+}
+
+impl RequestQueue {
+    fn new() -> Self {
+        Self {
+            state: Mutex::new((VecDeque::new(), false)),
+            ready: Condvar::new(),
+        }
+    }
+
+    /// Enqueue a request; `Err` (with the request back) once closed.
+    fn push(&self, r: Request) -> std::result::Result<(), Request> {
+        let mut g = self.state.lock().unwrap();
+        if g.1 {
+            return Err(r);
+        }
+        g.0.push_back(r);
+        drop(g);
+        self.ready.notify_one();
+        Ok(())
+    }
+
+    /// Blocking pop: `None` only when the queue is closed AND drained.
+    fn recv(&self) -> Option<Request> {
+        let mut g = self.state.lock().unwrap();
+        loop {
+            if let Some(r) = g.0.pop_front() {
+                return Some(r);
+            }
+            if g.1 {
+                return None;
+            }
+            g = self.ready.wait(g).unwrap();
+        }
+    }
+
+    /// Non-blocking pop for a busy worker between steps.
+    fn try_pop(&self) -> TryPop {
+        let mut g = self.state.lock().unwrap();
+        match g.0.pop_front() {
+            Some(r) => TryPop::Item(r),
+            None if g.1 => TryPop::Closed,
+            None => TryPop::Empty,
+        }
+    }
+
+    /// Close the queue: pushes fail from here on, blocked workers wake,
+    /// already-queued requests still drain.
+    fn close(&self) {
+        self.state.lock().unwrap().1 = true;
+        self.ready.notify_all();
+    }
 }
 
 /// CIM-sim backend configuration.
@@ -98,6 +195,22 @@ pub struct CimSimConfig {
     /// sharding only changes which chip replays which layer
     /// (`tests/prop_shard.rs`).
     pub shards: usize,
+    /// Worker pool width (DESIGN.md §6g): this many independent
+    /// continuous-batching workers — each its own programmed chip with
+    /// identical weights from the shared seed — pull from one shared
+    /// request queue, so any worker serves any request bit-identically.
+    /// `0`/`1` (default) is the single-worker path.
+    pub workers: usize,
+    /// Shared-prefix KV cache entries *per worker* (DESIGN.md §6g):
+    /// completed windows donate KV + per-position logits, and an
+    /// admission opening with a cached prefix splices that state in
+    /// instead of prefilling it (bit-identical by construction,
+    /// `tests/prop_prefix_cache.rs`). `0` (default) disables reuse —
+    /// every request pays cold prefill, byte-identical to the PR-4
+    /// path. Note `Metrics::sim_tokens` counts positions *replayed on
+    /// the chip*, so cache hits reduce it by exactly
+    /// `prefix_positions_saved`.
+    pub prefix_cache: usize,
 }
 
 impl Default for CimSimConfig {
@@ -111,6 +224,8 @@ impl Default for CimSimConfig {
             speculate_k: 0,
             draft_layers: 0,
             shards: 1,
+            workers: 1,
+            prefix_cache: 0,
         }
     }
 }
@@ -156,10 +271,60 @@ impl ServerConfig {
     }
 }
 
+/// Where submitted requests go: the PJRT worker's mpsc channel, or the
+/// CIM-sim worker pool's shared queue.
+enum Submitter {
+    Channel(Sender<Request>),
+    Queue(Arc<RequestQueue>),
+}
+
+impl Submitter {
+    fn send(&self, r: Request) -> Result<()> {
+        match self {
+            Submitter::Channel(tx) => {
+                tx.send(r).map_err(|_| anyhow!("server worker gone"))
+            }
+            Submitter::Queue(q) => {
+                q.push(r).map_err(|_| anyhow!("server worker gone"))
+            }
+        }
+    }
+
+    /// Stop accepting requests; workers drain what is queued and exit.
+    fn close(&self) {
+        match self {
+            // dropping the last Sender clone closes an mpsc channel;
+            // the owning InferenceServer drops self right after close()
+            Submitter::Channel(_) => {}
+            Submitter::Queue(q) => q.close(),
+        }
+    }
+}
+
+/// Handle to one in-flight request submitted with
+/// [`InferenceServer::submit`]. Await the logits with
+/// [`PendingResponse::wait`]; **dropping the handle cancels the
+/// request** — the worker notices the dead liveness token at its next
+/// step boundary, releases the slot early and counts a cancellation
+/// (`Metrics::cancellations`) instead of decoding for a client that
+/// will never read the reply.
+pub struct PendingResponse {
+    rx: Receiver<Result<Vec<f32>>>,
+    /// The strong end of the request's liveness token.
+    _alive: Arc<()>,
+}
+
+impl PendingResponse {
+    /// Block until the per-position logits (window len × vocab) arrive.
+    pub fn wait(self) -> Result<Vec<f32>> {
+        self.rx.recv().map_err(|_| anyhow!("server dropped request"))?
+    }
+}
+
 /// Handle to the running server.
 pub struct InferenceServer {
-    tx: Option<Sender<Request>>,
-    worker: Option<JoinHandle<()>>,
+    tx: Option<Submitter>,
+    workers: Vec<JoinHandle<()>>,
     pub metrics: Arc<Metrics>,
     pub seq: usize,
     pub vocab: usize,
@@ -333,14 +498,23 @@ fn run_pjrt_worker(
 /// inter-token latency split is computed from.
 struct InFlight {
     tokens: Vec<i32>,
+    /// Positions scored so far — starts at `spliced` when a prefix-
+    /// cache hit seeded the slot (those positions' logits are already
+    /// in `out`).
     fed: usize,
+    /// Positions answered from the shared-prefix cache at admission
+    /// (0 on a miss or with the cache disabled).
+    spliced: usize,
     out: Vec<f32>,
     resp: Sender<Result<Vec<f32>>>,
+    /// Client-liveness token (see [`Request::alive`]).
+    alive: Weak<()>,
     t0: Instant,
     /// Wall time (µs since submission) at which the request's first
     /// logits existed — set after its first stepped chunk.
     ttft_us: Option<f64>,
-    /// Positions covered by that first chunk (the TTFT phase).
+    /// Positions covered by that first reply unit: the spliced prefix
+    /// (if any) plus the first stepped chunk — the TTFT phase.
     first_chunk: usize,
 }
 
@@ -432,11 +606,25 @@ fn speculative_want(
 /// execution plan, chip pass scratch and the shared chunk workspace
 /// are reused across every request this worker ever serves — the
 /// steady-state serving path performs no per-pass allocation.
+///
+/// Multi-worker serving (DESIGN.md §6g) runs W copies of this loop,
+/// each with its own chip, pulling from the shared `queue` — `worker`
+/// is this copy's index for the per-worker occupancy metric. Each
+/// worker keeps its own [`PrefixStore`]: an admission whose window
+/// opens with a cached prefix splices KV + logits from the store
+/// (`BatchDecodeEngine::splice_kv`) and starts stepping at the first
+/// uncovered position — bit-identical to cold prefill because K/V at a
+/// position depend only on the tokens up to it. Requests whose client
+/// vanished (the `alive` token no longer upgrades) are dropped at
+/// admission or released at the next step boundary, counted as
+/// cancellations; chip work already replayed for them stays on the
+/// bill (the same rejected-work rule speculation uses).
 fn run_cimsim_worker(
+    worker: usize,
     cfg: CimSimConfig,
     policy: BatchPolicy,
     metrics: Arc<Metrics>,
-    rx: Receiver<Request>,
+    queue: Arc<RequestQueue>,
     ready_tx: Sender<Result<(usize, usize)>>,
 ) {
     let CimSimConfig {
@@ -448,6 +636,8 @@ fn run_cimsim_worker(
         speculate_k,
         draft_layers,
         shards,
+        workers: _,
+        prefix_cache,
     } = cfg;
     let (seq, vocab) = (model_cfg.seq, model_cfg.vocab);
     let slots = policy.max_batch.max(1);
@@ -504,35 +694,67 @@ fn run_cimsim_worker(
         }
     };
     let capacity = engine.capacity();
+    let mut prefix_store = (prefix_cache > 0).then(|| PrefixStore::new(prefix_cache, vocab));
     let mut active: Vec<Option<InFlight>> = (0..capacity).map(|_| None).collect();
-    let mut open = true; // request channel still connected
+    let mut open = true; // request queue still accepting
     // per-step (slot, chunk length) plan + chunk wants, reused buffers
     let mut step_plan: Vec<(usize, usize)> = Vec::with_capacity(capacity);
     let mut wants: Vec<usize> = Vec::with_capacity(capacity);
     loop {
+        // --- cancel: release slots whose client vanished ---
+        // The liveness check runs every step boundary, so an abandoned
+        // window stops consuming lanes within one replay of the drop.
+        // Positions already replayed stay on the bill (record_sim_tokens
+        // from the trace) — the chip really did the work.
+        for slot in 0..capacity {
+            let dead = matches!(&active[slot], Some(a) if a.alive.upgrade().is_none());
+            if dead {
+                let a = active[slot].take().expect("checked above");
+                let costs = engine.take_trace(slot);
+                if !costs.is_empty() {
+                    let total = sum_costs(&costs);
+                    metrics.record_sim_tokens(
+                        costs.len(),
+                        total.latency.critical_ns(),
+                        total.energy.total_nj(),
+                    );
+                }
+                engine.release(slot);
+                if let Some(d) = draft.as_mut() {
+                    d.release(slot);
+                }
+                metrics.record_cancellation();
+                drop(a); // the reply channel dies unanswered — by request
+            }
+        }
         // --- admit: fill free slots between token steps ---
         while open && engine.occupancy() < capacity {
             let req = if engine.occupancy() == 0 {
                 // idle chip: block until work arrives (or shutdown)
-                match rx.recv() {
-                    Ok(r) => Some(r),
-                    Err(_) => {
+                match queue.recv() {
+                    Some(r) => Some(r),
+                    None => {
                         open = false;
                         None
                     }
                 }
             } else {
                 // busy chip: opportunistic, never stalls the batch
-                match rx.try_recv() {
-                    Ok(r) => Some(r),
-                    Err(TryRecvError::Empty) => break,
-                    Err(TryRecvError::Disconnected) => {
+                match queue.try_pop() {
+                    TryPop::Item(r) => Some(r),
+                    TryPop::Empty => break,
+                    TryPop::Closed => {
                         open = false;
                         None
                     }
                 }
             };
             let Some(req) = req else { break };
+            if req.alive.upgrade().is_none() {
+                // client gave up while queued: never occupy a slot
+                metrics.record_cancellation();
+                continue;
+            }
             if let Err(e) = validate_window(&req.tokens, seq, vocab) {
                 metrics.record_error();
                 let _ = req.resp.send(Err(e));
@@ -546,11 +768,26 @@ fn run_cimsim_worker(
                 debug_assert_eq!(ds, slot, "draft slot diverged from target slot");
             }
             let window = req.tokens.len();
+            // shared-prefix splice: cached K/V skip prefill, cached
+            // logits answer the covered positions (bit-identical to
+            // cold prefill — tests/prop_prefix_cache.rs)
+            let mut out = Vec::with_capacity(window * vocab);
+            let mut spliced = 0usize;
+            if let Some(store) = prefix_store.as_mut() {
+                if let Some(hit) = store.lookup(&req.tokens) {
+                    engine.splice_kv(slot, &hit.kv, hit.positions);
+                    out.extend_from_slice(&hit.logits);
+                    spliced = hit.positions;
+                }
+                metrics.record_prefix_lookup(spliced);
+            }
             active[slot] = Some(InFlight {
                 tokens: req.tokens,
-                fed: 0,
-                out: Vec::with_capacity(window * vocab),
+                fed: spliced,
+                spliced,
+                out,
                 resp: req.resp,
+                alive: req.alive,
                 t0: req.t0, // submission time, so queue wait is counted
                 ttft_us: None,
                 first_chunk: 0,
@@ -602,7 +839,7 @@ fn run_cimsim_worker(
                 .collect();
             engine.step_chunks(&groups);
         }
-        metrics.record_occupancy(step_plan.len(), capacity);
+        metrics.record_worker_occupancy(worker, step_plan.len(), capacity);
         // sharded engine: drain the step's pipeline window into the
         // shared metrics (no-op on the mono path — zero steps recorded)
         let ps = engine.take_pipeline_stats();
@@ -624,23 +861,28 @@ fn run_cimsim_worker(
                 a.out.extend_from_slice(engine.lane_logits(lane + i));
             }
             lane += c;
-            if a.fed == 0 {
-                // first logits of this request now exist: TTFT
+            if a.ttft_us.is_none() {
+                // first logits of this request now exist: TTFT. A
+                // spliced prefix is answered in the same reply unit as
+                // the first stepped chunk, so it counts toward the
+                // TTFT phase, not the inter-token cadence.
                 a.ttft_us = Some(a.t0.elapsed().as_micros() as f64);
-                a.first_chunk = c;
+                a.first_chunk = a.spliced + c;
             }
             // prefill counters mean *prompt-ingestion* chunks; verify
             // chunks sized by the draft (every post-first chunk when
             // speculation is on) are counted by record_speculation
-            if c > 1 && (draft.is_none() || a.fed == 0) {
+            if c > 1 && (draft.is_none() || a.fed == a.spliced) {
                 metrics.record_prefill_chunk(c);
             }
             a.fed += c;
             if a.fed == a.tokens.len() {
                 let costs = engine.take_trace(slot);
                 let total = sum_costs(&costs);
+                // sim_tokens counts positions replayed on the chip —
+                // a spliced prefix was billed on its donor's pass
                 metrics.record_sim_tokens(
-                    a.tokens.len(),
+                    a.tokens.len() - a.spliced,
                     total.latency.critical_ns(),
                     total.energy.total_nj(),
                 );
@@ -653,6 +895,11 @@ fn run_cimsim_worker(
                     None
                 };
                 metrics.record_request_timing(ttft, inter);
+                // donate the completed window to the prefix store
+                // before releasing wipes the slot's KV
+                if let Some(store) = prefix_store.as_mut() {
+                    store.insert(&a.tokens, engine.kv(slot), &a.out);
+                }
                 engine.release(slot);
                 if let Some(d) = draft.as_mut() {
                     d.release(slot);
@@ -678,61 +925,121 @@ fn run_cimsim_worker(
 }
 
 impl InferenceServer {
-    /// Start the worker thread (loads + compiles the backend eagerly).
+    /// Start the worker pool (loads + compiles the backend eagerly).
     ///
     /// The PJRT client is not `Send`, so the backend is constructed
     /// *inside* the worker thread; readiness (or the startup error) is
-    /// reported back through a one-shot channel.
+    /// reported back through a one-shot channel. The CIM-sim backend
+    /// spawns `workers` copies of the continuous-batching loop — each
+    /// its own programmed chip — sharing one request queue; startup
+    /// fails (and joins whatever did start) if any worker fails to
+    /// program its chip.
     pub fn start(cfg: ServerConfig) -> Result<InferenceServer> {
         let metrics = Arc::new(Metrics::new());
-        let metrics_w = metrics.clone();
-        let (tx, rx) = channel::<Request>();
         let (ready_tx, ready_rx) = channel::<Result<(usize, usize)>>();
         let policy = cfg.policy.clone();
-        let worker = match cfg.backend {
+        let (tx, handles) = match cfg.backend {
             Backend::Pjrt => {
                 let dir = cfg.artifacts_dir.clone();
-                std::thread::spawn(move || {
+                let metrics_w = metrics.clone();
+                let (tx, rx) = channel::<Request>();
+                let h = std::thread::spawn(move || {
                     run_pjrt_worker(dir, policy, metrics_w, rx, ready_tx)
-                })
+                });
+                (Submitter::Channel(tx), vec![h])
             }
-            Backend::CimSim(sim_cfg) => std::thread::spawn(move || {
-                run_cimsim_worker(sim_cfg, policy, metrics_w, rx, ready_tx)
-            }),
+            Backend::CimSim(sim_cfg) => {
+                let queue = Arc::new(RequestQueue::new());
+                let w = sim_cfg.workers.max(1);
+                let handles = (0..w)
+                    .map(|id| {
+                        let cfg = sim_cfg.clone();
+                        let policy = policy.clone();
+                        let metrics = metrics.clone();
+                        let queue = queue.clone();
+                        let ready_tx = ready_tx.clone();
+                        std::thread::spawn(move || {
+                            run_cimsim_worker(id, cfg, policy, metrics, queue, ready_tx)
+                        })
+                    })
+                    .collect();
+                (Submitter::Queue(queue), handles)
+            }
         };
+        drop(ready_tx); // workers hold their clones
 
-        let (seq, vocab) = ready_rx
-            .recv()
-            .map_err(|_| anyhow!("server worker died during startup"))??;
+        // collect one readiness report per spawned worker; on any
+        // failure, close the queue and join the survivors before
+        // surfacing the first error
+        let mut shape: Option<(usize, usize)> = None;
+        let mut first_err: Option<anyhow::Error> = None;
+        for _ in 0..handles.len() {
+            match ready_rx.recv() {
+                Ok(Ok(s)) => shape = Some(s),
+                Ok(Err(e)) => first_err = first_err.or(Some(e)),
+                Err(_) => {
+                    first_err = first_err
+                        .or_else(|| Some(anyhow!("server worker died during startup")))
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            tx.close();
+            drop(tx);
+            for h in handles {
+                let _ = h.join();
+            }
+            return Err(e);
+        }
+        let (seq, vocab) = shape.expect("every worker reported ready");
         Ok(InferenceServer {
             tx: Some(tx),
-            worker: Some(worker),
+            workers: handles,
             metrics,
             seq,
             vocab,
         })
     }
 
-    /// Blocking inference: returns per-position logits (window len *
-    /// vocab; the CIM-sim backend accepts ragged windows of 1..=seq).
-    pub fn infer(&self, tokens: Vec<i32>) -> Result<Vec<f32>> {
+    /// Submit a request without blocking on the reply: returns a
+    /// [`PendingResponse`] to `wait` on. Dropping the handle cancels
+    /// the request (the worker releases its slot at the next step
+    /// boundary and counts a cancellation).
+    pub fn submit(&self, tokens: Vec<i32>) -> Result<PendingResponse> {
         let (rtx, rrx) = channel();
+        let alive = Arc::new(());
         self.tx
             .as_ref()
             .ok_or_else(|| anyhow!("server stopped"))?
             .send(Request {
                 tokens,
                 resp: rtx,
+                alive: Arc::downgrade(&alive),
                 t0: Instant::now(),
-            })
-            .map_err(|_| anyhow!("server worker gone"))?;
-        rrx.recv().map_err(|_| anyhow!("server dropped request"))?
+            })?;
+        Ok(PendingResponse {
+            rx: rrx,
+            _alive: alive,
+        })
     }
 
-    /// Graceful shutdown: close the queue and join the worker.
+    /// Blocking inference: returns per-position logits (window len *
+    /// vocab; the CIM-sim backend accepts ragged windows of 1..=seq).
+    pub fn infer(&self, tokens: Vec<i32>) -> Result<Vec<f32>> {
+        self.submit(tokens)?.wait()
+    }
+
+    /// Graceful shutdown: close the queue and join every worker
+    /// (queued requests still drain).
     pub fn shutdown(mut self) {
-        self.tx.take(); // close channel -> worker drains and exits
-        if let Some(w) = self.worker.take() {
+        self.stop();
+    }
+
+    fn stop(&mut self) {
+        if let Some(tx) = self.tx.take() {
+            tx.close(); // Channel closes on the drop below
+        }
+        for w in self.workers.drain(..) {
             let _ = w.join();
         }
     }
@@ -740,10 +1047,7 @@ impl InferenceServer {
 
 impl Drop for InferenceServer {
     fn drop(&mut self) {
-        self.tx.take();
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
-        }
+        self.stop();
     }
 }
 
@@ -799,13 +1103,17 @@ mod tests {
         let metrics = Metrics::new();
         let mut reqs = Vec::new();
         let mut rxs = Vec::new();
+        let mut tokens_alive = Vec::new();
         for _ in 0..3 {
             let (rtx, rrx) = channel();
+            let alive = Arc::new(());
             reqs.push(Request {
                 tokens: vec![0, 1, 2],
                 resp: rtx,
+                alive: Arc::downgrade(&alive),
                 t0: Instant::now(),
             });
+            tokens_alive.push(alive);
             rxs.push(rrx);
         }
         let err = select_artifact(&[], reqs.len()).unwrap_err();
@@ -820,5 +1128,100 @@ mod tests {
             assert!(msg.contains("no compiled batch buckets"), "cause lost: {msg}");
         }
         assert_eq!(metrics.snapshot().errors, 1);
+    }
+
+    #[test]
+    fn request_queue_drains_after_close_and_rejects_new_pushes() {
+        let q = RequestQueue::new();
+        let (rtx, _rrx) = channel();
+        let alive = Arc::new(());
+        let req = Request {
+            tokens: vec![1],
+            resp: rtx,
+            alive: Arc::downgrade(&alive),
+            t0: Instant::now(),
+        };
+        q.push(req).expect("open queue accepts");
+        q.close();
+        // queued work still drains after close (graceful shutdown)…
+        assert!(matches!(q.try_pop(), TryPop::Item(_)));
+        // …then the queue reports closed, and new pushes bounce
+        assert!(matches!(q.try_pop(), TryPop::Closed));
+        let (rtx, _rrx) = channel();
+        let rejected = Request {
+            tokens: vec![2],
+            resp: rtx,
+            alive: Arc::downgrade(&alive),
+            t0: Instant::now(),
+        };
+        assert!(q.push(rejected).is_err());
+        assert!(q.recv().is_none(), "blocking recv wakes on closed+empty");
+    }
+
+    /// Regression (ISSUE 8 satellite): a request whose client vanished
+    /// must be counted as a cancellation and never hold chip work —
+    /// dropped-at-queue requests are skipped at admission, and the live
+    /// neighbour's reply is unaffected. Drives `run_cimsim_worker`
+    /// directly with a pre-loaded, closed queue.
+    #[test]
+    fn dead_clients_are_cancelled_not_served() {
+        let queue = Arc::new(RequestQueue::new());
+        let metrics = Arc::new(Metrics::new());
+        let (ready_tx, ready_rx) = channel();
+
+        // dead request: the strong end of the liveness token is dropped
+        // before the worker ever runs (client gave up while queued)
+        let (dead_tx, dead_rx) = channel();
+        let dead_alive = Arc::new(());
+        queue
+            .push(Request {
+                tokens: vec![1, 2, 3, 4],
+                resp: dead_tx,
+                alive: Arc::downgrade(&dead_alive),
+                t0: Instant::now(),
+            })
+            .unwrap();
+        drop(dead_alive);
+        drop(dead_rx);
+
+        // live request: token held for the duration
+        let (live_tx, live_rx) = channel();
+        let live_alive = Arc::new(());
+        let live_window = vec![5i32, 6, 7];
+        queue
+            .push(Request {
+                tokens: live_window.clone(),
+                resp: live_tx,
+                alive: Arc::downgrade(&live_alive),
+                t0: Instant::now(),
+            })
+            .unwrap();
+        queue.close(); // worker drains both and exits
+
+        let cfg = CimSimConfig::default();
+        run_cimsim_worker(
+            0,
+            cfg,
+            BatchPolicy::default(),
+            metrics.clone(),
+            queue,
+            ready_tx,
+        );
+        assert!(ready_rx.recv().unwrap().is_ok());
+
+        let logits = live_rx
+            .recv()
+            .expect("live client must get a reply")
+            .expect("live request succeeds");
+        assert_eq!(logits.len(), live_window.len() * ModelConfig::tiny().vocab);
+        let snap = metrics.snapshot();
+        assert_eq!(snap.cancellations, 1, "dead client counted once");
+        assert_eq!(
+            snap.sim_tokens,
+            live_window.len() as u64,
+            "no chip work replayed for the dead request"
+        );
+        assert_eq!(snap.requests, 1, "only the live request completed");
+        drop(live_alive);
     }
 }

@@ -12,6 +12,11 @@
 //!   latency/energy, cross-checked against the factored reference model.
 //! * `serve [--requests N] [--backend pjrt|cim-sim]` — batching-server
 //!   demo (PJRT artifacts, or the CIM-sim backend with no artifacts).
+//! * `serve-load [--workers W] [--clients N] [--requests R]` — serving
+//!   load generator: concurrent ragged clients sharing a system-prompt
+//!   prefix against the multi-worker CIM-sim server; SLO-grade metrics
+//!   (TTFT / inter-token p99, prefix-cache hit rate, per-worker
+//!   occupancy) land in `BENCH_serve.json`.
 //! * `e2e` — pipeline + runtime round-trip summary.
 
 use monarch_cim::cim::CimParams;
@@ -46,6 +51,15 @@ fn usage() -> ! {
            serve    [--requests 64] [--artifacts DIR] [--backend pjrt|cim-sim]\n\
                     [--strategy dense] [--prefill-chunk C]\n\
                     [--speculate-k K] [--draft-layers D] [--shards N]\n\
+                    [--workers W]  (W CIM-sim worker chips, shared queue)\n\
+                    [--prefix-cache E]  (E shared-prefix KV entries per\n\
+                    worker; 0 = off)\n\
+           serve-load [--workers 2] [--clients 32] [--requests 256]\n\
+                    [--prefix P] [--prefix-cache 8] [--strategy dense]\n\
+                    [--prefill-chunk C] [--shards N] [--seed 2025]\n\
+                    [--out BENCH_serve.json] [--require-hits]\n\
+                    (ragged clients sharing a P-token system prompt;\n\
+                    TTFT/inter-token p99 + prefix hit rate to JSON)\n\
            dse      [--model ...] [--adcs 1,4,8,16,32] [--budget N]\n\
            e2e      [--artifacts DIR]"
     );
@@ -62,6 +76,7 @@ fn main() {
         "simulate" => cmd_simulate(&args),
         "decode" => cmd_decode(&args),
         "serve" => cmd_serve(&args),
+        "serve-load" => cmd_serve_load(&args),
         "dse" => cmd_dse(&args),
         "e2e" => cmd_e2e(&args),
         _ => usage(),
@@ -589,6 +604,8 @@ fn cmd_serve(args: &Args) {
                 sim.speculate_k = args.usize_or("speculate-k", 0);
                 sim.draft_layers = args.usize_or("draft-layers", 0);
                 sim.shards = args.usize_or("shards", 1);
+                sim.workers = args.usize_or("workers", 1);
+                sim.prefix_cache = args.usize_or("prefix-cache", 0);
             }
         }
         other => {
@@ -668,8 +685,165 @@ fn cmd_serve(args: &Args) {
                     .join("/")
             );
         }
+        if s.workers > 1 {
+            println!(
+                "workers: {} chips, per-worker occupancy {}",
+                s.workers,
+                s.worker_occupancy
+                    .iter()
+                    .map(|o| format!("{o:.2}"))
+                    .collect::<Vec<_>>()
+                    .join("/")
+            );
+        }
+        if s.prefix_lookups > 0 {
+            println!(
+                "prefix cache: {}/{} hits ({:.2}), {} prompt positions skipped prefill",
+                s.prefix_hits, s.prefix_lookups, s.prefix_hit_rate, s.prefix_positions_saved
+            );
+        }
+        if s.cancellations > 0 {
+            println!("cancellations: {} abandoned requests released early", s.cancellations);
+        }
     }
     server.shutdown();
+}
+
+/// Serving load generator (DESIGN.md §6g): `--clients` concurrent
+/// threads fire `--requests` total ragged windows at a `--workers`-chip
+/// CIM-sim server. Every window opens with the same `--prefix`-token
+/// system prompt (deterministic from `--seed`) followed by a ragged
+/// random tail, so a warm shared-prefix cache should answer the prompt
+/// positions without replaying them. SLO-grade results — TTFT and
+/// inter-token p50/p99, prefix hit rate, positions saved, per-worker
+/// occupancy, cancellations — print to stdout and land as JSON in
+/// `--out` (default `BENCH_serve.json`). `--require-hits` exits
+/// non-zero when the prefix cache never hit (the CI smoke gate).
+fn cmd_serve_load(args: &Args) {
+    use monarch_cim::util::json::{arr, num, obj, s as js};
+    let workers = args.usize_or("workers", 2);
+    let clients = args.usize_or("clients", 32);
+    let total = args.usize_or("requests", 256);
+    let seed = args.usize_or("seed", 2025) as u64;
+    let name = args.str_or("strategy", "dense");
+    let strategy = Strategy::by_name(&name).unwrap_or_else(|| {
+        eprintln!("unknown strategy '{name}' (linear|sparse|dense)");
+        std::process::exit(2);
+    });
+    let mut cfg = ServerConfig::cim_sim(strategy);
+    if let monarch_cim::coordinator::Backend::CimSim(sim) = &mut cfg.backend {
+        sim.workers = workers;
+        sim.prefix_cache = args.usize_or("prefix-cache", 8);
+        sim.prefill_chunk = args.usize_or("prefill-chunk", 0);
+        sim.speculate_k = args.usize_or("speculate-k", 0);
+        sim.draft_layers = args.usize_or("draft-layers", 0);
+        sim.shards = args.usize_or("shards", 1);
+        sim.seed = seed;
+    }
+    println!("starting {workers}-worker cim-sim server ({name} mapping)...");
+    let server = match InferenceServer::start(cfg) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("server failed to start: {e:#}");
+            std::process::exit(1);
+        }
+    };
+    let seq = server.seq;
+    let vocab = server.vocab as u32;
+    // shared system prompt: deterministic from the seed, so every
+    // client's window opens identically (the prefix-cache workload)
+    let prefix_len = args.usize_or("prefix", seq / 2).min(seq - 1);
+    let mut prng = Pcg32::new(seed);
+    let prefix: Vec<i32> = (0..prefix_len).map(|_| prng.below(vocab) as i32).collect();
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|scope| {
+        for c in 0..clients {
+            let srv = &server;
+            let prefix = &prefix;
+            // client c serves request indices c, c+clients, c+2*clients, …
+            scope.spawn(move || {
+                let mut rng = Pcg32::new(seed ^ (0x9e37 + c as u64));
+                let mut i = c;
+                while i < total {
+                    let tail = 1 + rng.below((seq - prefix.len()) as u32) as usize;
+                    let mut toks = prefix.clone();
+                    toks.extend((0..tail).map(|_| rng.below(vocab) as i32));
+                    let r = srv.infer(toks);
+                    assert!(r.is_ok(), "request {i} failed: {:?}", r.err());
+                    i += clients;
+                }
+            });
+        }
+    });
+    let elapsed = t0.elapsed();
+    let snap = server.metrics.snapshot();
+    println!(
+        "served {} requests from {} clients in {:.2?}: {:.1} req/s, errors {}",
+        snap.requests, clients, elapsed, snap.throughput_rps, snap.errors
+    );
+    println!(
+        "request phases: TTFT p50 {:.1} µs / p99 {:.1} µs, inter-token p50 {:.1} µs / p99 {:.1} µs",
+        snap.ttft_p50_us, snap.ttft_p99_us, snap.inter_token_p50_us, snap.inter_token_p99_us
+    );
+    println!(
+        "prefix cache: {}/{} hits ({:.2}), {} of {} chip positions skipped prefill",
+        snap.prefix_hits,
+        snap.prefix_lookups,
+        snap.prefix_hit_rate,
+        snap.prefix_positions_saved,
+        snap.prefix_positions_saved + snap.sim_tokens
+    );
+    println!(
+        "workers: {} chips, per-worker occupancy {} (aggregate mean {:.2} / peak {} of {} slots)",
+        snap.workers,
+        snap.worker_occupancy
+            .iter()
+            .map(|o| format!("{o:.2}"))
+            .collect::<Vec<_>>()
+            .join("/"),
+        snap.occupancy_mean,
+        snap.occupancy_peak,
+        snap.slot_capacity
+    );
+    if snap.cancellations > 0 {
+        println!("cancellations: {}", snap.cancellations);
+    }
+    let out = args.str_or("out", "BENCH_serve.json");
+    let json = obj(vec![
+        ("bench", js("serve_load")),
+        ("strategy", js(&name)),
+        ("workers", num(snap.workers as f64)),
+        ("clients", num(clients as f64)),
+        ("requests", num(snap.requests as f64)),
+        ("errors", num(snap.errors as f64)),
+        ("cancellations", num(snap.cancellations as f64)),
+        ("elapsed_s", num(elapsed.as_secs_f64())),
+        ("throughput_rps", num(snap.throughput_rps)),
+        ("ttft_p50_us", num(snap.ttft_p50_us)),
+        ("ttft_p99_us", num(snap.ttft_p99_us)),
+        ("inter_token_p50_us", num(snap.inter_token_p50_us)),
+        ("inter_token_p99_us", num(snap.inter_token_p99_us)),
+        ("prefix_lookups", num(snap.prefix_lookups as f64)),
+        ("prefix_hits", num(snap.prefix_hits as f64)),
+        ("prefix_hit_rate", num(snap.prefix_hit_rate)),
+        ("prefix_positions_saved", num(snap.prefix_positions_saved as f64)),
+        ("sim_tokens", num(snap.sim_tokens as f64)),
+        ("sim_tokens_per_sec", num(snap.sim_tokens_per_sec)),
+        (
+            "worker_occupancy",
+            arr(snap.worker_occupancy.iter().map(|&o| num(o))),
+        ),
+    ]);
+    if let Err(e) = std::fs::write(&out, format!("{json}\n")) {
+        eprintln!("failed to write {out}: {e}");
+        std::process::exit(1);
+    }
+    println!("wrote {out}");
+    server.shutdown();
+    if args.has("require-hits") && snap.prefix_hits == 0 {
+        eprintln!("FAIL: prefix cache never hit under a shared-prefix workload");
+        std::process::exit(1);
+    }
 }
 
 fn cmd_dse(args: &Args) {

@@ -817,6 +817,51 @@ impl BatchDecodeEngine {
         self.slots[slot].kv.truncate(len);
     }
 
+    /// Splice the first `len` cached positions of `src` into a freshly
+    /// admitted slot — the shared-prefix KV reuse path (DESIGN.md §6g).
+    /// The slot then continues from position `len` exactly as if it had
+    /// prefilled those tokens itself: a position's K/V depend only on
+    /// the tokens up to it, so under an identical leading window the
+    /// spliced state is bitwise the state cold prefill would have built
+    /// (`tests/prop_prefix_cache.rs`). Splicing is admission-time only:
+    /// the slot must be active and still empty, the donor must span the
+    /// same layers, and the spliced length must fit the context window.
+    /// The slot's cost trace is untouched — cached positions ran (and
+    /// were billed) on the donor's pass, not this one.
+    pub fn splice_kv(&mut self, slot: usize, src: &KvCache, len: usize) {
+        let s = &mut self.slots[slot];
+        assert!(s.active, "KV splice into an unadmitted slot {slot}");
+        assert!(
+            s.kv.is_empty(),
+            "KV splice needs a fresh slot, {slot} has {} cached positions",
+            s.kv.len()
+        );
+        assert_eq!(
+            src.layers(),
+            s.kv.layers(),
+            "donor cache layer count diverges from the engine's"
+        );
+        assert!(
+            len <= src.len(),
+            "splice_kv({len}) exceeds the donor's {} cached positions",
+            src.len()
+        );
+        assert!(
+            len <= self.model.cfg.seq,
+            "spliced prefix {len} exceeds the context window {}",
+            self.model.cfg.seq
+        );
+        for layer in 0..src.layers() {
+            for pos in 0..len {
+                s.kv.push(
+                    layer,
+                    src.key(layer, pos).to_vec(),
+                    src.value(layer, pos).to_vec(),
+                );
+            }
+        }
+    }
+
     /// LM-head logits of the slot's latest stepped position (borrowed
     /// from the slot's buffer — valid until its next step).
     pub fn logits(&self, slot: usize) -> &[f32] {

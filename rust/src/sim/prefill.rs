@@ -107,6 +107,26 @@ impl KvCache {
         }
     }
 
+    /// Clone the first `len` cached positions into a fresh cache — the
+    /// shared-prefix store's snapshot path (`coordinator::server`,
+    /// DESIGN.md §6g). The copy is bitwise, and a position's K/V depend
+    /// only on the tokens at and before it, so a cloned prefix spliced
+    /// under the same leading tokens is indistinguishable from having
+    /// prefilled those positions in place (`tests/prop_prefix_cache.rs`
+    /// pins this). Like [`KvCache::truncate`], `len` beyond the cached
+    /// length is a caller bug and panics.
+    pub fn clone_prefix(&self, len: usize) -> KvCache {
+        assert!(
+            len <= self.len(),
+            "prefix clone cannot extend the cache: clone_prefix({len}) > cached {}",
+            self.len()
+        );
+        KvCache {
+            keys: self.keys.iter().map(|k| k[..len].to_vec()).collect(),
+            values: self.values.iter().map(|v| v[..len].to_vec()).collect(),
+        }
+    }
+
     /// Drop every cached position (request teardown).
     pub(crate) fn clear(&mut self) {
         for k in self.keys.iter_mut() {

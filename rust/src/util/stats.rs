@@ -10,12 +10,21 @@ pub fn mean(xs: &[f64]) -> f64 {
 }
 
 /// Geometric mean — the paper reports geomean speedups across models.
+/// Defined over the *positive* samples only: a zero/negative cell (a
+/// degenerate sweep point, reachable from bench/report summaries) is
+/// skipped rather than panicking the whole summary, and an input with
+/// no positive sample reports 0.0 — the crate-wide "no samples"
+/// convention. NaN fails the `> 0` test, so it is skipped too.
 pub fn geomean(xs: &[f64]) -> f64 {
-    if xs.is_empty() {
-        return 0.0;
+    let (sum, n) = xs
+        .iter()
+        .filter(|&&x| x > 0.0)
+        .fold((0.0f64, 0usize), |(s, n), &x| (s + x.ln(), n + 1));
+    if n == 0 {
+        0.0
+    } else {
+        (sum / n as f64).exp()
     }
-    assert!(xs.iter().all(|&x| x > 0.0), "geomean needs positive values");
-    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
 }
 
 /// Population standard deviation.
@@ -27,11 +36,17 @@ pub fn stddev(xs: &[f64]) -> f64 {
     (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
 }
 
-/// Percentile by linear interpolation between closest ranks; `p` in [0,100].
+/// Percentile by linear interpolation between closest ranks; `p` in
+/// [0,100]. NaN samples are dropped before ranking (one NaN used to
+/// panic the `partial_cmp(..).unwrap()` sort — and with it every
+/// metrics snapshot at serve time); an empty or all-NaN input reports
+/// 0.0, the same "no samples" convention the snapshot guards use.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
-    assert!(!xs.is_empty());
-    let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut v: Vec<f64> = xs.iter().copied().filter(|x| !x.is_nan()).collect();
+    if v.is_empty() {
+        return 0.0;
+    }
+    v.sort_by(f64::total_cmp);
     let rank = (p / 100.0) * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -42,12 +57,24 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
     }
 }
 
+/// Smallest non-NaN sample; 0.0 for empty (or all-NaN) input — callers
+/// format these into reports, where a bare `inf` placeholder reads as
+/// a real measurement.
 pub fn min(xs: &[f64]) -> f64 {
-    xs.iter().copied().fold(f64::INFINITY, f64::min)
+    xs.iter()
+        .copied()
+        .filter(|x| !x.is_nan())
+        .reduce(f64::min)
+        .unwrap_or(0.0)
 }
 
+/// Largest non-NaN sample; 0.0 for empty (or all-NaN) input.
 pub fn max(xs: &[f64]) -> f64 {
-    xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    xs.iter()
+        .copied()
+        .filter(|x| !x.is_nan())
+        .reduce(f64::max)
+        .unwrap_or(0.0)
 }
 
 /// Simple latency/throughput histogram with fixed log-spaced buckets (ns).
@@ -110,9 +137,16 @@ mod tests {
     }
 
     #[test]
-    #[should_panic]
-    fn geomean_rejects_nonpositive() {
-        geomean(&[1.0, 0.0]);
+    fn geomean_skips_nonpositive_instead_of_panicking() {
+        // regression (ISSUE-8 satellite): a degenerate sweep cell used
+        // to assert-panic the whole summary; now it is simply excluded
+        let g = geomean(&[1.0, 0.0, 4.0, -2.0]);
+        assert!((g - 2.0).abs() < 1e-12, "positive samples lost: {g}");
+        // NaN fails the positivity test, so it is skipped too
+        assert!((geomean(&[f64::NAN, 9.0]) - 9.0).abs() < 1e-12);
+        // nothing positive left -> the "no samples" value, not a panic
+        assert_eq!(geomean(&[0.0, -1.0]), 0.0);
+        assert_eq!(geomean(&[]), 0.0);
     }
 
     #[test]
@@ -121,6 +155,32 @@ mod tests {
         assert_eq!(percentile(&xs, 0.0), 1.0);
         assert_eq!(percentile(&xs, 100.0), 4.0);
         assert_eq!(percentile(&xs, 50.0), 2.5);
+    }
+
+    #[test]
+    fn percentile_survives_nan_samples() {
+        // regression (ISSUE-8 satellite): one NaN used to panic the
+        // `partial_cmp(..).unwrap()` sort — and with it every serving
+        // metrics snapshot. NaN samples are dropped before ranking.
+        let xs = [3.0, f64::NAN, 1.0, 2.0, 4.0];
+        assert_eq!(percentile(&xs, 50.0), 2.5);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        // empty and all-NaN inputs report the "no samples" value
+        assert_eq!(percentile(&[], 99.0), 0.0);
+        assert_eq!(percentile(&[f64::NAN, f64::NAN], 50.0), 0.0);
+    }
+
+    #[test]
+    fn min_max_empty_input_is_zero_not_infinite() {
+        // regression (ISSUE-8 satellite): empty input used to fold to
+        // +/-inf, which callers then formatted as if it were a sample
+        assert_eq!(min(&[]), 0.0);
+        assert_eq!(max(&[]), 0.0);
+        assert_eq!(min(&[3.0, 1.0, 2.0]), 1.0);
+        assert_eq!(max(&[3.0, 1.0, 2.0]), 3.0);
+        // NaN never wins the fold
+        assert_eq!(min(&[f64::NAN, 5.0]), 5.0);
+        assert_eq!(max(&[5.0, f64::NAN]), 5.0);
     }
 
     #[test]

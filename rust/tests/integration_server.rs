@@ -411,6 +411,201 @@ fn strategies_serve_interchangeably() {
 }
 
 #[test]
+fn multi_worker_ragged_clients_match_reference_engine() {
+    // ISSUE-8 serving contract: W independent worker chips pull from
+    // one shared queue, and every concurrent ragged client still gets
+    // logits bit-identical to a single-stream reference engine scoring
+    // its window alone — identical weights from the shared synthesis
+    // seed mean any worker serves any request identically, and the
+    // dispatcher must never mix up replies.
+    let server = InferenceServer::start(ServerConfig {
+        backend: Backend::CimSim(CimSimConfig {
+            workers: 3,
+            ..Default::default()
+        }),
+        policy: BatchPolicy {
+            max_batch: 2,
+            max_delay: std::time::Duration::from_millis(10),
+        },
+        ..Default::default()
+    })
+    .expect("server start");
+    let seq = server.seq;
+    let vocab = server.vocab;
+    let windows: Vec<Vec<i32>> = (0..18u64)
+        .map(|i| {
+            let mut rng = Pcg32::new(5000 + i);
+            let len = 4 + (i as usize * 5) % (seq - 4);
+            (0..len).map(|_| rng.below(vocab as u32) as i32).collect()
+        })
+        .collect();
+    let mut golden = DecodeEngine::reference(DecodeModel::synth(
+        monarch_cim::model::ModelConfig::tiny(),
+        2025,
+    ));
+    let expected: Vec<Vec<f32>> = windows.iter().map(|w| golden.score(w).0).collect();
+    std::thread::scope(|scope| {
+        for (w, want) in windows.iter().zip(&expected) {
+            let srv = &server;
+            scope.spawn(move || {
+                let got = srv.infer(w.clone()).expect("inference");
+                assert_eq!(&got, want, "multi-worker serving changed the logits");
+            });
+        }
+    });
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap.requests, 18);
+    assert_eq!(snap.errors, 0);
+    let tokens: usize = windows.iter().map(|w| w.len()).sum();
+    assert_eq!(snap.sim_tokens, tokens as u64);
+    // load actually spread: with 18 clients blocked on a 2-slot-per-
+    // worker pool, the idle workers must have pulled queued work (a
+    // worker appears here once it stepped at least once)
+    assert!(
+        snap.workers >= 2,
+        "queue never dispatched beyond one worker (reported {})",
+        snap.workers
+    );
+    assert_eq!(snap.worker_occupancy.len(), snap.workers);
+    server.shutdown();
+}
+
+#[test]
+fn shared_prefix_cache_skips_prefill_bit_identically() {
+    // ISSUE-8 tentpole contract on the serving path: windows opening
+    // with a cached prefix splice donor KV instead of prefilling, the
+    // logits stay bitwise those of a cold server, and the metrics
+    // account every saved position. Sequential requests on one worker
+    // make the hit pattern fully deterministic.
+    let server = InferenceServer::start(ServerConfig {
+        backend: Backend::CimSim(CimSimConfig {
+            prefix_cache: 4,
+            ..Default::default()
+        }),
+        policy: BatchPolicy {
+            max_batch: 4,
+            max_delay: std::time::Duration::from_millis(10),
+        },
+        ..Default::default()
+    })
+    .expect("server start");
+    let vocab = server.vocab;
+    let mut rng = Pcg32::new(42);
+    let prefix: Vec<i32> = (0..8).map(|_| rng.below(vocab as u32) as i32).collect();
+    // tails diverge at their first token, so the common prefix is
+    // exactly the shared system prompt
+    let mut win_a = prefix.clone();
+    win_a.extend([5i32, 9, 2, 6]);
+    let mut win_b = prefix.clone();
+    win_b.extend([7i32, 1, 8, 3, 4, 0]);
+    let mut golden = DecodeEngine::reference(DecodeModel::synth(
+        monarch_cim::model::ModelConfig::tiny(),
+        2025,
+    ));
+    // A: cold (store empty), donates its window on completion
+    let got_a = server.infer(win_a.clone()).expect("cold request");
+    assert_eq!(got_a, golden.score(&win_a).0, "cold serving drifted");
+    // B: shares the 8-token prefix -> splice, remainder stepped
+    let got_b = server.infer(win_b.clone()).expect("prefix-hit request");
+    assert_eq!(got_b, golden.score(&win_b).0, "spliced logits drifted");
+    // C: A's exact window -> all but the last position from the cache
+    let got_c = server.infer(win_a.clone()).expect("full-window hit");
+    assert_eq!(got_c, got_a, "cache replay of an identical window drifted");
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap.prefix_lookups, 3);
+    assert_eq!(snap.prefix_hits, 2, "B and C must hit");
+    let saved = (prefix.len() + win_a.len() - 1) as u64;
+    assert_eq!(snap.prefix_positions_saved, saved);
+    assert!(snap.prefix_hit_rate > 0.6 && snap.prefix_hit_rate < 0.7);
+    // sim_tokens counts chip-replayed positions only: cache hits must
+    // have skipped exactly `saved` prefill positions
+    let total = (win_a.len() * 2 + win_b.len()) as u64;
+    assert_eq!(snap.sim_tokens, total - saved);
+    assert_eq!(snap.errors, 0);
+    server.shutdown();
+}
+
+#[test]
+fn prefix_cache_off_is_byte_identical_and_never_looks_up() {
+    // the knob's off position is the PR-4 path: same windows through a
+    // cacheless server must produce byte-identical logits and record
+    // zero lookups
+    let mk = |entries: usize| {
+        InferenceServer::start(ServerConfig {
+            backend: Backend::CimSim(CimSimConfig {
+                prefix_cache: entries,
+                ..Default::default()
+            }),
+            ..Default::default()
+        })
+        .expect("server start")
+    };
+    let cold = mk(0);
+    let cached = mk(8);
+    let mut rng = Pcg32::new(77);
+    let prefix: Vec<i32> = (0..6).map(|_| rng.below(cold.vocab as u32) as i32).collect();
+    for i in 0..4 {
+        let mut w = prefix.clone();
+        w.extend((0..3 + i).map(|_| rng.below(cold.vocab as u32) as i32));
+        let a = cold.infer(w.clone()).expect("cold inference");
+        let b = cached.infer(w).expect("cached inference");
+        assert_eq!(a, b, "request {i}: prefix reuse changed the scores");
+    }
+    let snap = cold.metrics.snapshot();
+    assert_eq!(snap.prefix_lookups, 0, "disabled cache must never look up");
+    assert_eq!(snap.prefix_positions_saved, 0);
+    let snap = cached.metrics.snapshot();
+    assert!(snap.prefix_hits > 0, "shared-prefix workload never hit");
+    assert!(snap.prefix_positions_saved > 0);
+    cold.shutdown();
+    cached.shutdown();
+}
+
+#[test]
+fn dropped_clients_are_cancelled_without_disturbing_live_ones() {
+    // ISSUE-8 satellite: a client that abandons its PendingResponse
+    // must be counted as a cancellation and release its slot early —
+    // and a live neighbour's reply stays bit-identical. prefill_chunk=1
+    // keeps every window many steps long, so no doomed request can
+    // finish before its handle is dropped.
+    let server = InferenceServer::start(ServerConfig {
+        backend: Backend::CimSim(CimSimConfig {
+            prefill_chunk: 1,
+            ..Default::default()
+        }),
+        policy: BatchPolicy {
+            max_batch: 2,
+            max_delay: std::time::Duration::from_millis(10),
+        },
+        ..Default::default()
+    })
+    .expect("server start");
+    let seq = server.seq;
+    let vocab = server.vocab;
+    let mut doomed = Vec::new();
+    for i in 0..5u64 {
+        let mut rng = Pcg32::new(6000 + i);
+        let w: Vec<i32> = (0..seq).map(|_| rng.below(vocab as u32) as i32).collect();
+        doomed.push(server.submit(w).expect("submit"));
+    }
+    drop(doomed); // all five clients vanish before any window completes
+    // a live request through the same pool still serves exactly
+    let mut rng = Pcg32::new(8888);
+    let live: Vec<i32> = (0..12).map(|_| rng.below(vocab as u32) as i32).collect();
+    let got = server.infer(live.clone()).expect("live inference");
+    let mut golden = DecodeEngine::reference(DecodeModel::synth(
+        monarch_cim::model::ModelConfig::tiny(),
+        2025,
+    ));
+    assert_eq!(got, golden.score(&live).0, "cancellations disturbed a live client");
+    let metrics = server.metrics.clone();
+    server.shutdown(); // drains the queue: remaining dead requests are swept
+    let snap = metrics.snapshot();
+    assert_eq!(snap.cancellations, 5, "every dropped client counts once");
+    assert_eq!(snap.errors, 0, "cancellation is not an error");
+}
+
+#[test]
 fn startup_fails_cleanly_without_artifacts() {
     // The PJRT backend must report a startup error (missing artifacts /
     // stubbed runtime), never hang or panic.

@@ -1,0 +1,173 @@
+//! Property tests for shared-prefix KV reuse (`BatchDecodeEngine::
+//! splice_kv` + `KvCache::clone_prefix`, DESIGN.md §6g): over random
+//! model geometries, mapping strategies, prefix lengths and chunk
+//! partitions, a window admitted with a spliced cached prefix is
+//! **bit-identical** to cold prefill — the stepped positions' logits,
+//! the full KV cache, and the cached positions' logits the server
+//! would answer from the store all match a token-by-token reference
+//! bitwise.
+//!
+//! This is the ISSUE-8 acceptance property, and it holds by
+//! construction: a position's K/V depend only on the tokens up to it,
+//! so under an identical leading window the donor's cached state IS
+//! the state cold prefill would build. The splice changes only *who
+//! computed* the prefix positions (the donor's pass, already billed),
+//! never what any position computes.
+
+use monarch_cim::sim::decode::{BatchDecodeEngine, DecodeEngine, DecodeModel};
+use monarch_cim::util::prop::forall;
+
+mod common;
+
+#[test]
+fn prop_spliced_admission_bit_identical_to_cold_prefill() {
+    // Serving shape: one chip, two slots. A donor window is scored in
+    // slot A (its KV + logits play the prefix store's entry); a second
+    // window sharing `p` leading tokens is admitted into slot B with
+    // the donor's first `p` positions spliced in, and steps only its
+    // remainder — in random chunks, while the donor still occupies the
+    // chip. Every observable must match a cold token-by-token engine.
+    forall("spliced admission == cold prefill", 6, |g| {
+        let cfg = common::random_decoder_cfg(g);
+        let params = common::chip_params(g, &[16, 32]);
+        if !common::fits_array(&cfg, &params) {
+            return;
+        }
+        let seed = common::seed(g);
+        let strategy = common::any_strategy(g);
+        let donor_len = g.usize(2, 12);
+        let donor: Vec<i32> = (0..donor_len)
+            .map(|i| ((i * 17 + 3) % cfg.vocab) as i32)
+            .collect();
+        let mut be = BatchDecodeEngine::on_chip(
+            DecodeModel::synth(cfg.clone(), seed),
+            params.clone(),
+            strategy,
+            2,
+        );
+        // --- donor pass: score the donor window, keep its logits ---
+        let d_slot = be.try_admit().unwrap();
+        let mut donor_logits: Vec<f32> = Vec::new();
+        let mut fed = 0usize;
+        while fed < donor_len {
+            let c = g.usize(1, (donor_len - fed).min(6));
+            be.step_chunks(&[(d_slot, &donor[fed..fed + c])]);
+            for i in 0..c {
+                donor_logits.extend_from_slice(be.lane_logits(i));
+            }
+            fed += c;
+        }
+        // --- target window: shares p leading tokens with the donor ---
+        let target_len = g.usize(2, 12);
+        let p = g.usize(1, donor_len.min(target_len - 1));
+        let mut target: Vec<i32> = donor[..p].to_vec();
+        target.extend((0..target_len - p).map(|i| ((i * 29 + 11) % cfg.vocab) as i32));
+        // the store's hit: a cloned prefix of the donor's cache (what
+        // PrefixStore::lookup hands the worker)
+        let hit_kv = be.kv(d_slot).clone_prefix(p);
+        let t_slot = be.try_admit().unwrap();
+        be.splice_kv(t_slot, &hit_kv, p);
+        assert_eq!(be.kv_len(t_slot), p, "splice seeds exactly p positions");
+        // step the remainder in random chunks, collecting its logits
+        let mut stepped_logits: Vec<f32> = Vec::new();
+        let mut fed = p;
+        while fed < target_len {
+            let c = g.usize(1, (target_len - fed).min(6));
+            be.step_chunks(&[(t_slot, &target[fed..fed + c])]);
+            for i in 0..c {
+                stepped_logits.extend_from_slice(be.lane_logits(i));
+            }
+            fed += c;
+        }
+        // --- cold reference: token-by-token, no reuse anywhere ---
+        let mut cold = DecodeEngine::on_chip(
+            DecodeModel::synth(cfg.clone(), seed),
+            params.clone(),
+            strategy,
+        );
+        let mut cold_logits: Vec<f32> = Vec::new();
+        for &t in &target {
+            cold_logits.extend_from_slice(cold.forward(t));
+        }
+        // cached positions: the logits the server answers from the
+        // store are the donor's — bitwise the cold window's, because
+        // the windows agree on every token up to p
+        assert_eq!(
+            &donor_logits[..p * cfg.vocab],
+            &cold_logits[..p * cfg.vocab],
+            "{strategy:?} prefix {p}: cached logits drift from cold prefill"
+        );
+        // stepped positions: the spliced slot continues bit-identically
+        assert_eq!(
+            stepped_logits.as_slice(),
+            &cold_logits[p * cfg.vocab..],
+            "{strategy:?} prefix {p}: post-splice logits drift from cold prefill"
+        );
+        // the full KV cache matches cold prefill at every layer/position
+        assert_eq!(be.kv_len(t_slot), cold.kv_len());
+        for l in 0..cfg.dec_layers {
+            for pos in 0..target_len {
+                assert_eq!(
+                    be.kv(t_slot).key(l, pos),
+                    cold.kv_cache().key(l, pos),
+                    "{strategy:?} layer {l} pos {pos} (prefix {p}): key drifted"
+                );
+                assert_eq!(
+                    be.kv(t_slot).value(l, pos),
+                    cold.kv_cache().value(l, pos),
+                    "{strategy:?} layer {l} pos {pos} (prefix {p}): value drifted"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_full_window_match_still_steps_the_last_position() {
+    // The store caps a hit at window_len - 1 (recompute the last
+    // token). Pin the engine side of that contract: splicing all but
+    // the last position and stepping exactly one token reproduces the
+    // cold window bitwise — the smallest possible post-splice step.
+    forall("p = len-1 splice steps one position", 6, |g| {
+        let cfg = common::random_decoder_cfg(g);
+        let params = common::chip_params(g, &[16, 32]);
+        if !common::fits_array(&cfg, &params) {
+            return;
+        }
+        let seed = common::seed(g);
+        let strategy = common::any_strategy(g);
+        let len = g.usize(2, 10);
+        let window: Vec<i32> = (0..len)
+            .map(|i| ((i * 23 + 7) % cfg.vocab) as i32)
+            .collect();
+        let mut be = BatchDecodeEngine::on_chip(
+            DecodeModel::synth(cfg.clone(), seed),
+            params.clone(),
+            strategy,
+            2,
+        );
+        // donor: the identical window, fully scored
+        let d_slot = be.try_admit().unwrap();
+        be.step_chunks(&[(d_slot, &window)]);
+        let hit_kv = be.kv(d_slot).clone_prefix(len - 1);
+        // target: same window, spliced to len-1, one stepped position
+        let t_slot = be.try_admit().unwrap();
+        be.splice_kv(t_slot, &hit_kv, len - 1);
+        be.step_chunks(&[(t_slot, &window[len - 1..])]);
+        let mut cold = DecodeEngine::on_chip(
+            DecodeModel::synth(cfg.clone(), seed),
+            params.clone(),
+            strategy,
+        );
+        let mut last = Vec::new();
+        for &t in &window {
+            last = cold.forward(t).to_vec();
+        }
+        assert_eq!(
+            be.lane_logits(0),
+            last.as_slice(),
+            "{strategy:?}: recomputed last position drifted"
+        );
+        assert_eq!(be.kv_len(t_slot), cold.kv_len());
+    });
+}
