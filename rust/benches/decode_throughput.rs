@@ -38,51 +38,15 @@ use monarch_cim::model::ModelConfig;
 use monarch_cim::sim::decode::{BatchDecodeEngine, DecodeEngine, DecodeModel};
 use monarch_cim::sim::exec::ReplayMode;
 use monarch_cim::sim::speculate::{self_draft_model, SpeculativeEngine};
-use monarch_cim::util::bench::{section, Bencher};
+use monarch_cim::util::bench::{section, write_json_artifact, Bencher};
 use monarch_cim::util::json::{num, obj, s, Json};
 
 const PROMPT: [i32; 4] = [11, 48, 85, 122];
 const TOKENS: usize = 16;
 
-/// Output path resolution: `--<flag> <path>` (or `--<flag>=<path>`) >
-/// `<env>` env var > `<default>`.
-fn artifact_path(flag: &str, env: &str, default: &str) -> std::path::PathBuf {
-    let long = format!("--{flag}");
-    let long_eq = format!("--{flag}=");
-    let mut args = std::env::args().skip(1);
-    while let Some(a) = args.next() {
-        if a == long {
-            if let Some(p) = args.next() {
-                return p.into();
-            }
-        } else if let Some(p) = a.strip_prefix(&long_eq) {
-            return p.into();
-        }
-    }
-    if let Some(p) = std::env::var_os(env) {
-        return p.into();
-    }
-    default.into()
-}
-
-/// Output path for the decode JSON artifact.
-fn bench_json_path() -> std::path::PathBuf {
-    artifact_path("bench-json", "BENCH_JSON", "BENCH_decode.json")
-}
-
-/// Output path for the prefill-sweep JSON artifact.
-fn prefill_json_path() -> std::path::PathBuf {
-    artifact_path("prefill-json", "BENCH_PREFILL_JSON", "BENCH_prefill.json")
-}
-
-/// Output path for the speculative-sweep JSON artifact.
-fn spec_json_path() -> std::path::PathBuf {
-    artifact_path("spec-json", "BENCH_SPEC_JSON", "BENCH_spec.json")
-}
-
-/// Output path for the sharded-pipeline-sweep JSON artifact.
-fn pipeline_json_path() -> std::path::PathBuf {
-    artifact_path("pipeline-json", "BENCH_PIPELINE_JSON", "BENCH_pipeline.json")
+/// Sweep records (`name -> row`) as a JSON object.
+fn sweep_obj(records: &[(String, Json)]) -> Json {
+    obj(records.iter().map(|(k, v)| (k.as_str(), v.clone())).collect())
 }
 
 fn main() {
@@ -311,24 +275,18 @@ fn main() {
             ));
         }
     }
-    let prefill_path = prefill_json_path();
-    let prefill_doc = obj(vec![
-        ("bench", s("prefill_throughput")),
-        ("model", s(cfg.name)),
-        ("strategy", s("dense")),
-        ("analog_passes_per_position", num(passes_per_position as f64)),
-        (
-            "sweep",
-            obj(prefill_records
-                .iter()
-                .map(|(k, v)| (k.as_str(), v.clone()))
-                .collect()),
-        ),
-    ]);
-    match std::fs::write(&prefill_path, format!("{prefill_doc}\n")) {
-        Ok(()) => println!("wrote {}", prefill_path.display()),
-        Err(e) => eprintln!("failed to write {}: {e}", prefill_path.display()),
-    }
+    write_json_artifact(
+        "prefill-json",
+        "BENCH_PREFILL_JSON",
+        "BENCH_prefill.json",
+        &obj(vec![
+            ("bench", s("prefill_throughput")),
+            ("model", s(cfg.name)),
+            ("strategy", s("dense")),
+            ("analog_passes_per_position", num(passes_per_position as f64)),
+            ("sweep", sweep_obj(&prefill_records)),
+        ]),
+    );
 
     section("speculative decode sweep — K draft proposals, one batched verify (DenseMap)");
     // Each round verifies K+1 positions through ONE chunked replay
@@ -406,25 +364,19 @@ fn main() {
              (best {best_tokens_per_round})"
         );
     }
-    let spec_path = spec_json_path();
-    let spec_doc = obj(vec![
-        ("bench", s("speculative_decode")),
-        ("model", s(cfg.name)),
-        ("strategy", s("dense")),
-        ("prompt_len", num(PROMPT.len() as f64)),
-        ("generated_tokens", num(TOKENS as f64)),
-        (
-            "sweep",
-            obj(spec_records
-                .iter()
-                .map(|(key, v)| (key.as_str(), v.clone()))
-                .collect()),
-        ),
-    ]);
-    match std::fs::write(&spec_path, format!("{spec_doc}\n")) {
-        Ok(()) => println!("wrote {}", spec_path.display()),
-        Err(e) => eprintln!("failed to write {}: {e}", spec_path.display()),
-    }
+    write_json_artifact(
+        "spec-json",
+        "BENCH_SPEC_JSON",
+        "BENCH_spec.json",
+        &obj(vec![
+            ("bench", s("speculative_decode")),
+            ("model", s(cfg.name)),
+            ("strategy", s("dense")),
+            ("prompt_len", num(PROMPT.len() as f64)),
+            ("generated_tokens", num(TOKENS as f64)),
+            ("sweep", sweep_obj(&spec_records)),
+        ]),
+    );
 
     section("layer-sharded pipeline sweep — shards x in-flight streams (DenseMap)");
     // `shards` chips each hold a contiguous layer range and B concurrent
@@ -521,26 +473,20 @@ fn main() {
             ));
         }
     }
-    let pipe_path = pipeline_json_path();
-    let pipe_doc = obj(vec![
-        ("bench", s("pipeline_decode")),
-        ("model", s(deep.name)),
-        ("strategy", s("dense")),
-        ("prompt_len", num(PROMPT.len() as f64)),
-        ("generated_tokens", num(TOKENS as f64)),
-        ("prefill_chunk", num(4.0)),
-        (
-            "sweep",
-            obj(pipe_records
-                .iter()
-                .map(|(k, v)| (k.as_str(), v.clone()))
-                .collect()),
-        ),
-    ]);
-    match std::fs::write(&pipe_path, format!("{pipe_doc}\n")) {
-        Ok(()) => println!("wrote {}", pipe_path.display()),
-        Err(e) => eprintln!("failed to write {}: {e}", pipe_path.display()),
-    }
+    write_json_artifact(
+        "pipeline-json",
+        "BENCH_PIPELINE_JSON",
+        "BENCH_pipeline.json",
+        &obj(vec![
+            ("bench", s("pipeline_decode")),
+            ("model", s(deep.name)),
+            ("strategy", s("dense")),
+            ("prompt_len", num(PROMPT.len() as f64)),
+            ("generated_tokens", num(TOKENS as f64)),
+            ("prefill_chunk", num(4.0)),
+            ("sweep", sweep_obj(&pipe_records)),
+        ]),
+    );
 
     section("chip programming cost (map + compile plan + write)");
     for strategy in Strategy::all() {
@@ -554,27 +500,19 @@ fn main() {
     }
 
     // machine-readable perf artifact
-    let path = bench_json_path();
-    let doc = obj(vec![
-        ("bench", s("decode_throughput")),
-        ("model", s(cfg.name)),
-        ("prompt_len", num(PROMPT.len() as f64)),
-        ("generated_tokens", num(TOKENS as f64)),
-        ("tokens_per_iter", num(passes)),
-        (
-            "strategies",
-            obj(records.iter().map(|(k, v)| (k.as_str(), v.clone())).collect()),
-        ),
-        (
-            "batched",
-            obj(batched_records
-                .iter()
-                .map(|(k, v)| (k.as_str(), v.clone()))
-                .collect()),
-        ),
-    ]);
-    match std::fs::write(&path, format!("{doc}\n")) {
-        Ok(()) => println!("\nwrote {}", path.display()),
-        Err(e) => eprintln!("\nfailed to write {}: {e}", path.display()),
-    }
+    println!();
+    write_json_artifact(
+        "bench-json",
+        "BENCH_JSON",
+        "BENCH_decode.json",
+        &obj(vec![
+            ("bench", s("decode_throughput")),
+            ("model", s(cfg.name)),
+            ("prompt_len", num(PROMPT.len() as f64)),
+            ("generated_tokens", num(TOKENS as f64)),
+            ("tokens_per_iter", num(passes)),
+            ("strategies", sweep_obj(&records)),
+            ("batched", sweep_obj(&batched_records)),
+        ]),
+    );
 }

@@ -6,7 +6,10 @@
 //!
 //! `cargo bench --bench hotpath`
 
+use std::sync::Arc;
+
 use monarch_cim::cim::CimParams;
+use monarch_cim::coordinator::tracing::{Event, EventKind, Tracer, WorkerTrace};
 use monarch_cim::mapping::{map_model, Strategy};
 use monarch_cim::model::ModelConfig;
 use monarch_cim::monarch::{monarch_project, MonarchMatrix};
@@ -17,6 +20,71 @@ use monarch_cim::sim::exec::ReplayMode;
 use monarch_cim::tensor::{matmul, Matrix};
 use monarch_cim::util::bench::{section, Bencher};
 use monarch_cim::util::rng::Pcg32;
+
+/// The serving worker's step shape with the §6h trace sites inlined:
+/// admit, read pre-step trace lengths, one multi-lane `step_chunks`, one
+/// chunk event per slot (modeled-ns delta off `slot_trace`) plus the
+/// per-step worker event, release. With `wt == None` every site is the
+/// same skipped `Option` check the server pays, so the disabled-path
+/// delta vs [`batched_replay_round`] is the true cost of having tracing
+/// compiled in (< 2% acceptance, DESIGN.md §6h).
+fn traced_replay_round(
+    eng: &mut BatchDecodeEngine,
+    chunks: &[Vec<i32>],
+    wt: &mut Option<WorkerTrace>,
+    pre_lens: &mut Vec<usize>,
+) -> Vec<f32> {
+    let slots: Vec<usize> = chunks
+        .iter()
+        .map(|_| eng.try_admit().expect("fresh engine has a free slot"))
+        .collect();
+    let t0 = wt.as_ref().map(|w| w.now_us()).unwrap_or(0.0);
+    pre_lens.clear();
+    if wt.is_some() {
+        pre_lens.extend(slots.iter().map(|&s| eng.slot_trace(s).len()));
+    }
+    let groups: Vec<(usize, &[i32])> = slots
+        .iter()
+        .zip(chunks)
+        .map(|(&s, c)| (s, &c[..]))
+        .collect();
+    eng.step_chunks(&groups);
+    let t1 = wt.as_ref().map(|w| w.now_us()).unwrap_or(0.0);
+    let mut step_sim_ns = 0.0f64;
+    for (i, (&slot, c)) in slots.iter().zip(chunks).enumerate() {
+        let chunk_sim_ns = if wt.is_some() {
+            eng.slot_trace(slot)[pre_lens[i]..]
+                .iter()
+                .map(|p| p.latency.critical_ns())
+                .sum::<f64>()
+        } else {
+            0.0
+        };
+        step_sim_ns += chunk_sim_ns;
+        if let Some(w) = wt.as_mut() {
+            w.record(
+                Event::span(EventKind::PrefillChunk, i as u64 + 1, 0, t0, t1)
+                    .ab(c.len() as u32, 0)
+                    .sim(chunk_sim_ns),
+            );
+        }
+    }
+    if let Some(w) = wt.as_mut() {
+        w.record(
+            Event::span(EventKind::WorkerStep, 0, 0, t0, t1)
+                .ab(32, slots.len() as u32)
+                .sim(step_sim_ns),
+        );
+    }
+    let logits: Vec<f32> = slots
+        .iter()
+        .flat_map(|&s| eng.logits(s).iter().copied())
+        .collect();
+    for s in slots {
+        eng.release(s);
+    }
+    logits
+}
 
 /// One admit→multi-lane `step_chunks`→release round through the batched
 /// engine; returns the concatenated slot logits so the two pass-table
@@ -133,6 +201,51 @@ fn main() {
     println!(
         "  -> bit-block {bb_pps:.0} vs index {il_pps:.0} positions/s ({:.2}x), outputs bit-identical",
         bb_pps / il_pps.max(1e-12),
+    );
+
+    section("request tracing overhead (DESIGN.md §6h)");
+    // Same 8x4-lane serving step with the server's trace sites inlined.
+    // Disabled tracing is `Option` checks only and must stay within
+    // noise (< 2% acceptance) of the bare loop; enabled tracing pays one
+    // ring push per slot per step, never per lane.
+    let bare = b
+        .bench("step 8x4 bare loop", || {
+            std::hint::black_box(batched_replay_round(&mut eng, &chunks))
+        })
+        .clone();
+    let mut pre_lens: Vec<usize> = Vec::new();
+    let mut wt_off: Option<WorkerTrace> = None;
+    let off = b
+        .bench("step 8x4 tracing disabled", || {
+            std::hint::black_box(traced_replay_round(
+                &mut eng,
+                &chunks,
+                &mut wt_off,
+                &mut pre_lens,
+            ))
+        })
+        .clone();
+    let tracer = Arc::new(Tracer::new(65536));
+    let mut wt_on: Option<WorkerTrace> = Some(tracer.worker(0));
+    let on = b
+        .bench("step 8x4 tracing enabled", || {
+            std::hint::black_box(traced_replay_round(
+                &mut eng,
+                &chunks,
+                &mut wt_on,
+                &mut pre_lens,
+            ))
+        })
+        .clone();
+    drop(wt_on);
+    println!(
+        "  -> bare {:.0} / disabled {:.0} / enabled {:.0} positions/s; disabled-path overhead {:+.2}%, enabled {:+.2}% ({} events ringed)",
+        positions / (bare.mean_ns * 1e-9),
+        positions / (off.mean_ns * 1e-9),
+        positions / (on.mean_ns * 1e-9),
+        (off.mean_ns / bare.mean_ns - 1.0) * 100.0,
+        (on.mean_ns / bare.mean_ns - 1.0) * 100.0,
+        tracer.events().len(),
     );
 
     section("PJRT runtime (requires `make artifacts`)");

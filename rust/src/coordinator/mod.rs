@@ -9,6 +9,8 @@ pub mod framework;
 pub mod metrics;
 mod prefix;
 pub mod server;
+pub mod tracing;
 
 pub use framework::{run_pipeline, PipelineConfig, PipelineResult};
 pub use server::{Backend, CimSimConfig, InferenceServer, PendingResponse, ServerConfig};
+pub use tracing::Tracer;

@@ -53,6 +53,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use super::batching::{next_batch, pick_bucket, BatchPolicy};
 use super::metrics::Metrics;
 use super::prefix::PrefixStore;
+use super::tracing::{Event, EventKind, Tracer};
 use crate::cim::CimParams;
 use crate::mapping::Strategy;
 use crate::model::ModelConfig;
@@ -82,6 +83,8 @@ struct Request {
     /// recorded latency (a request can sit in the channel while every
     /// slot is busy).
     t0: Instant,
+    /// Tracing id assigned at submission (0 when tracing is off).
+    id: u64,
 }
 
 /// Outcome of a non-blocking [`RequestQueue::try_pop`].
@@ -155,6 +158,11 @@ impl RequestQueue {
         self.state.lock().unwrap().1 = true;
         self.ready.notify_all();
     }
+
+    /// Requests currently waiting (the queue-depth counter track).
+    fn depth(&self) -> usize {
+        self.state.lock().unwrap().0.len()
+    }
 }
 
 /// CIM-sim backend configuration.
@@ -211,6 +219,14 @@ pub struct CimSimConfig {
     /// the chip*, so cache hits reduce it by exactly
     /// `prefix_positions_saved`.
     pub prefix_cache: usize,
+    /// Request-tracing sink (`coordinator::tracing`, DESIGN.md §6h):
+    /// when set, every request's span tree and the per-worker step /
+    /// occupancy / queue-depth timeline are recorded into the tracer's
+    /// bounded rings for Perfetto export. `None` (default) disables
+    /// tracing at zero cost — no ring exists and every trace site is a
+    /// skipped `None` check; served logits are bit-identical either way
+    /// (`tests/prop_tracing.rs`).
+    pub trace: Option<Arc<Tracer>>,
 }
 
 impl Default for CimSimConfig {
@@ -226,6 +242,7 @@ impl Default for CimSimConfig {
             shards: 1,
             workers: 1,
             prefix_cache: 0,
+            trace: None,
         }
     }
 }
@@ -299,6 +316,14 @@ impl Submitter {
             Submitter::Queue(q) => q.close(),
         }
     }
+
+    /// Waiting requests (mpsc depth is unobservable; reported as 0).
+    fn depth(&self) -> usize {
+        match self {
+            Submitter::Channel(_) => 0,
+            Submitter::Queue(q) => q.depth(),
+        }
+    }
 }
 
 /// Handle to one in-flight request submitted with
@@ -328,6 +353,10 @@ pub struct InferenceServer {
     pub metrics: Arc<Metrics>,
     pub seq: usize,
     pub vocab: usize,
+    /// Tracing sink shared with the CIM-sim workers (`None` when the
+    /// backend has no tracer configured) — submission-side events
+    /// (enqueue, queue depth) are recorded here.
+    trace: Option<Arc<Tracer>>,
 }
 
 /// Validate one request window against the PJRT artifact contract
@@ -516,6 +545,8 @@ struct InFlight {
     /// Positions covered by that first reply unit: the spliced prefix
     /// (if any) plus the first stepped chunk — the TTFT phase.
     first_chunk: usize,
+    /// Tracing id carried over from the [`Request`] (0 = untraced).
+    id: u64,
 }
 
 /// Speculative chunk sizing for one in-flight window (ISSUE 5,
@@ -638,7 +669,12 @@ fn run_cimsim_worker(
         shards,
         workers: _,
         prefix_cache,
+        trace,
     } = cfg;
+    // tracing (§6h): each worker owns its ring outright — recording is
+    // a lock-free array write; `None` costs one skipped check per site
+    let wid = worker as u32;
+    let mut wt = trace.map(|t| t.worker(wid));
     let (seq, vocab) = (model_cfg.seq, model_cfg.vocab);
     let slots = policy.max_batch.max(1);
     // chunk 0 = auto: prefill as wide as the batch lane budget allows
@@ -700,6 +736,12 @@ fn run_cimsim_worker(
     // per-step (slot, chunk length) plan + chunk wants, reused buffers
     let mut step_plan: Vec<(usize, usize)> = Vec::with_capacity(capacity);
     let mut wants: Vec<usize> = Vec::with_capacity(capacity);
+    // tracing state: per-slot trace lengths before each step (so chunk
+    // events carry their exact modeled-ns delta), the worker's position
+    // on the modeled pipeline-time axis, and its prefix-cache counters
+    let mut pre_lens: Vec<usize> = Vec::with_capacity(capacity);
+    let mut sim_cursor_ns = 0.0f64;
+    let (mut prefix_hits_w, mut prefix_lookups_w) = (0u32, 0u32);
     loop {
         // --- cancel: release slots whose client vanished ---
         // The liveness check runs every step boundary, so an abandoned
@@ -724,6 +766,10 @@ fn run_cimsim_worker(
                     d.release(slot);
                 }
                 metrics.record_cancellation();
+                if let Some(w) = wt.as_mut() {
+                    let t = w.now_us();
+                    w.record(Event::at(EventKind::Cancel, a.id, wid, t).ab(a.fed as u32, 0));
+                }
                 drop(a); // the reply channel dies unanswered — by request
             }
         }
@@ -753,6 +799,10 @@ fn run_cimsim_worker(
             if req.alive.upgrade().is_none() {
                 // client gave up while queued: never occupy a slot
                 metrics.record_cancellation();
+                if let Some(w) = wt.as_mut() {
+                    let t = w.now_us();
+                    w.record(Event::at(EventKind::Cancel, req.id, wid, t));
+                }
                 continue;
             }
             if let Err(e) = validate_window(&req.tokens, seq, vocab) {
@@ -781,6 +831,29 @@ fn run_cimsim_worker(
                 }
                 metrics.record_prefix_lookup(spliced);
             }
+            if let Some(w) = wt.as_mut() {
+                // the admit span IS the queue wait: submission → slot
+                let now = w.now_us();
+                let t0 = w.us_of(req.t0);
+                w.record(
+                    Event::span(EventKind::Admit, req.id, wid, t0, now)
+                        .ab(slot as u32, window as u32),
+                );
+                if spliced > 0 {
+                    w.record(
+                        Event::at(EventKind::PrefixSplice, req.id, wid, now)
+                            .ab(spliced as u32, 0),
+                    );
+                }
+                if prefix_store.is_some() {
+                    prefix_lookups_w += 1;
+                    prefix_hits_w += (spliced > 0) as u32;
+                    w.record(
+                        Event::at(EventKind::PrefixHitRate, 0, wid, now)
+                            .ab(prefix_hits_w, prefix_lookups_w),
+                    );
+                }
+            }
             active[slot] = Some(InFlight {
                 tokens: req.tokens,
                 fed: spliced,
@@ -791,6 +864,7 @@ fn run_cimsim_worker(
                 t0: req.t0, // submission time, so queue wait is counted
                 ttft_us: None,
                 first_chunk: 0,
+                id: req.id,
             });
         }
         if engine.occupancy() == 0 {
@@ -829,6 +903,14 @@ fn run_cimsim_worker(
         for (p, &c) in step_plan.iter_mut().zip(&alloc) {
             p.1 = c;
         }
+        // tracing: mark the step start and each planned slot's trace
+        // length, so eviction can attribute this step's modeled ns to
+        // its chunk events (one record per chunk, never per lane)
+        let t_step_start = wt.as_ref().map(|w| w.now_us()).unwrap_or(0.0);
+        pre_lens.clear();
+        if wt.is_some() {
+            pre_lens.extend(step_plan.iter().map(|&(slot, _)| engine.slot_trace(slot).len()));
+        }
         {
             let groups: Vec<(usize, &[i32])> = step_plan
                 .iter()
@@ -839,6 +921,7 @@ fn run_cimsim_worker(
                 .collect();
             engine.step_chunks(&groups);
         }
+        let t_step_end = wt.as_ref().map(|w| w.now_us()).unwrap_or(0.0);
         metrics.record_worker_occupancy(worker, step_plan.len(), capacity);
         // sharded engine: drain the step's pipeline window into the
         // shared metrics (no-op on the mono path — zero steps recorded)
@@ -850,10 +933,51 @@ fn run_cimsim_worker(
             ps.transfer_ns,
             ps.serial_ns,
         );
+        if let Some(w) = wt.as_mut() {
+            w.record(
+                Event::at(EventKind::Occupancy, 0, wid, t_step_end)
+                    .ab(step_plan.len() as u32, capacity as u32),
+            );
+            w.record(
+                Event::at(EventKind::QueueDepth, 0, wid, t_step_end)
+                    .ab(queue.depth() as u32, 0),
+            );
+            // sharded engine: replay the step's stage windows onto the
+            // worker's modeled sim-time axis (µs of accumulated span)
+            if let Some(tl) = &ps.last {
+                for sw in &tl.windows {
+                    w.record(
+                        Event::span(
+                            EventKind::StageStep,
+                            0,
+                            wid,
+                            (sim_cursor_ns + sw.start_ns) / 1e3,
+                            (sim_cursor_ns + sw.end_ns) / 1e3,
+                        )
+                        .ab(sw.stage as u32, sw.microbatch as u32)
+                        .sim(sw.end_ns - sw.start_ns),
+                    );
+                }
+            }
+            sim_cursor_ns += ps.span_ns;
+        }
         // --- evict: finished windows reply and free their slot ---
         let mut finished: Vec<InFlight> = Vec::new();
         let mut lane = 0usize;
-        for &(slot, c) in &step_plan {
+        let mut step_sim_ns = 0.0f64;
+        for (i, &(slot, c)) in step_plan.iter().enumerate() {
+            // this chunk's modeled-ns delta: the per-position costs the
+            // step appended to the slot's trace (read before the done
+            // branch's take_trace drains it)
+            let chunk_sim_ns = if wt.is_some() {
+                engine.slot_trace(slot)[pre_lens[i]..]
+                    .iter()
+                    .map(|p| p.latency.critical_ns())
+                    .sum::<f64>()
+            } else {
+                0.0
+            };
+            step_sim_ns += chunk_sim_ns;
             let a = active[slot].as_mut().expect("stepped slot is active");
             // stream this chunk's per-position logits (flattened lane
             // order matches the step_plan group order)
@@ -875,6 +999,23 @@ fn run_cimsim_worker(
             if c > 1 && (draft.is_none() || a.fed == a.spliced) {
                 metrics.record_prefill_chunk(c);
             }
+            if let Some(w) = wt.as_mut() {
+                // classified exactly like the metrics counters above:
+                // prompt-ingestion chunk, draft-sized verify round, or
+                // plain decode-pace step
+                let kind = if c > 1 && (draft.is_none() || a.fed == a.spliced) {
+                    EventKind::PrefillChunk
+                } else if draft.is_some() && a.fed > a.spliced {
+                    EventKind::SpecRound
+                } else {
+                    EventKind::DecodeStep
+                };
+                w.record(
+                    Event::span(kind, a.id, wid, t_step_start, t_step_end)
+                        .ab(c as u32, a.fed as u32)
+                        .sim(chunk_sim_ns),
+                );
+            }
             a.fed += c;
             if a.fed == a.tokens.len() {
                 let costs = engine.take_trace(slot);
@@ -895,6 +1036,19 @@ fn run_cimsim_worker(
                     None
                 };
                 metrics.record_request_timing(ttft, inter);
+                if let Some(w) = wt.as_mut() {
+                    // sim_ns carries the request's modeled total — the
+                    // prop test checks its chunk events sum to this
+                    let t = w.now_us();
+                    w.record(
+                        Event::at(EventKind::Reply, a.id, wid, t)
+                            .ab(
+                                (a.tokens.len() - a.spliced) as u32,
+                                a.tokens.len() as u32,
+                            )
+                            .sim(total.latency.critical_ns()),
+                    );
+                }
                 // donate the completed window to the prefix store
                 // before releasing wipes the slot's KV
                 if let Some(store) = prefix_store.as_mut() {
@@ -906,6 +1060,13 @@ fn run_cimsim_worker(
                 }
                 finished.push(active[slot].take().expect("finished slot"));
             }
+        }
+        if let Some(w) = wt.as_mut() {
+            w.record(
+                Event::span(EventKind::WorkerStep, 0, wid, t_step_start, t_step_end)
+                    .ab(lane as u32, step_plan.len() as u32)
+                    .sim(step_sim_ns),
+            );
         }
         if !finished.is_empty() {
             // record before replying so snapshots taken by a caller
@@ -938,6 +1099,10 @@ impl InferenceServer {
         let metrics = Arc::new(Metrics::new());
         let (ready_tx, ready_rx) = channel::<Result<(usize, usize)>>();
         let policy = cfg.policy.clone();
+        let trace = match &cfg.backend {
+            Backend::CimSim(sc) => sc.trace.clone(),
+            Backend::Pjrt => None,
+        };
         let (tx, handles) = match cfg.backend {
             Backend::Pjrt => {
                 let dir = cfg.artifacts_dir.clone();
@@ -998,7 +1163,14 @@ impl InferenceServer {
             metrics,
             seq,
             vocab,
+            trace,
         })
+    }
+
+    /// Requests currently waiting in the shared dispatch queue (0 for
+    /// the PJRT channel backend, whose mpsc depth is unobservable).
+    pub fn queue_depth(&self) -> usize {
+        self.tx.as_ref().map(Submitter::depth).unwrap_or(0)
     }
 
     /// Submit a request without blocking on the reply: returns a
@@ -1008,15 +1180,27 @@ impl InferenceServer {
     pub fn submit(&self, tokens: Vec<i32>) -> Result<PendingResponse> {
         let (rtx, rrx) = channel();
         let alive = Arc::new(());
-        self.tx
-            .as_ref()
-            .ok_or_else(|| anyhow!("server stopped"))?
-            .send(Request {
-                tokens,
-                resp: rtx,
-                alive: Arc::downgrade(&alive),
-                t0: Instant::now(),
-            })?;
+        let t0 = Instant::now();
+        // tracing: assign the request id and mark the enqueue instant
+        // (the worker's admit span will start from the same t0)
+        let mut id = 0u64;
+        if let Some(t) = &self.trace {
+            id = t.next_request_id();
+            let ts = t.us_of(t0);
+            t.record(Event::at(EventKind::Enqueue, id, 0, ts).ab(tokens.len() as u32, 0));
+        }
+        let sub = self.tx.as_ref().ok_or_else(|| anyhow!("server stopped"))?;
+        sub.send(Request {
+            tokens,
+            resp: rtx,
+            alive: Arc::downgrade(&alive),
+            t0,
+            id,
+        })?;
+        if let Some(t) = &self.trace {
+            let ts = t.now_us();
+            t.record(Event::at(EventKind::QueueDepth, 0, 0, ts).ab(sub.depth() as u32, 0));
+        }
         Ok(PendingResponse {
             rx: rrx,
             _alive: alive,
@@ -1112,6 +1296,7 @@ mod tests {
                 resp: rtx,
                 alive: Arc::downgrade(&alive),
                 t0: Instant::now(),
+                id: 0,
             });
             tokens_alive.push(alive);
             rxs.push(rrx);
@@ -1140,6 +1325,7 @@ mod tests {
             resp: rtx,
             alive: Arc::downgrade(&alive),
             t0: Instant::now(),
+            id: 0,
         };
         q.push(req).expect("open queue accepts");
         q.close();
@@ -1153,6 +1339,7 @@ mod tests {
             resp: rtx,
             alive: Arc::downgrade(&alive),
             t0: Instant::now(),
+            id: 0,
         };
         assert!(q.push(rejected).is_err());
         assert!(q.recv().is_none(), "blocking recv wakes on closed+empty");
@@ -1179,6 +1366,7 @@ mod tests {
                 resp: dead_tx,
                 alive: Arc::downgrade(&dead_alive),
                 t0: Instant::now(),
+                id: 0,
             })
             .unwrap();
         drop(dead_alive);
@@ -1194,6 +1382,7 @@ mod tests {
                 resp: live_tx,
                 alive: Arc::downgrade(&live_alive),
                 t0: Instant::now(),
+                id: 0,
             })
             .unwrap();
         queue.close(); // worker drains both and exits

@@ -1,0 +1,878 @@
+//! End-to-end request tracing (DESIGN.md §6h): every served request
+//! carries a span tree `enqueue → admit → [prefix-splice] →
+//! prefill-chunk* → decode-step* / spec-round* → reply|cancel`, recorded
+//! as fixed-size [`Event`]s in bounded ring buffers and exported two
+//! ways — Chrome/Perfetto trace-event JSON ([`perfetto_json`]) and a
+//! per-request breakdown table ([`breakdown_table`]) that decomposes
+//! TTFT into queue wait + prefill + splice-saved work.
+//!
+//! Cost discipline: the serving hot path records **one event per step
+//! boundary per in-flight slot, never per lane**. Each worker owns its
+//! [`WorkerTrace`] ring outright — recording is a bounds-checked array
+//! write, no lock, no allocation — and delivers the ring to the shared
+//! [`Tracer`] only when the worker exits (on [`Drop`]). Submit-side
+//! events (enqueue, queue depth) go through a mutex-protected shared
+//! ring, which is off the worker hot path by construction. With tracing
+//! disabled (`CimSimConfig::trace == None`) the worker holds no ring at
+//! all and every trace site is a skipped `if let` on a `None` — zero
+//! allocation, zero locking, and the traced run is bit-identical to the
+//! untraced one because tracing never touches engine state
+//! (`tests/prop_tracing.rs`).
+//!
+//! Every span carries **both clocks**: wall-clock µs since the tracer
+//! epoch (what the host actually spent, queue wait included) and the
+//! *modeled* chip time of the work inside the span (`sim_ns`, summed
+//! from the engine's per-position [`Cost`] records). The Perfetto
+//! export keeps the axes on separate tracks: wall-time worker/request
+//! tracks, and a modeled-sim-time track for the pipeline-stage windows
+//! of a sharded engine.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::cim::energy::Cost;
+use crate::util::json::{arr, num, obj, s, Json};
+use crate::util::table::Table;
+
+/// What one trace event marks. Request-scoped kinds form the span tree;
+/// `WorkerStep`/`StageStep` are execution-track spans; the remaining
+/// kinds are counter samples.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// Request entered the queue (instant; `a` = prompt length).
+    Enqueue,
+    /// Queue-wait span: starts at submission, ends when a worker admits
+    /// the request into a slot (`a` = slot, `b` = prompt length).
+    Admit,
+    /// Shared-prefix splice at admission (instant; `a` = positions
+    /// answered from the cache).
+    PrefixSplice,
+    /// Multi-position prompt-ingestion chunk (`a` = positions fed,
+    /// `b` = window position before the chunk).
+    PrefillChunk,
+    /// Single-position decode-pace step (`a` = 1, `b` = position).
+    DecodeStep,
+    /// Speculative verify round (`a` = positions fed, `b` = position).
+    SpecRound,
+    /// Request replied (instant; `a` = positions replayed on the chip,
+    /// `b` = window length, `sim_ns` = the request's modeled total).
+    Reply,
+    /// Request cancelled — client vanished (instant; `a` = positions
+    /// fed before the release).
+    Cancel,
+    /// One whole engine step on a worker (`a` = lanes fed, `b` = active
+    /// slots, `sim_ns` = modeled chip time of the step).
+    WorkerStep,
+    /// Occupancy counter sample (`a` = occupied, `b` = capacity).
+    Occupancy,
+    /// Queue-depth counter sample (`a` = queued requests).
+    QueueDepth,
+    /// Prefix-cache counter sample (`a` = hits, `b` = lookups, both
+    /// cumulative for the recording worker).
+    PrefixHitRate,
+    /// One pipeline-stage analog window of a sharded engine (`a` =
+    /// stage, `b` = microbatch). Unlike every other kind, `t_start_us`/
+    /// `t_end_us` sit on the **modeled sim-time axis**: µs of
+    /// accumulated pipeline span, not wall clock.
+    StageStep,
+}
+
+/// One fixed-size trace record. `Copy` so ring writes are plain array
+/// stores; field meaning per kind is documented on [`EventKind`].
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    pub kind: EventKind,
+    /// Request id ([`Tracer::next_request_id`]; 0 when not
+    /// request-scoped).
+    pub request: u64,
+    pub worker: u32,
+    /// Span start/end in µs since the tracer epoch — wall clock for
+    /// every kind except [`EventKind::StageStep`] (modeled sim time).
+    pub t_start_us: f64,
+    pub t_end_us: f64,
+    /// Modeled chip time attributed to the span (ns; 0.0 when n/a).
+    pub sim_ns: f64,
+    pub a: u32,
+    pub b: u32,
+}
+
+impl Event {
+    /// Instant event: a zero-width span at `t_us`.
+    pub fn at(kind: EventKind, request: u64, worker: u32, t_us: f64) -> Event {
+        Event::span(kind, request, worker, t_us, t_us)
+    }
+
+    /// Span event over `[t0_us, t1_us]`.
+    pub fn span(kind: EventKind, request: u64, worker: u32, t0_us: f64, t1_us: f64) -> Event {
+        Event {
+            kind,
+            request,
+            worker,
+            t_start_us: t0_us,
+            t_end_us: t1_us,
+            sim_ns: 0.0,
+            a: 0,
+            b: 0,
+        }
+    }
+
+    /// Attach the kind-specific payload fields (see [`EventKind`]).
+    pub fn ab(mut self, a: u32, b: u32) -> Event {
+        self.a = a;
+        self.b = b;
+        self
+    }
+
+    /// Attach the modeled chip time (ns).
+    pub fn sim(mut self, ns: f64) -> Event {
+        self.sim_ns = ns;
+        self
+    }
+}
+
+/// Bounded event buffer: overwrites the oldest record once full and
+/// counts what it dropped, so a trace of any length holds constant
+/// memory (the same discipline as the metrics histograms).
+#[derive(Debug)]
+pub struct Ring {
+    buf: Vec<Event>,
+    capacity: usize,
+    /// Oldest element once wrapped (`buf[head]`).
+    head: usize,
+    dropped: u64,
+}
+
+impl Ring {
+    fn new(capacity: usize) -> Self {
+        Self {
+            // bound the eager reservation; the buffer may never fill
+            buf: Vec::with_capacity(capacity.min(1024)),
+            capacity: capacity.max(1),
+            head: 0,
+            dropped: 0,
+        }
+    }
+
+    fn push(&mut self, ev: Event) {
+        if self.buf.len() < self.capacity {
+            self.buf.push(ev);
+        } else {
+            self.buf[self.head] = ev;
+            self.head = (self.head + 1) % self.capacity;
+            self.dropped += 1;
+        }
+    }
+
+    /// Retained events, oldest first.
+    fn events(&self) -> impl Iterator<Item = &Event> {
+        self.buf[self.head..].iter().chain(&self.buf[..self.head])
+    }
+
+    fn len(&self) -> usize {
+        self.buf.len()
+    }
+}
+
+/// The shared trace sink: hands out request ids and per-worker rings,
+/// collects delivered rings, and merges everything for export. One
+/// `Arc<Tracer>` is threaded through `CimSimConfig`; the CLI keeps its
+/// own clone to export from after shutdown.
+#[derive(Debug)]
+pub struct Tracer {
+    epoch: Instant,
+    /// Ring capacity handed to each worker (and the shared ring).
+    capacity: usize,
+    next_request: AtomicU64,
+    /// Submit-side events (enqueue, queue depth) — mutex-protected, but
+    /// only touched at submission, never on the worker step loop.
+    shared: Mutex<Ring>,
+    /// Rings delivered by exiting workers ([`WorkerTrace::drop`]).
+    collected: Mutex<Vec<Ring>>,
+}
+
+impl Tracer {
+    /// `capacity` bounds every ring (per worker, and the submit-side
+    /// one); the oldest events are overwritten beyond it.
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            epoch: Instant::now(),
+            capacity: capacity.max(1),
+            next_request: AtomicU64::new(0),
+            shared: Mutex::new(Ring::new(capacity)),
+            collected: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Wall-clock µs since the tracer epoch.
+    pub fn now_us(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64() * 1e6
+    }
+
+    /// µs since the epoch of an instant captured elsewhere (request
+    /// submission times; saturates to 0 for pre-epoch instants).
+    pub fn us_of(&self, t: Instant) -> f64 {
+        t.saturating_duration_since(self.epoch).as_secs_f64() * 1e6
+    }
+
+    /// Fresh request id (1-based; 0 means "untraced / not a request").
+    pub fn next_request_id(&self) -> u64 {
+        self.next_request.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// Record a submit-side event into the shared ring (off the worker
+    /// hot path — workers use their own [`WorkerTrace`]).
+    pub fn record(&self, ev: Event) {
+        self.shared.lock().unwrap().push(ev);
+    }
+
+    /// A worker-owned ring; recording through it is lock-free. The ring
+    /// is delivered back here when the `WorkerTrace` drops.
+    pub fn worker(self: &Arc<Self>, worker: u32) -> WorkerTrace {
+        WorkerTrace {
+            tracer: self.clone(),
+            ring: Ring::new(self.capacity),
+            worker,
+        }
+    }
+
+    /// Merge every ring (shared + delivered) into one list ordered by
+    /// span start. Call after the workers exited (server shutdown) —
+    /// a still-running worker's ring has not been delivered yet.
+    pub fn events(&self) -> Vec<Event> {
+        let mut out: Vec<Event> = Vec::new();
+        out.extend(self.shared.lock().unwrap().events());
+        for ring in self.collected.lock().unwrap().iter() {
+            out.extend(ring.events());
+        }
+        out.sort_by(|a, b| a.t_start_us.total_cmp(&b.t_start_us));
+        out
+    }
+
+    /// Events overwritten across every ring (0 = the trace is complete).
+    pub fn dropped(&self) -> u64 {
+        self.shared.lock().unwrap().dropped
+            + self
+                .collected
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|r| r.dropped)
+                .sum::<u64>()
+    }
+}
+
+/// One worker's owned event ring. Recording writes the local buffer —
+/// no lock, no allocation past the ring itself — and [`Drop`] delivers
+/// the ring to the tracer when the worker loop exits.
+#[derive(Debug)]
+pub struct WorkerTrace {
+    tracer: Arc<Tracer>,
+    ring: Ring,
+    worker: u32,
+}
+
+impl WorkerTrace {
+    pub fn now_us(&self) -> f64 {
+        self.tracer.now_us()
+    }
+
+    pub fn us_of(&self, t: Instant) -> f64 {
+        self.tracer.us_of(t)
+    }
+
+    pub fn worker(&self) -> u32 {
+        self.worker
+    }
+
+    /// Record into the worker-owned ring (the hot-path `record`).
+    pub fn record(&mut self, ev: Event) {
+        self.ring.push(ev);
+    }
+}
+
+impl Drop for WorkerTrace {
+    fn drop(&mut self) {
+        let ring = std::mem::replace(&mut self.ring, Ring::new(1));
+        self.tracer.collected.lock().unwrap().push(ring);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Perfetto export
+// ---------------------------------------------------------------------------
+
+/// Perfetto/`chrome://tracing` track layout (the `pid` of each event):
+/// wall-time worker tracks, wall-time request tracks, modeled-sim-time
+/// pipeline-stage tracks.
+const PID_SERVING: f64 = 0.0;
+const PID_REQUESTS: f64 = 1.0;
+const PID_STAGES: f64 = 2.0;
+
+fn kind_name(k: EventKind) -> &'static str {
+    match k {
+        EventKind::Enqueue => "enqueue",
+        EventKind::Admit => "queue-wait",
+        EventKind::PrefixSplice => "prefix-splice",
+        EventKind::PrefillChunk => "prefill-chunk",
+        EventKind::DecodeStep => "decode-step",
+        EventKind::SpecRound => "spec-round",
+        EventKind::Reply => "reply",
+        EventKind::Cancel => "cancel",
+        EventKind::WorkerStep => "step",
+        EventKind::Occupancy => "occupancy",
+        EventKind::QueueDepth => "queue depth",
+        EventKind::PrefixHitRate => "prefix hit rate",
+        EventKind::StageStep => "stage-window",
+    }
+}
+
+fn meta_event(pid: f64, tid: Option<f64>, key: &str, name: &str) -> Json {
+    let mut fields = vec![
+        ("ph", s("M")),
+        ("pid", num(pid)),
+        ("name", s(key)),
+        ("args", obj(vec![("name", s(name))])),
+    ];
+    if let Some(t) = tid {
+        fields.push(("tid", num(t)));
+    }
+    obj(fields)
+}
+
+fn span_event(pid: f64, tid: f64, ev: &Event, args: Vec<(&str, Json)>) -> Json {
+    obj(vec![
+        ("ph", s("X")),
+        ("pid", num(pid)),
+        ("tid", num(tid)),
+        ("name", s(kind_name(ev.kind))),
+        ("ts", num(ev.t_start_us)),
+        ("dur", num((ev.t_end_us - ev.t_start_us).max(0.0))),
+        ("args", obj(args)),
+    ])
+}
+
+fn counter_event(name: &str, ts: f64, series: Vec<(&str, Json)>) -> Json {
+    obj(vec![
+        ("ph", s("C")),
+        ("pid", num(PID_SERVING)),
+        ("tid", num(0.0)),
+        ("name", s(name)),
+        ("ts", num(ts)),
+        ("args", obj(series)),
+    ])
+}
+
+/// Stage windows of different workers share the stage-track process;
+/// this keys worker × stage into one thread id.
+fn stage_tid(worker: u32, stage: u32) -> f64 {
+    (worker as f64) * 1000.0 + stage as f64
+}
+
+/// Render a merged event list ([`Tracer::events`]) as Chrome/Perfetto
+/// trace-event JSON: one wall-time track per worker (step spans +
+/// occupancy/queue-depth/prefix counters), one wall-time track per
+/// request (queue-wait and chunk spans), and — when a sharded engine
+/// recorded stage windows — a modeled-sim-time track per worker ×
+/// pipeline stage. Load the written file in <https://ui.perfetto.dev>
+/// or `chrome://tracing`.
+pub fn perfetto_json(events: &[Event]) -> Json {
+    let mut out: Vec<Json> = Vec::new();
+    // track metadata: name the processes and every thread we will emit
+    let workers: BTreeSet<u32> = events
+        .iter()
+        .filter(|e| matches!(e.kind, EventKind::WorkerStep))
+        .map(|e| e.worker)
+        .collect();
+    let requests: BTreeSet<u64> = events
+        .iter()
+        .filter(|e| e.request != 0)
+        .map(|e| e.request)
+        .collect();
+    let stages: BTreeSet<(u32, u32)> = events
+        .iter()
+        .filter(|e| matches!(e.kind, EventKind::StageStep))
+        .map(|e| (e.worker, e.a))
+        .collect();
+    out.push(meta_event(PID_SERVING, None, "process_name", "serving (wall µs)"));
+    out.push(meta_event(PID_REQUESTS, None, "process_name", "requests (wall µs)"));
+    if !stages.is_empty() {
+        out.push(meta_event(
+            PID_STAGES,
+            None,
+            "process_name",
+            "pipeline stages (modeled sim µs)",
+        ));
+    }
+    for &w in &workers {
+        out.push(meta_event(
+            PID_SERVING,
+            Some(w as f64),
+            "thread_name",
+            &format!("worker {w}"),
+        ));
+    }
+    for &r in &requests {
+        out.push(meta_event(
+            PID_REQUESTS,
+            Some(r as f64),
+            "thread_name",
+            &format!("request {r}"),
+        ));
+    }
+    for &(w, st) in &stages {
+        out.push(meta_event(
+            PID_STAGES,
+            Some(stage_tid(w, st)),
+            "thread_name",
+            &format!("worker {w} stage {st}"),
+        ));
+    }
+    for ev in events {
+        let j = match ev.kind {
+            EventKind::Enqueue => span_event(
+                PID_REQUESTS,
+                ev.request as f64,
+                ev,
+                vec![("prompt_tokens", num(ev.a as f64))],
+            ),
+            EventKind::Admit => span_event(
+                PID_REQUESTS,
+                ev.request as f64,
+                ev,
+                vec![
+                    ("worker", num(ev.worker as f64)),
+                    ("slot", num(ev.a as f64)),
+                    ("prompt_tokens", num(ev.b as f64)),
+                ],
+            ),
+            EventKind::PrefixSplice => span_event(
+                PID_REQUESTS,
+                ev.request as f64,
+                ev,
+                vec![("spliced_positions", num(ev.a as f64))],
+            ),
+            EventKind::PrefillChunk | EventKind::DecodeStep | EventKind::SpecRound => {
+                span_event(
+                    PID_REQUESTS,
+                    ev.request as f64,
+                    ev,
+                    vec![
+                        ("worker", num(ev.worker as f64)),
+                        ("positions", num(ev.a as f64)),
+                        ("window_pos", num(ev.b as f64)),
+                        ("sim_ns", num(ev.sim_ns)),
+                    ],
+                )
+            }
+            EventKind::Reply => span_event(
+                PID_REQUESTS,
+                ev.request as f64,
+                ev,
+                vec![
+                    ("chip_positions", num(ev.a as f64)),
+                    ("window_tokens", num(ev.b as f64)),
+                    ("sim_ns", num(ev.sim_ns)),
+                ],
+            ),
+            EventKind::Cancel => span_event(
+                PID_REQUESTS,
+                ev.request as f64,
+                ev,
+                vec![("positions_fed", num(ev.a as f64))],
+            ),
+            EventKind::WorkerStep => span_event(
+                PID_SERVING,
+                ev.worker as f64,
+                ev,
+                vec![
+                    ("lanes", num(ev.a as f64)),
+                    ("active_slots", num(ev.b as f64)),
+                    ("sim_ns", num(ev.sim_ns)),
+                ],
+            ),
+            EventKind::Occupancy => counter_event(
+                &format!("occupancy w{}", ev.worker),
+                ev.t_end_us,
+                vec![("occupied", num(ev.a as f64))],
+            ),
+            EventKind::QueueDepth => counter_event(
+                "queue depth",
+                ev.t_end_us,
+                vec![("queued", num(ev.a as f64))],
+            ),
+            EventKind::PrefixHitRate => counter_event(
+                &format!("prefix hit rate w{}", ev.worker),
+                ev.t_end_us,
+                vec![(
+                    "hit_pct",
+                    num(if ev.b == 0 {
+                        0.0
+                    } else {
+                        100.0 * ev.a as f64 / ev.b as f64
+                    }),
+                )],
+            ),
+            EventKind::StageStep => span_event(
+                PID_STAGES,
+                stage_tid(ev.worker, ev.a),
+                ev,
+                vec![
+                    ("stage", num(ev.a as f64)),
+                    ("microbatch", num(ev.b as f64)),
+                    ("sim_ns", num(ev.sim_ns)),
+                ],
+            ),
+        };
+        out.push(j);
+    }
+    obj(vec![
+        ("traceEvents", arr(out)),
+        ("displayTimeUnit", s("ms")),
+    ])
+}
+
+// ---------------------------------------------------------------------------
+// Per-request breakdown
+// ---------------------------------------------------------------------------
+
+/// One request's phase decomposition, reduced from its span tree.
+/// `queue_wait_us + prefill_us` is the request's TTFT; `splice_saved_ns`
+/// estimates the modeled prefill work the shared-prefix cache answered
+/// for free (spliced positions priced at the request's own mean modeled
+/// cost per replayed position).
+#[derive(Clone, Debug)]
+pub struct RequestBreakdown {
+    pub request: u64,
+    pub worker: u32,
+    pub prompt_tokens: u32,
+    pub spliced: u32,
+    pub queue_wait_us: f64,
+    pub prefill_us: f64,
+    pub decode_us: f64,
+    pub total_us: f64,
+    /// Step-boundary chunks the request was fed through.
+    pub chunks: u32,
+    /// Modeled chip time summed over the request's chunks (ns).
+    pub sim_ns: f64,
+    pub splice_saved_ns: f64,
+    /// `"reply"`, `"cancel"`, or `"open"` (trace ended mid-request —
+    /// possible when the ring overwrote its early events).
+    pub outcome: &'static str,
+}
+
+/// Reduce a merged event list to per-request breakdowns, ordered by
+/// request id. Requests without an `Admit` span (overwritten, or
+/// cancelled while queued) still appear when any of their events
+/// survive.
+pub fn breakdowns(events: &[Event]) -> Vec<RequestBreakdown> {
+    #[derive(Default)]
+    struct Acc {
+        admit: Option<Event>,
+        first_chunk_end: Option<f64>,
+        chunks: u32,
+        chip_positions: u64,
+        sim_ns: f64,
+        spliced: u32,
+        end: Option<Event>,
+        enqueue_us: Option<f64>,
+    }
+    let mut by_req: BTreeMap<u64, Acc> = BTreeMap::new();
+    for ev in events {
+        if ev.request == 0 {
+            continue;
+        }
+        let a = by_req.entry(ev.request).or_default();
+        match ev.kind {
+            EventKind::Enqueue => a.enqueue_us = Some(ev.t_start_us),
+            EventKind::Admit => a.admit = Some(*ev),
+            EventKind::PrefixSplice => a.spliced = ev.a,
+            EventKind::PrefillChunk | EventKind::DecodeStep | EventKind::SpecRound => {
+                a.chunks += 1;
+                a.chip_positions += ev.a as u64;
+                a.sim_ns += ev.sim_ns;
+                let end = a.first_chunk_end.get_or_insert(ev.t_end_us);
+                *end = end.min(ev.t_end_us);
+            }
+            EventKind::Reply | EventKind::Cancel => a.end = Some(*ev),
+            _ => {}
+        }
+    }
+    by_req
+        .into_iter()
+        .map(|(request, a)| {
+            let start = a
+                .admit
+                .map(|e| e.t_start_us)
+                .or(a.enqueue_us)
+                .unwrap_or(0.0);
+            let admit_end = a.admit.map(|e| e.t_end_us).unwrap_or(start);
+            let end_us = a.end.map(|e| e.t_end_us);
+            let first = a.first_chunk_end;
+            let total_us = end_us.map(|e| (e - start).max(0.0)).unwrap_or(0.0);
+            RequestBreakdown {
+                request,
+                worker: a.admit.map(|e| e.worker).unwrap_or(0),
+                prompt_tokens: a.admit.map(|e| e.b).unwrap_or(0),
+                spliced: a.spliced,
+                queue_wait_us: (admit_end - start).max(0.0),
+                prefill_us: first.map(|f| (f - admit_end).max(0.0)).unwrap_or(0.0),
+                decode_us: match (first, end_us) {
+                    (Some(f), Some(e)) => (e - f).max(0.0),
+                    _ => 0.0,
+                },
+                total_us,
+                chunks: a.chunks,
+                sim_ns: a.sim_ns,
+                splice_saved_ns: if a.chip_positions == 0 {
+                    0.0
+                } else {
+                    a.spliced as f64 * a.sim_ns / a.chip_positions as f64
+                },
+                outcome: match a.end.map(|e| e.kind) {
+                    Some(EventKind::Cancel) => "cancel",
+                    Some(_) => "reply",
+                    None => "open",
+                },
+            }
+        })
+        .collect()
+}
+
+/// Human-readable per-request breakdown (at most `limit` rows; the rest
+/// are summarized in a trailing note). TTFT = queue µs + prefill µs.
+pub fn breakdown_table(events: &[Event], limit: usize) -> String {
+    let rows = breakdowns(events);
+    let mut t = Table::new([
+        "req", "worker", "tokens", "spliced", "queue µs", "prefill µs", "decode µs",
+        "total µs", "sim µs", "saved µs", "outcome",
+    ]);
+    for r in rows.iter().take(limit) {
+        t.row([
+            r.request.to_string(),
+            r.worker.to_string(),
+            r.prompt_tokens.to_string(),
+            r.spliced.to_string(),
+            format!("{:.1}", r.queue_wait_us),
+            format!("{:.1}", r.prefill_us),
+            format!("{:.1}", r.decode_us),
+            format!("{:.1}", r.total_us),
+            format!("{:.2}", r.sim_ns / 1e3),
+            format!("{:.2}", r.splice_saved_ns / 1e3),
+            r.outcome.to_string(),
+        ]);
+    }
+    let mut out = t.render();
+    if rows.len() > limit {
+        out.push_str(&format!("({} more requests not shown)\n", rows.len() - limit));
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Offline decode timeline
+// ---------------------------------------------------------------------------
+
+/// Perfetto timeline for an offline `decode` run: one modeled-sim-time
+/// track per labelled run (strategy), one span per chip pass, placed by
+/// the cumulative critical-path latency of its predecessors. The same
+/// trace-event schema as [`perfetto_json`], so the files load the same
+/// way.
+pub fn decode_timeline_json(runs: &[(String, Vec<Cost>)]) -> Json {
+    let mut out: Vec<Json> = vec![meta_event(0.0, None, "process_name", "decode (modeled sim µs)")];
+    for (tid, (name, costs)) in runs.iter().enumerate() {
+        out.push(meta_event(0.0, Some(tid as f64), "thread_name", name));
+        let mut cursor_ns = 0.0f64;
+        for (i, c) in costs.iter().enumerate() {
+            let dur_ns = c.latency.critical_ns();
+            out.push(obj(vec![
+                ("ph", s("X")),
+                ("pid", num(0.0)),
+                ("tid", num(tid as f64)),
+                ("name", s("pass")),
+                ("ts", num(cursor_ns / 1e3)),
+                ("dur", num((dur_ns / 1e3).max(0.0))),
+                (
+                    "args",
+                    obj(vec![
+                        ("position", num(i as f64)),
+                        ("energy_nj", num(c.energy.total_nj())),
+                        ("mha_ns", num(c.latency.mha_ns)),
+                    ]),
+                ),
+            ]));
+            cursor_ns += dur_ns;
+        }
+    }
+    obj(vec![
+        ("traceEvents", arr(out)),
+        ("displayTimeUnit", s("ms")),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(kind: EventKind, request: u64, t0: f64, t1: f64) -> Event {
+        Event {
+            kind,
+            request,
+            worker: 0,
+            t_start_us: t0,
+            t_end_us: t1,
+            sim_ns: 0.0,
+            a: 0,
+            b: 0,
+        }
+    }
+
+    #[test]
+    fn ring_is_bounded_and_overwrites_oldest() {
+        let mut r = Ring::new(4);
+        for i in 0..10u64 {
+            r.push(ev(EventKind::DecodeStep, i, i as f64, i as f64 + 1.0));
+        }
+        assert_eq!(r.len(), 4, "ring never exceeds its capacity");
+        assert_eq!(r.dropped, 6);
+        let kept: Vec<u64> = r.events().map(|e| e.request).collect();
+        assert_eq!(kept, vec![6, 7, 8, 9], "oldest-first, newest retained");
+        // a zero capacity clamps to one instead of dividing by zero
+        let mut r = Ring::new(0);
+        r.push(ev(EventKind::Reply, 1, 0.0, 0.0));
+        r.push(ev(EventKind::Reply, 2, 1.0, 1.0));
+        assert_eq!(r.len(), 1);
+        assert_eq!(r.dropped, 1);
+    }
+
+    #[test]
+    fn tracer_ids_and_worker_ring_delivery() {
+        let t = Arc::new(Tracer::new(64));
+        assert_eq!(t.next_request_id(), 1);
+        assert_eq!(t.next_request_id(), 2);
+        t.record(ev(EventKind::Enqueue, 1, 5.0, 5.0));
+        {
+            let mut w = t.worker(3);
+            assert_eq!(w.worker(), 3);
+            let mut e = ev(EventKind::Reply, 1, 9.0, 9.0);
+            e.worker = 3;
+            w.record(e);
+            // ring not yet delivered: only the shared event is visible
+            assert_eq!(t.events().len(), 1);
+        }
+        // drop delivered the worker ring; merged list is start-ordered
+        let evs = t.events();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].kind, EventKind::Enqueue);
+        assert_eq!(evs[1].kind, EventKind::Reply);
+        assert_eq!(evs[1].worker, 3);
+        assert_eq!(t.dropped(), 0);
+    }
+
+    #[test]
+    fn perfetto_export_shape_is_valid() {
+        let mut events = vec![
+            ev(EventKind::Enqueue, 1, 0.0, 0.0),
+            ev(EventKind::Admit, 1, 0.0, 10.0),
+            ev(EventKind::PrefillChunk, 1, 10.0, 30.0),
+            ev(EventKind::DecodeStep, 1, 30.0, 40.0),
+            ev(EventKind::Reply, 1, 40.0, 40.0),
+        ];
+        let mut step = ev(EventKind::WorkerStep, 0, 10.0, 30.0);
+        step.a = 4;
+        events.push(step);
+        let mut occ = ev(EventKind::Occupancy, 0, 30.0, 30.0);
+        occ.a = 1;
+        occ.b = 8;
+        events.push(occ);
+        let mut stage = ev(EventKind::StageStep, 0, 2.0, 5.0);
+        stage.a = 1;
+        stage.b = 0;
+        events.push(stage);
+        let doc = perfetto_json(&events);
+        // reparse of the writer output survives (well-formed JSON)
+        let reparsed = Json::parse(&doc.to_string()).unwrap();
+        let evs = reparsed.get("traceEvents").unwrap().as_arr().unwrap();
+        assert!(!evs.is_empty());
+        let mut spans = 0;
+        let mut counters = 0;
+        let mut meta = 0;
+        for e in evs {
+            match e.get("ph").unwrap().as_str().unwrap() {
+                "X" => {
+                    spans += 1;
+                    let dur = e.get("dur").unwrap().as_f64().unwrap();
+                    assert!(dur >= 0.0, "negative span duration: {e}");
+                    assert!(e.get("ts").is_some() && e.get("name").is_some());
+                }
+                "C" => counters += 1,
+                "M" => meta += 1,
+                other => panic!("unexpected phase {other}"),
+            }
+        }
+        assert_eq!(spans, 7, "every non-counter event becomes a span");
+        assert_eq!(counters, 1);
+        // process names for all three pids + worker/request/stage threads
+        assert!(meta >= 5, "track metadata missing: {meta}");
+    }
+
+    #[test]
+    fn breakdown_decomposes_ttft() {
+        let mut splice = ev(EventKind::PrefixSplice, 1, 105.0, 105.0);
+        splice.a = 2;
+        let mut admit = ev(EventKind::Admit, 1, 100.0, 150.0);
+        admit.b = 6;
+        admit.worker = 2;
+        let mut chunk = ev(EventKind::PrefillChunk, 1, 150.0, 250.0);
+        chunk.a = 3;
+        chunk.sim_ns = 3000.0;
+        let mut step = ev(EventKind::DecodeStep, 1, 250.0, 400.0);
+        step.a = 1;
+        step.sim_ns = 1000.0;
+        let mut reply = ev(EventKind::Reply, 1, 400.0, 400.0);
+        reply.sim_ns = 4000.0;
+        let events = vec![admit, splice, chunk, step, reply];
+        let rows = breakdowns(&events);
+        assert_eq!(rows.len(), 1);
+        let r = &rows[0];
+        assert_eq!(r.request, 1);
+        assert_eq!(r.worker, 2);
+        assert_eq!(r.prompt_tokens, 6);
+        assert_eq!(r.spliced, 2);
+        assert!((r.queue_wait_us - 50.0).abs() < 1e-9);
+        assert!((r.prefill_us - 100.0).abs() < 1e-9);
+        assert!((r.decode_us - 150.0).abs() < 1e-9);
+        assert!((r.total_us - 300.0).abs() < 1e-9);
+        assert_eq!(r.chunks, 2);
+        assert!((r.sim_ns - 4000.0).abs() < 1e-9);
+        // 2 spliced positions at the request's 1000 ns/position mean
+        assert!((r.splice_saved_ns - 2000.0).abs() < 1e-9);
+        assert_eq!(r.outcome, "reply");
+        let table = breakdown_table(&events, 32);
+        assert!(table.contains("queue µs"));
+        assert!(table.contains("reply"));
+        // the cap note appears only past the limit
+        let capped = breakdown_table(&events, 0);
+        assert!(capped.contains("1 more requests not shown"));
+    }
+
+    #[test]
+    fn decode_timeline_places_passes_back_to_back() {
+        let mut c1 = Cost::default();
+        c1.latency.analog_ns = 1000.0;
+        let mut c2 = Cost::default();
+        c2.latency.analog_ns = 2000.0;
+        let doc = decode_timeline_json(&[("dense".to_string(), vec![c1, c2])]);
+        let evs = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        let spans: Vec<&Json> = evs
+            .iter()
+            .filter(|e| e.get("ph").unwrap().as_str() == Some("X"))
+            .collect();
+        assert_eq!(spans.len(), 2);
+        assert_eq!(spans[0].get("ts").unwrap().as_f64(), Some(0.0));
+        assert_eq!(spans[0].get("dur").unwrap().as_f64(), Some(1.0));
+        assert_eq!(spans[1].get("ts").unwrap().as_f64(), Some(1.0));
+        assert_eq!(spans[1].get("dur").unwrap().as_f64(), Some(2.0));
+    }
+}

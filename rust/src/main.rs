@@ -19,8 +19,13 @@
 //!   occupancy) land in `BENCH_serve.json`.
 //! * `e2e` — pipeline + runtime round-trip summary.
 
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
 use monarch_cim::cim::CimParams;
-use monarch_cim::coordinator::{run_pipeline, InferenceServer, PipelineConfig, ServerConfig};
+use monarch_cim::coordinator::{
+    run_pipeline, InferenceServer, PipelineConfig, ServerConfig, Tracer,
+};
 use monarch_cim::gpu::GpuParams;
 use monarch_cim::mapping::Strategy;
 use monarch_cim::model::ModelConfig;
@@ -48,16 +53,21 @@ fn usage() -> ! {
                     cross-checked bit-for-bit vs plain greedy)\n\
                     [--shards N]  (layer-sharded pipeline across N chips,\n\
                     cross-checked bit-for-bit vs the single-chip engine)\n\
+                    [--trace-out FILE]  (Perfetto timeline of the modeled\n\
+                    chip passes, one track per strategy)\n\
            serve    [--requests 64] [--artifacts DIR] [--backend pjrt|cim-sim]\n\
                     [--strategy dense] [--prefill-chunk C]\n\
                     [--speculate-k K] [--draft-layers D] [--shards N]\n\
                     [--workers W]  (W CIM-sim worker chips, shared queue)\n\
                     [--prefix-cache E]  (E shared-prefix KV entries per\n\
                     worker; 0 = off)\n\
+                    [--trace-out FILE]  (Perfetto request/worker timeline,\n\
+                    cim-sim backend only) [--stats-interval SECS]\n\
            serve-load [--workers 2] [--clients 32] [--requests 256]\n\
                     [--prefix P] [--prefix-cache 8] [--strategy dense]\n\
                     [--prefill-chunk C] [--shards N] [--seed 2025]\n\
                     [--out BENCH_serve.json] [--require-hits]\n\
+                    [--trace-out FILE] [--stats-interval SECS]\n\
                     (ragged clients sharing a P-token system prompt;\n\
                     TTFT/inter-token p99 + prefix hit rate to JSON)\n\
            dse      [--model ...] [--adcs 1,4,8,16,32] [--budget N]\n\
@@ -283,6 +293,9 @@ fn cmd_decode(args: &Args) {
     let golden = reference.generate(&prompt, n_tokens);
     println!("reference (factored Monarch matvec): {:?}", golden.tokens);
 
+    // --trace-out: per-strategy modeled chip-pass timelines for Perfetto
+    let mut trace_runs: Vec<(String, Vec<monarch_cim::cim::Cost>)> = Vec::new();
+
     for &strategy in &strategies {
         let mut eng =
             DecodeEngine::on_chip(DecodeModel::synth(cfg.clone(), seed), cim.clone(), strategy);
@@ -292,6 +305,9 @@ fn cmd_decode(args: &Args) {
         let mapping_arrays = eng.mapping().map(|m| m.arrays).unwrap_or(0);
         // generate moves the run's trace into the result
         let total = r.total();
+        if args.has("trace-out") {
+            trace_runs.push((strategy.name().to_string(), r.per_token.clone()));
+        }
         println!(
             "\n{} — {} arrays, {} generated tokens in {:.2?} wall ({} chip passes modeled):",
             strategy.name(),
@@ -565,6 +581,75 @@ fn cmd_decode(args: &Args) {
             }
         }
     }
+
+    if let Some(path) = args.get("trace-out") {
+        // modeled sim-time timeline: one Perfetto track per strategy,
+        // one span per chip pass (coordinator::tracing)
+        let doc = monarch_cim::coordinator::tracing::decode_timeline_json(&trace_runs);
+        if let Err(e) = std::fs::write(path, format!("{doc}\n")) {
+            eprintln!("failed to write {path}: {e}");
+            std::process::exit(1);
+        }
+        println!("\nwrote {path} — load in ui.perfetto.dev or chrome://tracing");
+    }
+}
+
+/// Export one collected serving trace: Perfetto trace-event JSON to
+/// `path` (compact form — traces get large) plus the per-request
+/// breakdown table on stdout. Call after `shutdown()`, when every
+/// worker has delivered its event ring.
+fn export_trace(tracer: &Tracer, path: &str) {
+    use monarch_cim::coordinator::tracing::{breakdown_table, perfetto_json};
+    let events = tracer.events();
+    let doc = perfetto_json(&events);
+    if let Err(e) = std::fs::write(path, format!("{doc}\n")) {
+        eprintln!("failed to write {path}: {e}");
+        std::process::exit(1);
+    }
+    let dropped = tracer.dropped();
+    println!(
+        "wrote {path} ({} events{}) — load in ui.perfetto.dev or chrome://tracing",
+        events.len(),
+        if dropped > 0 {
+            format!(", {dropped} overwritten by the ring bound")
+        } else {
+            String::new()
+        }
+    );
+    println!("per-request breakdown (TTFT = queue µs + prefill µs):");
+    print!("{}", breakdown_table(&events, 32));
+}
+
+/// Periodic one-line serving snapshot (`--stats-interval SECS`): spawned
+/// into the caller's outer scope; exits when the caller flips `stop`
+/// after its clients drain (short sleep slices keep shutdown prompt).
+fn spawn_stats_printer<'scope, 'env>(
+    scope: &'scope std::thread::Scope<'scope, 'env>,
+    server: &'env InferenceServer,
+    stop: &'env AtomicBool,
+    interval_s: f64,
+) {
+    scope.spawn(move || loop {
+        let mut slept = 0.0;
+        while slept < interval_s {
+            if stop.load(Ordering::Relaxed) {
+                return;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(50));
+            slept += 0.05;
+        }
+        let s = server.metrics.snapshot();
+        println!(
+            "[stats] {:.1} req/s | {:.1} tok/s | occupancy {:.2} of {} | queue {} | prefix hit {:.2} | cancelled {}",
+            s.throughput_rps,
+            s.sim_tokens_per_sec,
+            s.occupancy_mean,
+            s.slot_capacity,
+            server.queue_depth(),
+            s.prefix_hit_rate,
+            s.cancellations
+        );
+    });
 }
 
 fn model_of_decoder(args: &Args) -> ModelConfig {
@@ -586,6 +671,8 @@ fn cmd_serve(args: &Args) {
     if let Some(dir) = args.get("artifacts") {
         cfg.artifacts_dir = dir.into();
     }
+    let trace_out = args.get("trace-out").map(String::from);
+    let mut tracer: Option<Arc<Tracer>> = None;
     let backend_name = args.str_or("backend", "pjrt");
     match backend_name.as_str() {
         "pjrt" => {}
@@ -606,6 +693,11 @@ fn cmd_serve(args: &Args) {
                 sim.shards = args.usize_or("shards", 1);
                 sim.workers = args.usize_or("workers", 1);
                 sim.prefix_cache = args.usize_or("prefix-cache", 0);
+                if trace_out.is_some() {
+                    let t = Arc::new(Tracer::new(65536));
+                    sim.trace = Some(t.clone());
+                    tracer = Some(t);
+                }
             }
         }
         other => {
@@ -623,18 +715,26 @@ fn cmd_serve(args: &Args) {
     };
     let seq = server.seq;
     let vocab = server.vocab as i32;
+    let stats_interval = args.f64_or("stats-interval", 0.0);
+    let stop = AtomicBool::new(false);
     let t0 = std::time::Instant::now();
-    std::thread::scope(|scope| {
-        for i in 0..n {
-            let srv = &server;
-            scope.spawn(move || {
-                let mut rng = Pcg32::new(i as u64);
-                let toks: Vec<i32> =
-                    (0..seq).map(|_| rng.below(vocab as u32) as i32).collect();
-                let r = srv.infer(toks);
-                assert!(r.is_ok(), "request {i} failed: {:?}", r.err());
-            });
+    std::thread::scope(|outer| {
+        if stats_interval > 0.0 {
+            spawn_stats_printer(outer, &server, &stop, stats_interval);
         }
+        std::thread::scope(|scope| {
+            for i in 0..n {
+                let srv = &server;
+                scope.spawn(move || {
+                    let mut rng = Pcg32::new(i as u64);
+                    let toks: Vec<i32> =
+                        (0..seq).map(|_| rng.below(vocab as u32) as i32).collect();
+                    let r = srv.infer(toks);
+                    assert!(r.is_ok(), "request {i} failed: {:?}", r.err());
+                });
+            }
+        });
+        stop.store(true, Ordering::Relaxed);
     });
     let elapsed = t0.elapsed();
     let s = server.metrics.snapshot();
@@ -707,6 +807,13 @@ fn cmd_serve(args: &Args) {
         }
     }
     server.shutdown();
+    if let Some(path) = &trace_out {
+        match &tracer {
+            // export after shutdown: every worker delivered its ring
+            Some(t) => export_trace(t, path),
+            None => eprintln!("--trace-out ignored: tracing needs --backend cim-sim"),
+        }
+    }
 }
 
 /// Serving load generator (DESIGN.md §6g): `--clients` concurrent
@@ -730,6 +837,8 @@ fn cmd_serve_load(args: &Args) {
         eprintln!("unknown strategy '{name}' (linear|sparse|dense)");
         std::process::exit(2);
     });
+    let trace_out = args.get("trace-out").map(String::from);
+    let mut tracer: Option<Arc<Tracer>> = None;
     let mut cfg = ServerConfig::cim_sim(strategy);
     if let monarch_cim::coordinator::Backend::CimSim(sim) = &mut cfg.backend {
         sim.workers = workers;
@@ -739,6 +848,11 @@ fn cmd_serve_load(args: &Args) {
         sim.draft_layers = args.usize_or("draft-layers", 0);
         sim.shards = args.usize_or("shards", 1);
         sim.seed = seed;
+        if trace_out.is_some() {
+            let t = Arc::new(Tracer::new(65536));
+            sim.trace = Some(t.clone());
+            tracer = Some(t);
+        }
     }
     println!("starting {workers}-worker cim-sim server ({name} mapping)...");
     let server = match InferenceServer::start(cfg) {
@@ -755,25 +869,33 @@ fn cmd_serve_load(args: &Args) {
     let prefix_len = args.usize_or("prefix", seq / 2).min(seq - 1);
     let mut prng = Pcg32::new(seed);
     let prefix: Vec<i32> = (0..prefix_len).map(|_| prng.below(vocab) as i32).collect();
+    let stats_interval = args.f64_or("stats-interval", 0.0);
+    let stop = AtomicBool::new(false);
     let t0 = std::time::Instant::now();
-    std::thread::scope(|scope| {
-        for c in 0..clients {
-            let srv = &server;
-            let prefix = &prefix;
-            // client c serves request indices c, c+clients, c+2*clients, …
-            scope.spawn(move || {
-                let mut rng = Pcg32::new(seed ^ (0x9e37 + c as u64));
-                let mut i = c;
-                while i < total {
-                    let tail = 1 + rng.below((seq - prefix.len()) as u32) as usize;
-                    let mut toks = prefix.clone();
-                    toks.extend((0..tail).map(|_| rng.below(vocab) as i32));
-                    let r = srv.infer(toks);
-                    assert!(r.is_ok(), "request {i} failed: {:?}", r.err());
-                    i += clients;
-                }
-            });
+    std::thread::scope(|outer| {
+        if stats_interval > 0.0 {
+            spawn_stats_printer(outer, &server, &stop, stats_interval);
         }
+        std::thread::scope(|scope| {
+            for c in 0..clients {
+                let srv = &server;
+                let prefix = &prefix;
+                // client c serves request indices c, c+clients, c+2*clients, …
+                scope.spawn(move || {
+                    let mut rng = Pcg32::new(seed ^ (0x9e37 + c as u64));
+                    let mut i = c;
+                    while i < total {
+                        let tail = 1 + rng.below((seq - prefix.len()) as u32) as usize;
+                        let mut toks = prefix.clone();
+                        toks.extend((0..tail).map(|_| rng.below(vocab) as i32));
+                        let r = srv.infer(toks);
+                        assert!(r.is_ok(), "request {i} failed: {:?}", r.err());
+                        i += clients;
+                    }
+                });
+            }
+        });
+        stop.store(true, Ordering::Relaxed);
     });
     let elapsed = t0.elapsed();
     let snap = server.metrics.snapshot();
@@ -840,6 +962,10 @@ fn cmd_serve_load(args: &Args) {
     }
     println!("wrote {out}");
     server.shutdown();
+    if let (Some(path), Some(t)) = (&trace_out, &tracer) {
+        // export after shutdown: every worker delivered its ring
+        export_trace(t, path);
+    }
     if args.has("require-hits") && snap.prefix_hits == 0 {
         eprintln!("FAIL: prefix cache never hit under a shared-prefix workload");
         std::process::exit(1);

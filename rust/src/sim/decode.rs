@@ -884,6 +884,14 @@ impl BatchDecodeEngine {
         std::mem::take(&mut self.slots[slot].trace.per_token)
     }
 
+    /// Borrow the slot's accumulated per-position costs without
+    /// draining them — tracing reads per-step deltas off this between
+    /// steps; [`BatchDecodeEngine::take_trace`] still drains at
+    /// completion.
+    pub fn slot_trace(&self, slot: usize) -> &[Cost] {
+        &self.slots[slot].trace.per_token
+    }
+
     /// The chip's mapping (None for the reference backend). A sharded
     /// engine reports its 1-chip *reference* mapping — the one its
     /// per-position cost records are priced with.

@@ -5,7 +5,10 @@
 //! criterion-like one-line report, plus helpers for printing the paper's
 //! tables/figures from bench binaries.
 
+use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
 
 /// Result of one benchmark case.
 #[derive(Clone, Debug)]
@@ -122,6 +125,50 @@ pub fn section(title: &str) {
     println!("\n=== {title} ===");
 }
 
+/// Output path resolution for a JSON artifact: `--<flag> <path>` (or
+/// `--<flag>=<path>`) on the bench/bin command line > `<env>` env var
+/// > `<default>`. Shared by every BENCH_*.json emitter so the
+/// resolution order can't drift between artifacts.
+pub fn artifact_path(flag: &str, env: &str, default: &str) -> PathBuf {
+    let long = format!("--{flag}");
+    let long_eq = format!("--{flag}=");
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        if a == long {
+            if let Some(p) = args.next() {
+                return p.into();
+            }
+        } else if let Some(p) = a.strip_prefix(&long_eq) {
+            return p.into();
+        }
+    }
+    if let Some(p) = std::env::var_os(env) {
+        return p.into();
+    }
+    default.into()
+}
+
+/// Write one JSON artifact (pretty-printed, trailing newline) and log
+/// the destination. The single write site behind every BENCH_*.json.
+pub fn write_artifact(path: &Path, doc: &Json) -> std::io::Result<()> {
+    let mut body = doc.to_pretty();
+    body.push('\n');
+    std::fs::write(path, body)?;
+    println!("wrote {}", path.display());
+    Ok(())
+}
+
+/// Resolve the artifact path ([`artifact_path`]) and write `doc`
+/// through the single write site ([`write_artifact`]). A failed write
+/// is reported to stderr but does not abort — an unwritable artifact
+/// must not take the bench results down with it.
+pub fn write_json_artifact(flag: &str, env: &str, default: &str, doc: &Json) {
+    let path = artifact_path(flag, env, default);
+    if let Err(e) = write_artifact(&path, doc) {
+        eprintln!("failed to write {}: {e}", path.display());
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -134,6 +181,33 @@ mod tests {
         assert!(m.mean_ns > 0.0);
         assert!(m.iters > 0);
         assert!(m.min_ns <= m.p50_ns && m.p50_ns <= m.max_ns);
+    }
+
+    #[test]
+    fn artifact_path_prefers_env_over_default() {
+        // (bench tests can't fake argv; the flag branch is exercised by
+        // the CI smoke bench, which passes --bench-json explicitly)
+        std::env::set_var("BENCH_TEST_ARTIFACT", "from_env.json");
+        let p = artifact_path("no-such-flag", "BENCH_TEST_ARTIFACT", "default.json");
+        assert_eq!(p, PathBuf::from("from_env.json"));
+        std::env::remove_var("BENCH_TEST_ARTIFACT");
+        let p = artifact_path("no-such-flag", "BENCH_TEST_ARTIFACT", "default.json");
+        assert_eq!(p, PathBuf::from("default.json"));
+    }
+
+    #[test]
+    fn write_artifact_is_pretty_and_reparses() {
+        use crate::util::json::{num, obj, s};
+        let doc = obj(vec![("bench", s("t")), ("v", num(1.0))]);
+        let dir = std::env::temp_dir().join("monarch_cim_bench_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("artifact.json");
+        write_artifact(&path, &doc).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert!(body.ends_with('\n'));
+        assert!(body.contains("  \"bench\": \"t\""));
+        assert_eq!(Json::parse(body.trim_end()).unwrap(), doc);
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -351,6 +351,59 @@ fn write_escaped(f: &mut fmt::Formatter<'_>, s: &str) -> fmt::Result {
     write!(f, "\"")
 }
 
+impl Json {
+    /// Pretty writer: 2-space indentation, one element/key per line.
+    /// This is the on-disk artifact format (`util::bench` writes BENCH
+    /// JSON through it); `Display` stays compact for logs and wire use.
+    /// Both forms reparse to the same value.
+    pub fn to_pretty(&self) -> String {
+        let mut out = String::new();
+        self.pretty_into(&mut out, 0);
+        out
+    }
+
+    fn pretty_into(&self, out: &mut String, depth: usize) {
+        match self {
+            Json::Arr(v) if !v.is_empty() => {
+                out.push_str("[\n");
+                for (i, x) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(",\n");
+                    }
+                    push_indent(out, depth + 1);
+                    x.pretty_into(out, depth + 1);
+                }
+                out.push('\n');
+                push_indent(out, depth);
+                out.push(']');
+            }
+            Json::Obj(m) if !m.is_empty() => {
+                out.push_str("{\n");
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(",\n");
+                    }
+                    push_indent(out, depth + 1);
+                    out.push_str(&Json::Str(k.clone()).to_string());
+                    out.push_str(": ");
+                    v.pretty_into(out, depth + 1);
+                }
+                out.push('\n');
+                push_indent(out, depth);
+                out.push('}');
+            }
+            // scalars and empty containers: the compact writer is right
+            scalar => out.push_str(&scalar.to_string()),
+        }
+    }
+}
+
+fn push_indent(out: &mut String, depth: usize) {
+    for _ in 0..depth {
+        out.push_str("  ");
+    }
+}
+
 /// Builder helpers for report emission.
 pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
     Json::Obj(
@@ -426,5 +479,22 @@ mod tests {
     fn empty_containers() {
         assert_eq!(Json::parse("[]").unwrap(), Json::Arr(vec![]));
         assert_eq!(Json::parse("{}").unwrap(), Json::Obj(Default::default()));
+    }
+
+    #[test]
+    fn pretty_writer_reparses_to_same_value() {
+        let v = Json::parse(
+            r#"{"bench": "x", "sweep": {"a": [1, 2.5], "b": {"c": null}}, "empty": [], "t": true}"#,
+        )
+        .unwrap();
+        let pretty = v.to_pretty();
+        // multi-line, indented, and value-preserving
+        assert!(pretty.contains('\n'));
+        assert!(pretty.contains("  \"bench\": \"x\""));
+        assert!(pretty.contains("\"empty\": []"));
+        assert_eq!(Json::parse(&pretty).unwrap(), v);
+        // scalars stay single-line
+        assert_eq!(num(3.0).to_pretty(), "3");
+        assert_eq!(s("hi").to_pretty(), "\"hi\"");
     }
 }

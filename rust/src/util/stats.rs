@@ -77,10 +77,81 @@ pub fn max(xs: &[f64]) -> f64 {
         .unwrap_or(0.0)
 }
 
-/// Simple latency/throughput histogram with fixed log-spaced buckets (ns).
-#[derive(Clone, Debug, Default)]
+/// Buckets per decade of the log-spaced [`Histogram`]. The bucket
+/// width ratio is `10^(1/25) ≈ 1.097`, so any percentile estimate is
+/// within ~10% (one bucket width) of the exact sorted-vector answer.
+const BUCKETS_PER_DECADE: usize = 25;
+/// Lower edge of the first log bucket; values `<= HIST_MIN` (including
+/// zero — `Instant::elapsed().as_micros()` rounds down to 0 on fast
+/// paths) land in a dedicated underflow bucket spanning `[0, HIST_MIN)`.
+const HIST_MIN: f64 = 1e-3;
+/// Upper edge of the last log bucket; values `>= HIST_MAX` land in a
+/// dedicated overflow bucket. The span 1e-3..1e9 covers sub-ns to ~17
+/// minutes when samples are microseconds.
+const HIST_MAX: f64 = 1e9;
+const HIST_DECADES: usize = 12; // log10(HIST_MAX) - log10(HIST_MIN)
+/// Total bucket count: underflow + log buckets + overflow. Fixed at
+/// compile time — the histogram can NEVER grow with the sample stream.
+const HIST_BUCKETS: usize = HIST_DECADES * BUCKETS_PER_DECADE + 2;
+const _: () = assert!(HIST_BUCKETS <= 512, "histogram hard cap exceeded");
+
+/// Latency/throughput histogram over fixed log-spaced buckets.
+///
+/// Storage is a compile-time-sized count array plus exact running
+/// `count`/`sum`/`min`/`max` — recording a sample is O(1) and the
+/// struct never allocates, so a week-long `serve-load` run holds the
+/// same memory as a 10-sample unit test (`histogram_memory_is_constant`
+/// pins this). `mean` and `max` are exact; `p50`/`p99` interpolate
+/// within the hit bucket and clamp into `[min, max]`, so they are
+/// within one bucket width (~10%) of the exact sorted-vector answer
+/// and *exactly* right for single-sample or single-valued streams.
+/// Non-finite samples are dropped (the crate-wide NaN convention, see
+/// [`percentile`]).
+#[derive(Clone, Debug)]
 pub struct Histogram {
-    samples: Vec<f64>,
+    counts: [u32; HIST_BUCKETS],
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self {
+            counts: [0; HIST_BUCKETS],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+}
+
+/// Bucket index for a finite sample.
+fn bucket_index(v: f64) -> usize {
+    if v < HIST_MIN {
+        return 0;
+    }
+    if v >= HIST_MAX {
+        return HIST_BUCKETS - 1;
+    }
+    let k = ((v.log10() + 3.0) * BUCKETS_PER_DECADE as f64).floor() as isize;
+    (k + 1).clamp(1, (HIST_BUCKETS - 2) as isize) as usize
+}
+
+/// `[lo, hi)` value range of bucket `i` (the overflow bucket is
+/// degenerate: both edges are `HIST_MAX`).
+fn bucket_bounds(i: usize) -> (f64, f64) {
+    if i == 0 {
+        (0.0, HIST_MIN)
+    } else if i == HIST_BUCKETS - 1 {
+        (HIST_MAX, HIST_MAX)
+    } else {
+        let lo = -3.0 + (i - 1) as f64 / BUCKETS_PER_DECADE as f64;
+        let hi = -3.0 + i as f64 / BUCKETS_PER_DECADE as f64;
+        (10f64.powf(lo), 10f64.powf(hi))
+    }
 }
 
 impl Histogram {
@@ -89,31 +160,91 @@ impl Histogram {
     }
 
     pub fn record(&mut self, v: f64) {
-        self.samples.push(v);
+        if !v.is_finite() {
+            return;
+        }
+        let idx = bucket_index(v);
+        debug_assert!(idx < HIST_BUCKETS);
+        self.counts[idx] = self.counts[idx].saturating_add(1);
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
     }
 
+    /// Finite samples recorded (bucket counts saturate at `u32::MAX`
+    /// per bucket; this total keeps counting).
     pub fn len(&self) -> usize {
-        self.samples.len()
+        self.count as usize
     }
 
     pub fn is_empty(&self) -> bool {
-        self.samples.is_empty()
+        self.count == 0
     }
 
+    /// Exact arithmetic mean (running sum / count); 0.0 when empty.
     pub fn mean(&self) -> f64 {
-        mean(&self.samples)
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Percentile estimate: linear interpolation inside the bucket the
+    /// rank falls into, clamped to the exact observed `[min, max]`.
+    /// 0.0 when empty (the crate-wide "no samples" convention).
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (((p / 100.0) * self.count as f64).ceil() as u64)
+            .clamp(1, self.count);
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if cum + c as u64 >= target {
+                let (lo, hi) = bucket_bounds(i);
+                let frac = (target - cum) as f64 / c as f64;
+                return (lo + frac * (hi - lo)).clamp(self.min, self.max);
+            }
+            cum += c as u64;
+        }
+        self.max
     }
 
     pub fn p50(&self) -> f64 {
-        percentile(&self.samples, 50.0)
+        self.percentile(50.0)
     }
 
     pub fn p99(&self) -> f64 {
-        percentile(&self.samples, 99.0)
+        self.percentile(99.0)
     }
 
+    /// Exact smallest sample; 0.0 when empty.
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    /// Exact largest sample; 0.0 when empty.
     pub fn max(&self) -> f64 {
-        max(&self.samples)
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Bytes held by this histogram — a compile-time constant (no heap
+    /// storage), asserted by the 10^6-sample memory test.
+    pub fn memory_bytes(&self) -> usize {
+        std::mem::size_of::<Self>()
     }
 }
 
@@ -193,6 +324,81 @@ mod tests {
         assert!((h.mean() - 50.5).abs() < 1e-9);
         assert!((h.p50() - 50.5).abs() < 1.0);
         assert!(h.p99() >= 99.0);
+    }
+
+    #[test]
+    fn histogram_single_and_constant_streams_are_exact() {
+        // single sample: every percentile clamps to the sample itself
+        let mut h = Histogram::new();
+        h.record(250.0);
+        assert_eq!(h.p50(), 250.0);
+        assert_eq!(h.p99(), 250.0);
+        assert_eq!(h.mean(), 250.0);
+        assert_eq!(h.max(), 250.0);
+        // constant stream: min == max pins the estimate exactly
+        let mut h = Histogram::new();
+        for _ in 0..1000 {
+            h.record(40.0);
+        }
+        assert_eq!(h.p50(), 40.0);
+        assert_eq!(h.p99(), 40.0);
+    }
+
+    #[test]
+    fn histogram_drops_nonfinite_and_buckets_extremes() {
+        let mut h = Histogram::new();
+        h.record(f64::NAN);
+        h.record(f64::INFINITY);
+        assert!(h.is_empty());
+        assert_eq!(h.p50(), 0.0);
+        // zero / negative / beyond-range samples stay bounded and keep
+        // percentiles inside the observed [min, max]
+        h.record(0.0);
+        h.record(-5.0);
+        h.record(1e12);
+        assert_eq!(h.len(), 3);
+        assert_eq!(h.min(), -5.0);
+        assert_eq!(h.max(), 1e12);
+        let p = h.p50();
+        assert!((-5.0..=1e12).contains(&p), "p50 escaped range: {p}");
+    }
+
+    /// ISSUE 9 satellite: a 10^6-sample stream must hold constant
+    /// memory and keep p50/p99 within one bucket width (ratio
+    /// 10^(1/25)) of the exact sorted-vector answer.
+    #[test]
+    fn histogram_memory_is_constant_and_percentiles_bucket_accurate() {
+        use crate::util::rng::Pcg32;
+        let mut h = Histogram::new();
+        let mut rng = Pcg32::stream(0x1559, 9);
+        let mut exact = Vec::with_capacity(1_000_000);
+        let small = {
+            let mut s = Histogram::new();
+            s.record(1.0);
+            s.memory_bytes()
+        };
+        for _ in 0..1_000_000 {
+            // heavy-tailed latency-like stream spanning ~5 decades
+            let u = rng.below(1_000_000) as f64 / 1_000_000.0;
+            let v = 10.0 * (1.0 / (1.0 - u).max(1e-6)).powf(1.5);
+            h.record(v);
+            exact.push(v);
+        }
+        assert_eq!(h.len(), 1_000_000);
+        // constant memory: identical to a 1-sample histogram, no heap
+        assert_eq!(h.memory_bytes(), small);
+        let ratio = 10f64.powf(1.0 / BUCKETS_PER_DECADE as f64);
+        for p in [50.0, 99.0] {
+            let est = h.percentile(p);
+            let want = percentile(&exact, p);
+            assert!(
+                est >= want / ratio && est <= want * ratio,
+                "p{p}: est {est} vs exact {want} beyond one bucket width"
+            );
+        }
+        // mean stays exact (running sum), max is the true max
+        assert!((h.mean() - mean(&exact)).abs() / mean(&exact) < 1e-9);
+        assert_eq!(h.max(), max(&exact));
     }
 
     #[test]

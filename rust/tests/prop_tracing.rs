@@ -1,0 +1,208 @@
+//! Property tests for end-to-end request tracing (DESIGN.md §6h): over
+//! random model geometries, mapping strategies, worker counts, shard
+//! counts, speculation and prefix-cache settings,
+//!
+//! 1. a traced serving run is **bit-identical** to an untraced one —
+//!    tracing only observes the engine, it never touches its state; and
+//! 2. the recorded span tree is **well-formed**: every request has one
+//!    enqueue and one admit, every admit has exactly one reply, chunk
+//!    spans nest inside [admit, reply] on the worker that admitted the
+//!    request, chunk position counters tile the window contiguously
+//!    from the spliced prefix, and the chunk events' modeled chip time
+//!    sums to the reply's per-request total (the same numbers
+//!    `Metrics::record_sim_tokens` bills).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use monarch_cim::coordinator::tracing::{Event, EventKind, Tracer};
+use monarch_cim::coordinator::{Backend, CimSimConfig, InferenceServer, ServerConfig};
+use monarch_cim::util::prop::forall;
+
+mod common;
+
+/// Serve `windows` in submission order on a fresh server and return the
+/// per-request logits. The tracer (when given) is threaded through the
+/// backend config exactly like `monarch-cim serve --trace-out` does.
+fn serve_windows(
+    sim: &CimSimConfig,
+    windows: &[Vec<i32>],
+    trace: Option<Arc<Tracer>>,
+) -> Vec<Vec<f32>> {
+    let mut sim = sim.clone();
+    sim.trace = trace;
+    let server = InferenceServer::start(ServerConfig {
+        backend: Backend::CimSim(sim),
+        ..Default::default()
+    })
+    .expect("server starts");
+    let pending: Vec<_> = windows
+        .iter()
+        .map(|w| server.submit(w.clone()).expect("submit"))
+        .collect();
+    let out: Vec<Vec<f32>> = pending
+        .into_iter()
+        .map(|p| p.wait().expect("reply"))
+        .collect();
+    server.shutdown();
+    out
+}
+
+#[test]
+fn prop_traced_run_bit_identical_and_spans_well_formed() {
+    forall("traced == untraced + well-formed spans", 4, |g| {
+        let model = common::random_decoder_cfg(g);
+        let params = common::chip_params(g, &[16, 32]);
+        if !common::fits_array(&model, &params) {
+            return;
+        }
+        let sim = CimSimConfig {
+            strategy: common::any_strategy(g),
+            cim: params,
+            seed: common::seed(g),
+            prefill_chunk: g.usize(0, 4),
+            speculate_k: g.choose(&[0usize, 2]),
+            draft_layers: 0,
+            shards: g.usize(1, 2),
+            workers: g.usize(1, 2),
+            prefix_cache: g.choose(&[0usize, 4]),
+            trace: None,
+            model: model.clone(),
+        };
+        // a few ragged windows, some sharing a prefix so the splice and
+        // hit-rate trace paths run
+        let n_req = g.usize(3, 6);
+        let prefix_len = g.usize(1, model.seq / 2);
+        let prefix: Vec<i32> = (0..prefix_len)
+            .map(|i| ((i * 13 + 5) % model.vocab) as i32)
+            .collect();
+        let windows: Vec<Vec<i32>> = (0..n_req)
+            .map(|r| {
+                let mut w: Vec<i32> = if g.bool() { prefix.clone() } else { Vec::new() };
+                let tail = g.usize(1, model.seq - w.len());
+                w.extend((0..tail).map(|i| ((i * 29 + r * 7 + 3) % model.vocab) as i32));
+                w
+            })
+            .collect();
+
+        let untraced = serve_windows(&sim, &windows, None);
+        let tracer = Arc::new(Tracer::new(16384));
+        let traced = serve_windows(&sim, &windows, Some(tracer.clone()));
+
+        // (1) tracing never perturbs what the chip computes
+        for (i, (a, b)) in untraced.iter().zip(&traced).enumerate() {
+            assert_eq!(
+                a, b,
+                "request {i}: traced logits drifted from the untraced run"
+            );
+        }
+
+        // (2) span-tree well-formedness over the merged event list
+        let events = tracer.events();
+        assert_eq!(tracer.dropped(), 0, "ring overflowed in a small run");
+        let mut enqueue: BTreeMap<u64, Event> = BTreeMap::new();
+        let mut admit: BTreeMap<u64, Event> = BTreeMap::new();
+        let mut splice: BTreeMap<u64, Event> = BTreeMap::new();
+        let mut end: BTreeMap<u64, Event> = BTreeMap::new();
+        let mut chunks: BTreeMap<u64, Vec<Event>> = BTreeMap::new();
+        for ev in &events {
+            match ev.kind {
+                EventKind::Enqueue => {
+                    assert!(
+                        enqueue.insert(ev.request, *ev).is_none(),
+                        "request {} enqueued twice",
+                        ev.request
+                    );
+                }
+                EventKind::Admit => {
+                    assert!(
+                        admit.insert(ev.request, *ev).is_none(),
+                        "request {} admitted twice",
+                        ev.request
+                    );
+                }
+                EventKind::PrefixSplice => {
+                    assert!(
+                        splice.insert(ev.request, *ev).is_none(),
+                        "request {} spliced twice",
+                        ev.request
+                    );
+                }
+                EventKind::Reply | EventKind::Cancel => {
+                    assert!(
+                        end.insert(ev.request, *ev).is_none(),
+                        "request {} ended twice",
+                        ev.request
+                    );
+                }
+                EventKind::PrefillChunk | EventKind::DecodeStep | EventKind::SpecRound => {
+                    chunks.entry(ev.request).or_default().push(*ev);
+                }
+                _ => {}
+            }
+        }
+        for (i, w) in windows.iter().enumerate() {
+            // ids are handed out in submission order, starting at 1
+            let id = i as u64 + 1;
+            let nq = enqueue.get(&id).expect("every request has an enqueue");
+            assert_eq!(nq.a as usize, w.len(), "enqueue carries the prompt length");
+            let a = admit.get(&id).expect("every request is admitted");
+            assert!(
+                a.t_start_us <= a.t_end_us,
+                "request {id}: queue-wait span runs backwards"
+            );
+            assert_eq!(a.b as usize, w.len(), "admit carries the window length");
+            let e = end.get(&id).expect("every admitted request ends");
+            assert_eq!(
+                e.kind,
+                EventKind::Reply,
+                "request {id}: all clients waited, so every end is a reply"
+            );
+            assert_eq!(e.b as usize, w.len());
+            let spliced = splice.get(&id).map(|s| s.a as usize).unwrap_or(0);
+            assert_eq!(
+                e.a as usize,
+                w.len() - spliced,
+                "request {id}: reply counts the positions replayed on-chip"
+            );
+            // chunk spans: same worker, nested in [admit, reply], tiling
+            // the window contiguously from the spliced prefix
+            let mut cs = chunks.remove(&id).expect("every request stepped");
+            cs.sort_by_key(|c| c.b);
+            let mut fed = spliced;
+            let mut chunk_sim_ns = 0.0f64;
+            for c in &cs {
+                assert_eq!(
+                    c.worker, a.worker,
+                    "request {id}: chunk stepped on a different worker than admitted"
+                );
+                assert!(
+                    c.t_start_us >= a.t_end_us && c.t_end_us <= e.t_end_us,
+                    "request {id}: chunk span escapes [admit, reply]"
+                );
+                assert_eq!(
+                    c.b as usize, fed,
+                    "request {id}: chunk does not continue where the last ended"
+                );
+                fed += c.a as usize;
+                chunk_sim_ns += c.sim_ns;
+            }
+            assert_eq!(fed, w.len(), "request {id}: chunks do not tile the window");
+            // the chunk events' modeled deltas partition the request's
+            // trace, so they sum to the reply's total (float association
+            // order is the only slack)
+            let tol = 1e-6 * e.sim_ns.max(1.0);
+            assert!(
+                (chunk_sim_ns - e.sim_ns).abs() <= tol,
+                "request {id}: chunk sim_ns {} != reply total {}",
+                chunk_sim_ns,
+                e.sim_ns
+            );
+        }
+        assert!(
+            chunks.is_empty(),
+            "chunk events recorded for unknown requests: {:?}",
+            chunks.keys().collect::<Vec<_>>()
+        );
+    });
+}
