@@ -7,7 +7,10 @@
 //! Reports host-wall-clock **tokens/sec** per strategy (the number the
 //! compiled-plan replay optimizes) with a **bit-block vs index-replay**
 //! comparison (the two pass-table encodings, DESIGN.md §6e — both are
-//! bit-identical, so the delta is pure replay-loop speed), plus a
+//! bit-identical, so the delta is pure replay-loop speed), an **analog
+//! mode overhead** check (DESIGN.md §6i — ideal `AnalogMode` must ride
+//! the bare path within noise and decode bit-identically, asserted
+//! un-timed; a noisy + ADC-capped chip prices the realism tax), plus a
 //! batched sweep (B ∈ {1..8} concurrent streams through one DenseMap
 //! chip via `BatchDecodeEngine::generate_batch` — the serving
 //! amortization, both encodings measured per B) and a
@@ -32,7 +35,7 @@
 //! BENCH_QUICK=1 ...                                          # CI smoke mode
 //! ```
 
-use monarch_cim::cim::CimParams;
+use monarch_cim::cim::{AnalogMode, CimParams, PcmNoise};
 use monarch_cim::mapping::Strategy;
 use monarch_cim::model::ModelConfig;
 use monarch_cim::sim::decode::{BatchDecodeEngine, DecodeEngine, DecodeModel};
@@ -136,6 +139,82 @@ fn main() {
                 ("modeled_ns_per_token", num(total.latency.critical_ns() / n_tok)),
                 ("modeled_nj_per_token", num(total.energy.total_nj() / n_tok)),
                 ("arrays", num(arrays as f64)),
+            ]),
+        ));
+    }
+
+    section("analog mode overhead — exact vs ideal vs noisy (DenseMap)");
+    // Analog realism (DESIGN.md §6i) corrupts cells at PROGRAMMING time;
+    // the replay loop itself only changes when an ADC cap actually
+    // bites. Ideal mode must therefore ride the bare path — within
+    // noise on wall-clock, and bit-identical on output (asserted,
+    // un-timed) — while a noisy + capped chip prices the realism tax.
+    {
+        let mut bare = DecodeEngine::on_chip(
+            DecodeModel::synth(cfg.clone(), 2025),
+            params.clone(),
+            Strategy::DenseMap,
+        );
+        let bare_m = b
+            .bench("dense decode 16 tokens (bare)", || {
+                std::hint::black_box(bare.generate(&PROMPT, TOKENS))
+            })
+            .clone();
+        let ideal = AnalogMode::ideal();
+        let mut ideal_eng = DecodeEngine::on_chip_analog(
+            DecodeModel::synth(cfg.clone(), 2025),
+            params.clone(),
+            Strategy::DenseMap,
+            Some(&ideal),
+        );
+        let ideal_m = b
+            .bench("dense decode 16 tokens (ideal analog)", || {
+                std::hint::black_box(ideal_eng.generate(&PROMPT, TOKENS))
+            })
+            .clone();
+        let noisy = AnalogMode {
+            noise: PcmNoise {
+                write_sigma: 0.01,
+                drift_nu: 0.05,
+                drift_time_ratio: 1.0e4,
+            },
+            adc_bits: Some(3),
+            seed: 7,
+        };
+        let mut noisy_eng = DecodeEngine::on_chip_analog(
+            DecodeModel::synth(cfg.clone(), 2025),
+            params.clone(),
+            Strategy::DenseMap,
+            Some(&noisy),
+        );
+        let noisy_m = b
+            .bench("dense decode 16 tokens (noisy analog)", || {
+                std::hint::black_box(noisy_eng.generate(&PROMPT, TOKENS))
+            })
+            .clone();
+        // one un-timed round: ideal mode must not change a single token
+        let rb = bare.generate(&PROMPT, TOKENS);
+        let ri = ideal_eng.generate(&PROMPT, TOKENS);
+        assert_eq!(
+            rb.tokens, ri.tokens,
+            "ideal analog mode must decode bit-identically to the bare path"
+        );
+        let bare_tps = passes / (bare_m.mean_ns * 1e-9);
+        let ideal_tps = passes / (ideal_m.mean_ns * 1e-9);
+        let noisy_tps = passes / (noisy_m.mean_ns * 1e-9);
+        let ideal_pct = (ideal_m.mean_ns / bare_m.mean_ns - 1.0) * 100.0;
+        let noisy_pct = (noisy_m.mean_ns / bare_m.mean_ns - 1.0) * 100.0;
+        println!(
+            "  -> bare {bare_tps:.0} / ideal {ideal_tps:.0} / noisy {noisy_tps:.0} tokens/s; ideal-mode overhead {ideal_pct:+.2}%, noisy {noisy_pct:+.2}% (outputs: ideal bit-identical)",
+        );
+        records.push((
+            "analog".to_string(),
+            obj(vec![
+                ("tokens_per_sec_bare", num(bare_tps)),
+                ("tokens_per_sec_ideal", num(ideal_tps)),
+                ("tokens_per_sec_noisy", num(noisy_tps)),
+                ("ideal_overhead_pct", num(ideal_pct)),
+                ("noisy_overhead_pct", num(noisy_pct)),
             ]),
         ));
     }

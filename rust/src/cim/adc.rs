@@ -100,6 +100,28 @@ mod tests {
     }
 
     #[test]
+    fn required_bits_zero_rows_and_powers_of_two() {
+        let p = CimParams::default();
+        // degenerate activation still needs one comparison step
+        assert_eq!(required_bits(&p, 0), 1);
+        // ceil(log2(rows + 1)) via rows - 1: exact powers of two need
+        // exactly log2(rows) bits, one past them rounds up
+        assert_eq!(required_bits(&p, 4), 2);
+        assert_eq!(required_bits(&p, 5), 3);
+        assert_eq!(required_bits(&p, 16), 4);
+        assert_eq!(required_bits(&p, 17), 5);
+        assert_eq!(required_bits(&p, 64), 6);
+    }
+
+    #[test]
+    fn required_bits_clamps_to_ref_bits_range() {
+        let mut p = CimParams::default();
+        p.adc_ref_bits = 4;
+        assert_eq!(required_bits(&p, 256), 4); // upper clamp tracks ref
+        assert_eq!(required_bits(&p, 1), 1); // lower clamp
+    }
+
+    #[test]
     fn area_proxy_monotone() {
         assert!(area_proxy(8) > area_proxy(5));
         assert_eq!(area_proxy(3), 8.0);

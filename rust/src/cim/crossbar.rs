@@ -263,6 +263,15 @@ pub fn quantize(v: f32, bits: u32, full_scale: f32) -> f32 {
     (v / step).round().clamp(-half, half) * step
 }
 
+/// Quantize a converted-column slice in place — the replay-path form of
+/// [`quantize`] (one shared full-scale per analog pass; the caller
+/// derives it from the array's programmed conductance range).
+pub fn quantize_slice(buf: &mut [f32], bits: u32, full_scale: f32) {
+    for v in buf.iter_mut() {
+        *v = quantize(*v, bits, full_scale);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

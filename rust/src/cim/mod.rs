@@ -15,4 +15,5 @@ pub mod params;
 pub use bitblocks::BitBlocks;
 pub use crossbar::Crossbar;
 pub use energy::{Cost, Energy, Latency};
+pub use noise::{AnalogMode, PcmNoise};
 pub use params::CimParams;

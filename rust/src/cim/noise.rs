@@ -52,6 +52,54 @@ impl PcmNoise {
     }
 }
 
+/// Opt-in analog realism for `FunctionalChip` replay (DESIGN.md §6i):
+/// programming-time cell corruption plus a replay-time ADC resolution
+/// cap.
+///
+/// Ideal settings (`write_sigma == 0`, inert drift, `adc_bits == None`)
+/// are bit-identical to the exact path **by construction**: corruption
+/// is skipped entirely (not applied with zero amplitude) and no
+/// quantization call happens, so the replay executes byte-for-byte the
+/// same instructions as a chip programmed without analog mode.
+#[derive(Clone, Debug)]
+pub struct AnalogMode {
+    /// PCM write noise + drift applied to every programmed crossbar.
+    pub noise: PcmNoise,
+    /// SAR ADC resolution cap; `None` means exact conversion (a SAR
+    /// converter at `bits >= adc::required_bits` resolves every
+    /// distinguishable bitline level, so the digital value is exact).
+    pub adc_bits: Option<u32>,
+    /// Root seed: array `i` corrupts from `Pcg32::stream(seed, i)`, so
+    /// the corrupted chip is a pure function of (weights, mapping,
+    /// seed) — independent of programming order, identical across
+    /// workers and shard stages programming the same arrays.
+    pub seed: u64,
+}
+
+impl Default for AnalogMode {
+    fn default() -> Self {
+        Self::ideal()
+    }
+}
+
+impl AnalogMode {
+    /// Noise-free, full-resolution configuration.
+    pub fn ideal() -> Self {
+        Self {
+            noise: PcmNoise::ideal(),
+            adc_bits: None,
+            seed: 0,
+        }
+    }
+
+    /// Whether programming should corrupt cells at all. Gated so ideal
+    /// settings never touch a cell (bit-identity by construction rather
+    /// than relying on `x + 0.0 * err == x` holding bitwise).
+    pub fn corrupts(&self) -> bool {
+        self.noise.write_sigma > 0.0 || self.noise.drift_factor() != 1.0
+    }
+}
+
 /// Apply programming noise + drift to a programmed crossbar in place.
 pub fn corrupt(xb: &mut Crossbar, noise: &PcmNoise, rng: &mut Pcg32) {
     let gmax = xb
@@ -163,6 +211,70 @@ mod tests {
                 assert_eq!(noisy.get(r, c), 0.0);
             }
         }
+    }
+
+    #[test]
+    fn all_zero_crossbar_is_a_noop() {
+        // gmax degenerates to the 1e-12 guard on a never-programmed
+        // array; every cell takes the zero-conductance skip.
+        let mut xb = Crossbar::new(16);
+        let mut rng = Pcg32::new(11);
+        let noise = PcmNoise {
+            write_sigma: 0.5,
+            drift_nu: 0.1,
+            drift_time_ratio: 10.0,
+        };
+        corrupt(&mut xb, &noise, &mut rng);
+        assert!(xb.cells.iter().all(|&c| c == 0.0));
+    }
+
+    #[test]
+    fn sigma_zero_leaves_cells_bitwise_untouched() {
+        // write_sigma = 0 with inert drift must not rewrite a single
+        // bit even though corrupt still walks every programmed cell.
+        let xb = programmed(12);
+        let mut noisy = xb.clone();
+        let mut rng = Pcg32::new(13);
+        let noise = PcmNoise {
+            write_sigma: 0.0,
+            drift_nu: 0.0,
+            drift_time_ratio: 1.0,
+        };
+        corrupt(&mut noisy, &noise, &mut rng);
+        for (a, b) in noisy.cells.iter().zip(&xb.cells) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn drift_factor_gates() {
+        let mut n = PcmNoise::ideal();
+        assert_eq!(n.drift_factor(), 1.0);
+        n.drift_nu = 0.05;
+        n.drift_time_ratio = 0.0; // degenerate ratio disables drift
+        assert_eq!(n.drift_factor(), 1.0);
+        n.drift_time_ratio = 1.0e4;
+        assert!(n.drift_factor() < 1.0);
+    }
+
+    #[test]
+    fn analog_mode_gating() {
+        assert!(!AnalogMode::ideal().corrupts());
+        // drift at t/t0 = 1 is inert: factor 1.0, no corruption pass
+        let at_t0 = AnalogMode {
+            noise: PcmNoise {
+                write_sigma: 0.0,
+                drift_nu: 0.05,
+                drift_time_ratio: 1.0,
+            },
+            ..AnalogMode::ideal()
+        };
+        assert!(!at_t0.corrupts());
+        let noisy = AnalogMode {
+            noise: PcmNoise::default(),
+            ..AnalogMode::ideal()
+        };
+        assert!(noisy.corrupts());
     }
 
     #[test]

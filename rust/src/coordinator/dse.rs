@@ -2,11 +2,24 @@
 //! budget, ADCs per array) pick the best mapping strategy — the
 //! "automated framework" closing step of Fig. 2a, extended with the
 //! §III-B1 swap-overhead model for constrained systems.
+//!
+//! [`explore`] sweeps the analytic envelope (strategy × ADC count ×
+//! array budget). [`explore_measured`] adds the accuracy axis: it sweeps
+//! strategy × ADC resolution cap × programming-noise sigma, pricing each
+//! point with the `scheduler::timing` cost model at the capped
+//! resolution and *measuring* its token-level divergence by replaying a
+//! teacher-forced window through a noise/ADC-aware functional chip
+//! ([`crate::cim::AnalogMode`]) against the exact one — the
+//! accuracy-vs-energy-vs-latency frontier the `dse` CLI subcommand
+//! writes to `BENCH_dse.json`.
 
-use crate::cim::CimParams;
+use crate::cim::{adc, AnalogMode, CimParams, PcmNoise};
 use crate::mapping::constrained::{constrained_token_latency_ns, swap_overhead, WriteCosts};
-use crate::mapping::{map_model, Strategy};
+use crate::mapping::{map_model, map_ops, Strategy};
 use crate::model::ModelConfig;
+use crate::scheduler::{adc_bits_for, compile_plan};
+use crate::sim::decode::{DecodeEngine, DecodeModel};
+use crate::sim::divergence::{compare_logits, Divergence};
 
 /// One evaluated design point.
 #[derive(Clone, Debug)]
@@ -65,6 +78,124 @@ pub fn best(points: &[DsePoint]) -> Option<&DsePoint> {
             .partial_cmp(&(b.token_latency_ns, b.energy_mj))
             .unwrap()
     })
+}
+
+/// One point of the measured accuracy-vs-energy-vs-latency frontier:
+/// analytic per-token cost with the ADC conversion components rescaled
+/// to the capped resolution (SAR conversion time and energy are linear
+/// in bits), plus the *measured* token-level divergence of a
+/// teacher-forced replay on a noise/ADC-aware chip vs the exact one.
+#[derive(Clone, Debug)]
+pub struct FrontierPoint {
+    pub strategy: Strategy,
+    /// ADC resolution cap wired into the replay (`None` = uncapped).
+    pub adc_bits: Option<u32>,
+    /// Resolution the cost model prices conversions at: the strategy's
+    /// natural §IV-B policy bits ([`adc_bits_for`]), clamped to the cap.
+    pub effective_bits: u32,
+    /// Programming (write) noise sigma swept into [`PcmNoise`].
+    pub write_sigma: f64,
+    /// Analytic per-token critical-path latency (ns) at `effective_bits`.
+    pub token_latency_ns: f64,
+    /// Analytic per-token energy (nJ) at `effective_bits`.
+    pub energy_nj: f64,
+    /// Fraction of one full-model replay's conversions the cap actually
+    /// re-quantizes (`required_bits(conv_depth) > cap`), from the
+    /// compiled plan's conversion-depth histogram.
+    pub quantized_frac: f64,
+    /// Measured divergence from the exact engine over the token window.
+    pub divergence: Divergence,
+}
+
+impl FrontierPoint {
+    /// Whether the point's analog settings are ideal — no programming
+    /// noise and no conversion below its exact resolution. Such points
+    /// are bit-identical to the exact path by construction, so they must
+    /// measure zero divergence; the `dse` CLI's `--gate-ideal` flag (and
+    /// CI) asserts exactly that.
+    pub fn is_ideal(&self) -> bool {
+        self.write_sigma == 0.0 && self.quantized_frac == 0.0
+    }
+}
+
+/// Sweep strategy × ADC resolution cap × write-noise sigma on a
+/// synthesized decoder, measuring each point's token-level divergence
+/// against the exact engine over the teacher-forced `tokens` window.
+///
+/// Latency/energy come from the analytic per-token cost model with the
+/// ADC components scaled by `effective_bits / natural_bits` — exact
+/// under the linear SAR conversion model and deliberately *not* done by
+/// shrinking `CimParams::adc_ref_bits`, which would silently rescale the
+/// reference pricing and disable the replay's quantization gate at the
+/// same time. Noise is seeded per `noise_seed`, so the whole frontier is
+/// deterministic; drift is left off (the `decode` CLI exposes it
+/// separately) to keep sigma the only accuracy knob besides the cap.
+pub fn explore_measured(
+    cfg: &ModelConfig,
+    params: &CimParams,
+    model_seed: u64,
+    noise_seed: u64,
+    adc_caps: &[Option<u32>],
+    sigmas: &[f64],
+    tokens: &[i32],
+) -> Vec<FrontierPoint> {
+    assert!(!tokens.is_empty(), "need a non-empty scoring window");
+    let mut out = Vec::new();
+    for strategy in Strategy::all() {
+        let model = DecodeModel::synth(cfg.clone(), model_seed);
+        let mapping = map_ops(cfg, &model.ops, params, strategy);
+        let hist = compile_plan(&mapping).conversion_depth_histogram();
+        let total_convs: usize = hist.iter().sum();
+        let natural = adc_bits_for(params, strategy, mapping.b);
+        let per_token = crate::scheduler::timing::per_token_cost(cfg, &mapping, params);
+        let mut exact = DecodeEngine::on_chip(model, params.clone(), strategy);
+        let (exact_logits, _) = exact.score(tokens);
+        drop(exact);
+        for &cap in adc_caps {
+            let effective = cap.map_or(natural, |c| c.clamp(1, natural));
+            let ratio = effective as f64 / natural as f64;
+            let token_latency_ns =
+                per_token.latency.critical_ns() - per_token.latency.adc_ns * (1.0 - ratio);
+            let energy_nj =
+                per_token.energy.total_nj() - per_token.energy.adc_nj * (1.0 - ratio);
+            let quantized: usize = match cap {
+                None => 0,
+                Some(bits) => hist
+                    .iter()
+                    .enumerate()
+                    .filter(|&(depth, _)| adc::required_bits(params, depth) > bits)
+                    .map(|(_, &cols)| cols)
+                    .sum(),
+            };
+            let quantized_frac = quantized as f64 / total_convs.max(1) as f64;
+            for &sigma in sigmas {
+                let mode = AnalogMode {
+                    noise: PcmNoise {
+                        write_sigma: sigma,
+                        drift_nu: 0.0,
+                        drift_time_ratio: 1.0,
+                    },
+                    adc_bits: cap,
+                    seed: noise_seed,
+                };
+                let model = DecodeModel::synth(cfg.clone(), model_seed);
+                let mut analog =
+                    DecodeEngine::on_chip_analog(model, params.clone(), strategy, Some(&mode));
+                let (analog_logits, _) = analog.score(tokens);
+                out.push(FrontierPoint {
+                    strategy,
+                    adc_bits: cap,
+                    effective_bits: effective,
+                    write_sigma: sigma,
+                    token_latency_ns,
+                    energy_nj,
+                    quantized_frac,
+                    divergence: compare_logits(&exact_logits, &analog_logits, tokens, cfg.vocab),
+                });
+            }
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -126,5 +257,89 @@ mod tests {
         );
         assert_eq!(pts.len(), 6);
         assert!(pts.iter().all(|p| p.token_latency_ns > 0.0));
+    }
+
+    #[test]
+    fn explore_flags_infeasible_points_without_dropping_them() {
+        // a budget only DenseMap fits must not shrink the grid: every
+        // strategy x ADC-count point stays, just marked infeasible
+        let pts = explore(
+            &ModelConfig::bert_large(),
+            &[1, 32],
+            Some(512),
+            &WriteCosts::default(),
+        );
+        assert_eq!(pts.len(), 2 * Strategy::all().len());
+        assert!(pts.iter().any(|p| !p.fits_budget), "budget never binds");
+        assert!(pts.iter().any(|p| p.fits_budget), "budget kills everything");
+        for p in &pts {
+            assert_eq!(p.array_budget, Some(512));
+            assert!(p.token_latency_ns > 0.0, "{p:?} dropped from pricing");
+        }
+    }
+
+    #[test]
+    fn measured_frontier_covers_grid_and_ideal_points_are_exact() {
+        let cfg = ModelConfig::tiny();
+        let params = CimParams::default();
+        let caps = [None, Some(2)];
+        let sigmas = [0.0, 0.05];
+        let tokens = [11i32, 48, 85, 122];
+        let pts = explore_measured(&cfg, &params, 3, 17, &caps, &sigmas, &tokens);
+        assert_eq!(
+            pts.len(),
+            Strategy::all().len() * caps.len() * sigmas.len()
+        );
+        for p in &pts {
+            assert!((0.0..=1.0).contains(&p.quantized_frac), "{p:?}");
+            assert!(p.token_latency_ns > 0.0 && p.energy_nj > 0.0, "{p:?}");
+            assert_eq!(p.divergence.positions, tokens.len(), "{p:?}");
+            if p.adc_bits.is_none() {
+                assert_eq!(p.quantized_frac, 0.0, "uncapped point quantizes");
+            }
+            if p.is_ideal() {
+                assert!(
+                    p.divergence.is_exact(),
+                    "ideal point diverged: {p:?}"
+                );
+            }
+        }
+        // a 2-bit cap sits below every strategy's exact-conversion
+        // resolution on tiny (8-deep Monarch bitlines need 3 bits), so
+        // it must both re-quantize conversions and measurably diverge
+        for p in pts.iter().filter(|p| p.adc_bits == Some(2)) {
+            assert!(p.quantized_frac > 0.0, "{p:?}");
+            assert!(!p.divergence.is_exact(), "{p:?}");
+        }
+        // noise alone must diverge too
+        for p in pts.iter().filter(|p| p.write_sigma > 0.0) {
+            assert!(p.divergence.max_abs_logit_err > 0.0, "{p:?}");
+        }
+    }
+
+    #[test]
+    fn measured_frontier_prices_caps_cheaper_never_slower() {
+        let cfg = ModelConfig::tiny();
+        let params = CimParams::default();
+        let tokens = [5i32, 9];
+        let pts =
+            explore_measured(&cfg, &params, 3, 17, &[None, Some(2)], &[0.0], &tokens);
+        for s in Strategy::all() {
+            let full = pts
+                .iter()
+                .find(|p| p.strategy == s && p.adc_bits.is_none())
+                .unwrap();
+            let capped = pts
+                .iter()
+                .find(|p| p.strategy == s && p.adc_bits == Some(2))
+                .unwrap();
+            assert_eq!(full.effective_bits, adc_bits_for(&params, s, 8));
+            assert_eq!(capped.effective_bits, 2, "{s:?}");
+            assert!(capped.energy_nj < full.energy_nj, "{s:?} cap not cheaper");
+            assert!(
+                capped.token_latency_ns <= full.token_latency_ns,
+                "{s:?} cap slower"
+            );
+        }
     }
 }

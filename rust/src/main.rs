@@ -17,6 +17,11 @@
 //!   prefix against the multi-worker CIM-sim server; SLO-grade metrics
 //!   (TTFT / inter-token p99, prefix-cache hit rate, per-worker
 //!   occupancy) land in `BENCH_serve.json`.
+//! * `dse [--adc-bits 3,5,8] [--sigmas 0,0.01]` — analytic strategy/ADC
+//!   sweep plus the measured accuracy-vs-energy-vs-latency frontier
+//!   (noise/ADC-aware analog replay vs the exact chip), written to
+//!   `BENCH_dse.json`; `--gate-ideal` makes zero-divergence-at-ideal a
+//!   hard exit code (the CI gate).
 //! * `e2e` — pipeline + runtime round-trip summary.
 
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -53,6 +58,11 @@ fn usage() -> ! {
                     cross-checked bit-for-bit vs plain greedy)\n\
                     [--shards N]  (layer-sharded pipeline across N chips,\n\
                     cross-checked bit-for-bit vs the single-chip engine)\n\
+                    [--noise-sigma S] [--drift-nu NU] [--drift-t-ratio R]\n\
+                    [--adc-bits B] [--noise-seed N]  (analog realism: PCM\n\
+                    write noise/drift corrupts the programmed cells, a\n\
+                    B-bit SAR cap quantizes replay conversions; reports\n\
+                    measured divergence vs the exact chip)\n\
                     [--trace-out FILE]  (Perfetto timeline of the modeled\n\
                     chip passes, one track per strategy)\n\
            serve    [--requests 64] [--artifacts DIR] [--backend pjrt|cim-sim]\n\
@@ -71,6 +81,12 @@ fn usage() -> ! {
                     (ragged clients sharing a P-token system prompt;\n\
                     TTFT/inter-token p99 + prefix hit rate to JSON)\n\
            dse      [--model ...] [--adcs 1,4,8,16,32] [--budget N]\n\
+                    [--adc-bits 3,5,8] [--sigmas 0,0.01] [--dse-tokens 8]\n\
+                    [--seed 2025] [--noise-seed 2025]\n\
+                    [--out BENCH_dse.json] [--gate-ideal]\n\
+                    (measured accuracy-vs-energy-vs-latency frontier on a\n\
+                    decoder-only model; --gate-ideal exits non-zero if an\n\
+                    ideal point diverges — the CI smoke gate)\n\
            e2e      [--artifacts DIR]"
     );
     std::process::exit(2);
@@ -238,7 +254,9 @@ fn cmd_simulate(args: &Args) {
 }
 
 fn cmd_decode(args: &Args) {
+    use monarch_cim::cim::{AnalogMode, PcmNoise};
     use monarch_cim::sim::decode::{BatchDecodeEngine, DecodeEngine, DecodeModel};
+    use monarch_cim::sim::measure_divergence;
     use monarch_cim::sim::speculate::{
         self_draft_layers, self_draft_model, SpeculativeEngine,
     };
@@ -270,6 +288,27 @@ fn cmd_decode(args: &Args) {
     let draft_layers = args.usize_or("draft-layers", 0);
     let shards = args.usize_or("shards", 1).max(1);
     let seed = args.usize_or("seed", 2025) as u64;
+    // opt-in analog realism (DESIGN.md §6i): PCM write noise/drift
+    // corrupt the programmed cells; an ADC cap quantizes replay
+    // conversions. Absent flags keep the exact bit-identical path.
+    let noise_sigma = args.f64_or("noise-sigma", 0.0);
+    let drift_nu = args.f64_or("drift-nu", 0.0);
+    let drift_t_ratio = args.f64_or("drift-t-ratio", 1.0e4);
+    let adc_cap = args
+        .has("adc-bits")
+        .then(|| args.usize_or("adc-bits", 8) as u32);
+    let noise_seed = args.usize_or("noise-seed", 2025) as u64;
+    let analog_mode = (noise_sigma > 0.0 || drift_nu > 0.0 || adc_cap.is_some()).then(|| {
+        AnalogMode {
+            noise: PcmNoise {
+                write_sigma: noise_sigma,
+                drift_nu,
+                drift_time_ratio: drift_t_ratio,
+            },
+            adc_bits: adc_cap,
+            seed: noise_seed,
+        }
+    });
     let mut cim = CimParams::default();
     if args.has("adcs") {
         cim = cim.with_adcs_per_array(args.usize_or("adcs", 1));
@@ -355,6 +394,37 @@ fn cmd_decode(args: &Args) {
                 "(EXCEEDS 1e-5)"
             },
         );
+        if let Some(mode) = &analog_mode {
+            // analog replay on the same model/strategy: generate under
+            // noise + cap, then measure teacher-forced divergence vs
+            // the exact chip engine over the reference window
+            let mut analog = DecodeEngine::on_chip_analog(
+                DecodeModel::synth(cfg.clone(), seed),
+                cim.clone(),
+                strategy,
+                Some(mode),
+            );
+            let ar = analog.generate(&prompt, n_tokens);
+            println!(
+                "  analog replay (sigma={noise_sigma}, nu={drift_nu}, t/t0={drift_t_ratio}, adc={}):",
+                mode.adc_bits
+                    .map(|b| format!("{b}b"))
+                    .unwrap_or_else(|| "exact".into()),
+            );
+            println!("    tokens: {:?}", ar.tokens);
+            let d = measure_divergence(&mut eng, &mut analog, &window);
+            println!(
+                "    divergence vs exact chip ({} forced positions): first {} | agreement {:.3} | max|dlogit| {:.3e} | rms {:.3e} | dppl {:+.4e}",
+                d.positions,
+                d.first_divergence
+                    .map(|p| p.to_string())
+                    .unwrap_or_else(|| "none".into()),
+                d.token_agreement,
+                d.max_abs_logit_err,
+                d.rms_logit_err,
+                d.ppl_delta,
+            );
+        }
     }
 
     if batch > 1 {
@@ -973,8 +1043,9 @@ fn cmd_serve_load(args: &Args) {
 }
 
 fn cmd_dse(args: &Args) {
-    use monarch_cim::coordinator::dse::{best, explore};
+    use monarch_cim::coordinator::dse::{best, explore, explore_measured};
     use monarch_cim::mapping::constrained::WriteCosts;
+    use monarch_cim::util::json::{arr, num, obj, s as js, Json};
     let model = model_of(args);
     let adcs = args.usize_list_or("adcs", &[1, 4, 8, 16, 32]);
     let budget = args.get("budget").map(|_| args.usize_or("budget", 512));
@@ -1006,6 +1077,150 @@ fn cmd_dse(args: &Args) {
             b.adcs_per_array,
             b.token_latency_ns / 1e3
         );
+    }
+
+    // Measured accuracy-vs-energy-vs-latency frontier (DESIGN.md §6i):
+    // needs a decoder-only model to replay — fall back to tiny when the
+    // analytic sweep targeted an encoder config.
+    let frontier_cfg = if model.enc_layers == 0 && model.dec_layers > 0 {
+        model.clone()
+    } else {
+        println!(
+            "\n'{}' is not decoder-only; measuring the analog frontier on 'tiny'",
+            model.name
+        );
+        ModelConfig::tiny()
+    };
+    let params = CimParams::default();
+    let caps: Vec<Option<u32>> = std::iter::once(None)
+        .chain(
+            args.usize_list_or("adc-bits", &[3, 5, 8])
+                .into_iter()
+                .map(|b| Some(b as u32)),
+        )
+        .collect();
+    let sigmas = args.f64_list_or("sigmas", &[0.0, 0.01]);
+    let window = args.usize_or("dse-tokens", 8).clamp(2, frontier_cfg.seq);
+    let model_seed = args.usize_or("seed", 2025) as u64;
+    let noise_seed = args.usize_or("noise-seed", 2025) as u64;
+    let tokens: Vec<i32> = (0..window)
+        .map(|i| ((i * 37 + 11) % frontier_cfg.vocab) as i32)
+        .collect();
+    println!(
+        "\nmeasured analog frontier on {} ({} strategies x {} ADC caps x {} sigmas, {}-token window):",
+        frontier_cfg.name,
+        Strategy::all().len(),
+        caps.len(),
+        sigmas.len(),
+        window
+    );
+    let front = explore_measured(
+        &frontier_cfg,
+        &params,
+        model_seed,
+        noise_seed,
+        &caps,
+        &sigmas,
+        &tokens,
+    );
+    let mut ft = monarch_cim::util::table::Table::new([
+        "strategy",
+        "cap",
+        "eff bits",
+        "sigma",
+        "quantized",
+        "µs/token",
+        "nJ/token",
+        "agree",
+        "max|dlogit|",
+        "dppl",
+    ]);
+    for p in &front {
+        ft.row([
+            p.strategy.name().to_string(),
+            p.adc_bits
+                .map(|b| format!("{b}b"))
+                .unwrap_or_else(|| "-".into()),
+            p.effective_bits.to_string(),
+            format!("{}", p.write_sigma),
+            format!("{:.2}", p.quantized_frac),
+            format!("{:.3}", p.token_latency_ns / 1e3),
+            format!("{:.1}", p.energy_nj),
+            format!("{:.3}", p.divergence.token_agreement),
+            format!("{:.2e}", p.divergence.max_abs_logit_err),
+            format!("{:+.3e}", p.divergence.ppl_delta),
+        ]);
+    }
+    ft.print();
+
+    // ideal-settings gate: points with no noise and no biting cap are
+    // bit-identical to the exact path by construction, so any measured
+    // divergence there is a bug — CI asserts via --gate-ideal
+    let ideal_broken: Vec<_> = front
+        .iter()
+        .filter(|p| p.is_ideal() && !p.divergence.is_exact())
+        .collect();
+    for p in &ideal_broken {
+        eprintln!(
+            "FAIL: ideal frontier point diverged: {} cap {:?} sigma {}",
+            p.strategy.name(),
+            p.adc_bits,
+            p.write_sigma
+        );
+    }
+
+    let out = args.str_or("out", "BENCH_dse.json");
+    let json = obj(vec![
+        ("bench", js("dse_frontier")),
+        ("model", js(frontier_cfg.name)),
+        ("window_tokens", num(window as f64)),
+        ("model_seed", num(model_seed as f64)),
+        ("noise_seed", num(noise_seed as f64)),
+        ("sigmas", arr(sigmas.iter().map(|&x| num(x)))),
+        (
+            "adc_caps",
+            arr(caps
+                .iter()
+                .map(|c| c.map(|b| num(b as f64)).unwrap_or(Json::Null))),
+        ),
+        (
+            "points",
+            arr(front.iter().map(|p| {
+                obj(vec![
+                    ("strategy", js(p.strategy.name())),
+                    (
+                        "adc_bits",
+                        p.adc_bits.map(|b| num(b as f64)).unwrap_or(Json::Null),
+                    ),
+                    ("effective_bits", num(p.effective_bits as f64)),
+                    ("write_sigma", num(p.write_sigma)),
+                    ("token_latency_ns", num(p.token_latency_ns)),
+                    ("energy_nj_per_token", num(p.energy_nj)),
+                    ("quantized_frac", num(p.quantized_frac)),
+                    ("ideal", Json::Bool(p.is_ideal())),
+                    ("exact", Json::Bool(p.divergence.is_exact())),
+                    (
+                        "first_divergence",
+                        p.divergence
+                            .first_divergence
+                            .map(|i| num(i as f64))
+                            .unwrap_or(Json::Null),
+                    ),
+                    ("token_agreement", num(p.divergence.token_agreement)),
+                    ("max_abs_logit_err", num(p.divergence.max_abs_logit_err)),
+                    ("rms_logit_err", num(p.divergence.rms_logit_err)),
+                    ("ppl_delta", num(p.divergence.ppl_delta)),
+                ])
+            })),
+        ),
+    ]);
+    if let Err(e) = std::fs::write(&out, json.to_pretty() + "\n") {
+        eprintln!("failed to write {out}: {e}");
+        std::process::exit(1);
+    }
+    println!("wrote {out} ({} frontier points)", front.len());
+    if args.has("gate-ideal") && !ideal_broken.is_empty() {
+        std::process::exit(1);
     }
 }
 

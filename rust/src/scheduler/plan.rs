@@ -58,6 +58,15 @@ pub struct CompiledPass {
     pub cols: Vec<usize>,
     /// Offset of this pass's output segment in the stage output vector.
     pub dst: usize,
+    /// Per-bitline accumulation depth: the most programmed cells any
+    /// converted column sums over this pass. Monarch passes convert
+    /// block-diagonal columns (`b` cells each, regardless of how many
+    /// blocks the pass drives); Linear tiles accumulate one cell per
+    /// nonzero-driven row (`n_in`). This — not the driven-row count —
+    /// is what sizes the exact-conversion ADC resolution
+    /// (`cim::adc::required_bits`), mirroring the §IV-B per-strategy
+    /// resolution policy (`scheduler::adc_bits_for`).
+    pub conv_depth: usize,
     /// Bit-block encoding of `rows` over universe `0..m` (one u64 word
     /// per 64 array rows + per-word dense-offset prefix sums) — what
     /// the default replay iterates.
@@ -73,6 +82,7 @@ impl CompiledPass {
     /// column lists (SparseMap places on the main diagonal, the
     /// DenseMap walk is block-granular, Linear converts an identity
     /// prefix), so the encoding is exact — `from_sorted` asserts it.
+    #[allow(clippy::too_many_arguments)]
     fn new(
         array: usize,
         rows: Vec<usize>,
@@ -80,6 +90,7 @@ impl CompiledPass {
         src: usize,
         cols: Vec<usize>,
         dst: usize,
+        conv_depth: usize,
         m: usize,
     ) -> CompiledPass {
         let row_bits = BitBlocks::from_sorted(&rows, m);
@@ -91,6 +102,7 @@ impl CompiledPass {
             src,
             cols,
             dst,
+            conv_depth,
             row_bits,
             col_bits,
         }
@@ -147,6 +159,22 @@ impl ModelPlan {
     /// tokens/sec so the amortization claim is inspectable.
     pub fn total_passes(&self) -> usize {
         self.ops.iter().map(|o| o.passes.len()).sum()
+    }
+
+    /// Histogram of ADC conversions by per-bitline accumulation depth:
+    /// `hist[depth]` counts the converted columns whose bitline sums
+    /// `depth` programmed cells over one full-model replay. The analog
+    /// DSE (`coordinator::dse`) reads this to report what fraction of a
+    /// replay's conversions a resolution cap actually re-quantizes
+    /// (`cim::adc::required_bits(depth) > cap`).
+    pub fn conversion_depth_histogram(&self) -> Vec<usize> {
+        let mut hist = vec![0usize; self.m + 1];
+        for op in &self.ops {
+            for pass in &op.passes {
+                hist[pass.conv_depth.min(self.m)] += pass.cols.len();
+            }
+        }
+        hist
     }
 }
 
@@ -208,6 +236,8 @@ fn compile_linear_op(
             // output tile; the command stream still converts all m.
             pass.cols[..rows_here].to_vec(),
             rp * m,
+            // dense tile: every nonzero-driven row feeds every bitline
+            cols_here,
             m,
         ));
     }
@@ -292,7 +322,7 @@ fn push_factor_passes(
                 let off = (base + j) * b;
                 let n_in = pass.rows.len();
                 passes.push(CompiledPass::new(
-                    p.array, pass.rows, n_in, off, pass.cols, off, m,
+                    p.array, pass.rows, n_in, off, pass.cols, off, b, m,
                 ));
             }
         } else {
@@ -303,8 +333,11 @@ fn push_factor_passes(
             let pass = sched.passes.into_iter().next().expect("schedule has a pass");
             let off = base * b;
             let n_in = pass.rows.len();
+            // Block-diagonal: however many blocks the whole-lane pass
+            // drives, each converted column sums only its own block's
+            // b cells.
             passes.push(CompiledPass::new(
-                p.array, pass.rows, n_in, off, pass.cols, off, m,
+                p.array, pass.rows, n_in, off, pass.cols, off, b, m,
             ));
         }
     }
@@ -406,6 +439,51 @@ mod tests {
                         assert_eq!(pass.col_bits.rank(c), k, "{strategy:?} col");
                     }
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn conv_depth_is_block_dim_for_monarch_and_n_in_for_linear() {
+        let cfg = ModelConfig::tiny();
+        let params = CimParams::default();
+        for strategy in Strategy::all() {
+            let mm = map_model(&cfg, &params, strategy);
+            let plan = compile_plan(&mm);
+            for op in &plan.ops {
+                for pass in &op.passes {
+                    let want = match strategy {
+                        Strategy::Linear => pass.n_in,
+                        _ => mm.b,
+                    };
+                    assert_eq!(pass.conv_depth, want, "{strategy:?}");
+                    assert!(pass.conv_depth <= mm.m, "{strategy:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn conversion_depth_histogram_counts_every_converted_column() {
+        let cfg = ModelConfig::tiny();
+        let params = CimParams::default();
+        for strategy in Strategy::all() {
+            let mm = map_model(&cfg, &params, strategy);
+            let plan = compile_plan(&mm);
+            let hist = plan.conversion_depth_histogram();
+            assert_eq!(hist.len(), mm.m + 1);
+            let total: usize = hist.iter().sum();
+            let by_hand: usize = plan
+                .ops
+                .iter()
+                .flat_map(|o| o.passes.iter())
+                .map(|p| p.cols.len())
+                .sum();
+            assert_eq!(total, by_hand, "{strategy:?}");
+            if strategy != Strategy::Linear {
+                // Monarch strategies convert only b-deep bitlines
+                let at_b: usize = hist[mm.b];
+                assert_eq!(at_b, total, "{strategy:?} all depth-b");
             }
         }
     }

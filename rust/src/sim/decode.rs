@@ -48,7 +48,7 @@
 
 use std::collections::HashMap;
 
-use crate::cim::{CimParams, Cost};
+use crate::cim::{AnalogMode, CimParams, Cost};
 use crate::mapping::Strategy;
 use crate::model::{para_ops, MatmulOp, ModelConfig};
 use crate::monarch::{MonarchMatrix, RectMonarch};
@@ -383,12 +383,26 @@ impl DecodeEngine {
         params: CimParams,
         strategy: Strategy,
     ) -> DecodeEngine {
-        let chip = FunctionalChip::program_rect(
+        Self::on_chip_analog(model, params, strategy, None)
+    }
+
+    /// [`DecodeEngine::on_chip`] with opt-in analog realism: the chip is
+    /// programmed under `analog` (seeded PCM corruption + replay-time
+    /// ADC cap, DESIGN.md §6i). `None` — and `Some(&AnalogMode::ideal())`,
+    /// by construction — decode bit-identically to the exact path.
+    pub fn on_chip_analog(
+        model: DecodeModel,
+        params: CimParams,
+        strategy: Strategy,
+        analog: Option<&AnalogMode>,
+    ) -> DecodeEngine {
+        let chip = FunctionalChip::program_rect_analog(
             &model.cfg,
             &model.ops,
             &model.weights,
             &params,
             strategy,
+            analog,
         );
         let layers = model.cfg.dec_layers;
         let bufs = EngineBufs::new(&model.cfg);
@@ -406,6 +420,15 @@ impl DecodeEngine {
     pub fn mapping(&self) -> Option<&crate::mapping::ModelMapping> {
         match &self.backend {
             ParaBackend::Chip(c) => Some(&c.mapping),
+            ParaBackend::Reference => None,
+        }
+    }
+
+    /// The chip's analog mode (None on the reference backend or when
+    /// programmed without one).
+    pub fn analog_mode(&self) -> Option<&AnalogMode> {
+        match &self.backend {
+            ParaBackend::Chip(c) => c.analog_mode(),
             ParaBackend::Reference => None,
         }
     }
@@ -699,12 +722,27 @@ impl BatchDecodeEngine {
         strategy: Strategy,
         capacity: usize,
     ) -> BatchDecodeEngine {
-        let chip = FunctionalChip::program_rect(
+        Self::on_chip_analog(model, params, strategy, capacity, None)
+    }
+
+    /// [`BatchDecodeEngine::on_chip`] with opt-in analog realism (seeded
+    /// PCM corruption + replay-time ADC cap, DESIGN.md §6i). `None` — and
+    /// `Some(&AnalogMode::ideal())`, by construction — step
+    /// bit-identically to the exact path, lane for lane.
+    pub fn on_chip_analog(
+        model: DecodeModel,
+        params: CimParams,
+        strategy: Strategy,
+        capacity: usize,
+        analog: Option<&AnalogMode>,
+    ) -> BatchDecodeEngine {
+        let chip = FunctionalChip::program_rect_analog(
             &model.cfg,
             &model.ops,
             &model.weights,
             &params,
             strategy,
+            analog,
         );
         Self::with_backend(model, ParaBackend::Chip(Box::new(chip)), params, capacity)
     }
@@ -723,8 +761,26 @@ impl BatchDecodeEngine {
         capacity: usize,
         shards: usize,
     ) -> BatchDecodeEngine {
+        Self::sharded_analog(model, params, strategy, capacity, shards, None)
+    }
+
+    /// [`BatchDecodeEngine::sharded`] with opt-in analog realism: every
+    /// stage chip is programmed under the same [`AnalogMode`]
+    /// ([`ShardedBackend::program_analog`]). Ideal settings are
+    /// bit-identical to the exact sharded path (and so to mono replay);
+    /// noisy settings corrupt per stage chip, so they only promise
+    /// determinism across reprogrammings, not bit-equality to mono.
+    pub fn sharded_analog(
+        model: DecodeModel,
+        params: CimParams,
+        strategy: Strategy,
+        capacity: usize,
+        shards: usize,
+        analog: Option<&AnalogMode>,
+    ) -> BatchDecodeEngine {
         assert!(capacity >= 1, "need at least one sequence slot");
-        let sharded = ShardedBackend::program(&model, &params, strategy, shards, capacity);
+        let sharded =
+            ShardedBackend::program_analog(&model, &params, strategy, shards, capacity, analog);
         let slots: Vec<BatchSlot> =
             (0..capacity).map(|_| BatchSlot::new(&model.cfg)).collect();
         let ws = ChunkWorkspace::new(&model.cfg, capacity);

@@ -1,0 +1,197 @@
+//! Token-level divergence of an analog decode vs the exact path
+//! (DESIGN.md §6i): given the teacher-forced logit streams of two
+//! engines over the same token window, quantify how far device noise
+//! and the ADC resolution cap push the model off the exact trajectory.
+//!
+//! Metrics (all over the same `tokens` window, scored with
+//! [`crate::sim::decode::DecodeEngine::score`]):
+//!
+//! * **first divergence** — earliest position whose greedy (argmax)
+//!   token differs (`None` when every position agrees); the position a
+//!   greedy generation would first emit a different token.
+//! * **token agreement** — fraction of positions whose argmax agrees.
+//! * **logit error** — max-abs and RMS error over every (position,
+//!   vocab) logit.
+//! * **perplexity delta** — teacher-forced perplexity of the analog
+//!   stream minus the exact stream's, using each position's logits
+//!   against the next forced token (`positions - 1` targets).
+//!
+//! At ideal analog settings the two streams are bit-identical by
+//! construction, so every metric is exactly zero — pinned by
+//! `tests/prop_analog.rs`.
+
+use crate::sim::decode::{argmax, DecodeEngine};
+
+/// Divergence of an analog logit stream from the exact one.
+#[derive(Clone, Debug, Default)]
+pub struct Divergence {
+    /// Positions compared (the scored token window's length).
+    pub positions: usize,
+    /// Earliest position whose argmax token differs; `None` = full
+    /// agreement.
+    pub first_divergence: Option<usize>,
+    /// Fraction of positions whose argmax token agrees (1.0 = all).
+    pub token_agreement: f64,
+    /// Max |logit difference| over every (position, vocab) entry.
+    pub max_abs_logit_err: f64,
+    /// RMS logit difference over every (position, vocab) entry.
+    pub rms_logit_err: f64,
+    /// Teacher-forced perplexity of the analog stream minus the exact
+    /// stream's (positive = noise made the forced window less likely).
+    pub ppl_delta: f64,
+}
+
+impl Divergence {
+    /// Whether the analog stream matched the exact one everywhere —
+    /// what ideal analog settings must produce (bit-identity implies
+    /// all-zero metrics, so this is `== 0.0`, not a tolerance check).
+    pub fn is_exact(&self) -> bool {
+        self.first_divergence.is_none()
+            && self.max_abs_logit_err == 0.0
+            && self.rms_logit_err == 0.0
+            && self.ppl_delta == 0.0
+    }
+}
+
+/// Teacher-forced perplexity of a vocab-strided logit stream: position
+/// `p`'s logits predict token `p + 1`, so the window contributes
+/// `len - 1` log-probs; `exp(-mean log softmax(target))`. Returns 1.0
+/// (the empty-product perplexity) for windows of fewer than two tokens.
+pub fn teacher_forced_ppl(logits: &[f32], tokens: &[i32], vocab: usize) -> f64 {
+    assert_eq!(logits.len(), tokens.len() * vocab, "vocab-strided stream");
+    if tokens.len() < 2 {
+        return 1.0;
+    }
+    let mut nll = 0.0f64;
+    for p in 0..tokens.len() - 1 {
+        let row = &logits[p * vocab..(p + 1) * vocab];
+        let target = (tokens[p + 1].max(0) as usize).min(vocab - 1);
+        // log softmax with the usual max-shift for stability
+        let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b)) as f64;
+        let z: f64 = row.iter().map(|&v| (v as f64 - m).exp()).sum();
+        nll -= row[target] as f64 - m - z.ln();
+    }
+    (nll / (tokens.len() - 1) as f64).exp()
+}
+
+/// Compare two vocab-strided teacher-forced logit streams over the same
+/// token window. `exact` is the reference; `analog` the stream under
+/// test.
+pub fn compare_logits(
+    exact: &[f32],
+    analog: &[f32],
+    tokens: &[i32],
+    vocab: usize,
+) -> Divergence {
+    let n = tokens.len();
+    assert_eq!(exact.len(), n * vocab, "exact stream must be vocab-strided");
+    assert_eq!(analog.len(), n * vocab, "analog stream must be vocab-strided");
+    assert!(n > 0, "need at least one scored position");
+    let mut first = None;
+    let mut agree = 0usize;
+    let mut max_abs = 0.0f64;
+    let mut sq_sum = 0.0f64;
+    for p in 0..n {
+        let er = &exact[p * vocab..(p + 1) * vocab];
+        let ar = &analog[p * vocab..(p + 1) * vocab];
+        if argmax(er) == argmax(ar) {
+            agree += 1;
+        } else if first.is_none() {
+            first = Some(p);
+        }
+        for (e, a) in er.iter().zip(ar) {
+            let d = (*e as f64 - *a as f64).abs();
+            max_abs = max_abs.max(d);
+            sq_sum += d * d;
+        }
+    }
+    Divergence {
+        positions: n,
+        first_divergence: first,
+        token_agreement: agree as f64 / n as f64,
+        max_abs_logit_err: max_abs,
+        rms_logit_err: (sq_sum / (n * vocab) as f64).sqrt(),
+        ppl_delta: teacher_forced_ppl(analog, tokens, vocab)
+            - teacher_forced_ppl(exact, tokens, vocab),
+    }
+}
+
+/// Score `tokens` teacher-forced on both engines and compare the
+/// streams. Both engines are reset by `score`; they must share the same
+/// model configuration (same vocab).
+pub fn measure_divergence(
+    exact: &mut DecodeEngine,
+    analog: &mut DecodeEngine,
+    tokens: &[i32],
+) -> Divergence {
+    let vocab = exact.model.cfg.vocab;
+    assert_eq!(
+        vocab, analog.model.cfg.vocab,
+        "engines must share a vocabulary"
+    );
+    let (e, _) = exact.score(tokens);
+    let (a, _) = analog.score(tokens);
+    compare_logits(&e, &a, tokens, vocab)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_streams_are_exact() {
+        let vocab = 4;
+        let tokens = [1i32, 2, 0];
+        let logits: Vec<f32> = (0..tokens.len() * vocab).map(|i| i as f32 * 0.1).collect();
+        let d = compare_logits(&logits, &logits, &tokens, vocab);
+        assert!(d.is_exact());
+        assert_eq!(d.token_agreement, 1.0);
+        assert_eq!(d.positions, 3);
+        assert_eq!(d.max_abs_logit_err, 0.0);
+        assert_eq!(d.rms_logit_err, 0.0);
+        assert_eq!(d.ppl_delta, 0.0);
+    }
+
+    #[test]
+    fn flipped_argmax_sets_first_divergence() {
+        let vocab = 3;
+        let tokens = [0i32, 1];
+        // position 0 agrees (argmax 2), position 1 flips (2 -> 0)
+        let exact = vec![0.0, 0.5, 1.0, 0.0, 0.5, 1.0];
+        let analog = vec![0.0, 0.5, 1.0, 2.0, 0.5, 1.0];
+        let d = compare_logits(&exact, &analog, &tokens, vocab);
+        assert_eq!(d.first_divergence, Some(1));
+        assert!((d.token_agreement - 0.5).abs() < 1e-12);
+        assert!((d.max_abs_logit_err - 2.0).abs() < 1e-12);
+        assert!(d.rms_logit_err > 0.0);
+        assert!(!d.is_exact());
+    }
+
+    #[test]
+    fn teacher_forced_ppl_matches_hand_computation() {
+        // one transition, uniform logits: p(target) = 1/vocab, so
+        // ppl = vocab exactly
+        let vocab = 8;
+        let tokens = [3i32, 5];
+        let logits = vec![0.0f32; 2 * vocab];
+        let ppl = teacher_forced_ppl(&logits, &tokens, vocab);
+        assert!((ppl - vocab as f64).abs() < 1e-9);
+        // single-token window has no transitions
+        assert_eq!(teacher_forced_ppl(&logits[..vocab], &tokens[..1], vocab), 1.0);
+    }
+
+    #[test]
+    fn ppl_delta_penalizes_wrong_confidence() {
+        // analog stream puts high confidence on a wrong next token ->
+        // its teacher-forced perplexity (and so the delta) goes up
+        let vocab = 4;
+        let tokens = [0i32, 2];
+        let mut exact = vec![0.0f32; 2 * vocab];
+        exact[2] = 4.0; // position 0 confident in the true target 2
+        let mut analog = exact.clone();
+        analog[2] = 0.0;
+        analog[1] = 4.0; // confident in the wrong token
+        let d = compare_logits(&exact, &analog, &tokens, vocab);
+        assert!(d.ppl_delta > 0.0, "wrong confidence must raise ppl");
+    }
+}

@@ -38,7 +38,9 @@
 //!   paths bit-identical; the all-rows variant exhibits the negative
 //!   model.
 
-use crate::cim::crossbar::Crossbar;
+use crate::cim::adc;
+use crate::cim::crossbar::{quantize_slice, Crossbar};
+use crate::cim::noise::{corrupt, AnalogMode};
 use crate::cim::CimParams;
 use crate::mapping::rotation::rotate_blocks_left;
 use crate::mapping::{map_ops, Factor, ModelMapping};
@@ -48,6 +50,7 @@ use crate::monarch::{MonarchMatrix, RectMonarch, StridePerm};
 use crate::scheduler::plan::linear_tile_geometry;
 use crate::scheduler::{compile_plan, placement_schedule, CompiledPass, ModelPlan};
 use crate::tensor::Matrix;
+use crate::util::rng::Pcg32;
 
 /// Reusable per-chip scratch: every buffer the per-token replay writes
 /// through, allocated once at programming time and overwritten per pass.
@@ -144,6 +147,71 @@ pub enum ReplayMode {
     IndexList,
 }
 
+/// Replay-time SAR ADC state (DESIGN.md §6i), precomputed at programming
+/// time so the hot loop never consults `CimParams`: the resolution cap,
+/// the required-bits rule memoized per accumulation depth, and per-array
+/// full-scale ranges derived from the programmed conductances.
+#[derive(Clone, Debug)]
+struct AdcReplay {
+    /// Resolution cap (`AnalogMode::adc_bits`).
+    bits: u32,
+    /// [`adc::required_bits`] memoized over accumulation depths `0..=m`
+    /// (a pass's [`CompiledPass::conv_depth`] — cells per bitline, not
+    /// driven rows: a whole-lane Monarch pass drives many blocks but
+    /// each converted column sums only its own block's `b` cells).
+    required: Vec<u32>,
+    /// `sqrt(depth)` over `0..=m`: the calibrated (RMS random-walk)
+    /// accumulation range of `depth` summed cells, following the paper's
+    /// §IV-B value-range operating point rather than the worst-case
+    /// linear bound (which would waste the low-bit codes).
+    row_scale: Vec<f32>,
+    /// Per-array max |conductance| after corruption (1e-12 floor so an
+    /// unprogrammed array quantizes zeros to zeros, never NaN).
+    full_scale: Vec<f32>,
+}
+
+impl AdcReplay {
+    fn new(bits: u32, params: &CimParams, crossbars: &[Crossbar]) -> Self {
+        let m = params.array_dim;
+        Self {
+            bits,
+            required: (0..=m).map(|r| adc::required_bits(params, r)).collect(),
+            row_scale: (0..=m).map(|r| (r as f32).sqrt()).collect(),
+            full_scale: crossbars
+                .iter()
+                .map(|xb| {
+                    xb.cells
+                        .iter()
+                        .fold(0.0f32, |mx, &v| mx.max(v.abs()))
+                        .max(1e-12)
+                })
+                .collect(),
+        }
+    }
+
+    /// Quantize one pass's converted columns in place — only when the
+    /// cap is below the exact-conversion resolution for this pass's
+    /// accumulation depth (at or above it the SAR readout is exact, so
+    /// the buffer must not be touched: that is the ideal-mode
+    /// bit-identity contract).
+    #[inline]
+    fn apply(&self, pass: &CompiledPass, buf: &mut [f32]) {
+        let depth = pass.conv_depth;
+        if self.bits >= self.required[depth] {
+            return;
+        }
+        let fs = self.full_scale[pass.array] * self.row_scale[depth];
+        quantize_slice(buf, self.bits, fs);
+    }
+}
+
+/// Analog-realism state of a programmed chip: the mode it was programmed
+/// under (for introspection) and the replay-time ADC table, if any.
+struct AnalogState {
+    mode: AnalogMode,
+    adc: Option<AdcReplay>,
+}
+
 /// A programmed chip: one crossbar per allocated array, plus the
 /// compiled per-token plan and the scratch the replay runs through.
 pub struct FunctionalChip {
@@ -159,6 +227,8 @@ pub struct FunctionalChip {
     scratch: ExecScratch,
     /// Pass-table encoding the replay iterates (bit-block by default).
     replay_mode: ReplayMode,
+    /// Analog realism (None = exact digital replay; DESIGN.md §6i).
+    analog: Option<AnalogState>,
 }
 
 /// Build a single-op model config/op-list for a d x d Monarch weight.
@@ -202,11 +272,12 @@ fn replay_pass(
     crossbars: &[Crossbar],
     pass: &CompiledPass,
     mode: ReplayMode,
+    adc: Option<&AdcReplay>,
     x: &[f32],
     input: &mut [f32],
     colbuf: &mut [f32],
 ) -> usize {
-    match mode {
+    let n = match mode {
         ReplayMode::BitBlock => {
             for (r0, k0, len) in pass.row_bits.runs() {
                 let seg = &mut input[r0..r0 + len];
@@ -237,7 +308,14 @@ fn replay_pass(
             );
             n
         }
+    };
+    // SAR readout quantization of the bitline accumulation — identical
+    // hook in both encodings, before the converted columns leave the
+    // landing buffer (None = exact conversion, one skipped check).
+    if let Some(a) = adc {
+        a.apply(pass, &mut colbuf[..n]);
     }
+    n
 }
 
 /// Replay one Monarch factor stage: each pass assigns its converted
@@ -247,6 +325,7 @@ fn replay_stage(
     crossbars: &[Crossbar],
     passes: &[CompiledPass],
     mode: ReplayMode,
+    adc: Option<&AdcReplay>,
     x: &[f32],
     out: &mut [f32],
     input: &mut [f32],
@@ -254,7 +333,7 @@ fn replay_stage(
 ) {
     out.fill(0.0);
     for pass in passes {
-        let n = replay_pass(crossbars, pass, mode, x, input, colbuf);
+        let n = replay_pass(crossbars, pass, mode, adc, x, input, colbuf);
         out[pass.dst..pass.dst + n].copy_from_slice(&colbuf[..n]);
     }
 }
@@ -273,12 +352,13 @@ fn replay_pass_batch(
     crossbars: &[Crossbar],
     pass: &CompiledPass,
     mode: ReplayMode,
+    adc: Option<&AdcReplay>,
     batch: usize,
     x: &[f32],
     input: &mut [f32],
     colbuf: &mut [f32],
 ) -> usize {
-    match mode {
+    let n = match mode {
         ReplayMode::BitBlock => {
             for (r0, k0, len) in pass.row_bits.runs() {
                 let seg = &mut input[r0 * batch..(r0 + len) * batch];
@@ -317,7 +397,13 @@ fn replay_pass_batch(
             );
             n
         }
+    };
+    // every lane's conversion goes through the same ADC at the same
+    // full-scale — one quantize sweep over the interleaved landing slab
+    if let Some(a) = adc {
+        a.apply(pass, &mut colbuf[..n * batch]);
     }
+    n
 }
 
 /// Batched form of [`replay_stage`] over stride-B interleaved lanes.
@@ -325,6 +411,7 @@ fn replay_stage_batch(
     crossbars: &[Crossbar],
     passes: &[CompiledPass],
     mode: ReplayMode,
+    adc: Option<&AdcReplay>,
     batch: usize,
     x: &[f32],
     out: &mut [f32],
@@ -333,7 +420,7 @@ fn replay_stage_batch(
 ) {
     out.fill(0.0);
     for pass in passes {
-        let n = replay_pass_batch(crossbars, pass, mode, batch, x, input, colbuf);
+        let n = replay_pass_batch(crossbars, pass, mode, adc, batch, x, input, colbuf);
         out[pass.dst * batch..(pass.dst + n) * batch]
             .copy_from_slice(&colbuf[..n * batch]);
     }
@@ -372,6 +459,36 @@ impl FunctionalChip {
         weights: &[RectMonarch],
         params: &CimParams,
         strategy: Strategy,
+    ) -> FunctionalChip {
+        Self::program_rect_analog(cfg, ops, weights, params, strategy, None)
+    }
+
+    /// [`FunctionalChip::program_rect`] with opt-in analog realism
+    /// (DESIGN.md §6i). With `Some(mode)`:
+    ///
+    /// * **Programming noise** — after the placements are written, every
+    ///   crossbar `i` is corrupted ([`crate::cim::noise::corrupt`]) from
+    ///   `Pcg32::stream(mode.seed, i)`, so the corrupted chip is a pure
+    ///   function of (weights, mapping, seed) regardless of which worker
+    ///   or shard programs it. Skipped entirely when the mode is inert
+    ///   (`AnalogMode::corrupts`).
+    /// * **ADC cap** — when `mode.adc_bits` is below a pass's
+    ///   [`adc::required_bits`], replay quantizes that pass's converted
+    ///   columns through the SAR mid-tread model before they leave the
+    ///   landing buffer; at or above the required resolution nothing is
+    ///   touched (exact conversion).
+    ///
+    /// `AnalogMode::ideal()` is therefore bit-identical to the plain
+    /// path by construction. The schedule-recompute audit path reads the
+    /// same (corrupted) cells but never quantizes — it audits the exact
+    /// conversion of the programmed chip.
+    pub fn program_rect_analog(
+        cfg: &ModelConfig,
+        ops: &[MatmulOp],
+        weights: &[RectMonarch],
+        params: &CimParams,
+        strategy: Strategy,
+        analog: Option<&AnalogMode>,
     ) -> FunctionalChip {
         assert_eq!(ops.len(), weights.len(), "one weight grid per op");
         for (op, w) in ops.iter().zip(weights) {
@@ -415,6 +532,21 @@ impl FunctionalChip {
                 }
             }
         }
+        // device non-idealities: per-array seeded corruption AFTER all
+        // placements are written (gmax sees the full programmed range)
+        if let Some(a) = analog {
+            if a.corrupts() {
+                for (i, xb) in crossbars.iter_mut().enumerate() {
+                    corrupt(xb, &a.noise, &mut Pcg32::stream(a.seed, i as u64));
+                }
+            }
+        }
+        let analog = analog.map(|a| AnalogState {
+            adc: a
+                .adc_bits
+                .map(|bits| AdcReplay::new(bits, params, &crossbars)),
+            mode: a.clone(),
+        });
         let mut op_placements: Vec<Vec<usize>> = vec![Vec::new(); mapping.ops.len()];
         for (i, p) in mapping.placements.iter().enumerate() {
             op_placements[p.op].push(i);
@@ -432,7 +564,13 @@ impl FunctionalChip {
             op_placements,
             scratch,
             replay_mode: ReplayMode::default(),
+            analog,
         }
+    }
+
+    /// The analog mode this chip was programmed under, if any.
+    pub fn analog_mode(&self) -> Option<&AnalogMode> {
+        self.analog.as_ref().map(|a| &a.mode)
     }
 
     /// Select which pass-table encoding the compiled replay iterates.
@@ -611,13 +749,16 @@ impl FunctionalChip {
             crossbars,
             plan,
             scratch,
+            analog,
             ..
         } = self;
+        let adc = analog.as_ref().and_then(|a| a.adc.as_ref());
         let max_cols = plan.max_cols();
         let input = &mut scratch.binput[..m * batch];
         let colbuf = &mut scratch.bcolbuf[..max_cols * batch];
         for pass in &plan.ops[op_idx].passes {
-            let n = replay_pass_batch(&crossbars[..], pass, mode, batch, xs, input, colbuf);
+            let n =
+                replay_pass_batch(&crossbars[..], pass, mode, adc, batch, xs, input, colbuf);
             let seg = &mut ys[pass.dst * batch..(pass.dst + n) * batch];
             for (yo, pv) in seg.iter_mut().zip(&colbuf[..n * batch]) {
                 *yo += pv;
@@ -646,8 +787,10 @@ impl FunctionalChip {
             crossbars,
             plan,
             scratch,
+            analog,
             ..
         } = self;
+        let adc = analog.as_ref().and_then(|a| a.adc.as_ref());
         let oplan = &plan.ops[op_idx];
         let max_cols = plan.max_cols();
         let input = &mut scratch.binput[..m * batch];
@@ -671,6 +814,7 @@ impl FunctionalChip {
                     &crossbars[..],
                     &oplan.passes[tile.right.clone()],
                     mode,
+                    adc,
                     batch,
                     u,
                     v,
@@ -682,6 +826,7 @@ impl FunctionalChip {
                     &crossbars[..],
                     &oplan.passes[tile.left.clone()],
                     mode,
+                    adc,
                     batch,
                     w,
                     z,
@@ -708,14 +853,24 @@ impl FunctionalChip {
             crossbars,
             plan,
             scratch,
+            analog,
             ..
         } = self;
+        let adc = analog.as_ref().and_then(|a| a.adc.as_ref());
         let ExecScratch { input, colbuf, .. } = scratch;
         // Pass order is placement allocation order (row-partition-major,
         // ascending column partitions), fixing the partial-sum
         // accumulation order (shift-add tree determinism).
         for pass in &plan.ops[op_idx].passes {
-            let n = replay_pass(&crossbars[..], pass, mode, x, &mut input[..], &mut colbuf[..]);
+            let n = replay_pass(
+                &crossbars[..],
+                pass,
+                mode,
+                adc,
+                x,
+                &mut input[..],
+                &mut colbuf[..],
+            );
             for (yo, pv) in y[pass.dst..pass.dst + n].iter_mut().zip(&colbuf[..n]) {
                 *yo += pv;
             }
@@ -736,8 +891,10 @@ impl FunctionalChip {
             crossbars,
             plan,
             scratch,
+            analog,
             ..
         } = self;
+        let adc = analog.as_ref().and_then(|a| a.adc.as_ref());
         let oplan = &plan.ops[op_idx];
         let ExecScratch {
             input,
@@ -763,6 +920,7 @@ impl FunctionalChip {
                     &crossbars[..],
                     &oplan.passes[tile.right.clone()],
                     mode,
+                    adc,
                     &u[..],
                     &mut v[..],
                     &mut input[..],
@@ -773,6 +931,7 @@ impl FunctionalChip {
                     &crossbars[..],
                     &oplan.passes[tile.left.clone()],
                     mode,
+                    adc,
                     &w[..],
                     &mut z[..],
                     &mut input[..],
@@ -1228,6 +1387,187 @@ mod tests {
             );
             let x = rng.normal_vec(16);
             assert_eq!(chip.run_op_batch(0, 1, &x), chip.run_op(0, &x));
+        }
+    }
+
+    #[test]
+    fn analog_ideal_mode_bit_identical_to_plain_path() {
+        // AnalogMode::ideal() must be byte-for-byte the non-analog chip:
+        // cells untouched, replay untouched, for every strategy.
+        use crate::cim::AnalogMode;
+        let (d, d_ff) = (64usize, 256usize);
+        let (cfg, ops) = ffn_ops(d, d_ff);
+        let mut rng = Pcg32::new(101);
+        let weights = vec![
+            rect_randn(d_ff, d, d, &mut rng),
+            rect_randn(d, d_ff, d, &mut rng),
+        ];
+        let mut params = CimParams::default();
+        params.array_dim = 32;
+        for strategy in Strategy::all() {
+            let mut plain =
+                FunctionalChip::program_rect(&cfg, &ops, &weights, &params, strategy);
+            let mut ideal = FunctionalChip::program_rect_analog(
+                &cfg,
+                &ops,
+                &weights,
+                &params,
+                strategy,
+                Some(&AnalogMode::ideal()),
+            );
+            assert!(plain.analog_mode().is_none());
+            assert!(ideal.analog_mode().is_some());
+            for (a, b) in plain.crossbars.iter().zip(&ideal.crossbars) {
+                assert_eq!(a.cells, b.cells, "{strategy:?} cells corrupted");
+            }
+            for oi in 0..weights.len() {
+                let x = Pcg32::new(900 + oi as u64).normal_vec(weights[oi].cols);
+                let want = plain.run_op(oi, &x);
+                let got = ideal.run_op(oi, &x);
+                for (g, w) in got.iter().zip(&want) {
+                    assert_eq!(g.to_bits(), w.to_bits(), "{strategy:?} op {oi}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn analog_same_seed_is_bitwise_deterministic() {
+        // Two independently programmed chips under the same noisy mode
+        // must corrupt to bitwise-identical cells and outputs; a
+        // different seed must not.
+        use crate::cim::{AnalogMode, PcmNoise};
+        let (cfg, ops) = single_op(64);
+        let mut params = CimParams::default();
+        params.array_dim = 32;
+        let mut rng = Pcg32::new(103);
+        let mon = MonarchMatrix::randn(cfg.monarch_b(), &mut rng);
+        let mode = AnalogMode {
+            noise: PcmNoise::default(),
+            adc_bits: None,
+            seed: 42,
+        };
+        let rects: Vec<RectMonarch> = vec![rect_of(&mon)];
+        let program = |m: &AnalogMode| {
+            FunctionalChip::program_rect_analog(
+                &cfg,
+                &ops,
+                &rects,
+                &params,
+                Strategy::SparseMap,
+                Some(m),
+            )
+        };
+        let mut a = program(&mode);
+        let mut b = program(&mode);
+        for (xa, xb) in a.crossbars.iter().zip(&b.crossbars) {
+            assert_eq!(xa.cells, xb.cells, "same seed must corrupt identically");
+        }
+        let x = rng.normal_vec(64);
+        let (ya, yb) = (a.run_op(0, &x), b.run_op(0, &x));
+        for (g, w) in ya.iter().zip(&yb) {
+            assert_eq!(g.to_bits(), w.to_bits());
+        }
+        let other = AnalogMode { seed: 43, ..mode };
+        let c = program(&other);
+        assert!(
+            a.crossbars
+                .iter()
+                .zip(&c.crossbars)
+                .any(|(xa, xc)| xa.cells != xc.cells),
+            "different seed should corrupt differently"
+        );
+    }
+
+    #[test]
+    fn adc_cap_quantizes_below_required_bits_only() {
+        // SparseMap d=64 (b=8) converts 8-deep bitlines no matter how
+        // many blocks a whole-lane pass drives -> required_bits = 3: a
+        // 2-bit cap must perturb the output; a 3-bit cap sits exactly at
+        // the exact-conversion resolution and an 8-bit cap clears it, so
+        // both must stay bit-identical to exact conversion.
+        use crate::cim::AnalogMode;
+        let (cfg, ops) = single_op(64);
+        let mut params = CimParams::default();
+        params.array_dim = 32;
+        let mut rng = Pcg32::new(107);
+        let mon = MonarchMatrix::randn(cfg.monarch_b(), &mut rng);
+        let rects: Vec<RectMonarch> = vec![rect_of(&mon)];
+        let x = rng.normal_vec(64);
+        let run = |bits: Option<u32>| {
+            let mode = AnalogMode {
+                adc_bits: bits,
+                ..AnalogMode::ideal()
+            };
+            let mut chip = FunctionalChip::program_rect_analog(
+                &cfg,
+                &ops,
+                &rects,
+                &params,
+                Strategy::SparseMap,
+                Some(&mode),
+            );
+            chip.run_op(0, &x)
+        };
+        let exact = run(None);
+        for bits in [3, 8] {
+            let full = run(Some(bits));
+            for (g, w) in full.iter().zip(&exact) {
+                assert_eq!(g.to_bits(), w.to_bits(), "{bits}b cap must be exact");
+            }
+        }
+        let capped = run(Some(2));
+        let diff: f32 = capped
+            .iter()
+            .zip(&exact)
+            .map(|(a, b)| (a - b).abs())
+            .sum();
+        assert!(diff > 0.0, "2b cap must quantize 8-deep bitlines");
+        // quantization error stays bounded: the capped chip still
+        // approximates the operator
+        let want = mon.matvec(&x);
+        let (mut num, mut den) = (0.0f64, 0.0f64);
+        for (g, w) in capped.iter().zip(&want) {
+            num += ((g - w) as f64).powi(2);
+            den += (*w as f64).powi(2);
+        }
+        assert!((num / den).sqrt() < 0.6, "2b SparseMap rel err unbounded");
+    }
+
+    #[test]
+    fn analog_replay_modes_stay_bit_identical() {
+        // The ADC hook sits after the mvm call in both encodings, so
+        // bit-block vs index-list stay bit-identical under a biting cap
+        // (2 bits < the 3 bits an 8-deep Monarch bitline needs) too.
+        use crate::cim::{AnalogMode, PcmNoise};
+        let (cfg, ops) = single_op(64);
+        let mut params = CimParams::default();
+        params.array_dim = 32;
+        let mut rng = Pcg32::new(109);
+        let mon = MonarchMatrix::randn(cfg.monarch_b(), &mut rng);
+        let rects: Vec<RectMonarch> = vec![rect_of(&mon)];
+        let mode = AnalogMode {
+            noise: PcmNoise::default(),
+            adc_bits: Some(2),
+            seed: 7,
+        };
+        for strategy in [Strategy::SparseMap, Strategy::DenseMap] {
+            let mut chip = FunctionalChip::program_rect_analog(
+                &cfg,
+                &ops,
+                &rects,
+                &params,
+                strategy,
+                Some(&mode),
+            );
+            let x = rng.normal_vec(64);
+            chip.set_replay_mode(ReplayMode::BitBlock);
+            let bb = chip.run_op(0, &x);
+            chip.set_replay_mode(ReplayMode::IndexList);
+            let il = chip.run_op(0, &x);
+            for (a, b) in bb.iter().zip(&il) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{strategy:?} encoding drift");
+            }
         }
     }
 

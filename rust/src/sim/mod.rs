@@ -9,11 +9,13 @@
 //! chunk engine (K+1 positions per verify replay, bit-identical to
 //! greedy); [`shard`] programs the decoder's layers across N chips as
 //! contiguous pipeline stages and overlaps their analog windows over
-//! in-flight microbatches (bit-identical to the 1-chip path); the
-//! analytical latency/energy side lives in `scheduler::timing` and
-//! [`trace`].
+//! in-flight microbatches (bit-identical to the 1-chip path);
+//! [`divergence`] measures the token-level accuracy impact of analog
+//! (noise/ADC-capped) decode against the exact path; the analytical
+//! latency/energy side lives in `scheduler::timing` and [`trace`].
 
 pub mod decode;
+pub mod divergence;
 pub mod exec;
 pub mod prefill;
 pub mod shard;
@@ -21,6 +23,7 @@ pub mod speculate;
 pub mod trace;
 
 pub use decode::{BatchDecodeEngine, DecodeEngine, DecodeModel, DecodeResult};
+pub use divergence::{measure_divergence, Divergence};
 pub use exec::FunctionalChip;
 pub use prefill::KvCache;
 pub use shard::{stage_ranges, PipelineStats, ShardedBackend};

@@ -36,7 +36,7 @@
 //! object itself stays whole so every existing KV API — truncation,
 //! speculative rollback, the differential props — works unchanged.
 
-use crate::cim::CimParams;
+use crate::cim::{AnalogMode, CimParams};
 use crate::mapping::{map_ops, ModelMapping, Strategy};
 use crate::model::MatmulOp;
 use crate::monarch::RectMonarch;
@@ -124,6 +124,25 @@ impl ShardedBackend {
         shards: usize,
         lanes: usize,
     ) -> ShardedBackend {
+        Self::program_analog(model, params, strategy, shards, lanes, None)
+    }
+
+    /// [`ShardedBackend::program`] with opt-in analog realism: every
+    /// stage chip is programmed under the same [`AnalogMode`]
+    /// (DESIGN.md §6i). At ideal settings this is bit-identical to the
+    /// exact sharded path (and hence to single-chip replay); under
+    /// noise, each stage corrupts from its own chip-local array streams
+    /// (`Pcg32::stream(seed, i)` over the stage's 0-based array index),
+    /// so a sharded chip's corruption pattern differs from the mono
+    /// chip's — bit-identity to mono is only promised at ideal settings.
+    pub fn program_analog(
+        model: &DecodeModel,
+        params: &CimParams,
+        strategy: Strategy,
+        shards: usize,
+        lanes: usize,
+        analog: Option<&AnalogMode>,
+    ) -> ShardedBackend {
         let cfg = &model.cfg;
         let full_mapping = map_ops(cfg, &model.ops, params, strategy);
         let stages = stage_ranges(cfg.dec_layers, shards)
@@ -143,8 +162,9 @@ impl ShardedBackend {
                     globals.iter().map(|&g| model.ops[g].clone()).collect();
                 let weights: Vec<RectMonarch> =
                     globals.iter().map(|&g| model.weights[g].clone()).collect();
-                let mut chip =
-                    FunctionalChip::program_rect(cfg, &ops, &weights, params, strategy);
+                let mut chip = FunctionalChip::program_rect_analog(
+                    cfg, &ops, &weights, params, strategy, analog,
+                );
                 chip.warm_batch(lanes);
                 let layer_ops = (lo..hi)
                     .map(|l| {

@@ -104,6 +104,22 @@ impl Args {
                 .collect(),
         }
     }
+
+    /// Comma-separated f64 list, e.g. `--sigmas 0,0.01,0.05`.
+    pub fn f64_list_or(&self, key: &str, default: &[f64]) -> Vec<f64> {
+        match self.get(key) {
+            None => default.to_vec(),
+            Some(s) => s
+                .split(',')
+                .map(|p| {
+                    p.trim().parse().unwrap_or_else(|_| {
+                        eprintln!("error: --{key} expects numbers, got '{p}'");
+                        std::process::exit(2);
+                    })
+                })
+                .collect(),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -138,6 +154,13 @@ mod tests {
         assert_eq!(a.usize_or("m", 256), 256);
         assert_eq!(a.f64_or("x", 1.5), 1.5);
         assert_eq!(a.str_or("s", "d"), "d");
+    }
+
+    #[test]
+    fn f64_lists_parse_like_usize_lists() {
+        let a = args("--sigmas 0,0.01,0.05");
+        assert_eq!(a.f64_list_or("sigmas", &[]), vec![0.0, 0.01, 0.05]);
+        assert_eq!(a.f64_list_or("missing", &[1.5]), vec![1.5]);
     }
 
     #[test]

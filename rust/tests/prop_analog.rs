@@ -1,0 +1,307 @@
+//! Statistical property suite for noise/ADC-aware analog decode
+//! (DESIGN.md §6i): over random decoder geometries, chip parameters and
+//! mapping strategies,
+//!
+//! 1. **ideal analog mode is bit-identical to the exact path** — tokens,
+//!    logits and KV contents — on the single-stream, batched AND
+//!    layer-sharded engines (bit-identity holds by construction:
+//!    corruption is gated off, and a cap at or above the required
+//!    resolution never quantizes);
+//! 2. **same seed ⇒ same chip** — two independently programmed noisy
+//!    chips corrupt identically (`Pcg32::stream(seed, array)`), so
+//!    analog decode is reproducible run-to-run;
+//! 3. **divergence is zero at ideal settings and non-decreasing in
+//!    `write_sigma`** on a fixed seed ladder — the same per-cell error
+//!    direction scaled up can only push the logit stream further off.
+
+use monarch_cim::cim::{AnalogMode, PcmNoise};
+use monarch_cim::sim::decode::{BatchDecodeEngine, DecodeEngine, DecodeModel};
+use monarch_cim::sim::measure_divergence;
+use monarch_cim::util::prop::forall;
+
+mod common;
+
+fn prompt_of(len: usize, salt: usize, vocab: usize) -> Vec<i32> {
+    (0..len)
+        .map(|i| ((i * 7 + salt * 31 + 3) % vocab) as i32)
+        .collect()
+}
+
+#[test]
+fn prop_ideal_analog_bit_identical_single_stream() {
+    forall("ideal analog == exact (single stream)", 8, |g| {
+        let cfg = common::random_decoder_cfg(g);
+        let params = common::chip_params(g, &[16, 32]);
+        if !common::fits_array(&cfg, &params) {
+            return;
+        }
+        let seed = common::seed(g);
+        let strategy = common::any_strategy(g);
+        let prompt = prompt_of(g.usize(1, 4), 0, cfg.vocab);
+        let n_tokens = g.usize(1, 4);
+        let mut exact = DecodeEngine::on_chip(
+            DecodeModel::synth(cfg.clone(), seed),
+            params.clone(),
+            strategy,
+        );
+        assert!(exact.analog_mode().is_none(), "plain engine has no mode");
+        // both ideal spellings must be exact: no analog state at all is
+        // trivially exact; an 8-bit cap can never sit below the required
+        // resolution (required_bits clamps to adc_ref_bits = 8)
+        for mode in [
+            AnalogMode::ideal(),
+            AnalogMode {
+                adc_bits: Some(8),
+                ..AnalogMode::ideal()
+            },
+        ] {
+            let mut analog = DecodeEngine::on_chip_analog(
+                DecodeModel::synth(cfg.clone(), seed),
+                params.clone(),
+                strategy,
+                Some(&mode),
+            );
+            assert!(analog.analog_mode().is_some(), "mode must be recorded");
+            let a = exact.generate(&prompt, n_tokens);
+            let b = analog.generate(&prompt, n_tokens);
+            assert_eq!(
+                a.tokens, b.tokens,
+                "{strategy:?} ideal analog tokens diverged"
+            );
+            let window: Vec<i32> = prompt.iter().chain(&a.tokens).copied().collect();
+            let d = measure_divergence(&mut exact, &mut analog, &window);
+            assert!(d.is_exact(), "{strategy:?} ideal divergence: {d:?}");
+            let (le, _) = exact.score(&window);
+            let (la, _) = analog.score(&window);
+            for (p, (x, y)) in le.iter().zip(&la).enumerate() {
+                assert_eq!(
+                    x.to_bits(),
+                    y.to_bits(),
+                    "{strategy:?} logit {p} not bitwise equal"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_ideal_analog_bit_identical_batched_and_sharded() {
+    forall("ideal analog == exact (batched + sharded)", 6, |g| {
+        let mut cfg = common::random_decoder_cfg(g);
+        cfg.dec_layers = g.usize(1, 4); // deeper: real multi-stage splits
+        let params = common::chip_params(g, &[16, 32]);
+        if !common::fits_array(&cfg, &params) {
+            return;
+        }
+        let seed = common::seed(g);
+        let strategy = common::any_strategy(g);
+        let capacity = g.usize(1, 3);
+        let shards = g.usize(1, 4);
+        let n_tokens = g.usize(1, 3);
+        let ideal = AnalogMode::ideal();
+        let prompts: Vec<Vec<i32>> = (0..capacity + g.usize(0, 2))
+            .map(|r| prompt_of(g.usize(1, 4), r, cfg.vocab))
+            .collect();
+        let mut exact = BatchDecodeEngine::on_chip(
+            DecodeModel::synth(cfg.clone(), seed),
+            params.clone(),
+            strategy,
+            capacity,
+        );
+        let mut analog = BatchDecodeEngine::on_chip_analog(
+            DecodeModel::synth(cfg.clone(), seed),
+            params.clone(),
+            strategy,
+            capacity,
+            Some(&ideal),
+        );
+        let want = exact.generate_batch(&prompts, n_tokens);
+        let got = analog.generate_batch(&prompts, n_tokens);
+        for (ri, (w, a)) in want.iter().zip(&got).enumerate() {
+            assert_eq!(
+                w.tokens, a.tokens,
+                "{strategy:?} request {ri}: batched ideal analog diverged"
+            );
+        }
+        let mut sharded_exact = BatchDecodeEngine::sharded(
+            DecodeModel::synth(cfg.clone(), seed),
+            params.clone(),
+            strategy,
+            capacity,
+            shards,
+        );
+        let mut sharded_analog = BatchDecodeEngine::sharded_analog(
+            DecodeModel::synth(cfg.clone(), seed),
+            params.clone(),
+            strategy,
+            capacity,
+            shards,
+            Some(&ideal),
+        );
+        // step-level: logits and full KV bitwise across the shard stack
+        let slots: Vec<usize> = (0..capacity)
+            .map(|_| {
+                let a = sharded_exact.try_admit().unwrap();
+                let b = sharded_analog.try_admit().unwrap();
+                assert_eq!(a, b, "fresh pools hand out the same slots");
+                a
+            })
+            .collect();
+        let mut fed = vec![0usize; capacity];
+        for _step in 0..g.usize(1, 3) {
+            let mut chunks: Vec<Vec<i32>> = Vec::with_capacity(capacity);
+            for (s, f) in fed.iter_mut().enumerate() {
+                let room = cfg.seq - *f; // never 0: <=9 tokens fed into seq 16
+                let c = g.usize(1, 3).min(room);
+                chunks.push(
+                    (0..c)
+                        .map(|i| ((s * 13 + (*f + i) * 5 + 2) % cfg.vocab) as i32)
+                        .collect(),
+                );
+                *f += c;
+            }
+            let groups: Vec<(usize, &[i32])> = slots
+                .iter()
+                .zip(&chunks)
+                .map(|(&s, c)| (s, &c[..]))
+                .collect();
+            sharded_exact.step_chunks(&groups);
+            sharded_analog.step_chunks(&groups);
+            for &s in &slots {
+                assert_eq!(
+                    sharded_exact.logits(s),
+                    sharded_analog.logits(s),
+                    "{strategy:?} shards {shards} slot {s}: ideal analog logits drift"
+                );
+            }
+        }
+        for &s in &slots {
+            assert_eq!(sharded_exact.kv_len(s), sharded_analog.kv_len(s));
+            for l in 0..cfg.dec_layers {
+                for pos in 0..sharded_exact.kv_len(s) {
+                    assert_eq!(
+                        sharded_exact.kv(s).key(l, pos),
+                        sharded_analog.kv(s).key(l, pos),
+                        "{strategy:?} slot {s} layer {l} pos {pos}: key drift"
+                    );
+                    assert_eq!(
+                        sharded_exact.kv(s).value(l, pos),
+                        sharded_analog.kv(s).value(l, pos),
+                        "{strategy:?} slot {s} layer {l} pos {pos}: value drift"
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_same_seed_noisy_decode_is_reproducible() {
+    forall("same analog seed -> bitwise identical decode", 8, |g| {
+        let cfg = common::random_decoder_cfg(g);
+        let params = common::chip_params(g, &[16, 32]);
+        if !common::fits_array(&cfg, &params) {
+            return;
+        }
+        let seed = common::seed(g);
+        let strategy = common::any_strategy(g);
+        let mode = AnalogMode {
+            noise: PcmNoise {
+                write_sigma: 0.01 + 0.01 * g.usize(0, 4) as f64,
+                drift_nu: 0.05,
+                drift_time_ratio: 100.0,
+            },
+            adc_bits: g.choose(&[None, Some(2), Some(4)]),
+            seed: common::seed(g),
+        };
+        let prompt = prompt_of(g.usize(1, 4), 1, cfg.vocab);
+        let n_tokens = g.usize(1, 4);
+        // two engines programmed independently from the same weights and
+        // the same analog seed must agree bit for bit
+        let mut a = DecodeEngine::on_chip_analog(
+            DecodeModel::synth(cfg.clone(), seed),
+            params.clone(),
+            strategy,
+            Some(&mode),
+        );
+        let mut b = DecodeEngine::on_chip_analog(
+            DecodeModel::synth(cfg.clone(), seed),
+            params.clone(),
+            strategy,
+            Some(&mode),
+        );
+        let ra = a.generate(&prompt, n_tokens);
+        let rb = b.generate(&prompt, n_tokens);
+        assert_eq!(
+            ra.tokens, rb.tokens,
+            "{strategy:?} same-seed noisy decode not reproducible"
+        );
+        let window: Vec<i32> = prompt.iter().chain(&ra.tokens).copied().collect();
+        let (la, _) = a.score(&window);
+        let (lb, _) = b.score(&window);
+        for (p, (x, y)) in la.iter().zip(&lb).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "{strategy:?} logit {p}: same-seed streams not bitwise equal"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_divergence_zero_at_ideal_and_nondecreasing_in_sigma() {
+    forall("divergence: 0 at ideal, grows with sigma", 6, |g| {
+        let mut cfg = common::random_decoder_cfg(g);
+        cfg.dec_layers = 1; // shallow: keeps the response near-linear
+        let params = common::chip_params(g, &[16, 32]);
+        if !common::fits_array(&cfg, &params) {
+            return;
+        }
+        let seed = common::seed(g);
+        let noise_seed = common::seed(g);
+        let strategy = common::any_strategy(g);
+        let window = prompt_of(4, 2, cfg.vocab);
+        let mut exact = DecodeEngine::on_chip(
+            DecodeModel::synth(cfg.clone(), seed),
+            params.clone(),
+            strategy,
+        );
+        // fixed-seed ladder: every rung draws the SAME per-cell error
+        // direction (sigma only scales it), so the logit error can only
+        // grow as sigma does
+        let mut prev = 0.0f64;
+        for sigma in [0.0, 0.005, 0.02, 0.08] {
+            let mode = AnalogMode {
+                noise: PcmNoise {
+                    write_sigma: sigma,
+                    drift_nu: 0.0,
+                    drift_time_ratio: 1.0,
+                },
+                adc_bits: None,
+                seed: noise_seed,
+            };
+            let mut analog = DecodeEngine::on_chip_analog(
+                DecodeModel::synth(cfg.clone(), seed),
+                params.clone(),
+                strategy,
+                Some(&mode),
+            );
+            let d = measure_divergence(&mut exact, &mut analog, &window);
+            if sigma == 0.0 {
+                assert!(d.is_exact(), "{strategy:?} sigma=0 diverged: {d:?}");
+            } else {
+                assert!(
+                    d.max_abs_logit_err > 0.0,
+                    "{strategy:?} sigma={sigma} left the logits untouched"
+                );
+                assert!(
+                    d.rms_logit_err >= prev,
+                    "{strategy:?} sigma={sigma}: rms {} fell below {prev}",
+                    d.rms_logit_err
+                );
+            }
+            prev = d.rms_logit_err;
+        }
+    });
+}

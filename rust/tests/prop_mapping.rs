@@ -2,13 +2,17 @@
 //! array geometries — block conservation, placement disjointness,
 //! rotation pairing, utilization bounds.
 
-use monarch_cim::cim::CimParams;
 use monarch_cim::mapping::rotation::{is_self_inverse, net_rotation};
 use monarch_cim::mapping::{map_ops, Factor, Strategy};
 use monarch_cim::model::{MatmulOp, ModelConfig, OpKind, Stage};
 use monarch_cim::util::prop::forall;
 
+mod common;
+
 /// Random op list over square-ish shapes that divide into d tiles.
+/// Deliberately NOT `common::random_model_ops`: this one draws ragged
+/// rectangular shapes with batch 8, stressing the packers rather than
+/// the transformer layer pattern.
 fn gen_ops(g: &mut monarch_cim::util::prop::Gen, d: usize) -> Vec<MatmulOp> {
     let n_ops = g.usize(1, 6);
     (0..n_ops)
@@ -40,13 +44,11 @@ fn prop_blocks_conserved_all_strategies() {
     forall("blocks conserved", 25, |g| {
         let d = g.choose(&[16usize, 64]);
         let b = (d as f64).sqrt() as usize;
-        let m = g.choose(&[16usize, 32, 64]);
-        if b > m {
+        let params = common::chip_params(g, &[16, 32, 64]);
+        if b > params.array_dim {
             return;
         }
         let cfg = tiny_cfg(d);
-        let mut params = CimParams::default();
-        params.array_dim = m;
         let ops = gen_ops(g, d);
         for strategy in [Strategy::SparseMap, Strategy::DenseMap] {
             let mm = map_ops(&cfg, &ops, &params, strategy);
@@ -64,13 +66,11 @@ fn prop_blocks_conserved_all_strategies() {
 fn prop_dense_diagonals_never_collide() {
     forall("diag slots unique per array", 25, |g| {
         let d = g.choose(&[16usize, 64]);
-        let m = g.choose(&[16usize, 32, 64]);
-        if (d as f64).sqrt() as usize > m {
+        let params = common::chip_params(g, &[16, 32, 64]);
+        if (d as f64).sqrt() as usize > params.array_dim {
             return;
         }
         let cfg = tiny_cfg(d);
-        let mut params = CimParams::default();
-        params.array_dim = m;
         let ops = gen_ops(g, d);
         let mm = map_ops(&cfg, &ops, &params, Strategy::DenseMap);
         let mut seen = std::collections::HashSet::new();
@@ -89,14 +89,13 @@ fn prop_dense_diagonals_never_collide() {
 fn prop_dense_rotation_pairs_cancel() {
     forall("rotation pairing", 25, |g| {
         let d = g.choose(&[16usize, 64]);
-        let m = g.choose(&[16usize, 32, 64]);
         let b = (d as f64).sqrt() as usize;
+        let params = common::chip_params(g, &[16, 32, 64]);
+        let m = params.array_dim;
         if b > m {
             return;
         }
         let cfg = tiny_cfg(d);
-        let mut params = CimParams::default();
-        params.array_dim = m;
         let ops = gen_ops(g, d);
         let mm = map_ops(&cfg, &ops, &params, Strategy::DenseMap);
         let lanes = m / b;
@@ -134,13 +133,11 @@ fn prop_utilization_ordering() {
     // <= arrays(Linear), for every geometry.
     forall("utilization ordering", 20, |g| {
         let d = g.choose(&[16usize, 64]);
-        let m = g.choose(&[32usize, 64, 256]);
-        if (d as f64).sqrt() as usize > m {
+        let params = common::chip_params(g, &[32, 64, 256]);
+        if (d as f64).sqrt() as usize > params.array_dim {
             return;
         }
         let cfg = tiny_cfg(d);
-        let mut params = CimParams::default();
-        params.array_dim = m;
         let ops = gen_ops(g, d);
         let lin = map_ops(&cfg, &ops, &params, Strategy::Linear);
         let sp = map_ops(&cfg, &ops, &params, Strategy::SparseMap);
@@ -167,10 +164,9 @@ fn prop_sparse_utilization_formula() {
     // For full lanes, SparseMap utilization == b/m exactly.
     forall("sparse util == b/m", 15, |g| {
         let d = 64; // b = 8
-        let m = g.choose(&[32usize, 64, 256]);
         let cfg = tiny_cfg(d);
-        let mut params = CimParams::default();
-        params.array_dim = m;
+        let params = common::chip_params(g, &[32, 64, 256]);
+        let m = params.array_dim;
         // ops sized so every lane fills completely: rows=cols=d and
         // b % (m/b) == 0
         let b = 8usize;

@@ -1,5 +1,7 @@
 //! Property tests: Monarch algebra invariants (heavier case counts than
-//! the in-module tests; uses the repo's mini property harness).
+//! the in-module tests; uses the repo's mini property harness). Weight
+//! seeds are drawn through `common::seed` so failures replay from the
+//! `forall` seed report like every other suite.
 
 use monarch_cim::monarch::{
     monarch_project, FoldedMonarch, MonarchMatrix, RectMonarch, StridePerm,
@@ -7,6 +9,8 @@ use monarch_cim::monarch::{
 use monarch_cim::tensor::Matrix;
 use monarch_cim::util::prop::forall;
 use monarch_cim::util::rng::Pcg32;
+
+mod common;
 
 #[test]
 fn prop_projection_is_idempotent() {
@@ -33,7 +37,7 @@ fn prop_projection_error_never_increases_with_structure() {
     forall("error monotone in structure", 15, |g| {
         let b = g.usize(2, 5);
         let n = b * b;
-        let mut rng = Pcg32::new(g.usize(0, 1 << 30) as u64);
+        let mut rng = Pcg32::new(common::seed(g));
         let m = MonarchMatrix::randn(b, &mut rng).to_dense();
         let noise = Matrix::randn(n, n, &mut rng);
         let err_at = |alpha: f32| {
@@ -54,7 +58,7 @@ fn prop_monarch_composition_via_permutation() {
     // y = P L P R P x computed factored == dense M @ x, across sizes.
     forall("factored == dense", 30, |g| {
         let b = g.usize(2, 8);
-        let mut rng = Pcg32::new(g.usize(0, 1 << 30) as u64);
+        let mut rng = Pcg32::new(common::seed(g));
         let m = MonarchMatrix::randn(b, &mut rng);
         let x = rng.normal_vec(m.n());
         let got = m.matvec(&x);
@@ -69,7 +73,7 @@ fn prop_monarch_composition_via_permutation() {
 fn prop_folding_preserves_operator() {
     forall("fold == unfold", 30, |g| {
         let b = g.usize(2, 8);
-        let mut rng = Pcg32::new(g.usize(0, 1 << 30) as u64);
+        let mut rng = Pcg32::new(common::seed(g));
         let m = MonarchMatrix::randn(b, &mut rng);
         let f = FoldedMonarch::from_monarch(&m);
         let x = rng.normal_vec(m.n());
@@ -108,7 +112,7 @@ fn prop_rect_tiling_matches_dense() {
         let n = 16;
         let tr = g.usize(1, 3);
         let tc = g.usize(1, 3);
-        let mut rng = Pcg32::new(g.usize(0, 1 << 30) as u64);
+        let mut rng = Pcg32::new(common::seed(g));
         let w = Matrix::randn(tr * n, tc * n, &mut rng);
         let rect = RectMonarch::from_dense(&w, n);
         let x = rng.normal_vec(tc * n);

@@ -1,11 +1,12 @@
 //! Property tests: scheduler/timing invariants — cost positivity and
 //! monotonicity, ADC policy bounds, functional-vs-schedule agreement on
-//! random geometries.
+//! random geometries. Geometry and seed generators come from
+//! `tests/common/mod.rs`, shared with the engine suites.
 
 use monarch_cim::cim::{adc, CimParams};
 use monarch_cim::mapping::rotation::net_rotation;
 use monarch_cim::mapping::{map_ops, Factor, Strategy};
-use monarch_cim::model::{MatmulOp, ModelConfig, OpKind, Stage};
+use monarch_cim::model::ModelConfig;
 use monarch_cim::monarch::{MonarchMatrix, StridePerm};
 use monarch_cim::scheduler::timing::cost_report;
 use monarch_cim::scheduler::{
@@ -14,6 +15,8 @@ use monarch_cim::scheduler::{
 use monarch_cim::sim::exec::{single_op, FunctionalChip};
 use monarch_cim::util::prop::forall;
 use monarch_cim::util::rng::Pcg32;
+
+mod common;
 
 #[test]
 fn prop_costs_positive_and_finite() {
@@ -110,7 +113,7 @@ fn prop_functional_chip_correct_across_geometries() {
         let (cfg, ops) = single_op(d);
         let mut params = CimParams::default();
         params.array_dim = m;
-        let mut rng = Pcg32::new(g.usize(0, 1 << 30) as u64);
+        let mut rng = Pcg32::new(common::seed(g));
         let mon = MonarchMatrix::randn(b, &mut rng);
         let mut chip =
             FunctionalChip::program(&cfg, &ops, std::slice::from_ref(&mon), &params, strategy);
@@ -126,50 +129,6 @@ fn prop_functional_chip_correct_across_geometries() {
     });
 }
 
-/// Random transformer-shaped Para op list over d x d tiles.
-fn random_model_ops(
-    g: &mut monarch_cim::util::prop::Gen,
-    d: usize,
-) -> (ModelConfig, Vec<MatmulOp>) {
-    let mut cfg = ModelConfig::tiny();
-    cfg.d_model = d;
-    let layers = g.usize(1, 2);
-    let ff_mult = g.usize(1, 4);
-    let mut ops = Vec::new();
-    for l in 0..layers {
-        for w in ["wq", "wk", "wv", "wo"] {
-            ops.push(MatmulOp {
-                name: format!("dec{l}.{w}"),
-                stage: Stage::Decoder,
-                layer: l,
-                kind: OpKind::Para,
-                rows: d,
-                cols: d,
-                batch: 1,
-            });
-        }
-        ops.push(MatmulOp {
-            name: format!("dec{l}.ffn1"),
-            stage: Stage::Decoder,
-            layer: l,
-            kind: OpKind::Para,
-            rows: ff_mult * d,
-            cols: d,
-            batch: 1,
-        });
-        ops.push(MatmulOp {
-            name: format!("dec{l}.ffn2"),
-            stage: Stage::Decoder,
-            layer: l,
-            kind: OpKind::Para,
-            rows: d,
-            cols: ff_mult * d,
-            batch: 1,
-        });
-    }
-    (cfg, ops)
-}
-
 #[test]
 fn prop_token_commands_activate_only_mapped_rows() {
     // Every DriveRows/Convert in the per-token command stream of a whole
@@ -183,7 +142,7 @@ fn prop_token_commands_activate_only_mapped_rows() {
         if b > m {
             return;
         }
-        let (cfg, ops) = random_model_ops(g, d);
+        let (cfg, ops) = common::random_model_ops(g, d);
         let mut params = CimParams::default();
         params.array_dim = m;
         for strategy in Strategy::all() {
@@ -245,7 +204,7 @@ fn prop_densemap_lane_pairs_cancel_rotation() {
         if b > m {
             return;
         }
-        let (cfg, ops) = random_model_ops(g, d);
+        let (cfg, ops) = common::random_model_ops(g, d);
         let mut params = CimParams::default();
         params.array_dim = m;
         let mm = map_ops(&cfg, &ops, &params, Strategy::DenseMap);
@@ -287,7 +246,7 @@ fn prop_dense_stage_isolation() {
         let (cfg, ops) = single_op(d);
         let mut params = CimParams::default();
         params.array_dim = m;
-        let seed = g.usize(0, 1 << 30) as u64;
+        let seed = common::seed(g);
         let mut rng = Pcg32::new(seed);
         let b = cfg.monarch_b();
         let mon1 = MonarchMatrix::randn(b, &mut rng);
